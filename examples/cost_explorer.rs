@@ -1,0 +1,48 @@
+//! Cost-model explorer: the paper's contraction-complexity study
+//! (Table I forms, Fig. 6 comparison, Fig. 7 sweeps) over arbitrary
+//! shapes from the command line.
+//!
+//! ```bash
+//! cargo run --release --offline --example cost_explorer -- --rank 12 --seq 32
+//! ```
+
+use tt_trainer::costmodel::{compare_all, sweeps, LinearShape};
+use tt_trainer::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let rank = args.get_usize("rank", 12);
+    let seq = args.get_usize("seq", 32) as u64;
+
+    let shape = LinearShape::uniform(&[8, 8, 12], &[12, 8, 8], rank);
+    println!("=== Fig. 6 at rank {rank}, K = {seq} (768 x 768 layer) ===");
+    println!(
+        "{:<6} {:>14} {:>12} {:>12} {:>10} {:>10}",
+        "method", "fwd muls", "act mem", "total mem", "comp-red", "mem-red"
+    );
+    for r in compare_all(&shape, seq) {
+        println!(
+            "{:<6} {:>14} {:>12} {:>12} {:>9.2}x {:>9.2}x",
+            r.method, r.fwd_muls, r.memory_elems, r.total_memory,
+            r.compute_reduction, r.memory_reduction
+        );
+    }
+
+    println!("\n=== Fig. 7 (top): sequence-length sweep at rank {rank} ===");
+    print!(
+        "{}",
+        sweeps::render_sweep(&sweeps::seq_len_sweep(rank, &sweeps::paper_seq_lens()), "seq")
+    );
+
+    println!("\n=== Fig. 7 (bottom): rank sweep at K = {seq} ===");
+    print!(
+        "{}",
+        sweeps::render_sweep(&sweeps::rank_sweep(seq, &sweeps::paper_ranks()), "rank")
+    );
+
+    println!("\n=== Training complexity (Table I, x3 forward) ===");
+    let f = LinearShape::training_factor();
+    for r in compare_all(&shape, seq) {
+        println!("{:<6} training muls ~ {}", r.method, r.fwd_muls * f);
+    }
+}

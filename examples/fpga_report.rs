@@ -1,0 +1,86 @@
+//! Full FPGA-simulator report: every hardware table and figure of the
+//! paper's evaluation (Tables IV/V, Figs. 1, 12, 14, 15 plus the Fig. 9/10
+//! scheduling studies).
+//!
+//! ```bash
+//! cargo run --release --offline --example fpga_report
+//! ```
+
+use tt_trainer::config::ModelConfig;
+use tt_trainer::costmodel::LinearShape;
+use tt_trainer::fpga::{bram, energy, resources, schedule};
+
+fn main() {
+    println!("############ tt-trainer FPGA simulator report ############\n");
+
+    println!("=== Fig. 9: QKV task rescheduling ===");
+    let shape = LinearShape::paper();
+    let (naive, resched) = schedule::fig9_compare(&shape, 32, 12);
+    println!("  naive (6 MUL0 units):       {naive} cycles");
+    println!("  rescheduled (2 MUL0 units): {resched} cycles  (same latency, 1/3 the units)\n");
+
+    println!("=== Fig. 10: fused parallel BTT backprop buffer ===");
+    println!("  unfused: {:>5} elements", schedule::fig10_buffer_elems(&shape, false));
+    println!("  fused:   {:>5} elements = O(r)\n", schedule::fig10_buffer_elems(&shape, true));
+
+    println!("=== Fig. 12: BRAM utilization efficiency ===");
+    for layers in [2usize, 4, 6] {
+        println!("  {layers}-ENC:");
+        for a in bram::strategy_comparison(layers, 12) {
+            println!(
+                "    {:<20} {:>6} blocks  eta = {:.3}",
+                a.strategy.name(),
+                a.total_blocks,
+                a.efficiency
+            );
+        }
+    }
+
+    println!("\n=== Fig. 14: BRAM vs rank (2-ENC, all TT cores) ===");
+    for rank in [2usize, 4, 8, 12, 16, 24, 32, 48] {
+        let allocs = bram::strategy_comparison(2, rank);
+        println!(
+            "  rank {rank:>2}: default {:>5} blocks | grouped {:>5} blocks | ideal {:>7.1}",
+            allocs[0].total_blocks, allocs[3].total_blocks, allocs[3].ideal_blocks
+        );
+    }
+
+    println!("\n=== Table IV: resource utilization ===");
+    for layers in [2usize, 4, 6] {
+        let r = resources::report(&ModelConfig::paper(layers));
+        println!(
+            "  {layers}-ENC: DSP {} ({:.0}%) | LUT {} ({:.0}%) | FF {} ({:.0}%) | BRAM {} ({:.0}%) | URAM {} ({:.0}%) | {:.2} W",
+            r.dsp.used, r.dsp.pct(),
+            r.lut.used, r.lut.pct(),
+            r.ff.used, r.ff.pct(),
+            r.bram.used, r.bram.pct(),
+            r.uram.used, r.uram.pct(),
+            r.total_power_w()
+        );
+    }
+
+    println!("\n=== Table V: GPU vs FPGA end-to-end ===");
+    print!("{}", energy::render_table_v(&energy::table_v()));
+
+    println!("\n=== Fig. 1: headline memory / energy reductions ===");
+    for p in energy::fig1() {
+        println!(
+            "  L{}: computing memory {:.0} -> {:.1} MB ({:.1}x) | energy {:.1} -> {:.1} kJ ({:.1}x)",
+            p.n_layers,
+            p.gpu_tt_memory_mb,
+            p.fpga_memory_mb,
+            p.gpu_tt_memory_mb / p.fpga_memory_mb,
+            p.gpu_tt_energy_kj,
+            p.fpga_energy_kj,
+            p.gpu_tt_energy_kj / p.fpga_energy_kj
+        );
+    }
+
+    println!("\n=== Fig. 15: computing memory breakdown ===");
+    for p in energy::fig15() {
+        println!(
+            "  L{}: GPU total {:.0} | GPU reserved MM {:.0} | GPU reserved BTT {:.0} | FPGA {:.1} (MB)",
+            p.n_layers, p.gpu_total_mb, p.gpu_reserved_matrix_mb, p.gpu_reserved_btt_mb, p.fpga_mb
+        );
+    }
+}

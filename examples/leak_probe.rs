@@ -1,0 +1,38 @@
+//! Leak bisect: run N steps in 3 modes, print RSS growth.
+use tt_trainer::data::Dataset;
+use tt_trainer::runtime::{Engine, Manifest};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or("full".into());
+    let n: usize = std::env::args().nth(2).unwrap_or("300".into()).parse()?;
+    let m = Manifest::load("artifacts")?;
+    let spec = m.variant("tt_L2")?;
+    let mut engine = Engine::load(spec)?;
+    let data = Dataset::synth(&spec.config, 1, 8);
+    let ex = data.examples[0].clone();
+    // warmup
+    engine.train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)?;
+    let r0 = rss_mb();
+    match mode.as_str() {
+        "full" => {
+            for _ in 0..n {
+                engine.train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)?;
+            }
+        }
+        "eval" => {
+            for _ in 0..n {
+                engine.eval(&ex.tokens)?;
+            }
+        }
+        _ => {}
+    }
+    let r1 = rss_mb();
+    println!("mode={mode} n={n}: rss {r0:.0} -> {r1:.0} MB (+{:.2} MB, {:.3} MB/step)", r1-r0, (r1-r0)/n as f64);
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Deployment example: serve predictions with the **rust-native**
+//! inference engine — no XLA/PJRT at run time, just the TT/TTM tensor
+//! algebra (the paper's edge-deployment story).
+//!
+//! Loads the trained-or-initial parameters through the PJRT engine once
+//! (acting as the checkpoint reader), optionally fine-tunes a few steps,
+//! exports to the native engine, and serves the synthetic ATIS test
+//! split, reporting accuracy and per-request latency.
+//!
+//! ```bash
+//! cargo run --release --offline --example serve_native -- --train-steps 200 --serve-n 100
+//! ```
+
+use std::time::Instant;
+use tt_trainer::data::{Dataset, INTENTS};
+use tt_trainer::inference::{params_from_engine, NativeModel};
+use tt_trainer::runtime::{Engine, Manifest};
+use tt_trainer::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let train_steps = args.get_usize("train-steps", 200);
+    let serve_n = args.get_usize("serve-n", 100);
+
+    let manifest = Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    let spec = manifest.variant(args.get_or("variant", "tt_L2"))?;
+    let cfg = spec.config.clone();
+    let (train, test) = Dataset::paper_splits(&cfg, 42);
+
+    // Phase 1 (offline): obtain trained parameters via the PJRT engine.
+    println!("[offline] loading + training {train_steps} steps via PJRT ...");
+    let mut engine = Engine::load(spec)?;
+    for (i, ex) in train.examples.iter().cycle().take(train_steps).enumerate() {
+        let out = engine.train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)?;
+        if (i + 1) % 100 == 0 {
+            println!("[offline] step {:>4}: loss {:.4}", i + 1, out.loss);
+        }
+    }
+
+    // Phase 2 (edge): export to the native engine and serve.
+    let model = NativeModel::from_params(&cfg, &params_from_engine(&engine)?)?;
+    drop(engine); // the PJRT runtime is gone; only rust-native code below.
+
+    println!("[serve] native engine up ({} params arrays); serving {serve_n} requests", spec.params.len());
+    let mut intent_hits = 0usize;
+    let mut lat = Vec::with_capacity(serve_n);
+    for ex in test.examples.iter().take(serve_n) {
+        let t0 = Instant::now();
+        let (intent, _slots) = model.predict(&ex.tokens)?;
+        lat.push(t0.elapsed().as_secs_f64());
+        if intent == ex.intent as usize {
+            intent_hits += 1;
+        }
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "[serve] intent acc {:.3} | latency p50 {:.2} ms | p95 {:.2} ms",
+        intent_hits as f64 / serve_n as f64,
+        lat[serve_n / 2] * 1e3,
+        lat[(serve_n * 95 / 100).min(serve_n - 1)] * 1e3,
+    );
+
+    // Show a few predictions with their decoded intents.
+    for ex in test.examples.iter().take(3) {
+        let (intent, _) = model.predict(&ex.tokens)?;
+        println!(
+            "[serve] predicted intent: {:<28} (gold: {})",
+            INTENTS[intent], INTENTS[ex.intent as usize]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): train the tensorized
+//! transformer on synthetic ATIS through the full three-layer stack —
+//! Pallas BTT kernels inside a JAX-lowered HLO train step, executed by
+//! the rust coordinator via PJRT — and log the loss curve plus Table III
+//! metrics.
+//!
+//! ```bash
+//! cargo run --release --offline --example train_atis -- \
+//!     --variant tt_L2 --steps 300 --eval-n 300
+//! ```
+
+use tt_trainer::coordinator::Trainer;
+use tt_trainer::data::Dataset;
+use tt_trainer::runtime::{Engine, Manifest};
+use tt_trainer::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let variant = args.get_or("variant", "tt_L2");
+    let steps = args.get_usize("steps", 300);
+    let eval_n = args.get_usize("eval-n", 300);
+    let lr = args.get_f64("lr", 4e-3) as f32;
+    let out_csv = args.get_or("out", "target/train_atis_loss.csv").to_string();
+
+    let manifest = Manifest::load(args.get_or("artifacts", "artifacts"))?;
+    let spec = manifest.variant(variant)?;
+    println!("=== E2E: {variant} on synthetic ATIS ===");
+    println!(
+        "params: {} arrays / {} scalars ({:.1}x compression, {:.2} MB)",
+        spec.params.len(),
+        spec.n_param_scalars,
+        spec.compression_ratio(),
+        spec.size_mb()
+    );
+
+    let engine = Engine::load(spec)?;
+    let (train, test) = Dataset::paper_splits(&spec.config, 42);
+    let mut trainer = Trainer::new(engine, lr);
+
+    let ev0 = trainer.evaluate(&test, Some(eval_n))?;
+    println!(
+        "step {:>5}: intent acc {:.3} | slot acc {:.3}  (untrained)",
+        0, ev0.intent_acc, ev0.slot_acc
+    );
+
+    let report_every = (steps / 10).max(1);
+    let mut done = 0usize;
+    while done < steps {
+        let chunk = report_every.min(steps - done);
+        trainer.train_steps(&train, chunk)?;
+        done += chunk;
+        println!(
+            "step {:>5}: loss {:.4} (mean of last {})",
+            done,
+            trainer.metrics.recent_loss(chunk),
+            chunk
+        );
+    }
+
+    let ev1 = trainer.evaluate(&test, Some(eval_n))?;
+    trainer.metrics.record_eval(0, ev1.intent_acc, ev1.slot_acc);
+    println!(
+        "step {:>5}: intent acc {:.3} | slot acc {:.3}  (n={})",
+        done, ev1.intent_acc, ev1.slot_acc, ev1.n
+    );
+    println!(
+        "\ntiming: {:.1}s PJRT execute, {:.2}s host ({:.2}% coordinator overhead)",
+        trainer.metrics.execute_secs,
+        trainer.metrics.host_secs,
+        100.0 * trainer.metrics.host_overhead_frac()
+    );
+    println!(
+        "mean step latency: {:.1} ms",
+        1e3 * (trainer.metrics.execute_secs + trainer.metrics.host_secs)
+            / trainer.metrics.steps as f64
+    );
+
+    if let Some(parent) = std::path::Path::new(&out_csv).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out_csv, trainer.metrics.loss_csv())?;
+    println!("loss curve -> {out_csv}");
+    Ok(())
+}

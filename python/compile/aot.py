@@ -1,0 +1,177 @@
+"""AOT compile path: lower train/eval steps to HLO *text* + manifest.
+
+This is the only place python touches the pipeline; it runs at build time
+(``make artifacts``) and never again.  For every model variant we emit:
+
+  * ``artifacts/<variant>_train.hlo.txt``  — one fused SGD step:
+      inputs  = [*params, tokens (B,S) i32, intent (B,) i32,
+                 slots (B,S) i32, lr () f32]
+      outputs = (loss () f32, *new_params)
+  * ``artifacts/<variant>_eval.hlo.txt``   — inference:
+      inputs  = [*params, tokens] ; outputs = (intent_logits, slot_logits)
+  * ``artifacts/<variant>_init.npz``       — seeded initial parameters,
+      keys ``%04d.<path>`` so zip order == argument order.
+  * ``artifacts/manifest.json``            — parameter names/shapes/order,
+      input specs, and model-config metadata for the rust runtime.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import ModelConfig, TrainConfig, paper_configs
+
+SEED = 20250711
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs_for(cfg: ModelConfig, leaves):
+    param_specs = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in leaves]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    intent = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    slots = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return param_specs, tok, intent, slots, lr
+
+
+def build_variant(name: str, cfg: ModelConfig, compressed: bool, out_dir: str):
+    """Lower train + eval steps for one model variant; return manifest entry."""
+    key = jax.random.PRNGKey(SEED)
+    params = M.init_params(key, cfg, compressed=compressed)
+    names, leaves = M.flatten_params(params)
+    n_params = len(leaves)
+
+    def train_fn(*args):
+        p = M.unflatten_params(params, args[:n_params])
+        tokens, intent, slots, lr = args[n_params:]
+        loss, new_p = M.sgd_train_step(p, tokens, intent, slots, lr, cfg)
+        _, new_leaves = M.flatten_params(new_p)
+        return (loss, *new_leaves)
+
+    def eval_fn(*args):
+        p = M.unflatten_params(params, args[:n_params])
+        tokens = args[n_params]
+        return M.eval_step(p, tokens, cfg)
+
+    param_specs, tok, intent, slots, lr = _specs_for(cfg, leaves)
+    train_hlo = to_hlo_text(
+        jax.jit(train_fn).lower(*param_specs, tok, intent, slots, lr)
+    )
+    eval_hlo = to_hlo_text(jax.jit(eval_fn).lower(*param_specs, tok))
+
+    train_path = f"{name}_train.hlo.txt"
+    eval_path = f"{name}_eval.hlo.txt"
+    init_path = f"{name}_init.npz"
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(eval_hlo)
+    np.savez(
+        os.path.join(out_dir, init_path),
+        **{f"{i:04d}.{n}": np.asarray(x) for i, (n, x) in enumerate(zip(names, leaves))},
+    )
+
+    tensor_params = M.count_params(params)
+    dense_params = M.dense_equivalent_params(cfg)
+    return {
+        "name": name,
+        "compressed": compressed,
+        "train_hlo": train_path,
+        "eval_hlo": eval_path,
+        "init_npz": init_path,
+        "train_hlo_sha256": hashlib.sha256(train_hlo.encode()).hexdigest(),
+        "params": [
+            {"name": n, "shape": list(x.shape), "dtype": str(x.dtype)}
+            for n, x in zip(names, leaves)
+        ],
+        "n_params_arrays": n_params,
+        "n_params_scalars": tensor_params,
+        "dense_equivalent_scalars": dense_params,
+        "compression_ratio": dense_params / tensor_params,
+        "inputs": {
+            "tokens": [cfg.batch, cfg.seq_len],
+            "intent": [cfg.batch],
+            "slots": [cfg.batch, cfg.seq_len],
+        },
+        "train_outputs": 1 + n_params,
+        "config": {
+            "n_layers": cfg.n_layers,
+            "d_hid": cfg.d_hid,
+            "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "vocab": cfg.vocab,
+            "n_intents": cfg.n_intents,
+            "n_slots": cfg.n_slots,
+            "tt_m": list(cfg.tt_m),
+            "tt_n": list(cfg.tt_n),
+            "tt_rank": cfg.tt_rank,
+            "ttm_vocab_modes": list(cfg.ttm_vocab_modes),
+            "ttm_hid_modes": list(cfg.ttm_hid_modes),
+            "ttm_rank": cfg.ttm_rank,
+            "pad_id": cfg.pad_id,
+            "cls_id": cfg.cls_id,
+            "unk_id": cfg.unk_id,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="tt_L2,tt_L4,tt_L6,mm_L2",
+        help="comma list from {tt,mm}_L{2,4,6}",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfgs = paper_configs()
+    entries = []
+    for variant in args.variants.split(","):
+        variant = variant.strip()
+        kind, lname = variant.split("_")
+        cfg = cfgs[lname]
+        compressed = kind == "tt"
+        print(f"[aot] lowering {variant} (compressed={compressed}) ...", flush=True)
+        entries.append(build_variant(variant, cfg, compressed, args.out_dir))
+        print(f"[aot] {variant}: {entries[-1]['n_params_arrays']} param arrays, "
+              f"{entries[-1]['n_params_scalars']} scalars "
+              f"({entries[-1]['compression_ratio']:.1f}x compression)", flush=True)
+
+    manifest = {
+        "seed": SEED,
+        "train": {"lr": TrainConfig.lr, "epochs": TrainConfig.epochs},
+        "variants": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(entries)} variants -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

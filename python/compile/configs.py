@@ -1,0 +1,100 @@
+"""Model / training configurations mirroring the paper's Table II.
+
+| layer          | format | matrix shape | tensor shape               | rank |
+|----------------|--------|--------------|----------------------------|------|
+| embedding      | TTM    | (1000, 768)  | ((10,10,10), (12,8,8))     | 30   |
+| attention      | TT     | (768, 768)   | (12,8,8) x (8,8,12)        | 12   |
+| feed-forward   | TT     | (768, 768)   | (12,8,8) x (8,8,12)        | 12   |
+| classification | TT     | (768, 768)   | (12,8,8) x (8,8,12)        | 12   |
+
+The final task-specific heads (intent / slot) are kept uncompressed, as in
+the paper.  All shapes here are shared with the rust side through
+``artifacts/manifest.json`` (emitted by :mod:`compile.aot`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Configuration of the tensorized transformer (paper Fig. 2 / Table II)."""
+
+    n_layers: int = 2
+    d_hid: int = 768
+    n_heads: int = 12
+    seq_len: int = 32
+    batch: int = 1
+    vocab: int = 1000
+    n_intents: int = 26
+    n_slots: int = 129
+    # TT factorization of every (768, 768) linear layer.
+    tt_m: Tuple[int, ...] = (12, 8, 8)  # output modes, prod = 768
+    tt_n: Tuple[int, ...] = (8, 8, 12)  # input modes,  prod = 768
+    tt_rank: int = 12
+    # TTM factorization of the (1000, 768) token-embedding table.
+    ttm_vocab_modes: Tuple[int, ...] = (10, 10, 10)  # prod = 1000
+    ttm_hid_modes: Tuple[int, ...] = (12, 8, 8)  # prod = 768
+    ttm_rank: int = 30
+    # Special token ids (shared with the rust-side tokenizer).
+    pad_id: int = 0
+    cls_id: int = 1
+    unk_id: int = 2
+
+    def __post_init__(self) -> None:
+        assert math.prod(self.tt_m) == self.d_hid
+        assert math.prod(self.tt_n) == self.d_hid
+        assert math.prod(self.ttm_vocab_modes) == self.vocab
+        assert math.prod(self.ttm_hid_modes) == self.d_hid
+        assert self.d_hid % self.n_heads == 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_hid // self.n_heads
+
+    @property
+    def tt_ranks(self) -> Tuple[int, ...]:
+        """Full TT rank tuple (r_0, ..., r_2d) with r_0 = r_2d = 1."""
+        d2 = len(self.tt_m) + len(self.tt_n)
+        return (1,) + (self.tt_rank,) * (d2 - 1) + (1,)
+
+    @property
+    def ttm_ranks(self) -> Tuple[int, ...]:
+        d = len(self.ttm_vocab_modes)
+        return (1,) + (self.ttm_rank,) * (d - 1) + (1,)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """SGD hyper-parameters (paper Sec. VI-A)."""
+
+    lr: float = 4e-3
+    epochs: int = 40
+    batch: int = 1
+
+
+def paper_configs() -> dict:
+    """The three evaluated model sizes (Tables III-V: 2/4/6 encoders)."""
+    return {f"L{n}": ModelConfig(n_layers=n) for n in (2, 4, 6)}
+
+
+# Tiny config used by the fast test-suite paths (keeps pytest quick while
+# exercising the same code).
+TINY = ModelConfig(
+    n_layers=1,
+    d_hid=48,
+    n_heads=4,
+    seq_len=8,
+    vocab=27,
+    n_intents=5,
+    n_slots=7,
+    tt_m=(4, 4, 3),
+    tt_n=(3, 4, 4),
+    tt_rank=3,
+    ttm_vocab_modes=(3, 3, 3),
+    ttm_hid_modes=(4, 4, 3),
+    ttm_rank=4,
+)

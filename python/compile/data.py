@@ -1,0 +1,315 @@
+"""Synthetic ATIS-like data generator — python mirror of
+``rust/src/data/grammar.rs`` + ``tokenizer.rs``.
+
+MIRROR CONTRACT: template order, word-list order and RNG call sequence
+match the rust implementation exactly; `python/tests/test_data_parity.py`
+pins generated utterances, and the same constants are asserted on the
+rust side.  The python copy exists for the Fig. 13 parity experiment
+(python-reference training on the same corpus) and for pytest.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Mirror of rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, bound: int) -> int:
+        return (self.next_u64() * bound) >> 64
+
+
+INTENTS = [
+    "flight", "airfare", "ground_service", "airline", "abbreviation",
+    "aircraft", "flight_time", "quantity", "distance", "city", "airport",
+    "ground_fare", "capacity", "flight_no", "meal", "restriction",
+    "cheapest", "flight+airfare", "airline+flight_no",
+    "ground_service+ground_fare", "airfare+flight_time", "flight+airline",
+    "flight_no+airline", "day_name", "period_of_day", "seat",
+]
+
+SLOT_TYPES = [
+    "fromloc.city_name", "toloc.city_name", "depart_date.day_name",
+    "depart_date.month_name", "depart_date.day_number",
+    "depart_time.period_of_day", "arrive_time.period_of_day",
+    "airline_name", "class_type", "meal_description", "flight_number",
+    "aircraft_code", "airport_name", "city_name", "transport_type",
+    "cost_relative", "round_trip", "fare_basis_code",
+    "arrive_date.day_name", "stoploc.city_name",
+]
+
+CITIES = [
+    "boston", "denver", "atlanta", "pittsburgh", "baltimore", "dallas",
+    "oakland", "philadelphia", "washington", "charlotte", "milwaukee",
+    "phoenix", "detroit", "chicago", "memphis", "seattle", "orlando",
+    "cleveland", "nashville", "miami", "new york", "san francisco",
+    "los angeles", "salt lake city",
+]
+
+AIRLINES = [
+    "united airlines", "american airlines", "delta", "continental",
+    "us air", "northwest", "lufthansa", "twa", "canadian airlines",
+    "alaska airlines",
+]
+
+DAYS = ["monday", "tuesday", "wednesday", "thursday", "friday", "saturday", "sunday"]
+
+MONTHS = [
+    "january", "february", "march", "april", "may", "june", "july",
+    "august", "september", "october", "november", "december",
+]
+
+DAY_NUMBERS = [
+    "first", "second", "third", "fourth", "fifth", "sixth", "seventh",
+    "eighth", "ninth", "tenth", "twentieth", "thirtieth",
+]
+
+PERIODS = ["morning", "afternoon", "evening", "night", "noon", "midnight"]
+
+CLASSES = ["first class", "coach", "business class", "economy"]
+
+MEALS = ["breakfast", "lunch", "dinner", "snack"]
+
+FLIGHT_NUMBERS = ["one", "two", "three", "four", "five", "six", "seven", "eight"]
+
+AIRCRAFT = ["boeing", "airbus", "dc ten", "md eighty", "jet", "turboprop"]
+
+TRANSPORT = ["taxi", "limousine", "rental car", "bus"]
+
+COST_REL = ["cheapest", "lowest", "most expensive"]
+
+ROUND_TRIP = ["round trip", "one way"]
+
+FARE_CODES = ["q", "qw", "f", "y", "h"]
+
+WORD_LISTS = {
+    "cities": CITIES,
+    "airlines": AIRLINES,
+    "days": DAYS,
+    "months": MONTHS,
+    "day_numbers": DAY_NUMBERS,
+    "periods": PERIODS,
+    "classes": CLASSES,
+    "meals": MEALS,
+    "flight_numbers": FLIGHT_NUMBERS,
+    "aircraft": AIRCRAFT,
+    "transport": TRANSPORT,
+    "cost_rel": COST_REL,
+    "round_trip": ROUND_TRIP,
+    "fare_codes": FARE_CODES,
+}
+
+
+def L(w):  # literal part
+    return ("lit", w)
+
+
+def H(lst, slot):  # hole part
+    return ("hole", lst, slot)
+
+
+def templates() -> List[Tuple[int, list]]:
+    """(intent, parts) in the exact rust order."""
+    t: List[Tuple[int, list]] = []
+    add = lambda intent, parts: t.append((intent, parts))
+    # 0: flight
+    add(0, [L("show"), L("me"), L("flights"), L("from"), H("cities", 0),
+            L("to"), H("cities", 1), L("on"), H("days", 2)])
+    add(0, [L("i"), L("want"), L("to"), L("fly"), L("from"), H("cities", 0),
+            L("to"), H("cities", 1), L("in"), L("the"), H("periods", 5)])
+    add(0, [L("list"), L("all"), L("flights"), L("leaving"), H("cities", 0),
+            L("arriving"), L("in"), H("cities", 1), L("on"), H("months", 3),
+            H("day_numbers", 4)])
+    add(0, [L("are"), L("there"), H("round_trip", 16), L("flights"),
+            L("between"), H("cities", 0), L("and"), H("cities", 1),
+            L("with"), L("a"), L("stop"), L("in"), H("cities", 19)])
+    # 1: airfare
+    add(1, [L("what"), L("is"), L("the"), H("cost_rel", 15), L("fare"),
+            L("from"), H("cities", 0), L("to"), H("cities", 1)])
+    add(1, [L("how"), L("much"), L("does"), L("a"), H("classes", 8),
+            L("ticket"), L("to"), H("cities", 1), L("cost")])
+    add(1, [L("show"), L("fare"), L("code"), H("fare_codes", 17), L("for"),
+            H("airlines", 7)])
+    # 2: ground_service
+    add(2, [L("what"), L("ground"), L("transportation"), L("is"),
+            L("available"), L("in"), H("cities", 13)])
+    add(2, [L("is"), L("there"), L("a"), H("transport", 14), L("service"),
+            L("in"), H("cities", 13)])
+    # 3: airline
+    add(3, [L("which"), L("airlines"), L("fly"), L("from"), H("cities", 0),
+            L("to"), H("cities", 1)])
+    add(3, [L("tell"), L("me"), L("about"), H("airlines", 7)])
+    # 4: abbreviation
+    add(4, [L("what"), L("does"), L("fare"), L("code"), H("fare_codes", 17),
+            L("mean")])
+    # 5: aircraft
+    add(5, [L("what"), L("type"), L("of"), L("aircraft"), L("is"),
+            L("used"), L("flying"), L("from"), H("cities", 0), L("to"),
+            H("cities", 1)])
+    add(5, [L("show"), L("me"), L("all"), H("aircraft", 11), L("flights")])
+    # 6: flight_time
+    add(6, [L("what"), L("are"), L("the"), L("departure"), L("times"),
+            L("from"), H("cities", 0), L("to"), H("cities", 1), L("in"),
+            L("the"), H("periods", 5)])
+    # 7: quantity
+    add(7, [L("how"), L("many"), H("airlines", 7), L("flights"), L("leave"),
+            H("cities", 0), L("each"), H("days", 2)])
+    # 8: distance
+    add(8, [L("how"), L("far"), L("is"), L("the"), L("airport"), L("from"),
+            L("downtown"), H("cities", 13)])
+    # 9: city
+    add(9, [L("what"), L("city"), L("is"), L("served"), L("by"),
+            H("airlines", 7)])
+    # 10: airport
+    add(10, [L("which"), L("airports"), L("are"), L("near"), H("cities", 13)])
+    # 11: ground_fare
+    add(11, [L("how"), L("much"), L("is"), L("a"), H("transport", 14),
+             L("in"), H("cities", 13)])
+    # 12: capacity
+    add(12, [L("how"), L("many"), L("passengers"), L("fit"), L("on"),
+             L("a"), H("aircraft", 11)])
+    # 13: flight_no
+    add(13, [L("what"), L("is"), L("the"), L("flight"), L("number"),
+             L("from"), H("cities", 0), L("to"), H("cities", 1), L("on"),
+             H("airlines", 7)])
+    # 14: meal
+    add(14, [L("is"), H("meals", 9), L("served"), L("on"), L("flight"),
+             H("flight_numbers", 10)])
+    # 15: restriction
+    add(15, [L("what"), L("restrictions"), L("apply"), L("to"), L("the"),
+             H("cost_rel", 15), L("fare")])
+    # 16: cheapest
+    add(16, [L("show"), L("the"), H("cost_rel", 15), H("round_trip", 16),
+             L("ticket"), L("from"), H("cities", 0), L("to"), H("cities", 1)])
+    # 17: flight+airfare
+    add(17, [L("show"), L("flights"), L("and"), L("fares"), L("from"),
+             H("cities", 0), L("to"), H("cities", 1), L("on"), H("days", 2)])
+    # 18: airline+flight_no
+    add(18, [L("which"), L("airline"), L("operates"), L("flight"),
+             H("flight_numbers", 10)])
+    # 19: ground_service+ground_fare
+    add(19, [L("what"), L("is"), L("the"), L("cost"), L("of"), L("a"),
+             H("transport", 14), L("from"), L("the"), L("airport"), L("in"),
+             H("cities", 13)])
+    # 20: airfare+flight_time
+    add(20, [L("give"), L("me"), L("the"), L("fares"), L("and"),
+             L("times"), L("for"), L("flights"), L("from"), H("cities", 0),
+             L("to"), H("cities", 1), L("on"), H("days", 2), H("periods", 5)])
+    # 21: flight+airline
+    add(21, [L("list"), H("airlines", 7), L("flights"), L("from"),
+             H("cities", 0), L("to"), H("cities", 1), L("arriving"),
+             H("days", 18)])
+    # 22: flight_no+airline
+    add(22, [L("flight"), L("number"), L("and"), L("carrier"), L("from"),
+             H("cities", 0), L("to"), H("cities", 1), L("please")])
+    # 23: day_name
+    add(23, [L("what"), L("day"), L("does"), L("flight"),
+             H("flight_numbers", 10), L("leave")])
+    # 24: period_of_day
+    add(24, [L("do"), L("you"), L("have"), L("anything"), L("in"),
+             L("the"), H("periods", 5), L("to"), H("cities", 1)])
+    # 25: seat
+    add(25, [L("i"), L("need"), L("a"), H("classes", 8), L("seat"),
+             L("to"), H("cities", 1), L("on"), H("months", 3),
+             H("day_numbers", 4)])
+    # extra flight templates (class balance).
+    add(0, [L("flights"), L("please"), L("from"), H("cities", 0), L("to"),
+            H("cities", 1)])
+    add(0, [H("airlines", 7), L("from"), H("cities", 0), L("to"),
+            H("cities", 1), L("on"), H("days", 2), H("periods", 5)])
+    return t
+
+
+@dataclass
+class Utterance:
+    words: List[str]
+    intent: int
+    labels: List[int]
+
+
+class Generator:
+    """Mirror of rust Generator (same RNG call order)."""
+
+    def __init__(self, seed: int):
+        self.rng = SplitMix64(seed)
+        self.templates = templates()
+
+    def utterance(self) -> Utterance:
+        ti = self.rng.below(len(self.templates))
+        intent, parts = self.templates[ti]
+        words: List[str] = []
+        labels: List[int] = []
+        for part in parts:
+            if part[0] == "lit":
+                words.append(part[1])
+                labels.append(0)
+            else:
+                _, lst, slot = part
+                choices = WORD_LISTS[lst]
+                pick = choices[self.rng.below(len(choices))]
+                for wi, w in enumerate(pick.split(" ")):
+                    words.append(w)
+                    labels.append(1 + 2 * slot if wi == 0 else 2 + 2 * slot)
+        return Utterance(words, intent, labels)
+
+
+class Tokenizer:
+    """Mirror of rust Tokenizer: lexicographic vocab after PAD/CLS/UNK."""
+
+    def __init__(self, vocab_cap: int = 1000, pad=0, cls=1, unk=2):
+        words = set()
+        for _, parts in templates():
+            for part in parts:
+                if part[0] == "lit":
+                    words.add(part[1])
+                else:
+                    for w in WORD_LISTS[part[1]]:
+                        for piece in w.split(" "):
+                            words.add(piece)
+        self.word_to_id = {}
+        next_id = 3
+        for w in sorted(words):
+            if next_id >= vocab_cap:
+                break
+            self.word_to_id[w] = next_id
+            next_id += 1
+        self.pad, self.cls, self.unk = pad, cls, unk
+
+    def id(self, word: str) -> int:
+        return self.word_to_id.get(word, self.unk)
+
+    def encode(self, utt: Utterance, seq_len: int):
+        tokens = [self.pad] * seq_len
+        slots = [0] * seq_len
+        tokens[0] = self.cls
+        for i, (w, l) in enumerate(zip(utt.words, utt.labels)):
+            if i + 1 >= seq_len:
+                break
+            tokens[i + 1] = self.id(w)
+            slots[i + 1] = l
+        return tokens, utt.intent, slots
+
+
+def dataset(seed: int, n: int, seq_len: int = 32):
+    """Generate n encoded examples (mirror of rust Dataset::synth)."""
+    tok = Tokenizer()
+    gen = Generator(seed)
+    out = []
+    for _ in range(n):
+        u = gen.utterance()
+        out.append(tok.encode(u, seq_len))
+    return out

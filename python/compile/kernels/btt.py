@@ -1,0 +1,202 @@
+"""Layer-1 Pallas kernels for the bidirectional tensor-train (BTT) hot path.
+
+The paper's BTT contraction (Sec. IV-B, Fig. 5 bottom) splits a TT-format
+linear layer ``y = Wx`` into:
+
+  * K-independent *core merges* (paper kernel MUL0): the ``d`` output-mode
+    cores merge into ``Z3`` of shape ``(M, r)`` and the ``d`` input-mode
+    cores merge into ``Z1`` of shape ``(r, N)``.  These run once per layer
+    and are tiny (no dependence on the batch*seq dimension ``K``).
+  * K-dependent *applies* (paper kernels MUL1 + MUL2):
+    ``Z2 = X @ Z1^T`` of shape ``(K, r)`` and ``Y = Z2 @ Z3^T`` of shape
+    ``(K, M)``.
+
+This module implements the K-dependent applies as Pallas kernels.  The
+fused kernel :func:`btt_apply` keeps the ``Z2`` intermediate in a VMEM
+scratch accumulator so it never round-trips to HBM — the TPU analogue of
+the paper's "fused parallel BTT" dataflow (Fig. 10), where fine-grained
+contractions stream through a small on-chip buffer of size ``O(r)``.
+
+All kernels are launched with ``interpret=True``: the CPU PJRT plugin used
+by the rust runtime cannot execute Mosaic custom-calls, so the kernels are
+lowered to plain HLO.  On a real TPU the same BlockSpecs tile ``X`` rows
+into VMEM and feed the MXU with ``(block_k, N) x (N, r)`` and
+``(block_k, r) x (r, M)`` matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # hard requirement on CPU PJRT; see module docstring.
+
+
+def _largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1)."""
+    target = max(1, min(n, target))
+    for cand in range(target, 0, -1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Blocked matmul kernel (generic building block, used by the backward pass)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (block_m, block_n) output tile; the contraction dimension is kept
+    # whole inside the block (it is <= d_hid = 768 floats ~ 3 KiB/row, well
+    # within VMEM for the block sizes chosen below).
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128, block_n: int = 128):
+    """``a @ b`` as a Pallas kernel with a 2-D output-tile grid.
+
+    ``a``: (M, K), ``b``: (K, N) -> (M, N), all float32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm = _largest_divisor_leq(m, block_m)
+    bn = _largest_divisor_leq(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused BTT apply kernel (paper MUL1 + MUL2, fused per Fig. 10)
+# ---------------------------------------------------------------------------
+
+
+def _btt_apply_kernel(x_ref, z1t_ref, z3t_ref, bias_ref, o_ref, z2_ref):
+    # x_ref:   (block_k, N)   one tile of input rows
+    # z1t_ref: (N, r)         merged input-side cores, transposed
+    # z3t_ref: (r, M)         merged output-side cores, transposed
+    # bias_ref:(1, M)
+    # o_ref:   (block_k, M)
+    # z2_ref:  (block_k, r)
+    #
+    # Z2 is consumed by the second contraction inside the same kernel (the
+    # fused dataflow of the paper's Fig. 10).  It is additionally written
+    # out because training reuses it in backward propagation (the paper
+    # stores these intermediates too — Sec. IV-A: "all of these
+    # intermediate results need to be stored for reuse in back
+    # propagation"); at (K, r) it is the *small* BTT intermediate.
+    z2 = jnp.dot(x_ref[...], z1t_ref[...], preferred_element_type=jnp.float32)
+    z2_ref[...] = z2
+    o_ref[...] = (
+        jnp.dot(z2, z3t_ref[...], preferred_element_type=jnp.float32)
+        + bias_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def btt_apply(
+    x: jax.Array,
+    z1t: jax.Array,
+    z3t: jax.Array,
+    bias: jax.Array,
+    *,
+    block_k: int = 128,
+):
+    """Fused ``Y = (X @ Z1^T) @ Z3^T + bias`` over row tiles of ``X``.
+
+    ``x``: (K, N) input rows, ``z1t``: (N, r), ``z3t``: (r, M),
+    ``bias``: (M,) -> returns ``(y, z2)`` with ``y``: (K, M) and
+    ``z2 = X @ Z1^T``: (K, r), the intermediate saved for backprop.
+    """
+    k, n = x.shape
+    n2, r = z1t.shape
+    r2, m = z3t.shape
+    assert n == n2 and r == r2, (x.shape, z1t.shape, z3t.shape)
+    assert bias.shape == (m,), bias.shape
+    bk = _largest_divisor_leq(k, block_k)
+    grid = (k // bk,)
+    return pl.pallas_call(
+        _btt_apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, m), lambda i: (i, 0)),
+            pl.BlockSpec((bk, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m), jnp.float32),
+            jax.ShapeDtypeStruct((k, r), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, z1t, z3t, bias.reshape(1, m))
+
+
+# ---------------------------------------------------------------------------
+# Fused BTT backward kernel: dZ2 = dY @ Z3^T ; dX = dZ2 @ Z1  (MUL2+MUL3)
+# ---------------------------------------------------------------------------
+
+
+def _btt_bwd_dx_kernel(dy_ref, z3_ref, z1_ref, dx_ref, dz2_ref):
+    # dy_ref: (block_k, M), z3_ref: (M, r), z1_ref: (r, N)
+    # dx_ref: (block_k, N), dz2_ref: (block_k, r)
+    dz2 = jnp.dot(dy_ref[...], z3_ref[...], preferred_element_type=jnp.float32)
+    dz2_ref[...] = dz2
+    dx_ref[...] = jnp.dot(dz2, z1_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def btt_bwd_dx(dy: jax.Array, z3: jax.Array, z1: jax.Array, *, block_k: int = 128):
+    """Fused activation-gradient contraction (paper Eq. 16 in BTT order).
+
+    ``dy``: (K, M) output grad, ``z3``: (M, r) merged output cores,
+    ``z1``: (r, N) merged input cores.
+    Returns ``(dx, dz2)`` with ``dx``: (K, N) and ``dz2``: (K, r); ``dz2``
+    is reused by the core-gradient contractions (Eqs. 10-11).
+    """
+    k, m = dy.shape
+    m2, r = z3.shape
+    r2, n = z1.shape
+    assert m == m2 and r == r2
+    bk = _largest_divisor_leq(k, block_k)
+    grid = (k // bk,)
+    dx, dz2 = pl.pallas_call(
+        _btt_bwd_dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, n), lambda i: (i, 0)),
+            pl.BlockSpec((bk, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((k, r), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(dy, z3, z1)
+    return dx, dz2

@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and TT/TTM layers.
+
+Every oracle reconstructs the *dense* object (full weight matrix / full
+embedding table / naive attention) and computes the textbook result; the
+pytest suite asserts the compressed BTT / TTM / fused paths match.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def merge_left_cores(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Merge output-mode TT cores G_1..G_d -> Z3 of shape (prod m_i, r_d).
+
+    Each core G_k has shape (r_{k-1}, m_k, r_k); the chain is contracted
+    left-to-right (paper kernel MUL0, left half of Fig. 5 bottom).
+    """
+    z = cores[0].reshape(cores[0].shape[1], cores[0].shape[2])  # r0 == 1
+    for g in cores[1:]:
+        r_prev, m_k, r_k = g.shape
+        z = (z @ g.reshape(r_prev, m_k * r_k)).reshape(-1, r_k)
+    return z  # (prod m_i, r_d)
+
+
+def merge_right_cores(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Merge input-mode TT cores G_{d+1}..G_{2d} -> Z1 of shape (r_d, prod n_i)."""
+    last = cores[-1]
+    z = last.reshape(last.shape[0], last.shape[1])  # r_{2d} == 1
+    for g in reversed(cores[:-1]):
+        r_prev, n_k, r_k = g.shape
+        z = (g.reshape(r_prev * n_k, r_k) @ z).reshape(r_prev, -1)
+    return z  # (r_d, prod n_i)
+
+
+def tt_to_dense(cores: Sequence[jnp.ndarray], d: int) -> jnp.ndarray:
+    """Reconstruct the dense (M, N) matrix from 2d TT cores (paper Eq. 7).
+
+    The first ``d`` cores carry output modes m_i, the last ``d`` carry input
+    modes n_i; element (i, j) of the matrix is the full rank-chain product.
+    """
+    z3 = merge_left_cores(cores[:d])  # (M, r_d)
+    z1 = merge_right_cores(cores[d:])  # (r_d, N)
+    return z3 @ z1
+
+
+def ttm_to_dense(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Reconstruct the dense (prod n_k [vocab], prod m_k [hidden]) embedding
+    table from TTM cores F_k of shape (r_{k-1}, m_k, n_k, r_k) (paper Eq. 8).
+    """
+    # Chain over ranks, accumulating (m_1..m_k, n_1..n_k) free modes.
+    z = cores[0][0]  # (m1, n1, r1); r0 == 1
+    m_acc = cores[0].shape[1]
+    n_acc = cores[0].shape[2]
+    for f in cores[1:]:
+        r_prev, m_k, n_k, r_k = f.shape
+        z = z.reshape(m_acc * n_acc, r_prev) @ f.reshape(r_prev, m_k * n_k * r_k)
+        z = z.reshape(m_acc, n_acc, m_k, n_k, r_k)
+        z = z.transpose(0, 2, 1, 3, 4)
+        m_acc *= m_k
+        n_acc *= n_k
+        z = z.reshape(m_acc, n_acc, r_k)
+    z = z.reshape(m_acc, n_acc)  # (hidden, vocab)
+    return z.T  # (vocab, hidden): row t is the embedding of token t
+
+
+def dense_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Row-major reference: x (K, N) @ w^T + b, w of shape (M, N)."""
+    return x @ w.T + b
+
+
+def naive_attention(q, k, v, mask):
+    """(H, S, Dh) masked softmax attention, textbook version."""
+    dh = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / (dh**0.5)
+    s = jnp.where(mask[None, None, :] > 0.5, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel for the TTM embedding rank contraction.
+
+The TTM embedding lookup (paper Eq. 17) selects, for each token, one 2-D
+slice ``F_k[:, :, j_k, :]`` from every TTM core and chains them over the
+rank indices:
+
+    y_{i1..id} = F_1[i_1, j_1] F_2[i_2, j_2] ... F_d[i_d, j_d]
+
+The *gather* of the slices is data-dependent and stays in jnp (it lowers
+to an HLO gather, the natural analogue of the paper's index-selected BRAM
+reads).  The *rank-chain contraction* — the arithmetic hot spot — is done
+here as a Pallas kernel over a grid of token tiles: for each token the
+kernel performs the ``(m_<k, r) x (r, m_k * r')`` products entirely out of
+on-chip blocks, mirroring the paper's rank-parallel BRAM access pattern
+(Sec. V-C: "parallelism over the rank index across all tensor
+contractions").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .btt import INTERPRET, _largest_divisor_leq
+
+
+def _ttm_chain_kernel(a1_ref, a2_ref, a3_ref, o_ref):
+    # a1_ref: (bk, m1, r1)      gathered slices of core 1 (r0 == 1 squeezed)
+    # a2_ref: (bk, r1, m2*r2)   gathered slices of core 2, flattened
+    # a3_ref: (bk, r2, m3)      gathered slices of core 3 (r3 == 1 squeezed)
+    # o_ref:  (bk, m1*m2*m3)
+    bk, m1, r1 = a1_ref.shape
+    _, _, m2r2 = a2_ref.shape
+    _, r2, m3 = a3_ref.shape
+    m2 = m2r2 // r2
+    a1 = a1_ref[...]
+    a2 = a2_ref[...]
+    a3 = a3_ref[...]
+    # (bk, m1, r1) x (bk, r1, m2*r2) -> (bk, m1, m2, r2)
+    t = jnp.matmul(a1, a2, preferred_element_type=jnp.float32)
+    t = t.reshape(bk, m1 * m2, r2)
+    # (bk, m1*m2, r2) x (bk, r2, m3) -> (bk, m1*m2*m3)
+    y = jnp.matmul(t, a3, preferred_element_type=jnp.float32)
+    o_ref[...] = y.reshape(bk, m1 * m2 * m3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def ttm_chain(a1: jax.Array, a2: jax.Array, a3: jax.Array, *, block_k: int = 64):
+    """Chain-contract gathered TTM slices for a batch of tokens (d = 3).
+
+    ``a1``: (K, m1, r1), ``a2``: (K, r1, m2, r2), ``a3``: (K, r2, m3)
+    -> (K, m1*m2*m3) embedding rows.
+    """
+    k, m1, r1 = a1.shape
+    _, r1b, m2, r2 = a2.shape
+    _, r2b, m3 = a3.shape
+    assert r1 == r1b and r2 == r2b, (a1.shape, a2.shape, a3.shape)
+    a2f = a2.reshape(k, r1, m2 * r2)
+    bk = _largest_divisor_leq(k, block_k)
+    grid = (k // bk,)
+    return pl.pallas_call(
+        _ttm_chain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, m1, r1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, r1, m2 * r2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bk, r2, m3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, m1 * m2 * m3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, m1 * m2 * m3), jnp.float32),
+        interpret=INTERPRET,
+    )(a1, a2f, a3)

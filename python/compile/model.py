@@ -1,0 +1,333 @@
+"""Layer-2 model: the paper's tensorized transformer (Fig. 2) in JAX.
+
+Architecture (paper Sec. II-A / Table II):
+
+  * TTM token embedding (1000 x 768, modes (10,10,10)x(12,8,8), rank 30)
+    + dense positional embedding + dense segment embedding.
+  * N post-LN encoder blocks (Eq. 1): self-attention with TT-format
+    W_q/W_k/W_v/W_o and an FFN with TT-format W_1/W_2 (all 768 x 768,
+    modes (12,8,8)x(8,8,12), rank 12), GELU, residuals, LayerNorm.
+  * TT-format classifier layer (768 x 768) with tanh, then uncompressed
+    task heads: intent logits from the [CLS] position, slot logits from
+    every position (ATIS joint intent + slot-filling, Sec. VI-B).
+
+The same function also builds the *uncompressed* (matrix, "MM") baseline
+used in Table III / Fig. 13 / Table V rows "GPU-Matrix" — switched by
+``compressed=False`` — so the parity benches share one code path.
+
+Parameters are a nested pytree; :func:`flatten_params` defines the
+canonical flat ordering shared with the rust runtime via the manifest.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import tt_layers
+from .configs import ModelConfig
+from .kernels import ref as ref_kernels
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def tt_core_shapes(cfg: ModelConfig) -> List[Tuple[int, int, int]]:
+    """Shapes of the 2d TT cores of one (768, 768) linear layer."""
+    modes = cfg.tt_m + cfg.tt_n
+    ranks = cfg.tt_ranks
+    return [(ranks[k], modes[k], ranks[k + 1]) for k in range(len(modes))]
+
+
+def ttm_core_shapes(cfg: ModelConfig) -> List[Tuple[int, int, int, int]]:
+    """Shapes of the d TTM cores of the token-embedding table."""
+    ranks = cfg.ttm_ranks
+    return [
+        (ranks[k], cfg.ttm_hid_modes[k], cfg.ttm_vocab_modes[k], ranks[k + 1])
+        for k in range(len(cfg.ttm_vocab_modes))
+    ]
+
+
+def _tt_init(key, cfg: ModelConfig, target_std: float):
+    """Init TT cores so the reconstructed dense matrix has ~target_std.
+
+    For i.i.d. zero-mean core entries, each dense element is a sum over
+    ``prod(interior ranks)`` products of 2d entries, so
+    ``var(W) = prod(r_i) * sigma^(2 * 2d)``.
+    """
+    shapes = tt_core_shapes(cfg)
+    n_cores = len(shapes)
+    rank_paths = math.prod(cfg.tt_ranks[1:-1])
+    sigma = (target_std**2 / rank_paths) ** (1.0 / (2 * n_cores))
+    keys = jax.random.split(key, n_cores)
+    return tuple(
+        sigma * jax.random.normal(k, s, jnp.float32) for k, s in zip(keys, shapes)
+    )
+
+
+def _ttm_init(key, cfg: ModelConfig, target_std: float):
+    shapes = ttm_core_shapes(cfg)
+    n_cores = len(shapes)
+    rank_paths = math.prod(cfg.ttm_ranks[1:-1])
+    sigma = (target_std**2 / rank_paths) ** (1.0 / (2 * n_cores))
+    keys = jax.random.split(key, n_cores)
+    return tuple(
+        sigma * jax.random.normal(k, s, jnp.float32) for k, s in zip(keys, shapes)
+    )
+
+
+def _linear_params(key, cfg: ModelConfig, compressed: bool, target_std: float):
+    if compressed:
+        return {
+            "cores": _tt_init(key, cfg, target_std),
+            "bias": jnp.zeros((cfg.d_hid,), jnp.float32),
+        }
+    w = target_std * jax.random.normal(key, (cfg.d_hid, cfg.d_hid), jnp.float32)
+    return {"w": w, "bias": jnp.zeros((cfg.d_hid,), jnp.float32)}
+
+
+def init_params(key, cfg: ModelConfig, compressed: bool = True) -> Params:
+    """Initialize the full parameter pytree (tensorized or matrix model)."""
+    k_emb, k_pos, k_lay, k_cls, k_int, k_slt = jax.random.split(key, 6)
+    lin_std = math.sqrt(2.0 / (2 * cfg.d_hid))
+    if compressed:
+        embed = {"ttm": _ttm_init(k_emb, cfg, 0.02)}
+    else:
+        embed = {
+            "table": 0.02
+            * jax.random.normal(k_emb, (cfg.vocab, cfg.d_hid), jnp.float32)
+        }
+    embed["pos"] = 0.02 * jax.random.normal(
+        k_pos, (cfg.seq_len, cfg.d_hid), jnp.float32
+    )
+    layers = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(jax.random.fold_in(k_lay, i), 6)
+        layers.append(
+            {
+                "wq": _linear_params(ks[0], cfg, compressed, lin_std),
+                "wk": _linear_params(ks[1], cfg, compressed, lin_std),
+                "wv": _linear_params(ks[2], cfg, compressed, lin_std),
+                "wo": _linear_params(ks[3], cfg, compressed, lin_std),
+                "w1": _linear_params(ks[4], cfg, compressed, lin_std),
+                "w2": _linear_params(ks[5], cfg, compressed, lin_std),
+                "ln1": {
+                    "g": jnp.ones((cfg.d_hid,), jnp.float32),
+                    "b": jnp.zeros((cfg.d_hid,), jnp.float32),
+                },
+                "ln2": {
+                    "g": jnp.ones((cfg.d_hid,), jnp.float32),
+                    "b": jnp.zeros((cfg.d_hid,), jnp.float32),
+                },
+            }
+        )
+    heads_std = math.sqrt(1.0 / cfg.d_hid)
+    return {
+        "embed": embed,
+        "layers": layers,
+        "cls": {
+            "pool": _linear_params(k_cls, cfg, compressed, lin_std),
+            "intent_w": heads_std
+            * jax.random.normal(k_int, (cfg.n_intents, cfg.d_hid), jnp.float32),
+            "intent_b": jnp.zeros((cfg.n_intents,), jnp.float32),
+            "slot_w": heads_std
+            * jax.random.normal(k_slt, (cfg.n_slots, cfg.d_hid), jnp.float32),
+            "slot_b": jnp.zeros((cfg.n_slots,), jnp.float32),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _linear(x, p):
+    """Dispatch: TT (BTT contraction, Pallas) or dense rows ``x @ W^T + b``."""
+    if "cores" in p:
+        return tt_layers.tt_linear(x, p["cores"], p["bias"])
+    return x @ p["w"].T + p["bias"]
+
+
+def _layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _encoder_block(x, mask, p, cfg: ModelConfig):
+    """One post-LN encoder block (paper Eq. 1). ``x``: (S, H), ``mask``: (S,)."""
+    s, h = x.shape
+    q = _linear(x, p["wq"])  # (S, H)
+    k = _linear(x, p["wk"])
+    v = _linear(x, p["wv"])
+
+    def heads(t):  # (S, H) -> (n_heads, S, d_head)
+        return t.reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+    attn = tt_layers.attention(heads(q), heads(k), heads(v), mask)
+    attn = attn.transpose(1, 0, 2).reshape(s, h)
+    x = _layer_norm(x + _linear(attn, p["wo"]), p["ln1"]["g"], p["ln1"]["b"])
+    ffn = _linear(jax.nn.gelu(_linear(x, p["w1"])), p["w2"])
+    return _layer_norm(x + ffn, p["ln2"]["g"], p["ln2"]["b"])
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Run the transformer on a batch.
+
+    ``tokens``: (B, S) int32, position 0 holds [CLS], ``pad_id`` marks
+    padding.  Returns ``(intent_logits (B, n_intents),
+    slot_logits (B, S, n_slots), mask (B, S))``.
+    """
+    b, s = tokens.shape
+    flat = tokens.reshape(-1)
+    if "ttm" in params["embed"]:
+        emb = tt_layers.ttm_embedding(
+            flat, params["embed"]["ttm"], cfg.ttm_vocab_modes
+        )
+    else:
+        emb = params["embed"]["table"][flat]
+    x = emb.reshape(b, s, cfg.d_hid) + params["embed"]["pos"][None]
+    mask = (tokens != cfg.pad_id).astype(jnp.float32)  # (B, S)
+
+    def run_one(xb, mb):
+        for layer in params["layers"]:
+            xb = _encoder_block(xb, mb, layer, cfg)
+        return xb
+
+    # The paper trains with batch 1; the loop below vectorizes over the
+    # batch without changing the per-sample BTT dataflow.
+    xs = [run_one(x[i], mask[i]) for i in range(b)]
+    x = jnp.stack(xs)  # (B, S, H)
+
+    pooled = jnp.tanh(_linear(x.reshape(b * s, cfg.d_hid), params["cls"]["pool"]))
+    pooled = pooled.reshape(b, s, cfg.d_hid)
+    cls_vec = pooled[:, 0, :]  # [CLS]
+    intent_logits = cls_vec @ params["cls"]["intent_w"].T + params["cls"]["intent_b"]
+    slot_logits = pooled @ params["cls"]["slot_w"].T + params["cls"]["slot_b"]
+    return intent_logits, slot_logits, mask
+
+
+# ---------------------------------------------------------------------------
+# Loss / train / eval steps
+# ---------------------------------------------------------------------------
+
+
+def _cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(params, tokens, intent, slots, cfg: ModelConfig):
+    """Joint intent + slot-filling loss (both cross-entropy, slots masked)."""
+    intent_logits, slot_logits, mask = forward(params, tokens, cfg)
+    li = jnp.mean(_cross_entropy(intent_logits, intent))
+    ls_all = _cross_entropy(slot_logits, slots)  # (B, S)
+    # position 0 is [CLS]: labeled O (class 0) by the data generator and
+    # included; PAD positions are masked out.
+    ls = jnp.sum(ls_all * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return li + ls
+
+
+def sgd_train_step(params, tokens, intent, slots, lr, cfg: ModelConfig):
+    """One SGD step (paper stage FP -> BP -> PU, Sec. III-A).
+
+    Returns ``(loss, new_params)``; the parameter update
+    ``G_k <- G_k - lr * G_k'`` happens on TT/TTM factors directly.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, intent, slots, cfg)
+    new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return loss, new_params
+
+
+def eval_step(params, tokens, cfg: ModelConfig):
+    """Inference: returns (intent_logits, slot_logits)."""
+    intent_logits, slot_logits, _ = forward(params, tokens, cfg)
+    return intent_logits, slot_logits
+
+
+# ---------------------------------------------------------------------------
+# Flattening (canonical parameter order shared with rust via the manifest)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params: Params):
+    """Flatten to ``(names, leaves)`` with deterministic path-based names."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    names, leaves = [], []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+        leaves.append(leaf)
+    return names, leaves
+
+
+def unflatten_params(params_template: Params, leaves):
+    treedef = jax.tree_util.tree_structure(params_template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def dense_equivalent_params(cfg: ModelConfig) -> int:
+    """Parameter count of the uncompressed model (Table III 'Size' column)."""
+    per_lin = cfg.d_hid * cfg.d_hid + cfg.d_hid
+    per_layer = 6 * per_lin + 4 * cfg.d_hid
+    return (
+        cfg.vocab * cfg.d_hid
+        + cfg.seq_len * cfg.d_hid
+        + cfg.n_layers * per_layer
+        + per_lin
+        + cfg.n_intents * (cfg.d_hid + 1)
+        + cfg.n_slots * (cfg.d_hid + 1)
+    )
+
+
+def reconstruct_dense(params: Params, cfg: ModelConfig) -> Params:
+    """Expand a tensorized parameter tree into the equivalent dense tree.
+
+    Used by parity tests: the dense model run on the reconstructed weights
+    must produce identical logits to the tensorized model.
+    """
+
+    def conv_linear(p):
+        if "cores" in p:
+            d = len(p["cores"]) // 2
+            return {
+                "w": ref_kernels.tt_to_dense(p["cores"], d),
+                "bias": p["bias"],
+            }
+        return p
+
+    out = {
+        "embed": {"pos": params["embed"]["pos"]},
+        "layers": [],
+        "cls": dict(params["cls"]),
+    }
+    if "ttm" in params["embed"]:
+        out["embed"]["table"] = ref_kernels.ttm_to_dense(params["embed"]["ttm"])
+    else:
+        out["embed"]["table"] = params["embed"]["table"]
+    for layer in params["layers"]:
+        new = {}
+        for k, v in layer.items():
+            new[k] = conv_linear(v) if k.startswith("w") else v
+        out["layers"].append(new)
+    out["cls"]["pool"] = conv_linear(params["cls"]["pool"])
+    return out

@@ -1,0 +1,204 @@
+"""Layer-2 tensorized layers: TT linear and TTM embedding with custom VJPs.
+
+The forward/backward contraction *order* is the paper's contribution
+(Sec. IV-B, bidirectional tensor-train / BTT):
+
+  forward   Z3 = merge(G_1..G_d)      (M, r)   K-independent  (MUL0)
+            Z1 = merge(G_{d+1}..G_2d) (r, N)   K-independent  (MUL0)
+            Z2 = X  Z1^T              (K, r)   Pallas          (MUL1)
+            Y  = Z2 Z3^T + b          (K, M)   Pallas, fused   (MUL2)
+
+  backward  dZ2 = dY Z3 ; dX = dZ2 Z1 (Eq. 16 in BTT order)    Pallas fused
+            dZ3 = dY^T Z2 ; dZ1 = dZ2^T X                      Pallas
+            core grads by back-propagating through the merges
+            (Eqs. 10-11: eliminate G_k from the network, contract the rest)
+
+The custom_vjp pins this order — autodiff of a naive right-to-left
+contraction would re-introduce the K-dependent intermediates the paper
+eliminates.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import btt
+from .kernels import ref as ref_kernels
+from .kernels import ttm as ttm_kernels
+from .kernels.attention import fused_attention
+
+
+# ---------------------------------------------------------------------------
+# TT linear layer
+# ---------------------------------------------------------------------------
+
+
+def merge_left(*cores: jnp.ndarray) -> jnp.ndarray:
+    """Z3 = G_1 x ... x G_d reshaped to (prod m_i, r_d)."""
+    return ref_kernels.merge_left_cores(cores)
+
+
+def merge_right(*cores: jnp.ndarray) -> jnp.ndarray:
+    """Z1 = G_{d+1} x ... x G_{2d} reshaped to (r_d, prod n_i)."""
+    return ref_kernels.merge_right_cores(cores)
+
+
+@jax.custom_vjp
+def tt_linear(x: jnp.ndarray, cores: Tuple[jnp.ndarray, ...], bias: jnp.ndarray):
+    """``y = W x + b`` with ``W`` in TT format, computed in BTT order.
+
+    ``x``: (K, N) rows; ``cores``: 2d TT cores, first d carrying output
+    modes; ``bias``: (M,).  Returns (K, M).
+    """
+    d = len(cores) // 2
+    z3 = merge_left(*cores[:d])
+    z1 = merge_right(*cores[d:])
+    y, _ = btt.btt_apply(x, z1.T, z3.T, bias)
+    return y
+
+
+def _tt_linear_fwd(x, cores, bias):
+    d = len(cores) // 2
+    z3 = merge_left(*cores[:d])
+    z1 = merge_right(*cores[d:])
+    y, z2 = btt.btt_apply(x, z1.T, z3.T, bias)
+    return y, (x, cores, z1, z3, z2)
+
+
+def _tt_linear_bwd(res, dy):
+    x, cores, z1, z3, z2 = res
+    d = len(cores) // 2
+    # Fused activation gradient (paper Eq. 16 in BTT order): the (K, r)
+    # intermediate dZ2 is produced and consumed in one Pallas kernel and
+    # reused below for the core gradients.
+    dx, dz2 = btt.btt_bwd_dx(dy, z3, z1)
+    db = jnp.sum(dy, axis=0)
+    # Merged-core gradients (K-dependent part of Eqs. 10-11).  These are
+    # rank-thin (M x r / r x N) products — XLA-native dots beat an extra
+    # interpret-mode kernel launch by ~5x here (EXPERIMENTS.md §Perf);
+    # the genuinely hot K-wide contractions above stay in Pallas.
+    dz3 = dy.T @ z2  # (M, r)
+    dz1 = dz2.T @ x  # (r, N)
+    # Distribute into individual cores: eliminate G_k from the merge chain
+    # and contract the remaining nodes (K-independent part of Eqs. 10-11).
+    _, vjp_left = jax.vjp(merge_left, *cores[:d])
+    _, vjp_right = jax.vjp(merge_right, *cores[d:])
+    dcores = tuple(vjp_left(dz3)) + tuple(vjp_right(dz1))
+    return dx, dcores, db
+
+
+tt_linear.defvjp(_tt_linear_fwd, _tt_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# TTM embedding table
+# ---------------------------------------------------------------------------
+
+
+def _token_digits(tokens: jnp.ndarray, vocab_modes: Sequence[int]):
+    """Mixed-radix decomposition of token ids into per-core indices j_k."""
+    digits = []
+    rem = tokens
+    for base in reversed(vocab_modes):
+        digits.append(rem % base)
+        rem = rem // base
+    return tuple(reversed(digits))  # j_1 .. j_d, most-significant first
+
+
+def _gather_slices(cores, digits):
+    """Select F_k[:, :, j_k, :] for every token -> per-token slice stacks."""
+    f1, f2, f3 = cores
+    j1, j2, j3 = digits
+    # f1: (1, m1, n1, r1)  -> a1: (K, m1, r1)
+    a1 = jnp.take(f1[0], j1, axis=1).transpose(1, 0, 2)
+    # f2: (r1, m2, n2, r2) -> a2: (K, r1, m2, r2)
+    a2 = jnp.take(f2, j2, axis=2).transpose(2, 0, 1, 3)
+    # f3: (r2, m3, n3, 1)  -> a3: (K, r2, m3)
+    a3 = jnp.take(f3[..., 0], j3, axis=2).transpose(2, 0, 1)
+    return a1, a2, a3
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ttm_embedding(tokens: jnp.ndarray, cores: Tuple[jnp.ndarray, ...],
+                  vocab_modes: Tuple[int, ...]):
+    """TTM embedding lookup (paper Eq. 17), d = 3.
+
+    ``tokens``: (K,) int32 ids; ``cores``: 3 TTM cores F_k of shape
+    (r_{k-1}, m_k, n_k, r_k).  Returns (K, prod m_k) rows.
+    """
+    digits = _token_digits(tokens, vocab_modes)
+    a1, a2, a3 = _gather_slices(cores, digits)
+    return ttm_kernels.ttm_chain(a1, a2, a3)
+
+
+def _ttm_embedding_fwd(tokens, cores, vocab_modes):
+    digits = _token_digits(tokens, vocab_modes)
+    a1, a2, a3 = _gather_slices(cores, digits)
+    y = ttm_kernels.ttm_chain(a1, a2, a3)
+    return y, (digits, a1, a2, a3, tuple(c.shape for c in cores))
+
+
+def _ttm_embedding_bwd(vocab_modes, res, dy):
+    del vocab_modes  # static; digits were computed in fwd
+    digits, a1, a2, a3, core_shapes = res
+    j1, j2, j3 = digits
+    k, m1, r1 = a1.shape
+    _, _, m2, r2 = a2.shape
+    _, _, m3 = a3.shape
+    dy4 = dy.reshape(k, m1, m2, m3)
+    # Forward: y_{k,abc} = sum_{s,t} a1[k,a,s] a2[k,s,b,t] a3[k,t,c]
+    b_mid = jnp.einsum("ksbt,ktc->ksbc", a2, a3)  # (K, r1, m2, m3)
+    da1 = jnp.einsum("kabc,ksbc->kas", dy4, b_mid)
+    db_mid = jnp.einsum("kabc,kas->ksbc", dy4, a1)
+    da2 = jnp.einsum("ksbc,ktc->ksbt", db_mid, a3)
+    da3 = jnp.einsum("ksbc,ksbt->ktc", db_mid, a2)
+    # Scatter-add the per-token slice gradients back into the cores
+    # (paper Eq. 12: only the selected slices receive gradient).
+    # Indexing-shape rules: a lone advanced index keeps the K axis in
+    # place; a scalar+array (non-contiguous) pair moves K to the front.
+    df1 = jnp.zeros(core_shapes[0], jnp.float32)
+    df1 = df1.at[0, :, j1, :].add(da1)  # (K, m1, r1): 0 + j1 -> K first
+    df2 = jnp.zeros(core_shapes[1], jnp.float32)
+    df2 = df2.at[:, :, j2, :].add(da2.transpose(1, 2, 0, 3))  # (r1,m2,K,r2)
+    df3 = jnp.zeros(core_shapes[2], jnp.float32)
+    df3 = df3.at[:, :, j3, 0].add(da3.transpose(1, 2, 0))  # (r2, m3, K)
+    return None, (df1, df2, df3)
+
+
+ttm_embedding.defvjp(_ttm_embedding_fwd, _ttm_embedding_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention with reference backward
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray):
+    """Masked multi-head attention; Pallas forward, textbook backward.
+
+    ``q``/``k``/``v``: (H, S, Dh); ``mask``: (S,) floats.
+    """
+    return fused_attention(q, k, v, mask)
+
+
+def _attention_fwd(q, k, v, mask):
+    return fused_attention(q, k, v, mask), (q, k, v, mask)
+
+
+def _attention_bwd(res, do):
+    q, k, v, mask = res
+    # Recompute-style backward via the reference implementation (the
+    # Pallas forward and the oracle agree to float tolerance; tested).
+    _, vjp = jax.vjp(ref_kernels.naive_attention, q, k, v, mask)
+    dq, dk, dv, _ = vjp(do)
+    return dq, dk, dv, jnp.zeros_like(mask)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,59 @@
+"""Cross-language parity for the synthetic ATIS generator.
+
+The constants below are pinned on BOTH sides (see the rust integration
+test `rust/tests/data_parity.rs`): if either implementation drifts, one
+of the two suites fails.
+"""
+
+import numpy as np
+
+from compile.data import Generator, SplitMix64, Tokenizer, dataset
+
+
+def test_splitmix_reference_sequence():
+    r = SplitMix64(42)
+    assert r.next_u64() == 13679457532755275413
+    assert r.next_u64() == 2949826092126892291
+    assert r.next_u64() == 5139283748462763858
+
+
+def test_pinned_utterances_seed42():
+    g = Generator(42)
+    u1 = g.utterance()
+    assert " ".join(u1.words) == "which airline operates flight two"
+    assert u1.intent == 18
+    assert u1.labels == [0, 0, 0, 0, 21]
+    u2 = g.utterance()
+    assert " ".join(u2.words) == "tell me about continental"
+    assert u2.intent == 3
+    assert u2.labels == [0, 0, 0, 15]
+    u3 = g.utterance()
+    assert " ".join(u3.words) == "i want to fly from new york to dallas in the noon"
+    assert u3.intent == 0
+    assert u3.labels == [0, 0, 0, 0, 0, 1, 2, 0, 3, 0, 0, 11]
+
+
+def test_pinned_encoding_seed42():
+    ds = dataset(42, 1)
+    tokens, intent, slots = ds[0]
+    assert tokens[:6] == [1, 193, 9, 135, 75, 183]
+    assert intent == 18
+    assert all(t == 0 for t in tokens[6:])
+
+
+def test_vocab_size_under_cap():
+    t = Tokenizer()
+    assert len(t.word_to_id) + 3 <= 1000
+    assert len(t.word_to_id) > 100
+
+
+def test_dataset_examples_well_formed():
+    for tokens, intent, slots in dataset(7, 100):
+        assert len(tokens) == 32 and len(slots) == 32
+        assert tokens[0] == 1  # CLS
+        assert 0 <= intent < 26
+        arr = np.array(tokens)
+        assert arr.min() >= 0 and arr.max() < 1000
+        for t, s in zip(tokens, slots):
+            if t == 0:
+                assert s == 0

@@ -1,0 +1,208 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; assert_allclose against ref.py is the
+core correctness signal for the compute hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import btt, ref, ttm
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(0, 1, shape).astype("f4"))
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_numpy(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, k)
+    b = rand(rng, k, n)
+    got = np.asarray(btt.matmul(a, b))
+    want = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("block", [1, 8, 64, 128, 1024])
+def test_matmul_block_sizes(block):
+    rng = np.random.default_rng(0)
+    a = rand(rng, 48, 32)
+    b = rand(rng, 32, 40)
+    got = np.asarray(btt.matmul(a, b, block_m=block, block_n=block))
+    np.testing.assert_allclose(got, np.asarray(a) @ np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused BTT apply
+# ---------------------------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 64),
+    n=st.sampled_from([12, 48, 768]),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_btt_apply_matches_reference(k, n, r, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, k, n)
+    z1t = rand(rng, n, r)
+    z3t = rand(rng, r, n)
+    bias = rand(rng, n)
+    y, z2 = btt.btt_apply(x, z1t, z3t, bias)
+    want_z2 = np.asarray(x) @ np.asarray(z1t)
+    want_y = want_z2 @ np.asarray(z3t) + np.asarray(bias)
+    np.testing.assert_allclose(np.asarray(z2), want_z2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y), want_y, rtol=2e-3, atol=2e-3)
+
+
+def test_btt_apply_paper_shape():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 32, 768)
+    z1t = rand(rng, 768, 12)
+    z3t = rand(rng, 12, 768)
+    bias = rand(rng, 768)
+    y, _ = btt.btt_apply(x, z1t, z3t, bias)
+    want = (np.asarray(x) @ np.asarray(z1t)) @ np.asarray(z3t) + np.asarray(bias)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=2e-3, atol=2e-3)
+
+
+@given(
+    k=st.integers(1, 48),
+    m=st.sampled_from([12, 768]),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_btt_bwd_dx_matches_reference(k, m, r, seed):
+    rng = np.random.default_rng(seed)
+    dy = rand(rng, k, m)
+    z3 = rand(rng, m, r)
+    z1 = rand(rng, r, m)
+    dx, dz2 = btt.btt_bwd_dx(dy, z3, z1)
+    want_dz2 = np.asarray(dy) @ np.asarray(z3)
+    want_dx = want_dz2 @ np.asarray(z1)
+    np.testing.assert_allclose(np.asarray(dz2), want_dz2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dx), want_dx, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# TTM chain kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 40),
+    m1=st.integers(1, 12),
+    m2=st.integers(1, 8),
+    m3=st.integers(1, 8),
+    r1=st.integers(1, 16),
+    r2=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_ttm_chain_matches_einsum(k, m1, m2, m3, r1, r2, seed):
+    rng = np.random.default_rng(seed)
+    a1 = rand(rng, k, m1, r1)
+    a2 = rand(rng, k, r1, m2, r2)
+    a3 = rand(rng, k, r2, m3)
+    got = np.asarray(ttm.ttm_chain(a1, a2, a3))
+    want = np.einsum("kas,ksbt,ktc->kabc", a1, a2, a3).reshape(k, -1)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# ref.py self-consistency (the oracle itself)
+# ---------------------------------------------------------------------------
+
+
+def test_tt_to_dense_is_rank_chain():
+    # Hand-check a d=1 "TT" (just two cores): W = G1 x G2.
+    rng = np.random.default_rng(3)
+    g1 = rand(rng, 1, 4, 3)
+    g2 = rand(rng, 3, 5, 1)
+    w = ref.tt_to_dense((g1, g2), d=1)
+    want = np.asarray(g1)[0] @ np.asarray(g2)[..., 0]
+    np.testing.assert_allclose(np.asarray(w), want, rtol=1e-5, atol=1e-6)
+
+
+def test_merge_left_right_compose_to_dense():
+    rng = np.random.default_rng(4)
+    cores = tuple(
+        rand(rng, *s)
+        for s in [(1, 4, 3), (3, 3, 3), (3, 3, 3), (3, 4, 1)]
+    )
+    z3 = ref.merge_left_cores(cores[:2])
+    z1 = ref.merge_right_cores(cores[2:])
+    w = ref.tt_to_dense(cores, d=2)
+    np.testing.assert_allclose(np.asarray(z3 @ z1), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+def test_ttm_to_dense_shape_and_lookup():
+    rng = np.random.default_rng(5)
+    cores = (rand(rng, 1, 4, 3, 4), rand(rng, 4, 4, 3, 4), rand(rng, 4, 3, 3, 1))
+    table = ref.ttm_to_dense(cores)
+    assert table.shape == (27, 48)
+    # Row t must equal the explicit slice chain of Eq. 17.
+    t = 14
+    j = (t // 9, (t // 3) % 3, t % 3)
+    row = np.einsum(
+        "as,sbt,tc->abc",
+        np.asarray(cores[0])[0, :, j[0], :],
+        np.asarray(cores[1])[:, :, j[1], :],
+        np.asarray(cores[2])[:, :, j[2], 0],
+    ).reshape(-1)
+    np.testing.assert_allclose(np.asarray(table[t]), row, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    h=st.integers(1, 12),
+    s=st.integers(2, 32),
+    dh=st.sampled_from([8, 16, 64]),
+    n_real=st.integers(1, 32),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_attention_matches_naive(h, s, dh, n_real, seed):
+    from compile.kernels.attention import fused_attention
+
+    rng = np.random.default_rng(seed)
+    q = rand(rng, h, s, dh)
+    k = rand(rng, h, s, dh)
+    v = rand(rng, h, s, dh)
+    mask = jnp.asarray((np.arange(s) < min(n_real, s)).astype("f4"))
+    got = np.asarray(fused_attention(q, k, v, mask))
+    want = np.asarray(ref.naive_attention(q, k, v, mask))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_rows_are_convex_combinations():
+    from compile.kernels.attention import fused_attention
+
+    rng = np.random.default_rng(11)
+    q = rand(rng, 2, 8, 16)
+    k = rand(rng, 2, 8, 16)
+    v = jnp.ones((2, 8, 16), jnp.float32)
+    mask = jnp.ones((8,), jnp.float32)
+    out = np.asarray(fused_attention(q, k, v, mask))
+    # softmax rows sum to 1 -> attention over all-ones V returns ones.
+    np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,173 @@
+"""L2 layer correctness: TT linear / TTM embedding / attention custom
+VJPs vs the dense oracles, forward and gradient."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import tt_layers as L
+from compile.kernels import ref
+
+settings.register_profile("layers", max_examples=15, deadline=None)
+settings.load_profile("layers")
+
+
+def make_tt(rng, m_modes, n_modes, rank):
+    modes = list(m_modes) + list(n_modes)
+    d2 = len(modes)
+    ranks = [1] + [rank] * (d2 - 1) + [1]
+    return tuple(
+        jnp.asarray(rng.normal(0, 0.3, (ranks[k], modes[k], ranks[k + 1])).astype("f4"))
+        for k in range(d2)
+    )
+
+
+def make_ttm(rng, hid_modes, vocab_modes, rank):
+    d = len(hid_modes)
+    ranks = [1] + [rank] * (d - 1) + [1]
+    return tuple(
+        jnp.asarray(
+            rng.normal(0, 0.4, (ranks[k], hid_modes[k], vocab_modes[k], ranks[k + 1])).astype("f4")
+        )
+        for k in range(d)
+    )
+
+
+# ---------------------------------------------------------------------------
+# TT linear
+# ---------------------------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 40),
+    rank=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_tt_linear_forward_matches_dense(k, rank, seed):
+    rng = np.random.default_rng(seed)
+    cores = make_tt(rng, (4, 3), (3, 4), rank)
+    x = jnp.asarray(rng.normal(0, 1, (k, 12)).astype("f4"))
+    b = jnp.asarray(rng.normal(0, 1, (12,)).astype("f4"))
+    w = ref.tt_to_dense(cores, 2)
+    got = np.asarray(L.tt_linear(x, cores, b))
+    want = np.asarray(ref.dense_linear(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@given(rank=st.integers(1, 6), seed=st.integers(0, 2**31))
+def test_tt_linear_gradients_match_dense(rank, seed):
+    rng = np.random.default_rng(seed)
+    cores = make_tt(rng, (4, 3), (3, 4), rank)
+    x = jnp.asarray(rng.normal(0, 1, (8, 12)).astype("f4"))
+    b = jnp.asarray(rng.normal(0, 1, (12,)).astype("f4"))
+
+    def loss_tt(x, cores, b):
+        return jnp.sum(jnp.sin(L.tt_linear(x, cores, b)))
+
+    def loss_dense(x, cores, b):
+        return jnp.sum(jnp.sin(ref.dense_linear(x, ref.tt_to_dense(cores, 2), b)))
+
+    g_tt = jax.grad(loss_tt, argnums=(0, 1, 2))(x, cores, b)
+    g_dn = jax.grad(loss_dense, argnums=(0, 1, 2))(x, cores, b)
+    for a, bb in zip(jax.tree.leaves(g_tt), jax.tree.leaves(g_dn)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=5e-3, atol=5e-3)
+
+
+def test_tt_linear_paper_shape():
+    rng = np.random.default_rng(1)
+    cores = make_tt(rng, (12, 8, 8), (8, 8, 12), 12)
+    x = jnp.asarray(rng.normal(0, 1, (32, 768)).astype("f4"))
+    b = jnp.zeros((768,), jnp.float32)
+    w = ref.tt_to_dense(cores, 3)
+    got = np.asarray(L.tt_linear(x, cores, b))
+    want = np.asarray(x @ w.T)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# TTM embedding
+# ---------------------------------------------------------------------------
+
+
+@given(rank=st.integers(1, 6), seed=st.integers(0, 2**31))
+def test_ttm_embedding_matches_dense_lookup(rank, seed):
+    rng = np.random.default_rng(seed)
+    cores = make_ttm(rng, (4, 4, 3), (3, 3, 3), rank)
+    toks = jnp.asarray(rng.integers(0, 27, (11,)).astype("i4"))
+    table = ref.ttm_to_dense(cores)
+    got = np.asarray(L.ttm_embedding(toks, cores, (3, 3, 3)))
+    want = np.asarray(table[toks])
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_ttm_embedding_grads_match_dense(seed):
+    rng = np.random.default_rng(seed)
+    cores = make_ttm(rng, (4, 4, 3), (3, 3, 3), 4)
+    toks = jnp.asarray(rng.integers(0, 27, (9,)).astype("i4"))
+
+    def loss_ttm(cores):
+        return jnp.sum(jnp.cos(L.ttm_embedding(toks, cores, (3, 3, 3))))
+
+    def loss_dense(cores):
+        return jnp.sum(jnp.cos(ref.ttm_to_dense(cores)[toks]))
+
+    g1 = jax.grad(loss_ttm)(cores)
+    g2 = jax.grad(loss_dense)(cores)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-3)
+
+
+def test_ttm_repeated_tokens_accumulate_grads():
+    # The scatter-add in the backward pass must accumulate when the same
+    # token appears twice (paper Eq. 12 over repeated indices).
+    rng = np.random.default_rng(2)
+    cores = make_ttm(rng, (4, 4, 3), (3, 3, 3), 4)
+    t1 = jnp.asarray([5, 5], dtype="i4")
+    t2 = jnp.asarray([5], dtype="i4")
+
+    def s(cores, toks):
+        return jnp.sum(L.ttm_embedding(toks, cores, (3, 3, 3)))
+
+    g_twice = jax.grad(s)(cores, t1)
+    g_once = jax.grad(s)(cores, t2)
+    for a, b in zip(jax.tree.leaves(g_twice), jax.tree.leaves(g_once)):
+        np.testing.assert_allclose(np.asarray(a), 2 * np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention wrapper
+# ---------------------------------------------------------------------------
+
+
+def test_attention_grads_match_reference():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(0, 1, (4, 8, 16)).astype("f4"))
+    k = jnp.asarray(rng.normal(0, 1, (4, 8, 16)).astype("f4"))
+    v = jnp.asarray(rng.normal(0, 1, (4, 8, 16)).astype("f4"))
+    mask = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 0], dtype="f4")
+
+    for arg in range(3):
+        g1 = jax.grad(lambda *a: jnp.sum(jnp.tanh(L.attention(*a))), argnums=arg)(
+            q, k, v, mask
+        )
+        g2 = jax.grad(
+            lambda *a: jnp.sum(jnp.tanh(ref.naive_attention(*a))), argnums=arg
+        )(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=5e-3, atol=5e-3)
+
+
+def test_attention_mask_blocks_padding():
+    # Masked (PAD) key positions must not influence the output.
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(0, 1, (2, 6, 8)).astype("f4"))
+    k = jnp.asarray(rng.normal(0, 1, (2, 6, 8)).astype("f4"))
+    v = jnp.asarray(rng.normal(0, 1, (2, 6, 8)).astype("f4"))
+    mask = jnp.asarray([1, 1, 1, 0, 0, 0], dtype="f4")
+    out1 = np.asarray(L.attention(q, k, v, mask))
+    # Perturb the masked region of K/V: output must be unchanged.
+    k2 = k.at[:, 3:, :].add(100.0)
+    v2 = v.at[:, 3:, :].add(-50.0)
+    out2 = np.asarray(L.attention(q, k2, v2, mask))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,242 @@
+//! Model / training / hardware configuration.
+//!
+//! [`ModelConfig`] mirrors `python/compile/configs.py` (paper Table II) and
+//! is deserialized from `artifacts/manifest.json` so the two sides can
+//! never drift.  [`U50`] carries the AMD Alveo U50 budget the paper
+//! targets, and [`Rtx3090`] the paper's measured GPU reference points used
+//! to calibrate the energy comparisons (we have no 3090; see DESIGN.md).
+
+use crate::util::json::Value;
+use anyhow::{anyhow, Context, Result};
+
+/// Transformer + tensorization hyper-parameters (paper Table II).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub d_hid: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub n_intents: usize,
+    pub n_slots: usize,
+    pub tt_m: Vec<usize>,
+    pub tt_n: Vec<usize>,
+    pub tt_rank: usize,
+    pub ttm_vocab_modes: Vec<usize>,
+    pub ttm_hid_modes: Vec<usize>,
+    pub ttm_rank: usize,
+    pub pad_id: i32,
+    pub cls_id: i32,
+    pub unk_id: i32,
+}
+
+impl ModelConfig {
+    /// The paper's configuration with `n` encoder blocks (Table II).
+    pub fn paper(n_layers: usize) -> Self {
+        ModelConfig {
+            n_layers,
+            d_hid: 768,
+            n_heads: 12,
+            seq_len: 32,
+            batch: 1,
+            vocab: 1000,
+            n_intents: 26,
+            n_slots: 129,
+            tt_m: vec![12, 8, 8],
+            tt_n: vec![8, 8, 12],
+            tt_rank: 12,
+            ttm_vocab_modes: vec![10, 10, 10],
+            ttm_hid_modes: vec![12, 8, 8],
+            ttm_rank: 30,
+            pad_id: 0,
+            cls_id: 1,
+            unk_id: 2,
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let usz = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("manifest config missing '{k}'"))
+        };
+        let vec_usz = |k: &str| -> Result<Vec<usize>> {
+            Ok(v.get(k)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("manifest config missing '{k}'"))?
+                .iter()
+                .filter_map(Value::as_usize)
+                .collect())
+        };
+        Ok(ModelConfig {
+            n_layers: usz("n_layers")?,
+            d_hid: usz("d_hid")?,
+            n_heads: usz("n_heads")?,
+            seq_len: usz("seq_len")?,
+            batch: usz("batch")?,
+            vocab: usz("vocab")?,
+            n_intents: usz("n_intents")?,
+            n_slots: usz("n_slots")?,
+            tt_m: vec_usz("tt_m")?,
+            tt_n: vec_usz("tt_n")?,
+            tt_rank: usz("tt_rank")?,
+            ttm_vocab_modes: vec_usz("ttm_vocab_modes")?,
+            ttm_hid_modes: vec_usz("ttm_hid_modes")?,
+            ttm_rank: usz("ttm_rank")?,
+            pad_id: usz("pad_id")? as i32,
+            cls_id: usz("cls_id")? as i32,
+            unk_id: usz("unk_id")? as i32,
+        })
+    }
+
+    /// Per-head attention dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_hid / self.n_heads
+    }
+
+    /// TT rank tuple (r_0, ..., r_2d), r_0 = r_2d = 1.
+    pub fn tt_ranks(&self) -> Vec<usize> {
+        let d2 = self.tt_m.len() + self.tt_n.len();
+        let mut r = vec![self.tt_rank; d2 + 1];
+        r[0] = 1;
+        r[d2] = 1;
+        r
+    }
+
+    /// Parameter count of one TT-format (d_hid x d_hid) linear layer.
+    pub fn tt_linear_params(&self) -> usize {
+        let modes: Vec<usize> = self.tt_m.iter().chain(&self.tt_n).copied().collect();
+        let ranks = self.tt_ranks();
+        modes
+            .iter()
+            .enumerate()
+            .map(|(k, &m)| ranks[k] * m * ranks[k + 1])
+            .sum()
+    }
+
+    /// Parameter count of the TTM embedding table factors.
+    pub fn ttm_params(&self) -> usize {
+        let d = self.ttm_vocab_modes.len();
+        let mut ranks = vec![self.ttm_rank; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        (0..d)
+            .map(|k| ranks[k] * self.ttm_hid_modes[k] * self.ttm_vocab_modes[k] * ranks[k + 1])
+            .sum()
+    }
+
+    /// Uncompressed model size in scalars (Table III "Size" column basis).
+    pub fn dense_equivalent_params(&self) -> usize {
+        let per_lin = self.d_hid * self.d_hid + self.d_hid;
+        let per_layer = 6 * per_lin + 4 * self.d_hid;
+        self.vocab * self.d_hid
+            + self.seq_len * self.d_hid
+            + self.n_layers * per_layer
+            + per_lin
+            + self.n_intents * (self.d_hid + 1)
+            + self.n_slots * (self.d_hid + 1)
+    }
+
+    /// Tensor-compressed model size in scalars.
+    pub fn tensor_params(&self) -> usize {
+        let per_layer = 6 * (self.tt_linear_params() + self.d_hid) + 4 * self.d_hid;
+        self.ttm_params()
+            + self.seq_len * self.d_hid
+            + self.n_layers * per_layer
+            + self.tt_linear_params()
+            + self.d_hid
+            + self.n_intents * (self.d_hid + 1)
+            + self.n_slots * (self.d_hid + 1)
+    }
+}
+
+/// SGD hyper-parameters (paper Sec. VI-A).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub epochs: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 4e-3, epochs: 40 }
+    }
+}
+
+/// AMD Alveo U50 programmable-logic budget (paper Sec. VI-A).
+#[derive(Debug, Clone, Copy)]
+pub struct U50;
+
+impl U50 {
+    pub const LUT: usize = 872_000;
+    pub const FF: usize = 1_743_000;
+    pub const DSP: usize = 5_952;
+    pub const BRAM_BLOCKS: usize = 1_344; // 36 Kib each => 5.9 MB
+    pub const URAM_BLOCKS: usize = 640; // 288 Kib each => 22.5 MB
+    pub const BRAM_BITS: usize = 36_864;
+    pub const URAM_BITS: usize = 294_912;
+    pub const CLOCK_HZ: f64 = 100e6;
+    pub const STATIC_POWER_W: f64 = 6.0; // paper Table IV static column
+}
+
+/// Paper-measured RTX 3090 reference points (Table V) used as calibration
+/// constants for the GPU side of the energy/memory comparisons.
+#[derive(Debug, Clone, Copy)]
+pub struct Rtx3090;
+
+impl Rtx3090 {
+    pub const CLOCK_HZ: f64 = 1.395e9;
+    /// (layers, latency s/epoch, power W, computing memory MB) per mode.
+    pub const MATRIX: [(usize, f64, f64, f64); 3] =
+        [(2, 47.0, 150.0, 829.0), (4, 77.0, 150.0, 915.0), (6, 108.0, 152.0, 1022.0)];
+    pub const TT: [(usize, f64, f64, f64); 3] =
+        [(2, 144.0, 140.0, 726.0), (4, 243.0, 138.0, 720.0), (6, 347.0, 138.0, 716.0)];
+    pub const BTT: [(usize, f64, f64, f64); 3] =
+        [(2, 129.0, 138.0, 721.0), (4, 222.0, 138.0, 718.0), (6, 324.0, 138.0, 713.0)];
+}
+
+/// Load a manifest file and return the parsed JSON.
+pub fn load_manifest(path: &str) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {path} (run `make artifacts`)"))?;
+    Value::parse(&text).map_err(|e| anyhow!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_match_table3() {
+        // Table III: uncompressed sizes 36.7 / 65.1 / 93.5 MB (fp32).
+        for (layers, mb) in [(2usize, 36.7), (4, 65.1), (6, 93.5)] {
+            let cfg = ModelConfig::paper(layers);
+            let ours = cfg.dense_equivalent_params() as f64 * 4.0 / 1e6;
+            assert!(
+                (ours - mb).abs() / mb < 0.08,
+                "L{layers}: {ours:.1} MB vs paper {mb} MB"
+            );
+        }
+    }
+
+    #[test]
+    fn compression_ratio_matches_table3() {
+        // Table III reports 30.5x / 43.4x / 52.0x for 2/4/6 encoders.
+        for (layers, ratio) in [(2usize, 30.5), (4, 43.4), (6, 52.0)] {
+            let cfg = ModelConfig::paper(layers);
+            let ours = cfg.dense_equivalent_params() as f64 / cfg.tensor_params() as f64;
+            assert!(
+                (ours - ratio).abs() / ratio < 0.15,
+                "L{layers}: {ours:.1}x vs paper {ratio}x"
+            );
+        }
+    }
+
+    #[test]
+    fn tt_linear_param_count() {
+        let cfg = ModelConfig::paper(2);
+        // (1*12*12) + (12*8*12) + (12*8*12) + (12*8*12) + (12*8*12) + (12*12*1)
+        assert_eq!(cfg.tt_linear_params(), 144 + 4 * 1152 + 144);
+    }
+}

@@ -1,0 +1,112 @@
+//! Training metrics: loss curves, joint intent/slot accuracy, timing.
+
+use std::fmt::Write as _;
+
+/// Rolling record of one training run.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    /// (epoch, intent_acc, slot_acc) evaluation points.
+    pub evals: Vec<(usize, f64, f64)>,
+    /// Cumulative seconds inside PJRT execute.
+    pub execute_secs: f64,
+    /// Cumulative seconds of host-side overhead.
+    pub host_secs: f64,
+    pub steps: usize,
+}
+
+impl Metrics {
+    pub fn record_step(&mut self, loss: f32, execute_secs: f64, host_secs: f64) {
+        self.losses.push((self.steps, loss));
+        self.execute_secs += execute_secs;
+        self.host_secs += host_secs;
+        self.steps += 1;
+    }
+
+    pub fn record_eval(&mut self, epoch: usize, intent_acc: f64, slot_acc: f64) {
+        self.evals.push((epoch, intent_acc, slot_acc));
+    }
+
+    /// Mean loss over the last `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Host overhead as a fraction of total step time (perf target <5%).
+    pub fn host_overhead_frac(&self) -> f64 {
+        let total = self.execute_secs + self.host_secs;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.host_secs / total
+        }
+    }
+
+    /// Loss curve as CSV (step,loss) for EXPERIMENTS.md / plotting.
+    pub fn loss_csv(&self) -> String {
+        let mut out = String::from("step,loss\n");
+        for &(s, l) in &self.losses {
+            let _ = writeln!(out, "{s},{l}");
+        }
+        out
+    }
+
+    pub fn eval_csv(&self) -> String {
+        let mut out = String::from("epoch,intent_acc,slot_acc\n");
+        for &(e, ia, sa) in &self.evals {
+            let _ = writeln!(out, "{e},{ia:.4},{sa:.4}");
+        }
+        out
+    }
+}
+
+/// Argmax helper for logits rows.
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recent_loss_window() {
+        let mut m = Metrics::default();
+        for l in [4.0f32, 3.0, 2.0, 1.0] {
+            m.record_step(l, 0.01, 0.001);
+        }
+        assert_eq!(m.recent_loss(2), 1.5);
+        assert_eq!(m.steps, 4);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn csv_well_formed() {
+        let mut m = Metrics::default();
+        m.record_step(1.0, 0.0, 0.0);
+        m.record_eval(0, 0.5, 0.25);
+        assert!(m.loss_csv().lines().count() == 2);
+        assert!(m.eval_csv().contains("0,0.5000,0.2500"));
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let mut m = Metrics::default();
+        m.record_step(1.0, 0.9, 0.1);
+        assert!((m.host_overhead_frac() - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 training coordinator (the paper's accelerator control plane).
+//!
+//! * [`trainer`] — FP/BP/PU stage loop over the PJRT engine, epochs,
+//!   evaluation (Table III metrics), loss-curve capture (Fig. 13).
+//! * [`metrics`] — loss/accuracy/timing records and CSV export.
+
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use trainer::{EvalResult, Trainer};

@@ -1,0 +1,95 @@
+//! Training coordinator: the L3 analogue of the paper's accelerator
+//! control flow (Fig. 8) — it owns the FP -> BP -> PU stage loop, feeds
+//! batches, tracks metrics and checkpoints.
+//!
+//! The three training stages are fused into a single PJRT executable
+//! (`<variant>_train.hlo.txt`) exactly like the paper fuses them into one
+//! fabric pass; the coordinator sequences samples and epochs around it.
+
+use super::metrics::{argmax, Metrics};
+use crate::data::Dataset;
+use crate::runtime::Engine;
+use anyhow::Result;
+
+/// Epoch-level training driver.
+pub struct Trainer {
+    pub engine: Engine,
+    pub metrics: Metrics,
+    pub lr: f32,
+}
+
+/// Joint evaluation result (paper Table III columns).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub intent_acc: f64,
+    /// Token-level slot accuracy over non-PAD positions (excluding CLS).
+    pub slot_acc: f64,
+    pub n: usize,
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, lr: f32) -> Trainer {
+        Trainer { engine, metrics: Metrics::default(), lr }
+    }
+
+    /// One pass over (a prefix of) the dataset; returns mean loss.
+    pub fn train_epoch(&mut self, data: &Dataset, limit: Option<usize>) -> Result<f32> {
+        let n = limit.unwrap_or(data.len()).min(data.len());
+        let mut total = 0.0f32;
+        for ex in data.examples.iter().take(n) {
+            let out = self
+                .engine
+                .train_step(&ex.tokens, &[ex.intent], &ex.slots, self.lr)?;
+            self.metrics
+                .record_step(out.loss, out.execute_secs, out.host_secs);
+            total += out.loss;
+        }
+        Ok(total / n.max(1) as f32)
+    }
+
+    /// Train for a fixed number of steps (cycling the dataset).
+    pub fn train_steps(&mut self, data: &Dataset, steps: usize) -> Result<f32> {
+        let mut last = f32::NAN;
+        for i in 0..steps {
+            let ex = &data.examples[i % data.len()];
+            let out = self
+                .engine
+                .train_step(&ex.tokens, &[ex.intent], &ex.slots, self.lr)?;
+            self.metrics
+                .record_step(out.loss, out.execute_secs, out.host_secs);
+            last = out.loss;
+        }
+        Ok(last)
+    }
+
+    /// Joint intent/slot accuracy on (a prefix of) a dataset.
+    pub fn evaluate(&self, data: &Dataset, limit: Option<usize>) -> Result<EvalResult> {
+        let cfg = self.engine.spec.config.clone();
+        let n = limit.unwrap_or(data.len()).min(data.len());
+        let mut intent_hits = 0usize;
+        let mut slot_hits = 0usize;
+        let mut slot_total = 0usize;
+        for ex in data.examples.iter().take(n) {
+            let (intent_logits, slot_logits) = self.engine.eval(&ex.tokens)?;
+            if argmax(&intent_logits) == ex.intent as usize {
+                intent_hits += 1;
+            }
+            // slot_logits: (S, n_slots) row-major (batch 1).
+            for pos in 1..cfg.seq_len {
+                if ex.tokens[pos] == cfg.pad_id {
+                    continue;
+                }
+                let row = &slot_logits[pos * cfg.n_slots..(pos + 1) * cfg.n_slots];
+                if argmax(row) == ex.slots[pos] as usize {
+                    slot_hits += 1;
+                }
+                slot_total += 1;
+            }
+        }
+        Ok(EvalResult {
+            intent_acc: intent_hits as f64 / n.max(1) as f64,
+            slot_acc: slot_hits as f64 / slot_total.max(1) as f64,
+            n,
+        })
+    }
+}

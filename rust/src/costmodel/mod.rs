@@ -1,0 +1,393 @@
+//! Analytic computing/memory cost model (paper Sec. IV, Eqs. 18-21,
+//! Table I) for the four linear-layer execution schemes:
+//!
+//! * **MM** — dense matrix-matrix multiplication,
+//! * **TTM** — tensor-train-matrix right-to-left contraction,
+//! * **TT** — tensor-train right-to-left contraction (prior accelerators),
+//! * **BTT** — the paper's bidirectional tensor-train contraction.
+//!
+//! The TT/BTT formulas are validated *exactly* against the instrumented
+//! contraction engines in [`crate::tensor::tt`] (see tests) — the model
+//! is executable arithmetic, not transcription.
+
+pub mod sweeps;
+
+/// Shape of one tensorized linear layer: `y = W x`, `W (M, N)`,
+/// `M = prod(m_modes)`, `N = prod(n_modes)`, plus the TT rank tuple
+/// `(r_0, ..., r_2d)` with `r_0 = r_2d = 1`.
+#[derive(Debug, Clone)]
+pub struct LinearShape {
+    pub m_modes: Vec<usize>,
+    pub n_modes: Vec<usize>,
+    pub ranks: Vec<usize>,
+}
+
+impl LinearShape {
+    /// Uniform-rank constructor.
+    pub fn uniform(m_modes: &[usize], n_modes: &[usize], rank: usize) -> LinearShape {
+        let d2 = m_modes.len() + n_modes.len();
+        let mut ranks = vec![rank; d2 + 1];
+        ranks[0] = 1;
+        ranks[d2] = 1;
+        LinearShape {
+            m_modes: m_modes.to_vec(),
+            n_modes: n_modes.to_vec(),
+            ranks,
+        }
+    }
+
+    /// The paper's Table II attention/FFN/classifier layer.
+    pub fn paper() -> LinearShape {
+        LinearShape::uniform(&[12, 8, 8], &[8, 8, 12], 12)
+    }
+
+    pub fn d(&self) -> usize {
+        self.m_modes.len()
+    }
+
+    pub fn m(&self) -> u64 {
+        self.m_modes.iter().map(|&x| x as u64).product()
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n_modes.iter().map(|&x| x as u64).product()
+    }
+
+    /// TT parameter count (the "Weight" column of Table I).
+    pub fn tt_params(&self) -> u64 {
+        let modes: Vec<u64> = self
+            .m_modes
+            .iter()
+            .chain(&self.n_modes)
+            .map(|&x| x as u64)
+            .collect();
+        modes
+            .iter()
+            .enumerate()
+            .map(|(k, &m)| self.ranks[k] as u64 * m * self.ranks[k + 1] as u64)
+            .sum()
+    }
+
+    /// TTM parameter count for the same (M, N) matrix: cores
+    /// (r_{k-1}, m_k, n_k, r_k), pairing m_k with n_k (d cores).
+    pub fn ttm_params(&self) -> u64 {
+        let d = self.d();
+        // TTM rank tuple: interior = max interior TT rank for a fair
+        // same-rank comparison (the paper sweeps a single scalar r).
+        let r = self.interior_rank();
+        (0..d)
+            .map(|k| {
+                let rp = if k == 0 { 1 } else { r };
+                let rk = if k == d - 1 { 1 } else { r };
+                rp * self.m_modes[k] as u64 * self.n_modes[k] as u64 * rk
+            })
+            .sum()
+    }
+
+    fn interior_rank(&self) -> u64 {
+        self.ranks[1..self.ranks.len() - 1]
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1) as u64
+    }
+
+    // -- MM ----------------------------------------------------------------
+
+    /// Dense forward multiplies: K M N.
+    pub fn mm_muls(&self, k: u64) -> u64 {
+        k * self.m() * self.n()
+    }
+
+    /// Dense weight memory (elements).
+    pub fn mm_weight(&self) -> u64 {
+        self.m() * self.n()
+    }
+
+    // -- TT right-to-left (paper Eq. 18 / 19) --------------------------------
+
+    /// Eq. 18: forward multiplies of the right-to-left TT contraction.
+    pub fn tt_rl_muls(&self, k_dim: u64) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        let mut total = 0u64;
+        for k in 0..d {
+            // input side: r_{2d-k-1} r_{2d-k} prod_{i=1}^{d-k} n_i
+            let prod_n: u64 = self.n_modes[..d - k].iter().map(|&x| x as u64).product();
+            total += r(2 * d - k - 1) * r(2 * d - k) * prod_n;
+            // output side: r_{d-k-1} r_{d-k} prod_{i=d-k}^{d} m_i
+            let prod_m: u64 = self.m_modes[d - k - 1..].iter().map(|&x| x as u64).product();
+            total += r(d - k - 1) * r(d - k) * prod_m;
+        }
+        k_dim * total
+    }
+
+    /// Eq. 19: intermediate activation memory (elements) stored by the
+    /// right-to-left TT contraction (2d-1 intermediates, all carrying K).
+    pub fn tt_rl_memory(&self, k_dim: u64) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        let mut total = r(d); // K r_d middle intermediate
+        for k in 0..d.saturating_sub(1) {
+            let prod_n: u64 = self.n_modes[..d - k - 1].iter().map(|&x| x as u64).product();
+            total += r(2 * d - k - 1) * prod_n;
+            let prod_m: u64 = self.m_modes[d - k - 1..].iter().map(|&x| x as u64).product();
+            total += r(d - k - 1) * prod_m;
+        }
+        k_dim * total
+    }
+
+    // -- BTT (paper Eq. 20 / 21) ---------------------------------------------
+
+    /// Eq. 20: forward multiplies of the bidirectional contraction.
+    pub fn btt_muls(&self, k_dim: u64) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        let mut total = 0u64;
+        for k in 0..d.saturating_sub(1) {
+            // right merge: r_{2d-k-1} r_{2d-k-2} prod_{i=d-k-1}^{d} n_i
+            let prod_n: u64 = self.n_modes[d - k - 2..].iter().map(|&x| x as u64).product();
+            total += r(2 * d - k - 1) * r(2 * d - k - 2) * prod_n;
+            // left merge: r_{k+1} r_{k+2} prod_{i=1}^{k+2} m_i
+            let prod_m: u64 = self.m_modes[..k + 2].iter().map(|&x| x as u64).product();
+            total += r(k + 1) * r(k + 2) * prod_m;
+        }
+        total + k_dim * r(d) * (self.m() + self.n())
+    }
+
+    /// Eq. 21: intermediate memory (elements) of the BTT contraction —
+    /// only the final Z2 term carries K.
+    pub fn btt_memory(&self, k_dim: u64) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        let mut total = 0u64;
+        for k in 0..d.saturating_sub(1) {
+            let prod_n: u64 = self.n_modes[d - k - 2..].iter().map(|&x| x as u64).product();
+            total += r(2 * d - k - 2) * prod_n;
+            let prod_m: u64 = self.m_modes[..k + 2].iter().map(|&x| x as u64).product();
+            total += r(k + 1) * prod_m;
+        }
+        total + k_dim * r(d)
+    }
+
+    // -- TTM right-to-left (Table I row 2, generalized) ----------------------
+
+    /// Forward multiplies of a TTM-format linear layer contracted
+    /// right-to-left: step k (from d down to 1) contracts over
+    /// (n_k, r_k) and introduces m_k.
+    pub fn ttm_muls(&self, k_dim: u64) -> u64 {
+        let d = self.d();
+        let r = self.interior_rank();
+        let rk = |i: usize| -> u64 {
+            if i == 0 || i == d {
+                1
+            } else {
+                r
+            }
+        };
+        let mut total = 0u64;
+        for k in (1..=d).rev() {
+            let prod_n: u64 = self.n_modes[..k - 1].iter().map(|&x| x as u64).product();
+            let prod_m: u64 = self.m_modes[k..].iter().map(|&x| x as u64).product();
+            total += prod_n
+                * prod_m
+                * self.m_modes[k - 1] as u64
+                * self.n_modes[k - 1] as u64
+                * rk(k - 1)
+                * rk(k);
+        }
+        k_dim * total
+    }
+
+    /// Intermediate activation memory of the TTM contraction (d-1
+    /// intermediates, each carrying K and a full mixed n/m prefix).
+    pub fn ttm_memory(&self, k_dim: u64) -> u64 {
+        let d = self.d();
+        let r = self.interior_rank();
+        let mut total = 0u64;
+        for k in (1..d).rev() {
+            let prod_n: u64 = self.n_modes[..k].iter().map(|&x| x as u64).product();
+            let prod_m: u64 = self.m_modes[k..].iter().map(|&x| x as u64).product();
+            total += prod_n * prod_m * r;
+        }
+        k_dim * total
+    }
+
+    /// Training FLOPs ~ 3x forward multiplies (paper Sec. IV-A).
+    pub fn training_factor() -> u64 {
+        3
+    }
+}
+
+/// One row of a Fig. 6-style comparison.
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    pub method: &'static str,
+    pub fwd_muls: u64,
+    /// Intermediate-activation elements (Eqs. 19/21; 0 for MM).
+    pub memory_elems: u64,
+    /// Weight (+bias) elements.
+    pub weight_elems: u64,
+    /// Total intra-layer memory = weights + bias + intermediates — the
+    /// quantity behind the paper's Fig. 6 bars (its 22.67x MM/BTT example
+    /// reproduces only with weights included).
+    pub total_memory: u64,
+    /// Reduction ratios vs MM (compute, memory), the paper's y-axes.
+    pub compute_reduction: f64,
+    pub memory_reduction: f64,
+}
+
+/// Compare all four schemes at a given K (Fig. 6).
+pub fn compare_all(shape: &LinearShape, k_dim: u64) -> Vec<CostRow> {
+    let bias = shape.m();
+    let mm_muls = shape.mm_muls(k_dim);
+    let mm_total = shape.mm_weight() + bias; // dense: no intermediates
+    let rows = [
+        ("MM", mm_muls, 0, shape.mm_weight() + bias),
+        (
+            "TTM",
+            shape.ttm_muls(k_dim),
+            shape.ttm_memory(k_dim),
+            shape.ttm_params() + bias,
+        ),
+        (
+            "TT",
+            shape.tt_rl_muls(k_dim),
+            shape.tt_rl_memory(k_dim),
+            shape.tt_params() + bias,
+        ),
+        (
+            "BTT",
+            shape.btt_muls(k_dim),
+            shape.btt_memory(k_dim),
+            shape.tt_params() + bias,
+        ),
+    ];
+    rows.iter()
+        .map(|&(method, muls, mem, weight)| CostRow {
+            method,
+            fwd_muls: muls,
+            memory_elems: mem,
+            weight_elems: weight,
+            total_memory: weight + mem,
+            compute_reduction: mm_muls as f64 / muls as f64,
+            memory_reduction: mm_total as f64 / (weight + mem) as f64,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Tensor, TTMatrix};
+    use crate::util::prop;
+    use crate::util::rng::SplitMix64;
+
+    /// The analytic model must match the instrumented contraction engine
+    /// *exactly* — multiplies and stored intermediates.
+    #[test]
+    fn eq18_eq19_match_instrumented_rl() {
+        prop::check(31, 20, |rng| {
+            let d = 2 + rng.below(2) as usize; // d in {2, 3}
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(5) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(5) as usize).collect();
+            let rank = 1 + rng.below(6) as usize;
+            let k_dim = 1 + rng.below(24) as usize;
+            let tt = TTMatrix::randn(&m_modes, &n_modes, rank, 0.1, rng);
+            let shape = LinearShape {
+                m_modes: m_modes.clone(),
+                n_modes: n_modes.clone(),
+                ranks: tt.ranks.clone(),
+            };
+            let x = Tensor::randn(&[tt.n(), k_dim], 1.0, rng);
+            let (_, stats) = tt.matmul_right_to_left(&x).unwrap();
+            assert_eq!(stats.muls, shape.tt_rl_muls(k_dim as u64), "Eq.18 mismatch");
+            assert_eq!(
+                stats.stored_intermediate_elems,
+                shape.tt_rl_memory(k_dim as u64),
+                "Eq.19 mismatch"
+            );
+        });
+    }
+
+    #[test]
+    fn eq20_eq21_match_instrumented_btt() {
+        prop::check(32, 20, |rng| {
+            let d = 2 + rng.below(2) as usize;
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(5) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(5) as usize).collect();
+            let rank = 1 + rng.below(6) as usize;
+            let k_dim = 1 + rng.below(24) as usize;
+            let tt = TTMatrix::randn(&m_modes, &n_modes, rank, 0.1, rng);
+            let shape = LinearShape {
+                m_modes,
+                n_modes,
+                ranks: tt.ranks.clone(),
+            };
+            let x = Tensor::randn(&[tt.n(), k_dim], 1.0, rng);
+            let (_, stats) = tt.matmul_btt(&x).unwrap();
+            assert_eq!(stats.muls, shape.btt_muls(k_dim as u64), "Eq.20 mismatch");
+            assert_eq!(
+                stats.stored_intermediate_elems,
+                shape.btt_memory(k_dim as u64),
+                "Eq.21 mismatch"
+            );
+        });
+    }
+
+    /// Paper Sec. IV-B example: BTT vs MM is ~22.5x compute and ~22.7x
+    /// memory at the Table II attention shape with seq len 32.
+    #[test]
+    fn fig6_paper_example_ratios() {
+        let shape = LinearShape::uniform(&[8, 8, 12], &[12, 8, 8], 12);
+        let k = 32;
+        let mm = shape.mm_muls(k) as f64;
+        let btt = shape.btt_muls(k) as f64;
+        let compute_ratio = mm / btt;
+        assert!(
+            (compute_ratio - 22.5).abs() < 1.5,
+            "compute ratio {compute_ratio:.2} (paper: 22.51x)"
+        );
+        // Memory: paper's 22.67x reproduces with weights + bias +
+        // Eq. 21 intermediates on both sides.
+        let mm_total = (shape.mm_weight() + shape.m()) as f64;
+        let btt_total = (shape.tt_params() + shape.m() + shape.btt_memory(k)) as f64;
+        let mem_ratio = mm_total / btt_total;
+        assert!(
+            (mem_ratio - 22.67).abs() < 1.0,
+            "memory ratio {mem_ratio:.2} (paper: 22.67x)"
+        );
+        // BTT vs right-to-left TT: the paper reports 1.49x compute and
+        // 2.31x memory; our exact Eq. 18-21 arithmetic gives ~1.9x / ~3.3x
+        // (at least the claimed factors — see EXPERIMENTS.md note).
+        let tt_total = (shape.tt_params() + shape.m() + shape.tt_rl_memory(k)) as f64;
+        assert!(shape.tt_rl_muls(k) as f64 / btt >= 1.49);
+        assert!(tt_total / btt_total >= 2.31);
+    }
+
+    /// BTT strictly beats right-to-left TT whenever K exceeds the modes
+    /// (the paper's Sec. IV-B claim), property-tested.
+    #[test]
+    fn btt_beats_rl_for_large_k() {
+        prop::check(33, 30, |rng| {
+            let d = 2 + rng.below(2) as usize;
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(8) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(8) as usize).collect();
+            let rank = 1 + rng.below(8) as usize;
+            let shape = LinearShape::uniform(&m_modes, &n_modes, rank);
+            let max_mode = *m_modes.iter().chain(&n_modes).max().unwrap() as u64;
+            let k = max_mode * (2 + rng.below(16));
+            assert!(shape.btt_muls(k) <= shape.tt_rl_muls(k));
+            assert!(shape.btt_memory(k) <= shape.tt_rl_memory(k));
+        });
+    }
+
+    #[test]
+    fn compare_all_orders_btt_best() {
+        let rows = compare_all(&LinearShape::paper(), 32);
+        let btt = rows.iter().find(|r| r.method == "BTT").unwrap();
+        for r in &rows {
+            assert!(btt.fwd_muls <= r.fwd_muls, "BTT not best vs {}", r.method);
+        }
+    }
+}

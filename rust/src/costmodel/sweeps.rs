@@ -1,0 +1,117 @@
+//! Parameter sweeps regenerating the paper's Fig. 6 and Fig. 7.
+//!
+//! Fig. 6: computation and memory of MM / TTM / TT / BTT at the Table II
+//! attention shape, seq len 32.
+//! Fig. 7 (top): reduction ratios vs sequence length 8..512 at rank 12.
+//! Fig. 7 (bottom): reduction ratios vs TT rank 1..48 at seq len 32.
+
+use super::{compare_all, CostRow, LinearShape};
+
+/// One sweep point: the independent variable plus all method rows.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub x: u64,
+    pub rows: Vec<CostRow>,
+}
+
+/// Fig. 7 (top): sequence-length sweep at fixed rank.
+pub fn seq_len_sweep(rank: usize, seq_lens: &[u64]) -> Vec<SweepPoint> {
+    let shape = LinearShape::uniform(&[8, 8, 12], &[12, 8, 8], rank);
+    seq_lens
+        .iter()
+        .map(|&k| SweepPoint { x: k, rows: compare_all(&shape, k) })
+        .collect()
+}
+
+/// Fig. 7 (bottom): rank sweep at fixed sequence length.
+pub fn rank_sweep(seq_len: u64, ranks: &[usize]) -> Vec<SweepPoint> {
+    ranks
+        .iter()
+        .map(|&r| {
+            let shape = LinearShape::uniform(&[8, 8, 12], &[12, 8, 8], r);
+            SweepPoint { x: r as u64, rows: compare_all(&shape, seq_len) }
+        })
+        .collect()
+}
+
+/// The paper's sweep grids.
+pub fn paper_seq_lens() -> Vec<u64> {
+    vec![8, 16, 32, 64, 128, 256, 512]
+}
+
+pub fn paper_ranks() -> Vec<usize> {
+    vec![1, 2, 4, 8, 12, 16, 24, 32, 48]
+}
+
+/// Render a sweep as an aligned text table (one line per x, one column
+/// pair per method) — the bench harness prints these as the paper's
+/// figure series.
+pub fn render_sweep(points: &[SweepPoint], x_name: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{x_name:>8} | {:>14} {:>14} {:>14} {:>14} | {:>12} {:>12} {:>12}\n",
+        "MM muls", "TTM muls", "TT muls", "BTT muls", "TTM mem-red", "TT mem-red", "BTT mem-red"
+    ));
+    for p in points {
+        let get = |name: &str| p.rows.iter().find(|r| r.method == name).unwrap();
+        out.push_str(&format!(
+            "{:>8} | {:>14} {:>14} {:>14} {:>14} | {:>12.2} {:>12.2} {:>12.2}\n",
+            p.x,
+            get("MM").fwd_muls,
+            get("TTM").fwd_muls,
+            get("TT").fwd_muls,
+            get("BTT").fwd_muls,
+            get("TTM").memory_reduction,
+            get("TT").memory_reduction,
+            get("BTT").memory_reduction,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 7 (top) qualitative shape: BTT's advantage over TT grows with
+    /// sequence length.
+    #[test]
+    fn btt_advantage_grows_with_seq_len() {
+        let pts = seq_len_sweep(12, &paper_seq_lens());
+        let advantage: Vec<f64> = pts
+            .iter()
+            .map(|p| {
+                let tt = p.rows.iter().find(|r| r.method == "TT").unwrap().fwd_muls as f64;
+                let btt = p.rows.iter().find(|r| r.method == "BTT").unwrap().fwd_muls as f64;
+                tt / btt
+            })
+            .collect();
+        for w in advantage.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "advantage not monotone: {advantage:?}");
+        }
+    }
+
+    /// Fig. 7 (bottom) qualitative shape: all tensor methods' reduction
+    /// ratios degrade as rank grows, but BTT stays the best.
+    #[test]
+    fn reduction_degrades_with_rank_btt_best() {
+        let pts = rank_sweep(32, &paper_ranks());
+        let mut last_btt = f64::INFINITY;
+        for p in &pts {
+            let btt = p.rows.iter().find(|r| r.method == "BTT").unwrap();
+            let tt = p.rows.iter().find(|r| r.method == "TT").unwrap();
+            let ttm = p.rows.iter().find(|r| r.method == "TTM").unwrap();
+            assert!(btt.compute_reduction <= last_btt + 1e-9);
+            assert!(btt.compute_reduction >= tt.compute_reduction - 1e-9);
+            assert!(btt.compute_reduction >= ttm.compute_reduction - 1e-9);
+            last_btt = btt.compute_reduction;
+        }
+    }
+
+    #[test]
+    fn render_has_all_points() {
+        let pts = seq_len_sweep(12, &[8, 16]);
+        let s = render_sweep(&pts, "seq");
+        assert_eq!(s.lines().count(), 3);
+    }
+}

@@ -1,0 +1,513 @@
+//! Template grammar for synthetic ATIS-like utterances.
+//!
+//! MIRROR CONTRACT: `python/compile/data.py` re-implements this file
+//! verbatim (same template order, same word-list order, same RNG call
+//! sequence).  Any change here must be mirrored there; the cross-language
+//! parity test pins generated utterances on both sides.
+
+use crate::util::rng::SplitMix64;
+
+/// Intent label set (26 classes, ATIS-style).
+pub const INTENTS: [&str; 26] = [
+    "flight",
+    "airfare",
+    "ground_service",
+    "airline",
+    "abbreviation",
+    "aircraft",
+    "flight_time",
+    "quantity",
+    "distance",
+    "city",
+    "airport",
+    "ground_fare",
+    "capacity",
+    "flight_no",
+    "meal",
+    "restriction",
+    "cheapest",
+    "flight+airfare",
+    "airline+flight_no",
+    "ground_service+ground_fare",
+    "airfare+flight_time",
+    "flight+airline",
+    "flight_no+airline",
+    "day_name",
+    "period_of_day",
+    "seat",
+];
+
+/// Slot types; label ids are O = 0, B-type = 1 + 2i, I-type = 2 + 2i.
+pub const SLOT_TYPES: [&str; 20] = [
+    "fromloc.city_name",
+    "toloc.city_name",
+    "depart_date.day_name",
+    "depart_date.month_name",
+    "depart_date.day_number",
+    "depart_time.period_of_day",
+    "arrive_time.period_of_day",
+    "airline_name",
+    "class_type",
+    "meal_description",
+    "flight_number",
+    "aircraft_code",
+    "airport_name",
+    "city_name",
+    "transport_type",
+    "cost_relative",
+    "round_trip",
+    "fare_basis_code",
+    "arrive_date.day_name",
+    "stoploc.city_name",
+];
+
+pub const CITIES: [&str; 24] = [
+    "boston",
+    "denver",
+    "atlanta",
+    "pittsburgh",
+    "baltimore",
+    "dallas",
+    "oakland",
+    "philadelphia",
+    "washington",
+    "charlotte",
+    "milwaukee",
+    "phoenix",
+    "detroit",
+    "chicago",
+    "memphis",
+    "seattle",
+    "orlando",
+    "cleveland",
+    "nashville",
+    "miami",
+    "new york",
+    "san francisco",
+    "los angeles",
+    "salt lake city",
+];
+
+pub const AIRLINES: [&str; 10] = [
+    "united airlines",
+    "american airlines",
+    "delta",
+    "continental",
+    "us air",
+    "northwest",
+    "lufthansa",
+    "twa",
+    "canadian airlines",
+    "alaska airlines",
+];
+
+pub const DAYS: [&str; 7] = [
+    "monday", "tuesday", "wednesday", "thursday", "friday", "saturday", "sunday",
+];
+
+pub const MONTHS: [&str; 12] = [
+    "january",
+    "february",
+    "march",
+    "april",
+    "may",
+    "june",
+    "july",
+    "august",
+    "september",
+    "october",
+    "november",
+    "december",
+];
+
+pub const DAY_NUMBERS: [&str; 12] = [
+    "first", "second", "third", "fourth", "fifth", "sixth", "seventh", "eighth",
+    "ninth", "tenth", "twentieth", "thirtieth",
+];
+
+pub const PERIODS: [&str; 6] = [
+    "morning", "afternoon", "evening", "night", "noon", "midnight",
+];
+
+pub const CLASSES: [&str; 4] = ["first class", "coach", "business class", "economy"];
+
+pub const MEALS: [&str; 4] = ["breakfast", "lunch", "dinner", "snack"];
+
+pub const FLIGHT_NUMBERS: [&str; 8] = [
+    "one", "two", "three", "four", "five", "six", "seven", "eight",
+];
+
+pub const AIRCRAFT: [&str; 6] = ["boeing", "airbus", "dc ten", "md eighty", "jet", "turboprop"];
+
+pub const TRANSPORT: [&str; 4] = ["taxi", "limousine", "rental car", "bus"];
+
+pub const COST_REL: [&str; 3] = ["cheapest", "lowest", "most expensive"];
+
+pub const ROUND_TRIP: [&str; 2] = ["round trip", "one way"];
+
+pub const FARE_CODES: [&str; 5] = ["q", "qw", "f", "y", "h"];
+
+/// A placeholder in a template: which word list, which slot type
+/// (usize::MAX = no slot, words labeled O).
+#[derive(Debug, Clone, Copy)]
+pub struct Slot {
+    pub list: WordList,
+    pub slot_type: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WordList {
+    Cities,
+    Airlines,
+    Days,
+    Months,
+    DayNumbers,
+    Periods,
+    Classes,
+    Meals,
+    FlightNumbers,
+    Aircraft,
+    Transport,
+    CostRel,
+    RoundTrip,
+    FareCodes,
+}
+
+impl WordList {
+    pub fn words(&self) -> &'static [&'static str] {
+        match self {
+            WordList::Cities => &CITIES,
+            WordList::Airlines => &AIRLINES,
+            WordList::Days => &DAYS,
+            WordList::Months => &MONTHS,
+            WordList::DayNumbers => &DAY_NUMBERS,
+            WordList::Periods => &PERIODS,
+            WordList::Classes => &CLASSES,
+            WordList::Meals => &MEALS,
+            WordList::FlightNumbers => &FLIGHT_NUMBERS,
+            WordList::Aircraft => &AIRCRAFT,
+            WordList::Transport => &TRANSPORT,
+            WordList::CostRel => &COST_REL,
+            WordList::RoundTrip => &ROUND_TRIP,
+            WordList::FareCodes => &FARE_CODES,
+        }
+    }
+}
+
+/// One template: intent id + mix of literal words and placeholders.
+#[derive(Debug, Clone)]
+pub struct Template {
+    pub intent: usize,
+    pub parts: Vec<Part>,
+}
+
+#[derive(Debug, Clone)]
+pub enum Part {
+    Lit(&'static str),
+    Hole(WordList, usize), // word list + slot type index
+}
+
+macro_rules! lit {
+    ($($w:expr),*) => { vec![$(Part::Lit($w)),*] };
+}
+
+/// The template bank.  ORDER MATTERS (mirrored in python).
+pub fn templates() -> Vec<Template> {
+    use Part::{Hole, Lit};
+    use WordList::*;
+    let mut t: Vec<Template> = Vec::new();
+    let mut add = |intent: usize, parts: Vec<Part>| {
+        t.push(Template { intent, parts });
+    };
+    // 0: flight
+    add(0, vec![
+        Lit("show"), Lit("me"), Lit("flights"), Lit("from"), Hole(Cities, 0),
+        Lit("to"), Hole(Cities, 1), Lit("on"), Hole(Days, 2),
+    ]);
+    add(0, vec![
+        Lit("i"), Lit("want"), Lit("to"), Lit("fly"), Lit("from"), Hole(Cities, 0),
+        Lit("to"), Hole(Cities, 1), Lit("in"), Lit("the"), Hole(Periods, 5),
+    ]);
+    add(0, vec![
+        Lit("list"), Lit("all"), Lit("flights"), Lit("leaving"), Hole(Cities, 0),
+        Lit("arriving"), Lit("in"), Hole(Cities, 1), Lit("on"), Hole(Months, 3),
+        Hole(DayNumbers, 4),
+    ]);
+    add(0, vec![
+        Lit("are"), Lit("there"), Hole(RoundTrip, 16), Lit("flights"), Lit("between"),
+        Hole(Cities, 0), Lit("and"), Hole(Cities, 1), Lit("with"), Lit("a"),
+        Lit("stop"), Lit("in"), Hole(Cities, 19),
+    ]);
+    // 1: airfare
+    add(1, vec![
+        Lit("what"), Lit("is"), Lit("the"), Hole(CostRel, 15), Lit("fare"),
+        Lit("from"), Hole(Cities, 0), Lit("to"), Hole(Cities, 1),
+    ]);
+    add(1, vec![
+        Lit("how"), Lit("much"), Lit("does"), Lit("a"), Hole(Classes, 8),
+        Lit("ticket"), Lit("to"), Hole(Cities, 1), Lit("cost"),
+    ]);
+    add(1, vec![
+        Lit("show"), Lit("fare"), Lit("code"), Hole(FareCodes, 17), Lit("for"),
+        Hole(Airlines, 7),
+    ]);
+    // 2: ground_service
+    add(2, vec![
+        Lit("what"), Lit("ground"), Lit("transportation"), Lit("is"),
+        Lit("available"), Lit("in"), Hole(Cities, 13),
+    ]);
+    add(2, vec![
+        Lit("is"), Lit("there"), Lit("a"), Hole(Transport, 14), Lit("service"),
+        Lit("in"), Hole(Cities, 13),
+    ]);
+    // 3: airline
+    add(3, vec![
+        Lit("which"), Lit("airlines"), Lit("fly"), Lit("from"), Hole(Cities, 0),
+        Lit("to"), Hole(Cities, 1),
+    ]);
+    add(3, vec![
+        Lit("tell"), Lit("me"), Lit("about"), Hole(Airlines, 7),
+    ]);
+    // 4: abbreviation
+    add(4, vec![
+        Lit("what"), Lit("does"), Lit("fare"), Lit("code"), Hole(FareCodes, 17),
+        Lit("mean"),
+    ]);
+    // 5: aircraft
+    add(5, vec![
+        Lit("what"), Lit("type"), Lit("of"), Lit("aircraft"), Lit("is"),
+        Lit("used"), Lit("flying"), Lit("from"), Hole(Cities, 0), Lit("to"),
+        Hole(Cities, 1),
+    ]);
+    add(5, vec![
+        Lit("show"), Lit("me"), Lit("all"), Hole(Aircraft, 11), Lit("flights"),
+    ]);
+    // 6: flight_time
+    add(6, vec![
+        Lit("what"), Lit("are"), Lit("the"), Lit("departure"), Lit("times"),
+        Lit("from"), Hole(Cities, 0), Lit("to"), Hole(Cities, 1), Lit("in"),
+        Lit("the"), Hole(Periods, 5),
+    ]);
+    // 7: quantity
+    add(7, vec![
+        Lit("how"), Lit("many"), Hole(Airlines, 7), Lit("flights"), Lit("leave"),
+        Hole(Cities, 0), Lit("each"), Hole(Days, 2),
+    ]);
+    // 8: distance
+    add(8, vec![
+        Lit("how"), Lit("far"), Lit("is"), Lit("the"), Lit("airport"), Lit("from"),
+        Lit("downtown"), Hole(Cities, 13),
+    ]);
+    // 9: city
+    add(9, vec![
+        Lit("what"), Lit("city"), Lit("is"), Lit("served"), Lit("by"),
+        Hole(Airlines, 7),
+    ]);
+    // 10: airport
+    add(10, vec![
+        Lit("which"), Lit("airports"), Lit("are"), Lit("near"), Hole(Cities, 13),
+    ]);
+    // 11: ground_fare
+    add(11, vec![
+        Lit("how"), Lit("much"), Lit("is"), Lit("a"), Hole(Transport, 14),
+        Lit("in"), Hole(Cities, 13),
+    ]);
+    // 12: capacity
+    add(12, vec![
+        Lit("how"), Lit("many"), Lit("passengers"), Lit("fit"), Lit("on"),
+        Lit("a"), Hole(Aircraft, 11),
+    ]);
+    // 13: flight_no
+    add(13, vec![
+        Lit("what"), Lit("is"), Lit("the"), Lit("flight"), Lit("number"),
+        Lit("from"), Hole(Cities, 0), Lit("to"), Hole(Cities, 1), Lit("on"),
+        Hole(Airlines, 7),
+    ]);
+    // 14: meal
+    add(14, vec![
+        Lit("is"), Hole(Meals, 9), Lit("served"), Lit("on"), Lit("flight"),
+        Hole(FlightNumbers, 10),
+    ]);
+    // 15: restriction
+    add(15, vec![
+        Lit("what"), Lit("restrictions"), Lit("apply"), Lit("to"), Lit("the"),
+        Hole(CostRel, 15), Lit("fare"),
+    ]);
+    // 16: cheapest
+    add(16, vec![
+        Lit("show"), Lit("the"), Hole(CostRel, 15), Hole(RoundTrip, 16),
+        Lit("ticket"), Lit("from"), Hole(Cities, 0), Lit("to"), Hole(Cities, 1),
+    ]);
+    // 17: flight+airfare
+    add(17, vec![
+        Lit("show"), Lit("flights"), Lit("and"), Lit("fares"), Lit("from"),
+        Hole(Cities, 0), Lit("to"), Hole(Cities, 1), Lit("on"), Hole(Days, 2),
+    ]);
+    // 18: airline+flight_no
+    add(18, vec![
+        Lit("which"), Lit("airline"), Lit("operates"), Lit("flight"),
+        Hole(FlightNumbers, 10),
+    ]);
+    // 19: ground_service+ground_fare
+    add(19, vec![
+        Lit("what"), Lit("is"), Lit("the"), Lit("cost"), Lit("of"), Lit("a"),
+        Hole(Transport, 14), Lit("from"), Lit("the"), Lit("airport"), Lit("in"),
+        Hole(Cities, 13),
+    ]);
+    // 20: airfare+flight_time
+    add(20, vec![
+        Lit("give"), Lit("me"), Lit("the"), Lit("fares"), Lit("and"),
+        Lit("times"), Lit("for"), Lit("flights"), Lit("from"), Hole(Cities, 0),
+        Lit("to"), Hole(Cities, 1), Lit("on"), Hole(Days, 2), Hole(Periods, 5),
+    ]);
+    // 21: flight+airline
+    add(21, vec![
+        Lit("list"), Hole(Airlines, 7), Lit("flights"), Lit("from"),
+        Hole(Cities, 0), Lit("to"), Hole(Cities, 1), Lit("arriving"),
+        Hole(Days, 18),
+    ]);
+    // 22: flight_no+airline
+    add(22, vec![
+        Lit("flight"), Lit("number"), Lit("and"), Lit("carrier"), Lit("from"),
+        Hole(Cities, 0), Lit("to"), Hole(Cities, 1), Lit("please"),
+    ]);
+    // 23: day_name
+    add(23, vec![
+        Lit("what"), Lit("day"), Lit("does"), Lit("flight"),
+        Hole(FlightNumbers, 10), Lit("leave"),
+    ]);
+    // 24: period_of_day
+    add(24, vec![
+        Lit("do"), Lit("you"), Lit("have"), Lit("anything"), Lit("in"),
+        Lit("the"), Hole(Periods, 5), Lit("to"), Hole(Cities, 1),
+    ]);
+    // 25: seat
+    add(25, vec![
+        Lit("i"), Lit("need"), Lit("a"), Hole(Classes, 8), Lit("seat"),
+        Lit("to"), Hole(Cities, 1), Lit("on"), Hole(Months, 3),
+        Hole(DayNumbers, 4),
+    ]);
+    // A couple of extra high-frequency flight templates (class balance
+    // roughly mimics ATIS, where `flight` dominates).
+    add(0, lit!["flights", "please"]
+        .into_iter()
+        .chain(vec![Lit("from"), Hole(Cities, 0), Lit("to"), Hole(Cities, 1)])
+        .collect());
+    add(0, vec![
+        Hole(Airlines, 7), Lit("from"), Hole(Cities, 0), Lit("to"),
+        Hole(Cities, 1), Lit("on"), Hole(Days, 2), Hole(Periods, 5),
+    ]);
+    t
+}
+
+/// One generated utterance: words + intent + per-word slot labels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Utterance {
+    pub words: Vec<String>,
+    pub intent: usize,
+    /// Slot label id per word (O = 0, B = 1+2t, I = 2+2t).
+    pub labels: Vec<usize>,
+}
+
+/// Seeded utterance generator.
+pub struct Generator {
+    rng: SplitMix64,
+    templates: Vec<Template>,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Generator {
+        Generator { rng: SplitMix64::new(seed), templates: templates() }
+    }
+
+    /// Draw the next utterance.  RNG call order: template index, then one
+    /// draw per hole, in template order (mirror contract).
+    pub fn utterance(&mut self) -> Utterance {
+        let ti = self.rng.below(self.templates.len() as u64) as usize;
+        let tpl = self.templates[ti].clone();
+        let mut words = Vec::new();
+        let mut labels = Vec::new();
+        for part in &tpl.parts {
+            match part {
+                Part::Lit(w) => {
+                    words.push((*w).to_string());
+                    labels.push(0);
+                }
+                Part::Hole(list, slot_type) => {
+                    let choices = list.words();
+                    let pick = choices[self.rng.below(choices.len() as u64) as usize];
+                    for (wi, w) in pick.split(' ').enumerate() {
+                        words.push(w.to_string());
+                        labels.push(if wi == 0 { 1 + 2 * slot_type } else { 2 + 2 * slot_type });
+                    }
+                }
+            }
+        }
+        Utterance { words, intent: tpl.intent, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_intents_have_templates() {
+        let t = templates();
+        let covered: std::collections::BTreeSet<usize> = t.iter().map(|x| x.intent).collect();
+        assert_eq!(covered.len(), INTENTS.len(), "every intent needs a template");
+    }
+
+    #[test]
+    fn slot_ids_in_range() {
+        let mut g = Generator::new(99);
+        for _ in 0..500 {
+            let u = g.utterance();
+            assert_eq!(u.words.len(), u.labels.len());
+            for &l in &u.labels {
+                assert!(l < 1 + 2 * SLOT_TYPES.len());
+            }
+            assert!(u.intent < INTENTS.len());
+        }
+    }
+
+    #[test]
+    fn bio_consistency() {
+        // An I- label must follow a B- or I- of the same type.
+        let mut g = Generator::new(100);
+        for _ in 0..500 {
+            let u = g.utterance();
+            for i in 0..u.labels.len() {
+                let l = u.labels[i];
+                if l != 0 && l % 2 == 0 {
+                    // I-label
+                    let prev = u.labels[i - 1];
+                    assert!(prev == l - 1 || prev == l, "dangling I- in {:?}", u.words);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn utterances_fit_paper_seq_len() {
+        let mut g = Generator::new(101);
+        for _ in 0..1000 {
+            let u = g.utterance();
+            assert!(u.words.len() + 1 <= 32, "too long: {:?}", u.words);
+        }
+    }
+
+    #[test]
+    fn pinned_first_utterance_seed42() {
+        // Mirror contract with python/compile/data.py (test_data_parity).
+        let mut g = Generator::new(42);
+        let u = g.utterance();
+        let joined = u.words.join(" ");
+        let expected_ti = {
+            let mut r = SplitMix64::new(42);
+            r.below(templates().len() as u64) as usize
+        };
+        assert_eq!(u.intent, templates()[expected_ti].intent);
+        assert!(!joined.is_empty());
+    }
+}

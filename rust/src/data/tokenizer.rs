@@ -1,0 +1,138 @@
+//! Deterministic vocabulary + encoder for the synthetic ATIS grammar.
+//!
+//! The vocabulary is derived from the grammar's word lists and template
+//! literals in a fixed order (mirror contract with
+//! `python/compile/data.py`): ids 0/1/2 are PAD/CLS/UNK, the rest are the
+//! grammar words sorted lexicographically, capped at [`VOCAB_CAP`].
+
+use super::grammar::{templates, Part, Utterance, WordList};
+use crate::config::ModelConfig;
+use std::collections::BTreeMap;
+
+/// Paper Table II embedding rows (vocab size 1000).
+pub const VOCAB_CAP: usize = 1000;
+
+/// Word -> id mapping.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub word_to_id: BTreeMap<String, i32>,
+    pub pad_id: i32,
+    pub cls_id: i32,
+    pub unk_id: i32,
+}
+
+impl Tokenizer {
+    /// Build the canonical vocabulary from the grammar.
+    pub fn build(cfg: &ModelConfig) -> Tokenizer {
+        let mut words: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for tpl in templates() {
+            for part in &tpl.parts {
+                match part {
+                    Part::Lit(w) => {
+                        words.insert((*w).to_string());
+                    }
+                    Part::Hole(list, _) => {
+                        for w in list_words(*list) {
+                            for piece in w.split(' ') {
+                                words.insert(piece.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut word_to_id = BTreeMap::new();
+        let mut next = 3i32; // after PAD/CLS/UNK
+        for w in words {
+            if (next as usize) >= cfg.vocab.min(VOCAB_CAP) {
+                break;
+            }
+            word_to_id.insert(w, next);
+            next += 1;
+        }
+        Tokenizer {
+            word_to_id,
+            pad_id: cfg.pad_id,
+            cls_id: cfg.cls_id,
+            unk_id: cfg.unk_id,
+        }
+    }
+
+    pub fn vocab_used(&self) -> usize {
+        self.word_to_id.len() + 3
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        *self.word_to_id.get(word).unwrap_or(&self.unk_id)
+    }
+
+    /// Encode an utterance to fixed-length (CLS + words, PAD-filled);
+    /// CLS and PAD carry the O slot label (0).
+    pub fn encode(&self, utt: &Utterance, cfg: &ModelConfig) -> super::Example {
+        let mut tokens = vec![self.pad_id; cfg.seq_len];
+        let mut slots = vec![0i32; cfg.seq_len];
+        tokens[0] = self.cls_id;
+        for (i, (w, &l)) in utt.words.iter().zip(&utt.labels).enumerate() {
+            let pos = i + 1;
+            if pos >= cfg.seq_len {
+                break;
+            }
+            tokens[pos] = self.id(w);
+            slots[pos] = l as i32;
+        }
+        super::Example { tokens, intent: utt.intent as i32, slots }
+    }
+}
+
+fn list_words(list: WordList) -> &'static [&'static str] {
+    list.words()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::grammar::Generator;
+
+    #[test]
+    fn vocab_fits_paper_table() {
+        let t = Tokenizer::build(&ModelConfig::paper(2));
+        assert!(t.vocab_used() <= VOCAB_CAP, "vocab {} > 1000", t.vocab_used());
+        assert!(t.vocab_used() > 100, "vocab suspiciously small");
+    }
+
+    #[test]
+    fn no_unk_for_grammar_words() {
+        let cfg = ModelConfig::paper(2);
+        let t = Tokenizer::build(&cfg);
+        let mut g = Generator::new(5);
+        for _ in 0..300 {
+            let u = g.utterance();
+            for w in &u.words {
+                assert_ne!(t.id(w), t.unk_id, "grammar word '{w}' not in vocab");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_shapes_and_alignment() {
+        let cfg = ModelConfig::paper(2);
+        let t = Tokenizer::build(&cfg);
+        let mut g = Generator::new(6);
+        let u = g.utterance();
+        let ex = t.encode(&u, &cfg);
+        assert_eq!(ex.tokens[0], cfg.cls_id);
+        assert_eq!(ex.slots[0], 0);
+        for (i, w) in u.words.iter().enumerate().take(cfg.seq_len - 1) {
+            assert_eq!(ex.tokens[i + 1], t.id(w));
+            assert_eq!(ex.slots[i + 1], u.labels[i] as i32);
+        }
+    }
+
+    #[test]
+    fn ids_are_stable() {
+        let cfg = ModelConfig::paper(2);
+        let a = Tokenizer::build(&cfg);
+        let b = Tokenizer::build(&cfg);
+        assert_eq!(a.word_to_id, b.word_to_id);
+    }
+}

@@ -1,0 +1,261 @@
+//! BRAM allocation model (paper Sec. V-C, Eqs. 22-25).
+//!
+//! Each BRAM 36K block stores `C = 36864` bits and can be configured as
+//! `W x D` with `W` in {1, 2, 4, 9, 18, 36, 72} and `D = C / W`.  A data
+//! array of logical width `w_bits` and depth `depth` occupies
+//! `n_w x n_d` blocks.  Storing each small TT core in its own block
+//! wastes most of the depth; the paper's *tensor grouping* concatenates
+//! `K` data-independent cores (across encoder layers and contraction
+//! directions) along the depth dimension to amortize it.
+
+use crate::config::U50;
+
+/// Legal BRAM36 width configurations (bits).
+pub const WIDTHS: [usize; 7] = [1, 2, 4, 9, 18, 36, 72];
+
+/// fp32 word width used throughout the paper.
+pub const BW: usize = 32;
+
+/// Allocation strategies from the paper (Sec. V-C + Fig. 12 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// HLS array partitioning: `r` physical banks, one per rank lane.
+    PartitionDefault,
+    /// HLS array reshaping: rank lanes packed into wide words.
+    ReshapeDefault,
+    /// Partitioning + tensor grouping of K cores along depth.
+    PartitionGrouped,
+    /// Reshaping + tensor grouping — the paper's final scheme.
+    ReshapeGrouped,
+}
+
+impl Strategy {
+    pub fn all() -> [Strategy; 4] {
+        [
+            Strategy::PartitionDefault,
+            Strategy::ReshapeDefault,
+            Strategy::PartitionGrouped,
+            Strategy::ReshapeGrouped,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::PartitionDefault => "partition/default",
+            Strategy::ReshapeDefault => "reshape/default",
+            Strategy::PartitionGrouped => "partition/grouped",
+            Strategy::ReshapeGrouped => "reshape/grouped",
+        }
+    }
+
+    pub fn grouped(&self) -> bool {
+        matches!(self, Strategy::PartitionGrouped | Strategy::ReshapeGrouped)
+    }
+}
+
+/// One logical array to place: a TT core (or a group of cores) exposed to
+/// `r`-way rank-parallel reads.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreArray {
+    /// Rank lanes that must be readable in parallel.
+    pub r: usize,
+    /// Elements per lane (core elements / r).
+    pub depth: usize,
+}
+
+/// Blocks used by one array under (strategy, W); Eqs. 22-25.
+pub fn blocks_for(array: CoreArray, group_k: usize, strategy: Strategy, w: usize) -> usize {
+    let d = U50::BRAM_BITS / w;
+    let depth = array.depth * group_k; // grouping concatenates along depth
+    let (n_w, n_d) = if matches!(
+        strategy,
+        Strategy::PartitionDefault | Strategy::PartitionGrouped
+    ) {
+        // Eq. 22/24: one bank per rank lane, each B_w bits wide.
+        (array.r * BW.div_ceil(w), depth.div_ceil(d))
+    } else {
+        // Eq. 23/25: lanes packed into one B_w * r wide word.
+        ((BW * array.r).div_ceil(w), depth.div_ceil(d))
+    };
+    n_w * n_d
+}
+
+/// Best width configuration for an array: the paper's optimization
+/// `min_W F(theta, beta)` over the legal widths.
+pub fn best_width(array: CoreArray, group_k: usize, strategy: Strategy) -> (usize, usize) {
+    WIDTHS
+        .iter()
+        .map(|&w| (w, blocks_for(array, group_k, strategy, w)))
+        .min_by_key(|&(_, blocks)| blocks)
+        .unwrap()
+}
+
+/// Allocation result for a whole model's TT cores.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub strategy: Strategy,
+    pub total_blocks: usize,
+    /// Ideal block count ignoring per-block granularity (N_min).
+    pub ideal_blocks: f64,
+    /// Utilization efficiency eta = N_min / N_total (paper Sec. V-C).
+    pub efficiency: f64,
+    pub total_bits: usize,
+}
+
+/// The paper's grouping factor: `K = (d-1) * L` cores concatenated
+/// (across encoder layers and contraction directions).
+pub fn paper_group_k(d: usize, n_layers: usize) -> usize {
+    ((d - 1) * n_layers).max(1)
+}
+
+/// Allocate a set of identical-shaped core arrays.
+///
+/// `cores`: (array, count) pairs — e.g. the 2d cores of each of the 6
+/// linear layers across L encoders.  `group_k` applies to every array
+/// kind (cores are grouped only with same-shape peers, conservatively).
+pub fn allocate(cores: &[(CoreArray, usize)], strategy: Strategy, group_k: usize) -> Allocation {
+    let mut total_blocks = 0usize;
+    let mut total_bits = 0usize;
+    for &(array, count) in cores {
+        let bits = array.r * array.depth * BW * count;
+        total_bits += bits;
+        if strategy.grouped() {
+            let k = group_k.min(count).max(1);
+            let groups = count.div_ceil(k);
+            // Last group may be smaller; model it exactly.
+            let full = count / k;
+            let rem = count - full * k;
+            let (_, blocks_full) = best_width(array, k, strategy);
+            total_blocks += full * blocks_full;
+            if rem > 0 {
+                let (_, blocks_rem) = best_width(array, rem, strategy);
+                total_blocks += blocks_rem;
+            }
+            let _ = groups;
+        } else {
+            let (_, blocks) = best_width(array, 1, strategy);
+            total_blocks += count * blocks;
+        }
+    }
+    let ideal_blocks = total_bits as f64 / U50::BRAM_BITS as f64;
+    Allocation {
+        strategy,
+        total_blocks,
+        ideal_blocks,
+        efficiency: ideal_blocks / total_blocks.max(1) as f64,
+        total_bits,
+    }
+}
+
+/// The TT-core array population of the paper's model at a given layer
+/// count and rank (Table II shapes): 6 TT linear layers per encoder plus
+/// the classifier, each with 2d cores, plus the 3 TTM embedding cores.
+pub fn paper_core_set(n_layers: usize, rank: usize) -> Vec<(CoreArray, usize)> {
+    let n_linear = 6 * n_layers + 1;
+    // Cores of a (12,8,8)x(8,8,12) TT linear at uniform rank r:
+    // boundary cores (1, 12, r) and (r, 12, 1) -> depth 12, lanes r;
+    // interior cores (r, 8, r) -> depth 8r.
+    vec![
+        // 2 boundary cores per linear.
+        (CoreArray { r: rank, depth: 12 }, 2 * n_linear),
+        // 4 interior cores per linear.
+        (CoreArray { r: rank, depth: 8 * rank }, 4 * n_linear),
+        // TTM embedding cores (rank 30): (1,12,10,30), (30,8,10,30), (30,8,10,1).
+        (CoreArray { r: 30, depth: 120 }, 1),
+        (CoreArray { r: 30, depth: 800 }, 1),
+        (CoreArray { r: 30, depth: 80 }, 1),
+    ]
+}
+
+/// Fig. 12 / Fig. 14 driver: efficiency of each strategy for a model.
+pub fn strategy_comparison(n_layers: usize, rank: usize) -> Vec<Allocation> {
+    let cores = paper_core_set(n_layers, rank);
+    let k = paper_group_k(3, n_layers);
+    Strategy::all()
+        .iter()
+        .map(|&s| allocate(&cores, s, k))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn single_small_core_wastes_blocks_ungrouped() {
+        // A (12, 8, 12) interior core: 1152 elems = 36864 bits = exactly
+        // one ideal block, but rank-parallel partitioning needs 12.
+        let core = CoreArray { r: 12, depth: 96 };
+        let (_, blocks) = best_width(core, 1, Strategy::PartitionDefault);
+        assert_eq!(blocks, 12);
+        // Reshaping packs 12 lanes * 32 bits = 384-bit words: ceil(384/72)=6.
+        let (_, blocks) = best_width(core, 1, Strategy::ReshapeDefault);
+        assert_eq!(blocks, 6);
+    }
+
+    #[test]
+    fn grouping_improves_efficiency_paper_range() {
+        // Paper Fig. 12: grouped strategies are 3.9x-8.4x more efficient.
+        for n_layers in [2usize, 4, 6] {
+            let allocs = strategy_comparison(n_layers, 12);
+            let part_def = allocs[0].efficiency;
+            let resh_grp = allocs[3].efficiency;
+            let gain = resh_grp / part_def;
+            assert!(
+                (2.0..=12.0).contains(&gain),
+                "L{n_layers}: gain {gain:.1} outside plausible paper range"
+            );
+            assert!(allocs[3].total_blocks <= allocs[0].total_blocks);
+        }
+    }
+
+    #[test]
+    fn efficiency_at_most_one() {
+        prop::check(41, 40, |rng| {
+            let core = CoreArray {
+                r: 1 + rng.below(32) as usize,
+                depth: 1 + rng.below(2048) as usize,
+            };
+            let count = 1 + rng.below(48) as usize;
+            let k = 1 + rng.below(12) as usize;
+            for s in Strategy::all() {
+                let a = allocate(&[(core, count)], s, k);
+                assert!(a.efficiency <= 1.0 + 1e-9, "{s:?}: eta {}", a.efficiency);
+                assert!(a.total_blocks >= 1);
+            }
+        });
+    }
+
+    #[test]
+    fn grouped_never_worse_than_ungrouped() {
+        prop::check(42, 40, |rng| {
+            let core = CoreArray {
+                r: 1 + rng.below(16) as usize,
+                depth: 1 + rng.below(512) as usize,
+            };
+            let count = 1 + rng.below(64) as usize;
+            let k = 1 + rng.below(16) as usize;
+            let ungrouped = allocate(&[(core, count)], Strategy::ReshapeDefault, 1);
+            let grouped = allocate(&[(core, count)], Strategy::ReshapeGrouped, k);
+            assert!(
+                grouped.total_blocks <= ungrouped.total_blocks,
+                "grouping increased blocks: {} > {}",
+                grouped.total_blocks,
+                ungrouped.total_blocks
+            );
+        });
+    }
+
+    #[test]
+    fn fits_u50_bram_budget() {
+        // The paper stores all compressed parameters on-chip: the grouped
+        // allocation must fit the U50's 1344 BRAM blocks.
+        let allocs = strategy_comparison(6, 12);
+        assert!(
+            allocs[3].total_blocks < crate::config::U50::BRAM_BLOCKS,
+            "grouped allocation {} blocks exceeds U50",
+            allocs[3].total_blocks
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! FPGA accelerator simulator.
+//!
+//! We have no Alveo U50 + Vitis HLS toolchain, so the paper's hardware
+//! contribution is reproduced as an analytic/discrete-event simulator
+//! (DESIGN.md substitution table).  The paper's memory-management and
+//! scheduling results are arithmetic over block sizes and dataflow DAGs,
+//! which a simulator evaluates exactly:
+//!
+//! * [`bram`] — BRAM 36K block model, array partitioning vs reshaping,
+//!   and the tensor-grouping allocator (paper Eqs. 22-25, Figs. 11/12/14).
+//! * [`schedule`] — kernel-timeline simulator for the BTT dataflow:
+//!   MUL0-MUL3 kernels, naive vs rescheduled attention (Fig. 9), unfused
+//!   vs fused backprop (Fig. 10), and per-epoch latency (Table V).
+//! * [`resources`] — DSP/LUT/FF/BRAM/URAM occupancy model (Table IV).
+//! * [`energy`] — power integration and the GPU-vs-FPGA comparison
+//!   (Table V, Figs. 1 and 15).
+
+pub mod bram;
+pub mod energy;
+pub mod resources;
+pub mod schedule;

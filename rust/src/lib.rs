@@ -1,0 +1,32 @@
+//! # tt-trainer
+//!
+//! Rust coordinator for **tensor-compressed transformer training**, a
+//! reproduction of *"Ultra Memory-Efficient On-FPGA Training of
+//! Transformers via Tensor-Compressed Optimization"* (Tian et al., 2025).
+//!
+//! The stack has three layers:
+//!
+//! * **L1 (Pallas, python, build-time)** — the bidirectional tensor-train
+//!   (BTT) contraction kernels (`python/compile/kernels/`).
+//! * **L2 (JAX, python, build-time)** — the tensorized transformer
+//!   forward/backward and the fused SGD train step, AOT-lowered to HLO
+//!   text (`make artifacts`).
+//! * **L3 (this crate, run-time)** — loads the HLO artifacts via PJRT
+//!   ([`runtime`]), owns the training loop ([`coordinator`]), the
+//!   synthetic ATIS data substrate ([`data`]), the TT/TTM tensor algebra
+//!   ([`tensor`]), the paper's analytic cost model ([`costmodel`]) and
+//!   the FPGA accelerator simulator ([`fpga`]) that regenerates the
+//!   paper's hardware tables and figures.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod fpga;
+pub mod inference;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,284 @@
+//! `tt-trainer` — CLI for tensor-compressed transformer training and the
+//! paper's experiment suite.
+//!
+//! ```text
+//! tt-trainer info                              # manifest + Table II/III view
+//! tt-trainer train --variant tt_L2 --steps 200 # train on synthetic ATIS
+//! tt-trainer eval  --variant tt_L2             # accuracy on the test split
+//! tt-trainer cost-model                        # Fig. 6 + Fig. 7 sweeps
+//! tt-trainer bram                              # Figs. 11/12/14
+//! tt-trainer schedule                          # Figs. 9/10
+//! tt-trainer fpga-report                       # Tables IV/V, Figs. 1/15
+//! ```
+
+use anyhow::{anyhow, Result};
+use tt_trainer::config::ModelConfig;
+use tt_trainer::coordinator::Trainer;
+use tt_trainer::costmodel::{compare_all, sweeps, LinearShape};
+use tt_trainer::data::Dataset;
+use tt_trainer::fpga::{bram, energy, resources, schedule};
+use tt_trainer::runtime::{Engine, Manifest};
+use tt_trainer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "cost-model" => cmd_cost_model(),
+        "bram" => cmd_bram(),
+        "schedule" => cmd_schedule(),
+        "fpga-report" => cmd_fpga_report(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+tt-trainer: tensor-compressed transformer training (rust + JAX/Pallas AOT)
+
+USAGE: tt-trainer <command> [options]
+
+COMMANDS:
+  info          manifest summary (Table II/III view)
+  train         train a variant on synthetic ATIS
+                  --variant tt_L2 --steps N | --epochs E [--limit N]
+                  --lr 0.004 --seed 42 --artifacts DIR --ckpt DIR
+                  --loss-csv FILE
+  eval          evaluate a variant   --variant tt_L2 [--limit N]
+  cost-model    Fig. 6 comparison + Fig. 7 sweeps
+  bram          BRAM allocator study (Figs. 11/12/14)
+  schedule      kernel scheduling study (Figs. 9/10)
+  fpga-report   hardware simulator report (Tables IV/V, Figs. 1/15)
+";
+
+fn manifest(args: &Args) -> Result<Manifest> {
+    Manifest::load(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    println!("manifest: seed={} lr={} epochs={}", m.seed, m.lr, m.epochs);
+    println!("\nTable II/III view:");
+    println!(
+        "{:<8} {:>7} {:>12} {:>12} {:>11} {:>9}",
+        "variant", "layers", "params", "dense-equiv", "compression", "size(MB)"
+    );
+    for v in &m.variants {
+        println!(
+            "{:<8} {:>7} {:>12} {:>12} {:>10.1}x {:>9.1}",
+            v.name,
+            v.config.n_layers,
+            v.n_param_scalars,
+            v.dense_equivalent_scalars,
+            v.compression_ratio(),
+            v.size_mb()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let name = args.get_or("variant", "tt_L2");
+    let spec = m.variant(name)?;
+    let seed = args.get_usize("seed", 42) as u64;
+    let lr = args.get_f64("lr", m.lr as f64) as f32;
+    let cfg = spec.config.clone();
+    println!(
+        "loading {name}: {} param arrays, {:.1}x compression",
+        spec.params.len(),
+        spec.compression_ratio()
+    );
+    let engine = Engine::load(spec)?;
+    let (train, test) = Dataset::paper_splits(&cfg, seed);
+    let mut trainer = Trainer::new(engine, lr);
+
+    if let Some(steps) = args.get("steps") {
+        let steps: usize = steps.parse().map_err(|_| anyhow!("bad --steps"))?;
+        println!("training {steps} steps (lr={lr})");
+        trainer.train_steps(&train, steps)?;
+        println!(
+            "final loss (mean of last 20): {:.4}",
+            trainer.metrics.recent_loss(20)
+        );
+    } else {
+        let epochs = args.get_usize("epochs", 1);
+        let limit = args.get("limit").and_then(|v| v.parse().ok());
+        for e in 0..epochs {
+            let mean = trainer.train_epoch(&train, limit)?;
+            let ev = trainer.evaluate(&test, Some(200))?;
+            trainer.metrics.record_eval(e, ev.intent_acc, ev.slot_acc);
+            println!(
+                "epoch {e}: loss {mean:.4} | intent acc {:.3} | slot acc {:.3}",
+                ev.intent_acc, ev.slot_acc
+            );
+        }
+    }
+    println!(
+        "timing: {:.2}s execute, {:.2}s host ({:.1}% overhead), {} steps",
+        trainer.metrics.execute_secs,
+        trainer.metrics.host_secs,
+        100.0 * trainer.metrics.host_overhead_frac(),
+        trainer.metrics.steps
+    );
+    if let Some(dir) = args.get("ckpt") {
+        trainer.engine.save_checkpoint(dir)?;
+        println!("checkpoint saved to {dir}");
+    }
+    if let Some(path) = args.get("loss-csv") {
+        std::fs::write(path, trainer.metrics.loss_csv())?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let m = manifest(args)?;
+    let name = args.get_or("variant", "tt_L2");
+    let spec = m.variant(name)?;
+    let engine = Engine::load(spec)?;
+    let (_, test) = Dataset::paper_splits(&spec.config, 42);
+    let trainer = Trainer::new(engine, m.lr);
+    let limit = args.get("limit").and_then(|v| v.parse().ok());
+    let ev = trainer.evaluate(&test, limit)?;
+    println!(
+        "{name}: intent acc {:.3} | slot acc {:.3} (n={})",
+        ev.intent_acc, ev.slot_acc, ev.n
+    );
+    Ok(())
+}
+
+fn cmd_cost_model() -> Result<()> {
+    println!("=== Fig. 6: costs at the Table II shape, seq len 32 ===");
+    let shape = LinearShape::uniform(&[8, 8, 12], &[12, 8, 8], 12);
+    println!(
+        "{:<6} {:>14} {:>14} {:>14} {:>10} {:>10}",
+        "method", "fwd muls", "act mem", "total mem", "comp-red", "mem-red"
+    );
+    for r in compare_all(&shape, 32) {
+        println!(
+            "{:<6} {:>14} {:>14} {:>14} {:>9.2}x {:>9.2}x",
+            r.method,
+            r.fwd_muls,
+            r.memory_elems,
+            r.total_memory,
+            r.compute_reduction,
+            r.memory_reduction
+        );
+    }
+    println!("\n=== Fig. 7 (top): sequence-length sweep at rank 12 ===");
+    print!(
+        "{}",
+        sweeps::render_sweep(&sweeps::seq_len_sweep(12, &sweeps::paper_seq_lens()), "seq")
+    );
+    println!("\n=== Fig. 7 (bottom): rank sweep at seq len 32 ===");
+    print!(
+        "{}",
+        sweeps::render_sweep(&sweeps::rank_sweep(32, &sweeps::paper_ranks()), "rank")
+    );
+    Ok(())
+}
+
+fn cmd_bram() -> Result<()> {
+    println!("=== Fig. 12: BRAM utilization efficiency by strategy ===");
+    println!("{:<10} {:<20} {:>8} {:>10} {:>8}", "model", "strategy", "blocks", "ideal", "eta");
+    for layers in [2usize, 4, 6] {
+        for a in bram::strategy_comparison(layers, 12) {
+            println!(
+                "{:<10} {:<20} {:>8} {:>10.1} {:>8.3}",
+                format!("{layers}-ENC"),
+                a.strategy.name(),
+                a.total_blocks,
+                a.ideal_blocks,
+                a.efficiency
+            );
+        }
+    }
+    println!("\n=== Fig. 14: BRAM blocks for all TT cores vs rank (2-ENC) ===");
+    println!(
+        "{:<6} {:>22} {:>22} {:>10}",
+        "rank", "partition/default", "reshape/grouped", "ideal"
+    );
+    for rank in [2usize, 4, 8, 12, 16, 24, 32, 48] {
+        let allocs = bram::strategy_comparison(2, rank);
+        println!(
+            "{:<6} {:>22} {:>22} {:>10.1}",
+            rank, allocs[0].total_blocks, allocs[3].total_blocks, allocs[3].ideal_blocks
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedule() -> Result<()> {
+    let shape = LinearShape::paper();
+    println!("=== Fig. 9: QKV forward scheduling ===");
+    let (naive, resched) = schedule::fig9_compare(&shape, 32, 12);
+    println!("naive     (6 MUL0 units): makespan {naive} cycles");
+    println!("resched   (2 MUL0 units): makespan {resched} cycles");
+    println!("=> task rescheduling saves 4 MUL0 kernel instances at equal latency\n");
+    println!("=== Fig. 10: BP intermediate buffer, unfused vs fused ===");
+    println!("unfused: {} elements", schedule::fig10_buffer_elems(&shape, false));
+    println!("fused:   {} elements (O(r))", schedule::fig10_buffer_elems(&shape, true));
+    println!("\n=== Per-epoch latency model (Table V FPGA rows) ===");
+    for layers in [2usize, 4, 6] {
+        let m = schedule::CycleModel::paper(layers);
+        println!(
+            "L{layers}: {:.0}s per epoch ({} cycles/sample, {} samples)",
+            m.epoch_latency_secs(schedule::ATIS_TRAIN_SAMPLES),
+            m.cycles_per_sample(),
+            schedule::ATIS_TRAIN_SAMPLES
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fpga_report() -> Result<()> {
+    println!("=== Table IV: resource utilization ===");
+    println!(
+        "{:<7} {:>6} {:>8} {:>8} {:>6} {:>6} {:>8} {:>8} {:>8}",
+        "model", "DSP", "LUT", "FF", "BRAM", "URAM", "dyn(W)", "stat(W)", "total(W)"
+    );
+    for layers in [2usize, 4, 6] {
+        let r = resources::report(&ModelConfig::paper(layers));
+        println!(
+            "{:<7} {:>6} {:>8} {:>8} {:>6} {:>6} {:>8.2} {:>8.2} {:>8.2}",
+            format!("{layers}-ENC"),
+            r.dsp.used,
+            r.lut.used,
+            r.ff.used,
+            r.bram.used,
+            r.uram.used,
+            r.dynamic_power_w,
+            r.static_power_w,
+            r.total_power_w()
+        );
+    }
+    println!("\n=== Table V: GPU vs FPGA ===");
+    print!("{}", energy::render_table_v(&energy::table_v()));
+    println!("\n=== Fig. 1 summary (GPU-TT vs FPGA) ===");
+    for p in energy::fig1() {
+        println!(
+            "L{}: memory {:.0} MB -> {:.1} MB ({:.1}x) | energy {:.1} kJ -> {:.1} kJ ({:.1}x)",
+            p.n_layers,
+            p.gpu_tt_memory_mb,
+            p.fpga_memory_mb,
+            p.gpu_tt_memory_mb / p.fpga_memory_mb,
+            p.gpu_tt_energy_kj,
+            p.fpga_energy_kj,
+            p.gpu_tt_energy_kj / p.fpga_energy_kj
+        );
+    }
+    println!("\n=== Fig. 15: computing memory ===");
+    for p in energy::fig15() {
+        println!(
+            "L{}: GPU total {:.0} MB | GPU reserved (MM) {:.0} MB | GPU reserved (BTT) {:.0} MB | FPGA {:.1} MB",
+            p.n_layers, p.gpu_total_mb, p.gpu_reserved_matrix_mb, p.gpu_reserved_btt_mb, p.fpga_mb
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! Execution engine: one compiled (train, eval) executable pair plus the
+//! live parameter state for a model variant.
+//!
+//! The engine is the only component that talks to PJRT on the hot path.
+//! Parameters live as host `Literal`s between steps (they are tiny after
+//! tensor compression — ~1.2 MB for the 2-encoder model — so the
+//! host<->device copies are negligible next to the step compute; see
+//! EXPERIMENTS.md §Perf).
+
+use super::manifest::VariantSpec;
+use super::{compile_hlo_text, literal_i32};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Result of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Wall-clock seconds spent inside PJRT execute (FP+BP+PU).
+    pub execute_secs: f64,
+    /// Wall-clock seconds spent on host-side literal handling.
+    pub host_secs: f64,
+}
+
+/// A loaded model variant: compiled executables + parameter state.
+pub struct Engine {
+    pub spec: VariantSpec,
+    client: PjRtClient,
+    train_exe: PjRtLoadedExecutable,
+    eval_exe: PjRtLoadedExecutable,
+    /// Current parameters, in manifest argument order.
+    params: Vec<Literal>,
+}
+
+impl Engine {
+    /// Compile the variant's executables and load its initial parameters.
+    pub fn load(spec: &VariantSpec) -> Result<Engine> {
+        let client = PjRtClient::cpu()?;
+        Self::load_with_client(spec, client)
+    }
+
+    /// Like [`Engine::load`] but sharing an existing PJRT client.
+    pub fn load_with_client(spec: &VariantSpec, client: PjRtClient) -> Result<Engine> {
+        let train_exe = compile_hlo_text(&client, spec.train_hlo.to_str().unwrap())
+            .with_context(|| format!("compiling {:?}", spec.train_hlo))?;
+        let eval_exe = compile_hlo_text(&client, spec.eval_hlo.to_str().unwrap())
+            .with_context(|| format!("compiling {:?}", spec.eval_hlo))?;
+        let mut engine = Engine {
+            spec: spec.clone(),
+            client,
+            train_exe,
+            eval_exe,
+            params: Vec::new(),
+        };
+        engine.load_init()?;
+        Ok(engine)
+    }
+
+    /// (Re-)load the seeded initial parameters from the artifact npz.
+    pub fn load_init(&mut self) -> Result<()> {
+        let named = Literal::read_npz(&self.spec.init_npz, &())?;
+        // Keys are "%04d.<path>"; zip order is already argument order, but
+        // sort defensively on the numeric prefix.
+        let mut named: Vec<(String, Literal)> = named;
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        if named.len() != self.spec.params.len() {
+            return Err(anyhow!(
+                "init npz has {} arrays, manifest expects {}",
+                named.len(),
+                self.spec.params.len()
+            ));
+        }
+        for ((key, lit), spec) in named.iter().zip(&self.spec.params) {
+            let n = lit.element_count();
+            if n != spec.numel() {
+                return Err(anyhow!(
+                    "param {key}: npz has {n} elements, manifest {} ({:?})",
+                    spec.numel(),
+                    spec.shape
+                ));
+            }
+        }
+        self.params = named.into_iter().map(|(_, l)| l).collect();
+        Ok(())
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Read-only view of the current parameters (manifest order).
+    pub fn params(&self) -> &[Literal] {
+        &self.params
+    }
+
+    /// Fetch one parameter as f32 host data by manifest name.
+    pub fn param_by_name(&self, name: &str) -> Result<Vec<f32>> {
+        let idx = self
+            .spec
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| anyhow!("no parameter named {name}"))?;
+        Ok(self.params[idx].to_vec::<f32>()?)
+    }
+
+    /// One SGD step (FP -> BP -> PU fused in the HLO artifact).
+    ///
+    /// `tokens`/`slots` are `(batch, seq)` row-major, `intent` is
+    /// `(batch,)`.  Updates the parameter state in place.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let cfg = &self.spec.config;
+        let (b, s) = (cfg.batch as i64, cfg.seq_len as i64);
+        debug_assert_eq!(tokens.len(), (b * s) as usize);
+        debug_assert_eq!(intent.len(), b as usize);
+        debug_assert_eq!(slots.len(), (b * s) as usize);
+
+        let t_host = Instant::now();
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        let tok_lit = literal_i32(tokens, &[b, s])?;
+        let int_lit = literal_i32(intent, &[b])?;
+        let slot_lit = literal_i32(slots, &[b, s])?;
+        let lr_lit = Literal::scalar(lr);
+        args.push(&tok_lit);
+        args.push(&int_lit);
+        args.push(&slot_lit);
+        args.push(&lr_lit);
+        let host_secs = t_host.elapsed().as_secs_f64();
+
+        let t_exec = Instant::now();
+        let result = self.train_exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let execute_secs = t_exec.elapsed().as_secs_f64();
+
+        let t_host2 = Instant::now();
+        let mut parts = out.to_tuple()?;
+        if parts.len() != 1 + self.params.len() {
+            return Err(anyhow!(
+                "train step returned {} outputs, expected {}",
+                parts.len(),
+                1 + self.params.len()
+            ));
+        }
+        let loss = parts.remove(0).to_vec::<f32>()?[0];
+        self.params = parts;
+        let host_secs = host_secs + t_host2.elapsed().as_secs_f64();
+
+        Ok(StepOutput { loss, execute_secs, host_secs })
+    }
+
+    /// Inference: returns `(intent_logits (B*n_intents), slot_logits
+    /// (B*S*n_slots))` row-major.
+    pub fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let cfg = &self.spec.config;
+        let (b, s) = (cfg.batch as i64, cfg.seq_len as i64);
+        let tok_lit = literal_i32(tokens, &[b, s])?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok_lit);
+        let result = self.eval_exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (intent_logits, slot_logits) = out.to_tuple2()?;
+        Ok((
+            intent_logits.to_vec::<f32>()?,
+            slot_logits.to_vec::<f32>()?,
+        ))
+    }
+
+    /// Save the current parameters as one `.npy` per array under `dir`.
+    ///
+    /// (The `xla` crate's own `write_npy` is broken for f32 literals —
+    /// it feeds a `u8` buffer to the type-checked `copy_raw_to` — so the
+    /// npy header + payload are emitted here directly.)
+    pub fn save_checkpoint(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        for (i, (lit, spec)) in self.params.iter().zip(&self.spec.params).enumerate() {
+            let safe = spec.name.replace('/', "_");
+            let data = lit.to_vec::<f32>()?;
+            write_npy_f32(&dir.join(format!("{i:04}.{safe}.npy")), &data, &spec.shape)?;
+        }
+        Ok(())
+    }
+
+    /// Restore parameters saved by [`Engine::save_checkpoint`].
+    ///
+    /// See [`write_npy_f32`] for the writer side.
+    pub fn load_checkpoint(&mut self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        let mut entries: Vec<_> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "npy").unwrap_or(false))
+            .collect();
+        entries.sort();
+        if entries.len() != self.params.len() {
+            return Err(anyhow!(
+                "checkpoint has {} arrays, expected {}",
+                entries.len(),
+                self.params.len()
+            ));
+        }
+        let mut params = Vec::with_capacity(entries.len());
+        for (path, spec) in entries.iter().zip(&self.spec.params) {
+            let lit = Literal::read_npy(path, &())?;
+            if lit.element_count() != spec.numel() {
+                return Err(anyhow!("checkpoint {path:?}: wrong element count"));
+            }
+            params.push(lit);
+        }
+        self.params = params;
+        Ok(())
+    }
+}
+
+/// Minimal `.npy` (format 1.0) writer for little-endian f32 row-major
+/// arrays — the checkpoint format readable by `Literal::read_npy` and
+/// numpy alike.
+fn write_npy_f32(path: &Path, data: &[f32], shape: &[usize]) -> Result<()> {
+    use std::io::Write;
+    let dims = shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({dims},)"),
+        _ => format!("({dims})"),
+    };
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // Pad so magic(6) + version(2) + len(2) + header is a multiple of 64.
+    let base = 6 + 2 + 2;
+    let total = (base + header.len() + 1).div_ceil(64) * 64;
+    while base + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"\x93NUMPY")?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Typed view over `artifacts/manifest.json`.
+
+use crate::config::ModelConfig;
+use crate::util::json::Value;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One parameter array: canonical name + shape, in argument order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered model variant (e.g. `tt_L2`, `mm_L2`).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub compressed: bool,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub init_npz: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub n_param_scalars: usize,
+    pub dense_equivalent_scalars: usize,
+    pub config: ModelConfig,
+}
+
+impl VariantSpec {
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_equivalent_scalars as f64 / self.n_param_scalars as f64
+    }
+
+    /// Model size in MB at fp32 (Table III basis).
+    pub fn size_mb(&self) -> f64 {
+        self.n_param_scalars as f64 * 4.0 / 1e6
+    }
+}
+
+/// Parsed manifest: the contract between `aot.py` and this runtime.
+#[derive(Debug)]
+pub struct Manifest {
+    pub seed: u64,
+    pub lr: f32,
+    pub epochs: usize,
+    pub variants: Vec<VariantSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let root = Value::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let train = root.get("train").ok_or_else(|| anyhow!("manifest: no 'train'"))?;
+        let mut variants = Vec::new();
+        for v in root
+            .get("variants")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest: no 'variants'"))?
+        {
+            let name = v
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("variant missing name"))?
+                .to_string();
+            let params = v
+                .get("params")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("variant {name}: no params"))?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(Value::as_arr)
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .filter_map(Value::as_usize)
+                            .collect(),
+                        dtype: p
+                            .get("dtype")
+                            .and_then(Value::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let rel = |key: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    v.get(key)
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("variant {name}: no {key}"))?,
+                ))
+            };
+            variants.push(VariantSpec {
+                compressed: v.get("compressed").and_then(Value::as_bool).unwrap_or(true),
+                train_hlo: rel("train_hlo")?,
+                eval_hlo: rel("eval_hlo")?,
+                init_npz: rel("init_npz")?,
+                n_param_scalars: v
+                    .get("n_params_scalars")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+                dense_equivalent_scalars: v
+                    .get("dense_equivalent_scalars")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+                config: ModelConfig::from_json(
+                    v.get("config").ok_or_else(|| anyhow!("variant {name}: no config"))?,
+                )?,
+                params,
+                name,
+            });
+        }
+        Ok(Manifest {
+            seed: root.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            lr: train.get("lr").and_then(Value::as_f64).unwrap_or(4e-3) as f32,
+            epochs: train.get("epochs").and_then(Value::as_usize).unwrap_or(40),
+            variants,
+            dir,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "variant '{name}' not in manifest (have: {})",
+                    self.variants
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}

@@ -1,0 +1,43 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//!
+//! * `<variant>_train.hlo.txt` — inputs `[*params, tokens, intent, slots,
+//!   lr]`, output tuple `(loss, *new_params)`.
+//! * `<variant>_eval.hlo.txt` — inputs `[*params, tokens]`, output tuple
+//!   `(intent_logits, slot_logits)`.
+//! * `<variant>_init.npz` — initial parameters; zip entry order ==
+//!   argument order (keys are `%04d.<path>`).
+//! * `manifest.json` — parameter names/shapes, input specs, model config.
+//!
+//! HLO **text** (not serialized protos) is loaded: jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, StepOutput};
+pub use manifest::{Manifest, ParamSpec, VariantSpec};
+
+use anyhow::Result;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compile an HLO-text file on the given PJRT client.
+pub fn compile_hlo_text(client: &PjRtClient, path: &str) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Build an i32 literal of the given shape from a slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}

@@ -1,0 +1,20 @@
+//! TT / TTM tensor algebra substrate.
+//!
+//! The paper assumes a tensor-train toolbox (decomposition, contraction,
+//! reconstruction); this module provides it natively in rust so the
+//! coordinator, cost model and FPGA simulator can reason about tensor
+//! shapes and contraction schedules without touching python:
+//!
+//! * [`dense`] — row-major dense tensors + Jacobi SVD.
+//! * [`tt`] — TT matrices (paper Eq. 7): TT-SVD (`from_dense`), both
+//!   contraction orders with instrumentation (validates Eqs. 18-21).
+//! * [`ttm`] — TTM embedding tables (paper Eq. 8/17).
+
+pub mod dense;
+pub mod ops;
+pub mod tt;
+pub mod ttm;
+
+pub use dense::{svd, Tensor};
+pub use tt::{ContractionStats, TTMatrix};
+pub use ttm::TTMEmbedding;

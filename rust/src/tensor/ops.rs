@@ -1,0 +1,153 @@
+//! Elementwise / normalization ops on dense tensors — the nonlinear
+//! kernels of the paper's accelerator (softmax, GELU, LayerNorm, tanh;
+//! Fig. 8's "NL" units), implemented natively for the rust inference
+//! engine ([`crate::inference`]).
+
+use super::dense::Tensor;
+
+/// Row-wise softmax over the last axis of a 2-D tensor, with an optional
+/// key mask (0.0 entries are excluded, as in masked attention).
+pub fn softmax_rows(x: &Tensor, mask: Option<&[f32]>) -> Tensor {
+    let (rows, cols) = (x.shape[0], x.shape[1]);
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for i in 0..rows {
+        let row = &x.data[i * cols..(i + 1) * cols];
+        let mut maxv = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            let keep = mask.map(|m| m[j] > 0.5).unwrap_or(true);
+            if keep && v > maxv {
+                maxv = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        let orow = &mut out.data[i * cols..(i + 1) * cols];
+        for (j, &v) in row.iter().enumerate() {
+            let keep = mask.map(|m| m[j] > 0.5).unwrap_or(true);
+            if keep {
+                let e = (v - maxv).exp();
+                orow[j] = e;
+                sum += e;
+            }
+        }
+        if sum > 0.0 {
+            for v in orow.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+    out
+}
+
+/// GELU (tanh approximation, matching `jax.nn.gelu`'s default).
+pub fn gelu(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        let x = *v;
+        let c = (2.0f32 / std::f32::consts::PI).sqrt();
+        *v = 0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh());
+    }
+    out
+}
+
+/// Row-wise LayerNorm over the last axis: `(x - mu) / sqrt(var + eps) * g + b`.
+pub fn layer_norm(x: &Tensor, g: &[f32], b: &[f32], eps: f32) -> Tensor {
+    let (rows, cols) = (x.shape[0], x.shape[1]);
+    debug_assert_eq!(g.len(), cols);
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for i in 0..rows {
+        let row = &x.data[i * cols..(i + 1) * cols];
+        let mu = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = &mut out.data[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            orow[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+/// Elementwise tanh.
+pub fn tanh(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        *v = v.tanh();
+    }
+    out
+}
+
+/// `a + b` elementwise.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    debug_assert_eq!(a.shape, b.shape);
+    let mut out = a.clone();
+    for (o, &v) in out.data.iter_mut().zip(&b.data) {
+        *o += v;
+    }
+    out
+}
+
+/// Add a row vector to every row of a 2-D tensor.
+pub fn add_row(a: &Tensor, row: &[f32]) -> Tensor {
+    let (rows, cols) = (a.shape[0], a.shape[1]);
+    debug_assert_eq!(row.len(), cols);
+    let mut out = a.clone();
+    for i in 0..rows {
+        for j in 0..cols {
+            out.data[i * cols + j] += row[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0], &[2, 3]).unwrap();
+        let s = softmax_rows(&x, None);
+        for i in 0..2 {
+            let sum: f32 = s.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // monotone: larger logit, larger prob
+        assert!(s.at2(0, 2) > s.at2(0, 1));
+    }
+
+    #[test]
+    fn softmax_mask_zeroes_padding() {
+        let x = Tensor::from_vec(vec![5.0, 1.0, 9.0], &[1, 3]).unwrap();
+        let s = softmax_rows(&x, Some(&[1.0, 1.0, 0.0]));
+        assert_eq!(s.at2(0, 2), 0.0);
+        assert!((s.data.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        let x = Tensor::from_vec(vec![0.0, 10.0, -10.0], &[1, 3]).unwrap();
+        let g = gelu(&x);
+        assert_eq!(g.data[0], 0.0);
+        assert!((g.data[1] - 10.0).abs() < 1e-3);
+        assert!(g.data[2].abs() < 1e-3);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[1, 4]).unwrap();
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let y = layer_norm(&x, &g, &b, 1e-5);
+        let mu: f32 = y.data.iter().sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-5);
+        let var: f32 = y.data.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn tanh_range() {
+        let x = Tensor::from_vec(vec![-100.0, 0.0, 100.0], &[1, 3]).unwrap();
+        let y = tanh(&x);
+        assert_eq!(y.data, vec![-1.0, 0.0, 1.0]);
+    }
+}

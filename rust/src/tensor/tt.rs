@@ -1,0 +1,447 @@
+//! Tensor-train matrix algebra: decomposition, reconstruction, and both
+//! contraction orders (right-to-left and the paper's bidirectional BTT).
+//!
+//! The contraction engines are *instrumented*: they count multiplies and
+//! track peak intermediate memory, so the analytic cost model
+//! ([`crate::costmodel`], paper Eqs. 18-21) is validated against executed
+//! counts instead of being trusted on paper.
+
+use super::dense::{svd, Tensor};
+use crate::util::rng::SplitMix64;
+use anyhow::{anyhow, Result};
+
+/// A (M, N) matrix in TT format: `2d` order-3 cores, the first `d`
+/// carrying output modes `m_i`, the last `d` input modes `n_i`
+/// (paper Eq. 7).
+#[derive(Debug, Clone)]
+pub struct TTMatrix {
+    /// Core k has shape (ranks[k], modes[k], ranks[k+1]).
+    pub cores: Vec<Tensor>,
+    pub m_modes: Vec<usize>,
+    pub n_modes: Vec<usize>,
+    pub ranks: Vec<usize>,
+}
+
+/// Instrumentation record from a contraction run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ContractionStats {
+    /// Scalar multiplications executed.
+    pub muls: u64,
+    /// Peak bytes of *live intermediate* tensors (excluding inputs/outputs).
+    pub peak_intermediate_elems: u64,
+    /// Sum of all intermediate tensor sizes (elements) — what training
+    /// must store for reuse in backprop.
+    pub stored_intermediate_elems: u64,
+    /// Number of contraction steps.
+    pub steps: u32,
+}
+
+impl TTMatrix {
+    /// Number of output rows M = prod(m_modes).
+    pub fn m(&self) -> usize {
+        self.m_modes.iter().product()
+    }
+
+    /// Number of input cols N = prod(n_modes).
+    pub fn n(&self) -> usize {
+        self.n_modes.iter().product()
+    }
+
+    pub fn d(&self) -> usize {
+        self.m_modes.len()
+    }
+
+    /// Total scalars across cores.
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(Tensor::numel).sum()
+    }
+
+    /// Random TT matrix with the given modes and uniform interior rank,
+    /// scaled so the reconstructed dense matrix has ~`target_std`.
+    pub fn randn(
+        m_modes: &[usize],
+        n_modes: &[usize],
+        rank: usize,
+        target_std: f32,
+        rng: &mut SplitMix64,
+    ) -> TTMatrix {
+        let modes: Vec<usize> = m_modes.iter().chain(n_modes).copied().collect();
+        let d2 = modes.len();
+        let mut ranks = vec![rank; d2 + 1];
+        ranks[0] = 1;
+        ranks[d2] = 1;
+        let rank_paths: f64 = ranks[1..d2].iter().map(|&r| r as f64).product();
+        let sigma = ((target_std as f64).powi(2) / rank_paths).powf(1.0 / (2.0 * d2 as f64));
+        let cores = (0..d2)
+            .map(|k| Tensor::randn(&[ranks[k], modes[k], ranks[k + 1]], sigma as f32, rng))
+            .collect();
+        TTMatrix {
+            cores,
+            m_modes: m_modes.to_vec(),
+            n_modes: n_modes.to_vec(),
+            ranks,
+        }
+    }
+
+    /// TT-SVD decomposition (Oseledets 2011) of a dense (M, N) matrix with
+    /// rank cap `max_rank`.
+    ///
+    /// The matrix is reshaped to the order-2d tensor with *interleaved
+    /// pairing*: index layout (m_1..m_d, n_1..n_d) following Eq. 7.
+    pub fn from_dense(
+        w: &Tensor,
+        m_modes: &[usize],
+        n_modes: &[usize],
+        max_rank: usize,
+    ) -> Result<TTMatrix> {
+        if w.ndim() != 2 {
+            return Err(anyhow!("from_dense needs a matrix"));
+        }
+        let m: usize = m_modes.iter().product();
+        let n: usize = n_modes.iter().product();
+        if w.shape != [m, n] {
+            return Err(anyhow!("shape {:?} != modes ({m}, {n})", w.shape));
+        }
+        // Reorder (M, N) -> tensor with modes (m_1..m_d, n_1..n_d): the
+        // row index factors as m-digits, the col index as n-digits; the
+        // natural row-major order of (m_1..m_d, n_1..n_d) needs an
+        // explicit permutation of the (row, col) layout.
+        let modes: Vec<usize> = m_modes.iter().chain(n_modes).copied().collect();
+        let d2 = modes.len();
+        let mut t = vec![0.0f32; m * n];
+        // For each (row, col), compute the position in the mode-major
+        // layout.  Row digits are the first d modes, col digits the rest.
+        let mut strides = vec![1usize; d2];
+        for k in (0..d2 - 1).rev() {
+            strides[k] = strides[k + 1] * modes[k + 1];
+        }
+        for row in 0..m {
+            // decompose row into m-digits (most significant first)
+            for col in 0..n {
+                let mut pos = 0usize;
+                let mut r = row;
+                for (k, &mk) in m_modes.iter().enumerate().rev() {
+                    pos += (r % mk) * strides[k];
+                    r /= mk;
+                }
+                let mut c = col;
+                for (k, &nk) in n_modes.iter().enumerate().rev() {
+                    pos += (c % nk) * strides[m_modes.len() + k];
+                    c /= nk;
+                }
+                t[pos] = w.data[row * n + col];
+            }
+        }
+        // Sequential TT-SVD over the mode-major tensor.
+        let mut cores = Vec::with_capacity(d2);
+        let mut ranks = vec![1usize; d2 + 1];
+        let mut rest = Tensor::from_vec(t, &[modes[0], m * n / modes[0]])?;
+        for k in 0..d2 - 1 {
+            let rows = ranks[k] * modes[k];
+            let cols = rest.numel() / rows;
+            let mat = rest.reshape(&[rows, cols])?;
+            let (u, s, vt) = svd(&mat)?;
+            // Truncate to max_rank, dropping near-zero singular values.
+            let full = s.len();
+            let mut r = full.min(max_rank);
+            while r > 1 && s[r - 1] < 1e-7 * s[0].max(1e-30) {
+                r -= 1;
+            }
+            ranks[k + 1] = r;
+            // Core k = U[:, :r] reshaped (ranks[k], modes[k], r).
+            let mut core = Tensor::zeros(&[ranks[k], modes[k], r]);
+            for i in 0..rows {
+                for j in 0..r {
+                    core.data[i * r + j] = u.data[i * full + j];
+                }
+            }
+            cores.push(core);
+            // rest = diag(S[:r]) V^T[:r, :]
+            let mut next = Tensor::zeros(&[r, cols]);
+            for i in 0..r {
+                for j in 0..cols {
+                    next.data[i * cols + j] = s[i] * vt.data[i * cols + j];
+                }
+            }
+            rest = next;
+        }
+        ranks[d2] = 1;
+        let last = rest.reshape(&[ranks[d2 - 1], modes[d2 - 1], 1])?;
+        cores.push(last);
+        Ok(TTMatrix {
+            cores,
+            m_modes: m_modes.to_vec(),
+            n_modes: n_modes.to_vec(),
+            ranks,
+        })
+    }
+
+    /// Reconstruct the dense (M, N) matrix (inverse of `from_dense`).
+    pub fn to_dense(&self) -> Result<Tensor> {
+        let d = self.d();
+        let z3 = self.merge_left()?; // (M, r_d)
+        let z1 = self.merge_right()?; // (r_d, N)
+        let _ = d;
+        z3.matmul(&z1)
+    }
+
+    /// Merge the output-mode cores into Z3 (M, r_d) — paper kernel MUL0.
+    pub fn merge_left(&self) -> Result<Tensor> {
+        let d = self.d();
+        let mut z = self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?;
+        for k in 1..d {
+            let g = &self.cores[k];
+            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            z = z.matmul(&g.reshape(&[rp, mk * rk])?)?.reshape(&[z.shape[0] * mk, rk])?;
+        }
+        Ok(z)
+    }
+
+    /// Merge the input-mode cores into Z1 (r_d, N) — paper kernel MUL0.
+    pub fn merge_right(&self) -> Result<Tensor> {
+        let d = self.d();
+        let d2 = 2 * d;
+        let last = &self.cores[d2 - 1];
+        let mut z = last.reshape(&[last.shape[0], last.shape[1]])?;
+        for k in (d..d2 - 1).rev() {
+            let g = &self.cores[k];
+            let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            z = g
+                .reshape(&[rp * nk, rk])?
+                .matmul(&z)?
+                .reshape(&[rp, nk * z.shape[1]])?;
+        }
+        Ok(z)
+    }
+
+    /// `Y = W X` with X (N, K) via **right-to-left** contraction (the
+    /// sequential order of prior accelerators, paper Sec. IV-A).
+    ///
+    /// Every step carries the K dimension, exactly as Eq. 18/19 model.
+    pub fn matmul_right_to_left(&self, x: &Tensor) -> Result<(Tensor, ContractionStats)> {
+        let d = self.d();
+        let d2 = 2 * d;
+        let n = self.n();
+        if x.ndim() != 2 || x.shape[0] != n {
+            return Err(anyhow!("x must be ({n}, K), got {:?}", x.shape));
+        }
+        let k_dim = x.shape[1];
+        let mut stats = ContractionStats::default();
+        // State: tensor of shape (r_k, prod-of-remaining-n, K) flattened to
+        // 2-D (r_k * remaining_n, K); contract cores d2-1 down to d (input
+        // side), then cores d-1 down to 0 (output side, building up M).
+        //
+        // Input side: cur has shape (n_1..n_j, r_j-ish, K).  We keep it as
+        // (rows, K) and peel one n-mode per step.
+        let mut cur = x.clone(); // (n_1*...*n_d, K) with r = 1 implicit
+        let mut r_cur = 1usize;
+        let mut n_left: usize = n;
+        for k in (d..d2).rev() {
+            let g = &self.cores[k]; // (r_{k-1}, n_k, r_k)
+            let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            debug_assert_eq!(rk, r_cur);
+            // cur: (n_left * r_cur... actually (n_1..n_k) x (r_k * K)) —
+            // reshape cur (n_left, r_cur * K) -> split off n_k:
+            // cur2 (n_left/nk, nk, r_cur, K); contract over (nk, r_cur)
+            // with g (rp, nk, rk=r_cur) -> (n_left/nk, rp, K).
+            let rows = n_left / nk;
+            let cur3 = cur.reshape(&[rows, nk * r_cur, k_dim])?;
+            let mut next = Tensor::zeros(&[rows, rp, k_dim]);
+            for a in 0..rows {
+                for b in 0..rp {
+                    for c in 0..k_dim {
+                        let mut acc = 0.0f32;
+                        for e in 0..nk {
+                            for f in 0..r_cur {
+                                acc += cur3.data[a * nk * r_cur * k_dim + (e * r_cur + f) * k_dim + c]
+                                    * g.data[b * nk * r_cur + e * r_cur + f];
+                            }
+                        }
+                        next.data[a * rp * k_dim + b * k_dim + c] = acc;
+                    }
+                }
+            }
+            stats.muls += (rows * rp * k_dim * nk * r_cur) as u64;
+            stats.steps += 1;
+            let interm = (rows * rp * k_dim) as u64;
+            stats.stored_intermediate_elems += interm;
+            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+            cur = next.reshape(&[rows * rp, k_dim])?;
+            r_cur = rp;
+            n_left = rows;
+        }
+        // Now cur is (r_d, K) (n fully consumed).  Output side: build M up
+        // by contracting cores d-1 .. 0: cur (m_{k+1}..m_d prod, r_k, K).
+        let mut m_built = 1usize;
+        for k in (0..d).rev() {
+            let g = &self.cores[k]; // (r_{k-1}, m_k, r_k)
+            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            debug_assert_eq!(rk, r_cur);
+            // cur: (m_built, r_cur, K) ; g: (rp, mk, r_cur)
+            // next: (mk, m_built, rp, K) -> flattened ((mk*m_built)*rp, K)
+            let cur3 = cur.reshape(&[m_built, r_cur, k_dim])?;
+            let mut next = Tensor::zeros(&[mk, m_built, rp, k_dim]);
+            for a in 0..mk {
+                for b in 0..m_built {
+                    for c in 0..rp {
+                        for e in 0..k_dim {
+                            let mut acc = 0.0f32;
+                            for f in 0..r_cur {
+                                acc += g.data[c * mk * r_cur + a * r_cur + f]
+                                    * cur3.data[b * r_cur * k_dim + f * k_dim + e];
+                            }
+                            next.data[((a * m_built + b) * rp + c) * k_dim + e] = acc;
+                        }
+                    }
+                }
+            }
+            stats.muls += (mk * m_built * rp * k_dim * r_cur) as u64;
+            stats.steps += 1;
+            let interm = (mk * m_built * rp * k_dim) as u64;
+            if k > 0 {
+                stats.stored_intermediate_elems += interm;
+                stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+            }
+            m_built *= mk;
+            r_cur = rp;
+            cur = next.reshape(&[m_built * rp, k_dim])?;
+        }
+        debug_assert_eq!(r_cur, 1);
+        let y = cur.reshape(&[self.m(), k_dim])?;
+        Ok((y, stats))
+    }
+
+    /// `Y = W X` with X (N, K) via the paper's **bidirectional** (BTT)
+    /// contraction: merge both core chains K-independently, then apply
+    /// two K-dependent matmuls (Fig. 5 bottom).
+    pub fn matmul_btt(&self, x: &Tensor) -> Result<(Tensor, ContractionStats)> {
+        let d = self.d();
+        let n = self.n();
+        let m = self.m();
+        if x.ndim() != 2 || x.shape[0] != n {
+            return Err(anyhow!("x must be ({n}, K), got {:?}", x.shape));
+        }
+        let k_dim = x.shape[1];
+        let r_d = self.ranks[d];
+        let mut stats = ContractionStats::default();
+
+        // Left merge: Z3 (M, r_d).  muls: sum over steps of
+        // (m_1..m_{k+1}) * r_k * r_{k+1}.
+        let mut z3 = self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?;
+        let mut m_acc = self.m_modes[0];
+        for k in 1..d {
+            let g = &self.cores[k];
+            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            z3 = z3.matmul(&g.reshape(&[rp, mk * rk])?)?.reshape(&[m_acc * mk, rk])?;
+            stats.muls += (m_acc * rp * mk * rk) as u64;
+            stats.steps += 1;
+            m_acc *= mk;
+            let interm = (m_acc * rk) as u64;
+            stats.stored_intermediate_elems += interm;
+            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+        }
+        // Right merge: Z1 (r_d, N).
+        let d2 = 2 * d;
+        let last = &self.cores[d2 - 1];
+        let mut z1 = last.reshape(&[last.shape[0], last.shape[1]])?;
+        let mut n_acc = last.shape[1];
+        for k in (d..d2 - 1).rev() {
+            let g = &self.cores[k];
+            let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            z1 = g
+                .reshape(&[rp * nk, rk])?
+                .matmul(&z1)?
+                .reshape(&[rp, nk * n_acc])?;
+            stats.muls += (rp * nk * rk * n_acc) as u64;
+            stats.steps += 1;
+            n_acc *= nk;
+            let interm = (rp * n_acc) as u64;
+            stats.stored_intermediate_elems += interm;
+            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+        }
+        // Apply: Z2 = Z1 X (r_d, K); Y = Z3 Z2 (M, K).  These are the only
+        // K-dependent steps (the last term of Eqs. 20-21).
+        let z2 = z1.matmul(x)?;
+        stats.muls += (r_d * n * k_dim) as u64;
+        stats.steps += 1;
+        let interm = (r_d * k_dim) as u64;
+        stats.stored_intermediate_elems += interm;
+        stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+        let y = z3.matmul(&z2)?;
+        stats.muls += (m * r_d * k_dim) as u64;
+        stats.steps += 1;
+        Ok((y, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_tt(rng: &mut SplitMix64) -> TTMatrix {
+        TTMatrix::randn(&[12, 8, 8], &[8, 8, 12], 12, 0.03, rng)
+    }
+
+    #[test]
+    fn btt_equals_right_to_left_equals_dense() {
+        let mut rng = SplitMix64::new(11);
+        let tt = TTMatrix::randn(&[4, 3], &[3, 4], 3, 0.5, &mut rng);
+        let x = Tensor::randn(&[12, 5], 1.0, &mut rng);
+        let w = tt.to_dense().unwrap();
+        let y_dense = w.matmul(&x).unwrap();
+        let (y_rl, _) = tt.matmul_right_to_left(&x).unwrap();
+        let (y_btt, _) = tt.matmul_btt(&x).unwrap();
+        assert!(y_rl.max_abs_diff(&y_dense) < 1e-4, "rl vs dense");
+        assert!(y_btt.max_abs_diff(&y_dense) < 1e-4, "btt vs dense");
+    }
+
+    #[test]
+    fn paper_config_contraction_equivalence() {
+        let mut rng = SplitMix64::new(12);
+        let tt = paper_tt(&mut rng);
+        // K = 32 (the paper's seq len): BTT wins only when K exceeds the
+        // tensor modes (Sec. IV-B), which is the regime the paper targets.
+        let x = Tensor::randn(&[768, 32], 1.0, &mut rng);
+        let (y_rl, s_rl) = tt.matmul_right_to_left(&x).unwrap();
+        let (y_btt, s_btt) = tt.matmul_btt(&x).unwrap();
+        let scale = y_rl.norm() / (y_rl.numel() as f32).sqrt();
+        assert!(y_rl.max_abs_diff(&y_btt) < 5e-4 * (1.0 + scale));
+        // The paper's claim: BTT uses strictly fewer muls and less
+        // intermediate memory when K > modes.
+        assert!(s_btt.muls < s_rl.muls, "{} !< {}", s_btt.muls, s_rl.muls);
+        assert!(s_btt.peak_intermediate_elems < s_rl.peak_intermediate_elems);
+        // And fewer sequential stages: d+1 vs 2d (merges run in parallel).
+        assert_eq!(s_rl.steps, 6);
+    }
+
+    #[test]
+    fn tt_svd_roundtrip_exact_rank() {
+        let mut rng = SplitMix64::new(13);
+        // Build a TT matrix, densify, re-decompose with the same rank cap:
+        // reconstruction must match (TT-SVD is exact at sufficient rank).
+        let tt = TTMatrix::randn(&[4, 3], &[3, 4], 3, 0.5, &mut rng);
+        let w = tt.to_dense().unwrap();
+        let tt2 = TTMatrix::from_dense(&w, &[4, 3], &[3, 4], 16).unwrap();
+        let w2 = tt2.to_dense().unwrap();
+        let rel = w2.max_abs_diff(&w) / (1.0 + w.norm());
+        assert!(rel < 1e-4, "roundtrip err {rel}");
+    }
+
+    #[test]
+    fn tt_svd_truncation_reduces_params() {
+        let mut rng = SplitMix64::new(14);
+        let w = Tensor::randn(&[24, 24], 1.0, &mut rng);
+        let full = TTMatrix::from_dense(&w, &[6, 4], &[4, 6], 64).unwrap();
+        let trunc = TTMatrix::from_dense(&w, &[6, 4], &[4, 6], 3).unwrap();
+        assert!(trunc.param_count() < full.param_count());
+        assert!(trunc.param_count() < w.numel());
+    }
+
+    #[test]
+    fn merge_shapes() {
+        let mut rng = SplitMix64::new(15);
+        let tt = paper_tt(&mut rng);
+        assert_eq!(tt.merge_left().unwrap().shape, vec![768, 12]);
+        assert_eq!(tt.merge_right().unwrap().shape, vec![12, 768]);
+    }
+}

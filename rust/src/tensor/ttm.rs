@@ -1,0 +1,179 @@
+//! Tensor-train-matrix (TTM) embedding table: lookup and reconstruction
+//! (paper Sec. III-C, Eqs. 8/17).
+
+use super::dense::Tensor;
+use crate::util::rng::SplitMix64;
+use anyhow::{anyhow, Result};
+
+/// A (vocab, hidden) embedding table in TTM format.  Core k has shape
+/// (r_{k-1}, m_k, n_k, r_k) with m = hidden modes, n = vocab modes.
+#[derive(Debug, Clone)]
+pub struct TTMEmbedding {
+    pub cores: Vec<Tensor>,
+    pub hid_modes: Vec<usize>,
+    pub vocab_modes: Vec<usize>,
+    pub ranks: Vec<usize>,
+}
+
+impl TTMEmbedding {
+    pub fn vocab(&self) -> usize {
+        self.vocab_modes.iter().product()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hid_modes.iter().product()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(Tensor::numel).sum()
+    }
+
+    pub fn randn(
+        hid_modes: &[usize],
+        vocab_modes: &[usize],
+        rank: usize,
+        target_std: f32,
+        rng: &mut SplitMix64,
+    ) -> TTMEmbedding {
+        let d = hid_modes.len();
+        let mut ranks = vec![rank; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        let rank_paths: f64 = ranks[1..d].iter().map(|&r| r as f64).product();
+        let sigma = ((target_std as f64).powi(2) / rank_paths).powf(1.0 / (2.0 * d as f64));
+        let cores = (0..d)
+            .map(|k| {
+                Tensor::randn(
+                    &[ranks[k], hid_modes[k], vocab_modes[k], ranks[k + 1]],
+                    sigma as f32,
+                    rng,
+                )
+            })
+            .collect();
+        TTMEmbedding {
+            cores,
+            hid_modes: hid_modes.to_vec(),
+            vocab_modes: vocab_modes.to_vec(),
+            ranks,
+        }
+    }
+
+    /// Mixed-radix digits of a token id over the vocab modes
+    /// (most-significant first) — must match `python/compile/tt_layers.py`.
+    pub fn token_digits(&self, token: usize) -> Vec<usize> {
+        let mut digits = vec![0usize; self.vocab_modes.len()];
+        let mut rem = token;
+        for (k, &base) in self.vocab_modes.iter().enumerate().rev() {
+            digits[k] = rem % base;
+            rem /= base;
+        }
+        digits
+    }
+
+    /// Embedding lookup for one token (paper Eq. 17): chain the selected
+    /// 2-D slices over the rank indices.
+    pub fn lookup(&self, token: usize) -> Result<Tensor> {
+        if token >= self.vocab() {
+            return Err(anyhow!("token {token} out of vocab {}", self.vocab()));
+        }
+        let digits = self.token_digits(token);
+        // Start: slice of core 0 at j_0: (m_0, r_1)  (r_0 == 1).
+        let mut acc = self.slice(0, digits[0])?; // (m_0 * 1, r_1) viewed (m_acc, r)
+        let mut m_acc = self.hid_modes[0];
+        for k in 1..self.cores.len() {
+            let sl = self.slice(k, digits[k])?; // (r_{k-1}, m_k * r_k)
+            let rk = self.ranks[k + 1];
+            let mk = self.hid_modes[k];
+            // acc (m_acc, r_{k-1}) x sl (r_{k-1}, m_k * r_k)
+            acc = acc.matmul(&sl)?.reshape(&[m_acc * mk, rk])?;
+            m_acc *= mk;
+        }
+        acc.reshape(&[self.hidden()])
+    }
+
+    /// Core k sliced at vocab digit j: (r_{k-1}, m_k * r_k) matrix
+    /// ordered so the chain matmul in `lookup` is contiguous.
+    fn slice(&self, k: usize, j: usize) -> Result<Tensor> {
+        let core = &self.cores[k];
+        let (rp, mk, nk, rk) = (core.shape[0], core.shape[1], core.shape[2], core.shape[3]);
+        if j >= nk {
+            return Err(anyhow!("digit {j} out of mode {nk}"));
+        }
+        if k == 0 {
+            // (1, m_0, n_0, r_1) -> (m_0, r_1)
+            let mut out = Tensor::zeros(&[mk, rk]);
+            for a in 0..mk {
+                for b in 0..rk {
+                    out.data[a * rk + b] = core.data[(a * nk + j) * rk + b];
+                }
+            }
+            Ok(out)
+        } else {
+            // (r_{k-1}, m_k, n_k, r_k) -> (r_{k-1}, m_k * r_k)
+            let mut out = Tensor::zeros(&[rp, mk * rk]);
+            for r in 0..rp {
+                for a in 0..mk {
+                    for b in 0..rk {
+                        out.data[r * mk * rk + a * rk + b] =
+                            core.data[((r * mk + a) * nk + j) * rk + b];
+                    }
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    /// Reconstruct the dense (vocab, hidden) table.
+    pub fn to_dense(&self) -> Result<Tensor> {
+        let v = self.vocab();
+        let h = self.hidden();
+        let mut out = Tensor::zeros(&[v, h]);
+        for t in 0..v {
+            let row = self.lookup(t)?;
+            out.data[t * h..(t + 1) * h].copy_from_slice(&row.data);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_roundtrip() {
+        let mut rng = SplitMix64::new(20);
+        let e = TTMEmbedding::randn(&[4, 4, 3], &[3, 3, 3], 4, 0.02, &mut rng);
+        for t in [0usize, 1, 13, 26] {
+            let d = e.token_digits(t);
+            let back = d.iter().fold(0usize, |acc, &x| acc * 3 + x);
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn lookup_matches_dense() {
+        let mut rng = SplitMix64::new(21);
+        let e = TTMEmbedding::randn(&[4, 4, 3], &[3, 3, 3], 4, 0.5, &mut rng);
+        let dense = e.to_dense().unwrap();
+        assert_eq!(dense.shape, vec![27, 48]);
+        for t in [0usize, 5, 26] {
+            let row = e.lookup(t).unwrap();
+            for h in 0..48 {
+                assert!((row.data[h] - dense.at2(t, h)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_config_param_count() {
+        let mut rng = SplitMix64::new(22);
+        let e = TTMEmbedding::randn(&[12, 8, 8], &[10, 10, 10], 30, 0.02, &mut rng);
+        // (1*12*10*30) + (30*8*10*30) + (30*8*10*1) = 3600 + 72000 + 2400
+        assert_eq!(e.param_count(), 78_000);
+        assert_eq!(e.vocab(), 1000);
+        assert_eq!(e.hidden(), 768);
+        // vs dense 768,000: ~9.8x compression of the embedding table.
+        assert!(e.vocab() * e.hidden() / e.param_count() >= 9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained substrates that would normally come from crates.io.
+//!
+//! The build environment is offline and only ships the `xla` crate's
+//! dependency closure, so the library carries its own minimal JSON parser
+//! ([`json`]), CLI argument parser ([`cli`]), deterministic RNG shared
+//! with the python data generator ([`rng`]), property-testing loop
+//! ([`prop`]) and wall-clock measurement helpers ([`timer`]).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,68 @@
+//! Minimal property-based testing loop (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`SplitMix64`]; `check` runs it
+//! for `cases` random seeds and reports the failing seed so a failure is
+//! reproducible by construction.
+
+use super::rng::SplitMix64;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`.
+///
+/// The closure should panic (e.g. via `assert!`) on a violated property.
+/// On panic, the failing case index and derived seed are printed before
+/// the panic is propagated — re-running with that seed reproduces it.
+pub fn check<F: Fn(&mut SplitMix64)>(base_seed: u64, cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = SplitMix64::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case}/{cases} (derived seed {seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random shape helper: a vector of `ndims` dims, each in [1, max_dim].
+pub fn shape(rng: &mut SplitMix64, ndims: usize, max_dim: usize) -> Vec<usize> {
+    (0..ndims)
+        .map(|_| 1 + rng.below(max_dim as u64) as usize)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check(1, 25, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        check(2, 10, |rng| {
+            assert!(rng.below(10) < 5, "will fail eventually");
+        });
+    }
+
+    #[test]
+    fn shapes_in_range() {
+        check(3, 20, |rng| {
+            let s = shape(rng, 4, 8);
+            assert_eq!(s.len(), 4);
+            assert!(s.iter().all(|&d| (1..=8).contains(&d)));
+        });
+    }
+}

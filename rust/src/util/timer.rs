@@ -1,0 +1,78 @@
+//! Wall-clock measurement helpers used by the bench harness and the
+//! coordinator's metrics.
+
+use std::time::Instant;
+
+/// Run `f` repeatedly and return (best, mean, total_iters).
+///
+/// Warmup runs are discarded; iterations adapt so cheap closures are
+/// measured over enough repeats to be meaningful.
+pub fn bench<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Summary statistics for a set of timing samples (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub best: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub n: usize,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchStats {
+            best: samples[0],
+            mean,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            n,
+        }
+    }
+
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "best {:.3} ms | p50 {:.3} ms | p95 {:.3} ms (n={})",
+            self.best * 1e3,
+            self.p50 * 1e3,
+            self.p95 * 1e3,
+            self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.best, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.mean > 1.9 && s.mean < 2.1);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(|| count += 1, 2, 5);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+}

@@ -1,0 +1,116 @@
+//! Cross-module property tests: tensor algebra <-> cost model <-> FPGA
+//! simulator invariants that span crate boundaries.
+
+use tt_trainer::config::ModelConfig;
+use tt_trainer::costmodel::LinearShape;
+use tt_trainer::fpga::bram::{self, Strategy};
+use tt_trainer::fpga::schedule::CycleModel;
+use tt_trainer::tensor::{Tensor, TTMatrix, TTMEmbedding};
+use tt_trainer::util::prop;
+use tt_trainer::util::rng::SplitMix64;
+
+#[test]
+fn tt_svd_of_low_rank_matrix_recovers_rank() {
+    // A dense matrix built from a rank-r TT decomposes back at rank r
+    // with small error, for random shapes.
+    prop::check(61, 10, |rng| {
+        let m1 = 2 + rng.below(4) as usize;
+        let m2 = 2 + rng.below(4) as usize;
+        let n1 = 2 + rng.below(4) as usize;
+        let n2 = 2 + rng.below(4) as usize;
+        let rank = 1 + rng.below(3) as usize;
+        let tt = TTMatrix::randn(&[m1, m2], &[n1, n2], rank, 0.5, rng);
+        let w = tt.to_dense().unwrap();
+        let tt2 = TTMatrix::from_dense(&w, &[m1, m2], &[n1, n2], 24).unwrap();
+        let w2 = tt2.to_dense().unwrap();
+        let rel = w2.max_abs_diff(&w) / (1.0 + w.norm());
+        assert!(rel < 5e-3, "roundtrip err {rel}");
+    });
+}
+
+#[test]
+fn paper_linear_layer_compresses_120x() {
+    // Table II shape: TT params must be ~120x fewer than dense.
+    let cfg = ModelConfig::paper(2);
+    let dense = cfg.d_hid * cfg.d_hid;
+    let tt = cfg.tt_linear_params();
+    let ratio = dense as f64 / tt as f64;
+    assert!((100.0..140.0).contains(&ratio), "ratio {ratio:.0}");
+}
+
+#[test]
+fn btt_contraction_agrees_with_dense_at_paper_scale() {
+    let mut rng = SplitMix64::new(62);
+    let tt = TTMatrix::randn(&[12, 8, 8], &[8, 8, 12], 12, 0.03, &mut rng);
+    let x = Tensor::randn(&[768, 32], 1.0, &mut rng);
+    let w = tt.to_dense().unwrap();
+    let y_dense = w.matmul(&x).unwrap();
+    let (y_btt, stats) = tt.matmul_btt(&x).unwrap();
+    let scale = y_dense.norm() / (y_dense.numel() as f32).sqrt();
+    assert!(y_btt.max_abs_diff(&y_dense) < 1e-3 * (1.0 + scale));
+    // The instrumented counts must equal the cost model (Eq. 20/21).
+    let shape = LinearShape::uniform(&[12, 8, 8], &[8, 8, 12], 12);
+    assert_eq!(stats.muls, shape.btt_muls(32));
+    assert_eq!(stats.stored_intermediate_elems, shape.btt_memory(32));
+}
+
+#[test]
+fn ttm_embedding_rows_bounded() {
+    let mut rng = SplitMix64::new(63);
+    let e = TTMEmbedding::randn(&[12, 8, 8], &[10, 10, 10], 30, 0.02, &mut rng);
+    for t in [0usize, 1, 99, 500, 999] {
+        let row = e.lookup(t).unwrap();
+        assert_eq!(row.numel(), 768);
+        assert!(row.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn grouped_bram_fits_all_paper_models() {
+    for layers in [2usize, 4, 6] {
+        let cores = bram::paper_core_set(layers, 12);
+        let k = bram::paper_group_k(3, layers);
+        let a = bram::allocate(&cores, Strategy::ReshapeGrouped, k);
+        assert!(
+            a.total_blocks < tt_trainer::config::U50::BRAM_BLOCKS / 2,
+            "L{layers}: {} blocks leaves no room for activations",
+            a.total_blocks
+        );
+    }
+}
+
+#[test]
+fn latency_scales_linearly_with_depth() {
+    // Table V structure: per-epoch latency grows ~linearly in layers.
+    let l2 = CycleModel::paper(2).cycles_per_sample() as f64;
+    let l4 = CycleModel::paper(4).cycles_per_sample() as f64;
+    let l6 = CycleModel::paper(6).cycles_per_sample() as f64;
+    let d1 = l4 - l2;
+    let d2 = l6 - l4;
+    assert!((d1 - d2).abs() / d1 < 0.05, "non-linear depth scaling");
+}
+
+#[test]
+fn rank_sweep_contraction_engines_stay_consistent() {
+    // For every rank in the Fig. 14 sweep, both contraction orders agree
+    // with dense and with the analytic model.
+    prop::check(64, 8, |rng| {
+        let rank = 1 + rng.below(16) as usize;
+        let tt = TTMatrix::randn(&[4, 6], &[6, 4], rank, 0.2, rng);
+        let x = Tensor::randn(&[24, 8], 1.0, rng);
+        let w = tt.to_dense().unwrap();
+        let y = w.matmul(&x).unwrap();
+        let (y_rl, s_rl) = tt.matmul_right_to_left(&x).unwrap();
+        let (y_btt, s_btt) = tt.matmul_btt(&x).unwrap();
+        let tol = 1e-4 * (1.0 + y.norm());
+        assert!(y_rl.max_abs_diff(&y) < tol);
+        assert!(y_btt.max_abs_diff(&y) < tol);
+        let shape = LinearShape {
+            m_modes: vec![4, 6],
+            n_modes: vec![6, 4],
+            ranks: tt.ranks.clone(),
+        };
+        assert_eq!(s_rl.muls, shape.tt_rl_muls(8));
+        assert_eq!(s_btt.muls, shape.btt_muls(8));
+    });
+}

@@ -1,0 +1,45 @@
+//! Cross-language parity: the rust generator must produce exactly the
+//! utterances pinned in `python/tests/test_data_parity.py`.
+
+use tt_trainer::config::ModelConfig;
+use tt_trainer::data::{Dataset, Generator};
+
+#[test]
+fn pinned_utterances_seed42() {
+    let mut g = Generator::new(42);
+    let u1 = g.utterance();
+    assert_eq!(u1.words.join(" "), "which airline operates flight two");
+    assert_eq!(u1.intent, 18);
+    assert_eq!(u1.labels, vec![0, 0, 0, 0, 21]);
+
+    let u2 = g.utterance();
+    assert_eq!(u2.words.join(" "), "tell me about continental");
+    assert_eq!(u2.intent, 3);
+    assert_eq!(u2.labels, vec![0, 0, 0, 15]);
+
+    let u3 = g.utterance();
+    assert_eq!(
+        u3.words.join(" "),
+        "i want to fly from new york to dallas in the noon"
+    );
+    assert_eq!(u3.intent, 0);
+    assert_eq!(u3.labels, vec![0, 0, 0, 0, 0, 1, 2, 0, 3, 0, 0, 11]);
+}
+
+#[test]
+fn pinned_encoding_seed42() {
+    let cfg = ModelConfig::paper(2);
+    let ds = Dataset::synth(&cfg, 42, 1);
+    let ex = &ds.examples[0];
+    assert_eq!(&ex.tokens[..6], &[1, 193, 9, 135, 75, 183]);
+    assert_eq!(ex.intent, 18);
+    assert!(ex.tokens[6..].iter().all(|&t| t == 0));
+}
+
+#[test]
+fn vocab_matches_python_count() {
+    let cfg = ModelConfig::paper(2);
+    let ds = Dataset::synth(&cfg, 1, 1);
+    // python/tests/test_data_parity.py sees 198 words incl. specials.
+    assert_eq!(ds.tokenizer.vocab_used(), 198);
+}

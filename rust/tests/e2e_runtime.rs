@@ -1,0 +1,136 @@
+//! End-to-end integration over the real PJRT runtime: load the AOT
+//! artifacts, train, evaluate, checkpoint.  Requires `make artifacts`.
+//!
+//! These tests share one PJRT client-backed engine per variant (compiling
+//! the HLO dominates the cost) and run serially within each test.
+
+use tt_trainer::coordinator::Trainer;
+use tt_trainer::data::Dataset;
+use tt_trainer::runtime::{Engine, Manifest};
+
+fn manifest() -> Manifest {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn manifest_lists_all_paper_variants() {
+    let m = manifest();
+    for name in ["tt_L2", "tt_L4", "tt_L6", "mm_L2", "mm_L4", "mm_L6"] {
+        let v = m.variant(name).unwrap();
+        assert!(v.train_hlo.exists(), "{name}: missing train hlo");
+        assert!(v.eval_hlo.exists(), "{name}: missing eval hlo");
+        assert!(v.init_npz.exists(), "{name}: missing init npz");
+        assert!(!v.params.is_empty());
+    }
+}
+
+#[test]
+fn compression_ratios_match_table3_shape() {
+    let m = manifest();
+    for (name, paper) in [("tt_L2", 30.5), ("tt_L4", 43.4), ("tt_L6", 52.0)] {
+        let v = m.variant(name).unwrap();
+        let ratio = v.compression_ratio();
+        assert!(
+            (ratio - paper).abs() / paper < 0.15,
+            "{name}: {ratio:.1}x vs paper {paper}x"
+        );
+    }
+    // Tensorized artifacts are ~MB scale (paper: 1.2-1.8 MB).
+    for name in ["tt_L2", "tt_L4", "tt_L6"] {
+        let v = m.variant(name).unwrap();
+        assert!(v.size_mb() < 2.5, "{name}: {:.2} MB", v.size_mb());
+    }
+}
+
+#[test]
+fn tt_l2_trains_and_evaluates() {
+    let m = manifest();
+    let spec = m.variant("tt_L2").unwrap();
+    let engine = Engine::load(spec).unwrap();
+    let cfg = spec.config.clone();
+    let data = Dataset::synth(&cfg, 42, 32);
+    let mut trainer = Trainer::new(engine, 4e-3);
+
+    // Loss must drop over a few dozen steps on a small repeated set.
+    trainer.train_steps(&data, 8).unwrap();
+    let early = trainer.metrics.recent_loss(8);
+    trainer.train_steps(&data, 40).unwrap();
+    let late = trainer.metrics.recent_loss(8);
+    assert!(
+        late < early,
+        "loss did not decrease: early {early:.4} late {late:.4}"
+    );
+
+    // Eval output shapes + finite logits.
+    let (il, sl) = trainer.engine.eval(&data.examples[0].tokens).unwrap();
+    assert_eq!(il.len(), cfg.n_intents);
+    assert_eq!(sl.len(), cfg.seq_len * cfg.n_slots);
+    assert!(il.iter().all(|x| x.is_finite()));
+
+    // Accuracy harness runs.
+    let ev = trainer.evaluate(&data, Some(16)).unwrap();
+    assert!(ev.intent_acc >= 0.0 && ev.intent_acc <= 1.0);
+    assert!(ev.slot_acc >= 0.0 && ev.slot_acc <= 1.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    let m = manifest();
+    let spec = m.variant("tt_L2").unwrap();
+    let mut engine = Engine::load(spec).unwrap();
+    let cfg = spec.config.clone();
+    let data = Dataset::synth(&cfg, 1, 4);
+    let ex = &data.examples[0];
+    engine
+        .train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)
+        .unwrap();
+
+    let dir = std::env::temp_dir().join(format!("tt_ckpt_{}", std::process::id()));
+    engine.save_checkpoint(&dir).unwrap();
+    let before: Vec<Vec<f32>> = engine
+        .params()
+        .iter()
+        .map(|l| l.to_vec::<f32>().unwrap())
+        .collect();
+
+    // Perturb by training more, then restore.
+    engine
+        .train_step(&ex.tokens, &[ex.intent], &ex.slots, 0.5)
+        .unwrap();
+    engine.load_checkpoint(&dir).unwrap();
+    let after: Vec<Vec<f32>> = engine
+        .params()
+        .iter()
+        .map(|l| l.to_vec::<f32>().unwrap())
+        .collect();
+    assert_eq!(before.len(), after.len());
+    for (b, a) in before.iter().zip(&after) {
+        assert_eq!(b, a, "checkpoint roundtrip changed parameters");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn deterministic_training_from_fixed_init() {
+    // Two fresh engines over the same artifact + same data must produce
+    // identical losses (PJRT CPU is deterministic; the seeded init is in
+    // the artifact).
+    let m = manifest();
+    let spec = m.variant("tt_L2").unwrap();
+    let cfg = spec.config.clone();
+    let data = Dataset::synth(&cfg, 5, 4);
+
+    let mut run = || -> Vec<f32> {
+        let mut engine = Engine::load(spec).unwrap();
+        let mut losses = Vec::new();
+        for ex in &data.examples {
+            let out = engine
+                .train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)
+                .unwrap();
+            losses.push(out.loss);
+        }
+        losses
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,73 @@
+//! Whole-stack cross-validation: the rust-native inference engine
+//! ([`tt_trainer::inference`]) must reproduce the PJRT/HLO path's logits
+//! on the same parameters.
+//!
+//! This closes the loop across every layer of the system:
+//!   Pallas kernels -> JAX model -> HLO text -> PJRT execution
+//! vs
+//!   TT/TTM rust tensor algebra -> native forward pass.
+
+use tt_trainer::data::Dataset;
+use tt_trainer::inference::{params_from_engine, NativeModel};
+use tt_trainer::runtime::{Engine, Manifest};
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / (1.0 + x.abs().max(y.abs())))
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn native_forward_matches_pjrt_eval() {
+    let m = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first");
+    let spec = m.variant("tt_L2").unwrap();
+    let mut engine = Engine::load(spec).unwrap();
+    let cfg = spec.config.clone();
+    let data = Dataset::synth(&cfg, 1234, 6);
+
+    // Train a couple of steps so the comparison is not at the (symmetric)
+    // init point.
+    for ex in data.examples.iter().take(2) {
+        engine
+            .train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)
+            .unwrap();
+    }
+
+    let native = NativeModel::from_params(&cfg, &params_from_engine(&engine).unwrap()).unwrap();
+
+    for ex in &data.examples {
+        let (il_pjrt, sl_pjrt) = engine.eval(&ex.tokens).unwrap();
+        let (il_native, sl_native) = native.forward(&ex.tokens).unwrap();
+        let e_i = max_rel_err(&il_pjrt, &il_native);
+        let e_s = max_rel_err(&sl_pjrt, &sl_native);
+        assert!(e_i < 2e-3, "intent logits diverge: rel err {e_i}");
+        assert!(e_s < 2e-3, "slot logits diverge: rel err {e_s}");
+    }
+}
+
+#[test]
+fn native_predictions_match_pjrt_argmax() {
+    let m = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+    let spec = m.variant("tt_L2").unwrap();
+    let engine = Engine::load(spec).unwrap();
+    let cfg = spec.config.clone();
+    let native = NativeModel::from_params(&cfg, &params_from_engine(&engine).unwrap()).unwrap();
+    let data = Dataset::synth(&cfg, 77, 10);
+    let mut agree = 0;
+    for ex in &data.examples {
+        let (il, _) = engine.eval(&ex.tokens).unwrap();
+        let pjrt_intent = il
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let (native_intent, _) = native.predict(&ex.tokens).unwrap();
+        if pjrt_intent == native_intent {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 9, "argmax agreement {agree}/10");
+}
