@@ -1,13 +1,24 @@
 //! Leak bisect: run N steps in 3 modes, print RSS growth.
+//! Needs the `pjrt` feature and `make artifacts`.
+#[cfg(feature = "pjrt")]
 use tt_trainer::data::Dataset;
+#[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("leak_probe needs the PJRT runtime: rebuild with --features pjrt");
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/statm").unwrap();
     let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
     pages * 4096.0 / 1e6
 }
 
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let mode = std::env::args().nth(1).unwrap_or("full".into());
     let n: usize = std::env::args().nth(2).unwrap_or("300".into()).parse()?;
@@ -33,6 +44,10 @@ fn main() -> anyhow::Result<()> {
         _ => {}
     }
     let r1 = rss_mb();
-    println!("mode={mode} n={n}: rss {r0:.0} -> {r1:.0} MB (+{:.2} MB, {:.3} MB/step)", r1-r0, (r1-r0)/n as f64);
+    println!(
+        "mode={mode} n={n}: rss {r0:.0} -> {r1:.0} MB (+{:.2} MB, {:.3} MB/step)",
+        r1 - r0,
+        (r1 - r0) / n as f64
+    );
     Ok(())
 }

@@ -2,13 +2,27 @@
 //! of training steps on synthetic ATIS, and evaluate.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
+//! make artifacts && cargo run --release --offline --features pjrt --example quickstart
 //! ```
+//!
+//! (For the artifact-free rust-native path, see
+//! `examples/train_native.rs`.)
 
+#[cfg(feature = "pjrt")]
 use tt_trainer::coordinator::Trainer;
+#[cfg(feature = "pjrt")]
 use tt_trainer::data::Dataset;
+#[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("quickstart needs the PJRT runtime: rebuild with --features pjrt");
+    eprintln!("(or run the artifact-free example: cargo run --example train_native)");
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     // 1. Load the AOT artifacts produced by `make artifacts`.
     let manifest = Manifest::load("artifacts")?;

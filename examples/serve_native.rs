@@ -11,12 +11,25 @@
 //! cargo run --release --offline --example serve_native -- --train-steps 200 --serve-n 100
 //! ```
 
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
+#[cfg(feature = "pjrt")]
 use tt_trainer::data::{Dataset, INTENTS};
+#[cfg(feature = "pjrt")]
 use tt_trainer::inference::{params_from_engine, NativeModel};
+#[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
+#[cfg(feature = "pjrt")]
 use tt_trainer::util::cli::Args;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("serve_native's offline phase needs the PJRT runtime: rebuild with --features pjrt");
+    eprintln!("(or train natively first: cargo run --example train_native)");
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let train_steps = args.get_usize("train-steps", 200);
@@ -41,7 +54,10 @@ fn main() -> anyhow::Result<()> {
     let model = NativeModel::from_params(&cfg, &params_from_engine(&engine)?)?;
     drop(engine); // the PJRT runtime is gone; only rust-native code below.
 
-    println!("[serve] native engine up ({} params arrays); serving {serve_n} requests", spec.params.len());
+    println!(
+        "[serve] native engine up ({} params arrays); serving {serve_n} requests",
+        spec.params.len()
+    );
     let mut intent_hits = 0usize;
     let mut lat = Vec::with_capacity(serve_n);
     for ex in test.examples.iter().take(serve_n) {

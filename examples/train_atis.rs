@@ -9,11 +9,23 @@
 //!     --variant tt_L2 --steps 300 --eval-n 300
 //! ```
 
+#[cfg(feature = "pjrt")]
 use tt_trainer::coordinator::Trainer;
+#[cfg(feature = "pjrt")]
 use tt_trainer::data::Dataset;
+#[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
+#[cfg(feature = "pjrt")]
 use tt_trainer::util::cli::Args;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("train_atis needs the PJRT runtime: rebuild with --features pjrt");
+    eprintln!("(or run the artifact-free example: cargo run --example train_native)");
+    std::process::exit(2);
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let variant = args.get_or("variant", "tt_L2");

@@ -15,17 +15,22 @@
 //!   table4  — resource utilization
 //!   table5  — GPU vs FPGA latency/memory/energy (+ figs 1/15)
 //!   wallclock — measured rust-side contraction timings (BTT vs RL vs MM)
+//!   native-train — measured rust-native train/eval step latency
+//!             (no artifacts needed; FP + BP + fused SGD)
 //!   pjrt    — measured train/eval step latency through the real stack
-//!             (skipped unless artifacts/ exists)
+//!             (`pjrt` feature; skipped unless artifacts/ exists)
 //!
 //! Run: `cargo bench --offline` (optionally `-- <section>`)
 
 use tt_trainer::config::ModelConfig;
+use tt_trainer::coordinator::TrainBackend;
 use tt_trainer::costmodel::{compare_all, sweeps, LinearShape};
 use tt_trainer::data::Dataset;
 use tt_trainer::fpga::{bram, energy, resources, schedule};
+#[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
 use tt_trainer::tensor::{Tensor, TTMatrix};
+use tt_trainer::train::NativeTrainer;
 use tt_trainer::util::rng::SplitMix64;
 use tt_trainer::util::timer::bench;
 
@@ -72,8 +77,53 @@ fn main() {
     if run("ablations") {
         ablations();
     }
+    if run("native-train") {
+        native_train();
+    }
     if run("pjrt") {
         pjrt();
+    }
+}
+
+/// Measured rust-native train-step latency (FP + BP + fused SGD) — the
+/// artifact-free counterpart of the `pjrt` section.
+fn native_train() {
+    hdr("native-train", "measured native train/eval step latency (no artifacts)");
+    for layers in [2usize, 4] {
+        let cfg = ModelConfig::paper(layers);
+        let mut backend = match NativeTrainer::random_init(&cfg, 42) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("L{layers}: init failed: {e} (skipped)");
+                continue;
+            }
+        };
+        let data = Dataset::synth(&cfg, 42, 8);
+        let ex = data.examples[0].clone();
+        let mut losses = Vec::new();
+        let stats = bench(
+            || {
+                let out = backend
+                    .train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)
+                    .unwrap();
+                losses.push(out.loss);
+            },
+            2,
+            10,
+        );
+        println!(
+            "L{layers}: train_step {} | {:.1}M muls/step (FP+BP)",
+            stats.fmt_ms(),
+            (backend.last_stats.muls as f64) / 1e6
+        );
+        let eval_stats = bench(
+            || {
+                backend.eval(&ex.tokens).unwrap();
+            },
+            2,
+            10,
+        );
+        println!("L{layers}: eval       {}", eval_stats.fmt_ms());
     }
 }
 
@@ -328,6 +378,13 @@ fn ablations() {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt() {
+    hdr("pjrt", "measured end-to-end step latency through the AOT stack");
+    println!("built without the `pjrt` feature (skipped)");
+}
+
+#[cfg(feature = "pjrt")]
 fn pjrt() {
     hdr("pjrt", "measured end-to-end step latency through the AOT stack");
     let manifest = match Manifest::load("artifacts") {

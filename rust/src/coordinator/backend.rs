@@ -1,0 +1,60 @@
+//! Backend abstraction for the training coordinator.
+//!
+//! The paper's FP -> BP -> PU step can execute on two engines:
+//!
+//! * the **PJRT engine** ([`crate::runtime::Engine`], `pjrt` feature) —
+//!   runs the fused HLO artifact produced by the JAX/Pallas AOT build;
+//! * the **native trainer** ([`crate::train::NativeTrainer`]) — the
+//!   hand-derived rust backward pass over the TT/TTM tensor substrate,
+//!   needing no XLA, no Python and no artifacts.
+//!
+//! [`Trainer`](super::Trainer) is generic over this trait, so epochs,
+//! metrics, evaluation and checkpointing are written once and drive
+//! either engine interchangeably.
+
+use crate::config::ModelConfig;
+use anyhow::Result;
+use std::path::Path;
+
+/// Result of one training step (any backend).
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// Wall-clock seconds spent inside the step's compute (PJRT execute,
+    /// or the native forward + backward + update).
+    pub execute_secs: f64,
+    /// Wall-clock seconds of host-side data handling around the step.
+    pub host_secs: f64,
+}
+
+/// A training/evaluation engine the coordinator can drive.
+pub trait TrainBackend {
+    /// Short backend identifier ("pjrt" / "native") for logs.
+    fn backend_name(&self) -> &'static str;
+
+    /// The model configuration this backend was built for.
+    fn config(&self) -> &ModelConfig;
+
+    /// One SGD step (FP -> BP -> PU) on a single batch.
+    ///
+    /// `tokens`/`slots` are `(batch, seq)` row-major, `intent` is
+    /// `(batch,)`.  Updates parameters in place.
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<StepOutput>;
+
+    /// Inference: `(intent_logits (B*n_intents), slot_logits
+    /// (B*S*n_slots))` row-major.
+    fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Persist the current parameters as one `.npy` per array.
+    fn save_checkpoint(&self, dir: &Path) -> Result<()>;
+
+    /// Restore parameters saved by [`TrainBackend::save_checkpoint`]
+    /// (implementations verify the embedded parameter names).
+    fn load_checkpoint(&mut self, dir: &Path) -> Result<()>;
+}

@@ -1,11 +1,15 @@
 //! L3 training coordinator (the paper's accelerator control plane).
 //!
-//! * [`trainer`] — FP/BP/PU stage loop over the PJRT engine, epochs,
+//! * [`backend`] — the [`TrainBackend`] abstraction: one trait driving
+//!   either the PJRT engine or the rust-native trainer.
+//! * [`trainer`] — FP/BP/PU stage loop over any backend, epochs,
 //!   evaluation (Table III metrics), loss-curve capture (Fig. 13).
 //! * [`metrics`] — loss/accuracy/timing records and CSV export.
 
+pub mod backend;
 pub mod metrics;
 pub mod trainer;
 
+pub use backend::{StepOutput, TrainBackend};
 pub use metrics::Metrics;
 pub use trainer::{EvalResult, Trainer};

@@ -2,18 +2,20 @@
 //! control flow (Fig. 8) — it owns the FP -> BP -> PU stage loop, feeds
 //! batches, tracks metrics and checkpoints.
 //!
-//! The three training stages are fused into a single PJRT executable
-//! (`<variant>_train.hlo.txt`) exactly like the paper fuses them into one
-//! fabric pass; the coordinator sequences samples and epochs around it.
+//! The coordinator is generic over [`TrainBackend`]: the three training
+//! stages either run as a single fused PJRT executable
+//! (`<variant>_train.hlo.txt`, exactly like the paper fuses them into one
+//! fabric pass) or natively in rust via [`crate::train::NativeTrainer`];
+//! the coordinator sequences samples and epochs around either engine.
 
+use super::backend::TrainBackend;
 use super::metrics::{argmax, Metrics};
 use crate::data::Dataset;
-use crate::runtime::Engine;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-/// Epoch-level training driver.
-pub struct Trainer {
-    pub engine: Engine,
+/// Epoch-level training driver over any [`TrainBackend`].
+pub struct Trainer<B: TrainBackend> {
+    pub backend: B,
     pub metrics: Metrics,
     pub lr: f32,
 }
@@ -27,9 +29,9 @@ pub struct EvalResult {
     pub n: usize,
 }
 
-impl Trainer {
-    pub fn new(engine: Engine, lr: f32) -> Trainer {
-        Trainer { engine, metrics: Metrics::default(), lr }
+impl<B: TrainBackend> Trainer<B> {
+    pub fn new(backend: B, lr: f32) -> Trainer<B> {
+        Trainer { backend, metrics: Metrics::default(), lr }
     }
 
     /// One pass over (a prefix of) the dataset; returns mean loss.
@@ -38,7 +40,7 @@ impl Trainer {
         let mut total = 0.0f32;
         for ex in data.examples.iter().take(n) {
             let out = self
-                .engine
+                .backend
                 .train_step(&ex.tokens, &[ex.intent], &ex.slots, self.lr)?;
             self.metrics
                 .record_step(out.loss, out.execute_secs, out.host_secs);
@@ -47,30 +49,38 @@ impl Trainer {
         Ok(total / n.max(1) as f32)
     }
 
-    /// Train for a fixed number of steps (cycling the dataset).
+    /// Train for a fixed number of steps, cycling the dataset and
+    /// continuing from wherever previous step-driven calls stopped (the
+    /// cursor is the metrics' global step count, so chunked progress
+    /// loops advance through the split instead of retraining its head).
+    /// Returns the running mean loss over these steps (0.0 for zero
+    /// steps, like [`Trainer::train_epoch`] on an empty prefix).
     pub fn train_steps(&mut self, data: &Dataset, steps: usize) -> Result<f32> {
-        let mut last = f32::NAN;
-        for i in 0..steps {
-            let ex = &data.examples[i % data.len()];
+        if steps > 0 && data.is_empty() {
+            return Err(anyhow!("train_steps: dataset is empty"));
+        }
+        let mut total = 0.0f32;
+        for _ in 0..steps {
+            let ex = &data.examples[self.metrics.steps % data.len()];
             let out = self
-                .engine
+                .backend
                 .train_step(&ex.tokens, &[ex.intent], &ex.slots, self.lr)?;
             self.metrics
                 .record_step(out.loss, out.execute_secs, out.host_secs);
-            last = out.loss;
+            total += out.loss;
         }
-        Ok(last)
+        Ok(total / steps.max(1) as f32)
     }
 
     /// Joint intent/slot accuracy on (a prefix of) a dataset.
     pub fn evaluate(&self, data: &Dataset, limit: Option<usize>) -> Result<EvalResult> {
-        let cfg = self.engine.spec.config.clone();
+        let cfg = self.backend.config().clone();
         let n = limit.unwrap_or(data.len()).min(data.len());
         let mut intent_hits = 0usize;
         let mut slot_hits = 0usize;
         let mut slot_total = 0usize;
         for ex in data.examples.iter().take(n) {
-            let (intent_logits, slot_logits) = self.engine.eval(&ex.tokens)?;
+            let (intent_logits, slot_logits) = self.backend.eval(&ex.tokens)?;
             if argmax(&intent_logits) == ex.intent as usize {
                 intent_hits += 1;
             }

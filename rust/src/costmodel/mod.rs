@@ -213,6 +213,28 @@ impl LinearShape {
         k_dim * total
     }
 
+    /// BP-stage multiplies of one BTT linear layer.
+    ///
+    /// The hand-derived backward (see `crate::train::layers`) runs
+    /// exactly twice Eq. 20: the four K-wide products (`dZ3 = dY^T Z2`,
+    /// `dZ2 = dY Z3`, `dZ1 = dZ2^T X`, `dX = dZ2 Z1`) cost
+    /// `2 K r_d (M + N)` — twice the forward apply — and unrolling each
+    /// merge-chain step costs two products of the forward step's size
+    /// (the core gradient and the carried state gradient).  Together
+    /// with Eq. 20 this realizes the paper's FP+BP ~ 3x forward rule
+    /// ([`LinearShape::training_factor`]).
+    pub fn btt_bwd_muls(&self, k_dim: u64) -> u64 {
+        2 * self.btt_muls(k_dim)
+    }
+
+    /// Activation elements a training step stores for the BP stage of
+    /// one BTT layer: the merge-chain intermediates plus Z2 — exactly
+    /// the Eq. 21 forward intermediate memory (the input X is an
+    /// upstream activation, accounted by the producing layer).
+    pub fn btt_training_cache_elems(&self, k_dim: u64) -> u64 {
+        self.btt_memory(k_dim)
+    }
+
     /// Training FLOPs ~ 3x forward multiplies (paper Sec. IV-A).
     pub fn training_factor() -> u64 {
         3
@@ -380,6 +402,19 @@ mod tests {
             assert!(shape.btt_muls(k) <= shape.tt_rl_muls(k));
             assert!(shape.btt_memory(k) <= shape.tt_rl_memory(k));
         });
+    }
+
+    #[test]
+    fn backward_formulas_close_the_training_factor() {
+        // FP (Eq. 20) + BP (2x Eq. 20) == the paper's 3x training rule.
+        let shape = LinearShape::paper();
+        for k in [1u64, 8, 32, 128] {
+            assert_eq!(
+                shape.btt_muls(k) + shape.btt_bwd_muls(k),
+                LinearShape::training_factor() * shape.btt_muls(k)
+            );
+            assert_eq!(shape.btt_training_cache_elems(k), shape.btt_memory(k));
+        }
     }
 
     #[test]

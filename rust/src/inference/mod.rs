@@ -16,6 +16,11 @@
 //! via the **BTT contraction** (merge once per layer, K-wide applies),
 //! and the merged `Z1`/`Z3` factors are cached like the accelerator's
 //! on-chip core buffers.
+//!
+//! The forward blocks (BTT apply, [`ops::multi_head_attention`],
+//! LayerNorm/GELU) are shared with the native *training* path
+//! ([`crate::train`]), which runs the same math plus activation caching
+//! and the hand-derived backward — the two paths cannot drift.
 
 use crate::config::ModelConfig;
 use crate::tensor::ops;
@@ -203,40 +208,15 @@ impl NativeModel {
 
     fn encoder_block(&self, x: &Tensor, mask: &[f32], layer: &EncoderLayer) -> Result<Tensor> {
         let cfg = &self.cfg;
-        let (s, h) = (cfg.seq_len, cfg.d_hid);
-        let (heads, dh) = (cfg.n_heads, cfg.d_head());
 
         let q = layer.wq.apply(x)?;
         let k = layer.wk.apply(x)?;
         let v = layer.wv.apply(x)?;
 
-        // Per-head masked attention (the accelerator's MM + softmax path).
-        let mut attn = Tensor::zeros(&[s, h]);
-        let scale = 1.0 / (dh as f32).sqrt();
-        for head in 0..heads {
-            let off = head * dh;
-            // scores (s, s)
-            let mut scores = Tensor::zeros(&[s, s]);
-            for i in 0..s {
-                for j in 0..s {
-                    let mut acc = 0.0f32;
-                    for e in 0..dh {
-                        acc += q.at2(i, off + e) * k.at2(j, off + e);
-                    }
-                    scores.data[i * s + j] = acc * scale;
-                }
-            }
-            let p = ops::softmax_rows(&scores, Some(mask));
-            for i in 0..s {
-                for e in 0..dh {
-                    let mut acc = 0.0f32;
-                    for j in 0..s {
-                        acc += p.at2(i, j) * v.at2(j, off + e);
-                    }
-                    attn.data[i * h + off + e] = acc;
-                }
-            }
-        }
+        // Masked attention via the shared block (the accelerator's MM +
+        // softmax path); inference discards the probabilities that the
+        // training path ([`crate::train`]) keeps for backward.
+        let (attn, _probs) = ops::multi_head_attention(&q, &k, &v, mask, cfg.n_heads)?;
 
         let o = layer.wo.apply(&attn)?;
         let x = ops::layer_norm(&ops::add(x, &o), &layer.ln1.g, &layer.ln1.b, 1e-5);
@@ -255,6 +235,7 @@ fn argmax(row: &[f32]) -> usize {
 
 /// Pull a [`ParamMap`] out of a live PJRT engine (for parity tests and
 /// for exporting trained weights to the native path).
+#[cfg(feature = "pjrt")]
 pub fn params_from_engine(engine: &crate::runtime::Engine) -> Result<ParamMap> {
     let mut map = ParamMap::new();
     for (spec, lit) in engine.spec.params.iter().zip(engine.params()) {

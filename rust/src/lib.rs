@@ -11,15 +11,39 @@
 //! * **L2 (JAX, python, build-time)** — the tensorized transformer
 //!   forward/backward and the fused SGD train step, AOT-lowered to HLO
 //!   text (`make artifacts`).
-//! * **L3 (this crate, run-time)** — loads the HLO artifacts via PJRT
-//!   ([`runtime`]), owns the training loop ([`coordinator`]), the
-//!   synthetic ATIS data substrate ([`data`]), the TT/TTM tensor algebra
-//!   ([`tensor`]), the paper's analytic cost model ([`costmodel`]) and
-//!   the FPGA accelerator simulator ([`fpga`]) that regenerates the
-//!   paper's hardware tables and figures.
+//! * **L3 (this crate, run-time)** — owns the training loop
+//!   ([`coordinator`]), the synthetic ATIS data substrate ([`data`]),
+//!   the TT/TTM tensor algebra ([`tensor`]), the paper's analytic cost
+//!   model ([`costmodel`]) and the FPGA accelerator simulator ([`fpga`])
+//!   that regenerates the paper's hardware tables and figures.
 //!
-//! Python never runs on the training path: after `make artifacts` the
-//! binary is self-contained.
+//! ## Training backends
+//!
+//! The coordinator drives any [`coordinator::TrainBackend`]:
+//!
+//! * [`runtime::Engine`] (**`pjrt` feature**) executes the fused
+//!   FP/BP/PU HLO artifact via PJRT — the L1/L2 build products.
+//! * [`train::NativeTrainer`] (**default**) trains entirely in rust:
+//!   hand-derived backward through the BTT contraction (gradients of
+//!   the TT cores via the merged Z1/Z3 chain states), attention /
+//!   LayerNorm / GELU VJPs, the joint intent+slot cross-entropy, and a
+//!   fused SGD update — no XLA, no Python, no artifacts.  Backward
+//!   FLOPs/memory carry the same [`tensor::ContractionStats`]
+//!   instrumentation as the forward engines and validate against the
+//!   cost model's Eqs. 18-21 ([`costmodel::LinearShape::btt_bwd_muls`]).
+//!
+//! After `make artifacts` the binary is self-contained with either
+//! backend; with the native backend it is self-contained from a bare
+//! `cargo build` — the paper's end-to-end on-device training claim is
+//! reproducible without a Python/XLA toolchain anywhere.
+
+// The tensor kernels and backward passes are index arithmetic by
+// nature; explicit indices document the contraction layouts better than
+// iterator chains would.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_memcpy)]
+#![allow(clippy::type_complexity)]
 
 pub mod config;
 pub mod coordinator;
@@ -29,4 +53,5 @@ pub mod fpga;
 pub mod inference;
 pub mod runtime;
 pub mod tensor;
+pub mod train;
 pub mod util;

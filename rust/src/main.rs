@@ -3,21 +3,30 @@
 //!
 //! ```text
 //! tt-trainer info                              # manifest + Table II/III view
-//! tt-trainer train --variant tt_L2 --steps 200 # train on synthetic ATIS
-//! tt-trainer eval  --variant tt_L2             # accuracy on the test split
+//! tt-trainer train --steps 200                 # train natively (no artifacts)
+//! tt-trainer train --backend pjrt --steps 200  # train via PJRT HLO artifacts
+//! tt-trainer eval  --ckpt DIR                  # accuracy on the test split
 //! tt-trainer cost-model                        # Fig. 6 + Fig. 7 sweeps
 //! tt-trainer bram                              # Figs. 11/12/14
 //! tt-trainer schedule                          # Figs. 9/10
 //! tt-trainer fpga-report                       # Tables IV/V, Figs. 1/15
 //! ```
+//!
+//! The default backend is `native` (self-contained rust training); the
+//! `pjrt` backend needs the crate's `pjrt` feature and `make artifacts`.
+
+// Index-heavy report formatting mirrors the library's kernel style.
+#![allow(clippy::needless_range_loop)]
 
 use anyhow::{anyhow, Result};
+use std::path::Path;
 use tt_trainer::config::ModelConfig;
-use tt_trainer::coordinator::Trainer;
+use tt_trainer::coordinator::{TrainBackend, Trainer};
 use tt_trainer::costmodel::{compare_all, sweeps, LinearShape};
 use tt_trainer::data::Dataset;
 use tt_trainer::fpga::{bram, energy, resources, schedule};
-use tt_trainer::runtime::{Engine, Manifest};
+use tt_trainer::runtime::Manifest;
+use tt_trainer::train::NativeTrainer;
 use tt_trainer::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -39,17 +48,22 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "\
-tt-trainer: tensor-compressed transformer training (rust + JAX/Pallas AOT)
+tt-trainer: tensor-compressed transformer training (rust native + JAX/Pallas AOT)
 
 USAGE: tt-trainer <command> [options]
 
 COMMANDS:
   info          manifest summary (Table II/III view)
-  train         train a variant on synthetic ATIS
-                  --variant tt_L2 --steps N | --epochs E [--limit N]
-                  --lr 0.004 --seed 42 --artifacts DIR --ckpt DIR
-                  --loss-csv FILE
-  eval          evaluate a variant   --variant tt_L2 [--limit N]
+  train         train on synthetic ATIS
+                  --backend native|pjrt (default: native)
+                  --steps N | --epochs E [--limit N]
+                  --lr 0.004 --seed 42 --ckpt DIR --loss-csv FILE
+                  native:  --layers 2 [--init-ckpt DIR]
+                  pjrt:    --variant tt_L2 --artifacts DIR
+  eval          evaluate on the test split
+                  --backend native|pjrt [--limit N]
+                  native:  --layers 2 --ckpt DIR (or --init-ckpt DIR)
+                  pjrt:    --variant tt_L2 --artifacts DIR
   cost-model    Fig. 6 comparison + Fig. 7 sweeps
   bram          BRAM allocator study (Figs. 11/12/14)
   schedule      kernel scheduling study (Figs. 9/10)
@@ -59,6 +73,10 @@ COMMANDS:
 fn manifest(args: &Args) -> Result<Manifest> {
     Manifest::load(args.get_or("artifacts", "artifacts"))
 }
+
+/// The default backend is always the self-contained native trainer;
+/// `--backend pjrt` opts into the artifact path explicitly.
+const DEFAULT_BACKEND: &str = "native";
 
 fn cmd_info(args: &Args) -> Result<()> {
     let m = manifest(args)?;
@@ -82,26 +100,78 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the native backend from CLI options (no artifacts needed).
+/// `load_keys` are the options that may name a checkpoint to load —
+/// `--init-ckpt` everywhere, plus `--ckpt` for eval (where it cannot
+/// mean anything else).
+fn native_backend(args: &Args, seed: u64, load_keys: &[&str]) -> Result<NativeTrainer> {
+    let layers = args.get_usize("layers", 2);
+    let cfg = ModelConfig::paper(layers);
+    let mut backend = NativeTrainer::random_init(&cfg, seed)?;
+    if let Some(dir) = load_keys.iter().find_map(|k| args.get(k)) {
+        backend.load_checkpoint(Path::new(dir))?;
+        println!("loaded checkpoint from {dir}");
+    }
+    println!(
+        "native backend: {layers} encoder blocks, {} tensor-compressed scalars",
+        cfg.tensor_params()
+    );
+    Ok(backend)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 42) as u64;
+    match args.get_or("backend", DEFAULT_BACKEND) {
+        "native" => {
+            let lr = args.get_f64("lr", 4e-3) as f32;
+            let backend = native_backend(args, seed, &["init-ckpt"])?;
+            run_training(Trainer::new(backend, lr), args, seed)
+        }
+        "pjrt" => cmd_train_pjrt(args, seed),
+        other => Err(anyhow!("unknown --backend '{other}' (native|pjrt)")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(args: &Args, seed: u64) -> Result<()> {
+    use tt_trainer::runtime::Engine;
     let m = manifest(args)?;
     let name = args.get_or("variant", "tt_L2");
     let spec = m.variant(name)?;
-    let seed = args.get_usize("seed", 42) as u64;
     let lr = args.get_f64("lr", m.lr as f64) as f32;
-    let cfg = spec.config.clone();
     println!(
         "loading {name}: {} param arrays, {:.1}x compression",
         spec.params.len(),
         spec.compression_ratio()
     );
     let engine = Engine::load(spec)?;
+    run_training(Trainer::new(engine, lr), args, seed)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_pjrt(_args: &Args, _seed: u64) -> Result<()> {
+    Err(anyhow!(
+        "this binary was built without the `pjrt` feature; \
+         use --backend native or rebuild with --features pjrt"
+    ))
+}
+
+fn run_training<B: TrainBackend>(mut trainer: Trainer<B>, args: &Args, seed: u64) -> Result<()> {
+    let cfg = trainer.backend.config().clone();
     let (train, test) = Dataset::paper_splits(&cfg, seed);
-    let mut trainer = Trainer::new(engine, lr);
+    println!(
+        "backend {} | lr {} | {} train / {} test utterances",
+        trainer.backend.backend_name(),
+        trainer.lr,
+        train.len(),
+        test.len()
+    );
 
     if let Some(steps) = args.get("steps") {
         let steps: usize = steps.parse().map_err(|_| anyhow!("bad --steps"))?;
-        println!("training {steps} steps (lr={lr})");
-        trainer.train_steps(&train, steps)?;
+        println!("training {steps} steps");
+        let mean = trainer.train_steps(&train, steps)?;
+        println!("mean loss over {steps} steps: {mean:.4}");
         println!(
             "final loss (mean of last 20): {:.4}",
             trainer.metrics.recent_loss(20)
@@ -127,7 +197,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.metrics.steps
     );
     if let Some(dir) = args.get("ckpt") {
-        trainer.engine.save_checkpoint(dir)?;
+        trainer.backend.save_checkpoint(Path::new(dir))?;
         println!("checkpoint saved to {dir}");
     }
     if let Some(path) = args.get("loss-csv") {
@@ -138,17 +208,45 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 42) as u64;
+    match args.get_or("backend", DEFAULT_BACKEND) {
+        "native" => {
+            let backend = native_backend(args, seed, &["init-ckpt", "ckpt"])?;
+            run_eval(Trainer::new(backend, 4e-3), args, seed)
+        }
+        "pjrt" => cmd_eval_pjrt(args, seed),
+        other => Err(anyhow!("unknown --backend '{other}' (native|pjrt)")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_eval_pjrt(args: &Args, seed: u64) -> Result<()> {
+    use tt_trainer::runtime::Engine;
     let m = manifest(args)?;
-    let name = args.get_or("variant", "tt_L2");
-    let spec = m.variant(name)?;
+    let spec = m.variant(args.get_or("variant", "tt_L2"))?;
     let engine = Engine::load(spec)?;
-    let (_, test) = Dataset::paper_splits(&spec.config, 42);
-    let trainer = Trainer::new(engine, m.lr);
+    run_eval(Trainer::new(engine, m.lr), args, seed)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval_pjrt(_args: &Args, _seed: u64) -> Result<()> {
+    Err(anyhow!(
+        "this binary was built without the `pjrt` feature; \
+         use --backend native or rebuild with --features pjrt"
+    ))
+}
+
+fn run_eval<B: TrainBackend>(trainer: Trainer<B>, args: &Args, seed: u64) -> Result<()> {
+    let cfg = trainer.backend.config().clone();
+    let (_, test) = Dataset::paper_splits(&cfg, seed);
     let limit = args.get("limit").and_then(|v| v.parse().ok());
     let ev = trainer.evaluate(&test, limit)?;
     println!(
-        "{name}: intent acc {:.3} | slot acc {:.3} (n={})",
-        ev.intent_acc, ev.slot_acc, ev.n
+        "{}: intent acc {:.3} | slot acc {:.3} (n={})",
+        trainer.backend.backend_name(),
+        ev.intent_acc,
+        ev.slot_acc,
+        ev.n
     );
     Ok(())
 }
@@ -171,6 +269,12 @@ fn cmd_cost_model() -> Result<()> {
             r.memory_reduction
         );
     }
+    println!("\n=== BP stage (native backward, 2x Eq. 20) ===");
+    println!(
+        "BTT bwd muls at K=32: {} (training cache: {} elements)",
+        shape.btt_bwd_muls(32),
+        shape.btt_training_cache_elems(32)
+    );
     println!("\n=== Fig. 7 (top): sequence-length sweep at rank 12 ===");
     print!(
         "{}",

@@ -9,20 +9,14 @@
 
 use super::manifest::VariantSpec;
 use super::{compile_hlo_text, literal_i32};
+use crate::config::ModelConfig;
+use crate::coordinator::backend::{StepOutput, TrainBackend};
+use crate::util::npy;
 use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
 use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
-
-/// Result of one training step.
-#[derive(Debug, Clone, Copy)]
-pub struct StepOutput {
-    pub loss: f32,
-    /// Wall-clock seconds spent inside PJRT execute (FP+BP+PU).
-    pub execute_secs: f64,
-    /// Wall-clock seconds spent on host-side literal handling.
-    pub host_secs: f64,
-}
 
 /// A loaded model variant: compiled executables + parameter state.
 pub struct Engine {
@@ -181,29 +175,28 @@ impl Engine {
     ///
     /// (The `xla` crate's own `write_npy` is broken for f32 literals —
     /// it feeds a `u8` buffer to the type-checked `copy_raw_to` — so the
-    /// npy header + payload are emitted here directly.)
+    /// shared [`crate::util::npy`] writer is used instead.)
     pub fn save_checkpoint(&self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
         for (i, (lit, spec)) in self.params.iter().zip(&self.spec.params).enumerate() {
-            let safe = spec.name.replace('/', "_");
+            let safe = npy::safe_param_name(&spec.name);
             let data = lit.to_vec::<f32>()?;
-            write_npy_f32(&dir.join(format!("{i:04}.{safe}.npy")), &data, &spec.shape)?;
+            npy::write_npy_f32(&dir.join(format!("{i:04}.{safe}.npy")), &data, &spec.shape)?;
         }
         Ok(())
     }
 
-    /// Restore parameters saved by [`Engine::save_checkpoint`].
+    /// Restore parameters saved by [`Engine::save_checkpoint`] (or by
+    /// the native trainer — the formats interchange).
     ///
-    /// See [`write_npy_f32`] for the writer side.
+    /// Each file is matched to its manifest spec by the *embedded
+    /// parameter name*, never by sort position, so file numbering is
+    /// irrelevant and a renamed or missing `.npy` is a hard error
+    /// instead of silently loading the wrong weights.
     pub fn load_checkpoint(&mut self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
-        let mut entries: Vec<_> = std::fs::read_dir(dir)?
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| p.extension().map(|x| x == "npy").unwrap_or(false))
-            .collect();
-        entries.sort();
+        let entries = npy::checkpoint_entries(dir)?;
         if entries.len() != self.params.len() {
             return Err(anyhow!(
                 "checkpoint has {} arrays, expected {}",
@@ -211,9 +204,14 @@ impl Engine {
                 self.params.len()
             ));
         }
-        let mut params = Vec::with_capacity(entries.len());
-        for (path, spec) in entries.iter().zip(&self.spec.params) {
-            let lit = Literal::read_npy(path, &())?;
+        let mut by_name: BTreeMap<String, std::path::PathBuf> = entries.into_iter().collect();
+        let mut params = Vec::with_capacity(self.spec.params.len());
+        for spec in &self.spec.params {
+            let expect = npy::safe_param_name(&spec.name);
+            let path = by_name.remove(&expect).ok_or_else(|| {
+                anyhow!("checkpoint {dir:?} has no file for parameter '{expect}'")
+            })?;
+            let lit = Literal::read_npy(&path, &())?;
             if lit.element_count() != spec.numel() {
                 return Err(anyhow!("checkpoint {path:?}: wrong element count"));
             }
@@ -224,39 +222,34 @@ impl Engine {
     }
 }
 
-/// Minimal `.npy` (format 1.0) writer for little-endian f32 row-major
-/// arrays — the checkpoint format readable by `Literal::read_npy` and
-/// numpy alike.
-fn write_npy_f32(path: &Path, data: &[f32], shape: &[usize]) -> Result<()> {
-    use std::io::Write;
-    let dims = shape
-        .iter()
-        .map(|d| d.to_string())
-        .collect::<Vec<_>>()
-        .join(", ");
-    let shape_str = match shape.len() {
-        0 => "()".to_string(),
-        1 => format!("({dims},)"),
-        _ => format!("({dims})"),
-    };
-    let mut header =
-        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}");
-    // Pad so magic(6) + version(2) + len(2) + header is a multiple of 64.
-    let base = 6 + 2 + 2;
-    let total = (base + header.len() + 1).div_ceil(64) * 64;
-    while base + header.len() + 1 < total {
-        header.push(' ');
+impl TrainBackend for Engine {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
     }
-    header.push('\n');
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(b"\x93NUMPY")?;
-    f.write_all(&[1u8, 0u8])?;
-    f.write_all(&(header.len() as u16).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
-    let mut bytes = Vec::with_capacity(data.len() * 4);
-    for v in data {
-        bytes.extend_from_slice(&v.to_le_bytes());
+
+    fn config(&self) -> &ModelConfig {
+        &self.spec.config
     }
-    f.write_all(&bytes)?;
-    Ok(())
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        Engine::train_step(self, tokens, intent, slots, lr)
+    }
+
+    fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        Engine::eval(self, tokens)
+    }
+
+    fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        Engine::save_checkpoint(self, dir)
+    }
+
+    fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        Engine::load_checkpoint(self, dir)
+    }
 }

@@ -13,17 +13,28 @@
 //! HLO **text** (not serialized protos) is loaded: jax >= 0.5 emits 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The manifest reader is always available; the executing engine
+//! ([`Engine`]) and the literal helpers need the `pjrt` feature (the
+//! default build is the artifact-free native stack, see
+//! [`crate::train`]).
 
+#[cfg(feature = "pjrt")]
 mod engine;
 mod manifest;
 
-pub use engine::{Engine, StepOutput};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+pub use crate::coordinator::backend::StepOutput;
 pub use manifest::{Manifest, ParamSpec, VariantSpec};
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 /// Compile an HLO-text file on the given PJRT client.
+#[cfg(feature = "pjrt")]
 pub fn compile_hlo_text(client: &PjRtClient, path: &str) -> Result<PjRtLoadedExecutable> {
     let proto = HloModuleProto::from_text_file(path)?;
     let comp = XlaComputation::from_proto(&proto);
@@ -31,12 +42,14 @@ pub fn compile_hlo_text(client: &PjRtClient, path: &str) -> Result<PjRtLoadedExe
 }
 
 /// Build an i32 literal of the given shape from a slice.
+#[cfg(feature = "pjrt")]
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
     let lit = Literal::vec1(data);
     Ok(lit.reshape(dims)?)
 }
 
 /// Build an f32 literal of the given shape from a slice.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let lit = Literal::vec1(data);
     Ok(lit.reshape(dims)?)

@@ -1,9 +1,96 @@
 //! Dense row-major f32 tensor: the substrate under the TT/TTM algebra.
 //!
 //! Deliberately minimal — shapes, reshape, matmul, transpose, SVD — just
-//! what tensor-train decomposition and the contraction engines need.
+//! what tensor-train decomposition, the contraction engines and the
+//! native training path need.
+//!
+//! ## Matmul kernels
+//!
+//! All products run through one cache-blocked `ikj` kernel that streams
+//! rows of the right operand and skips zero left entries.  Large products
+//! are split row-wise across `std::thread` workers.  Both the k-blocking
+//! and the row split preserve the exact floating-point accumulation
+//! order of the serial kernel, so results are **bitwise identical**
+//! regardless of size or thread count — parity tests and checkpoint
+//! determinism do not depend on the dispatch decision.
+//!
+//! The batched variants ([`Tensor::bmm`], [`Tensor::bmm_nt`],
+//! [`Tensor::bmm_tn`]) contract stacks of matrices (batch-major 3-D
+//! tensors) and parallelize over the batch — the shape of per-head
+//! attention in both the forward and backward pass.
 
 use anyhow::{anyhow, Result};
+
+/// Multiply-accumulate count above which `matmul` switches to the
+/// thread-parallel path (threads cost ~10us each to launch; below this
+/// the serial kernel wins).
+const PAR_MULS_THRESHOLD: usize = 1 << 20;
+
+/// k-dimension block of the inner kernel: 64 rows of the right operand
+/// (<= 64 * 4 * n bytes) stay hot in L1/L2 while an output row is built.
+const BLOCK_K: usize = 64;
+
+fn worker_count(rows: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .min(rows)
+        .max(1)
+}
+
+/// Blocked `ikj` kernel over a contiguous band of output rows.
+///
+/// `out` holds rows `row0..row0 + out.len() / n` of the product; the
+/// accumulation order over `p` is ascending (blocks in order, rows in
+/// order within a block), identical to the naive streaming kernel.
+fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, k: usize, n: usize) {
+    for (i, orow) in out.chunks_mut(n).enumerate() {
+        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+        let mut p0 = 0;
+        while p0 < k {
+            let p1 = (p0 + BLOCK_K).min(k);
+            for (p, &av) in arow[p0..p1].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[(p0 + p) * n..(p0 + p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            p0 = p1;
+        }
+    }
+}
+
+/// Run `f(batch_index, out_chunk)` for every `stride`-sized chunk of
+/// `out`, optionally fanning the chunks out across threads.
+fn for_each_chunk<F>(out: &mut [f32], stride: usize, parallel: bool, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if stride == 0 || out.is_empty() {
+        return;
+    }
+    let chunks = out.len() / stride;
+    if !parallel || chunks < 2 {
+        for (i, chunk) in out.chunks_mut(stride).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let per_worker = chunks.div_ceil(worker_count(chunks));
+    std::thread::scope(|scope| {
+        for (w, group) in out.chunks_mut(per_worker * stride).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, chunk) in group.chunks_mut(stride).enumerate() {
+                    f(w * per_worker + j, chunk);
+                }
+            });
+        }
+    });
+}
 
 /// Dense row-major tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -57,6 +144,10 @@ impl Tensor {
     }
 
     /// Matrix product `self (m,k) @ other (k,n)`.
+    ///
+    /// Dispatches between the serial and thread-parallel blocked kernel
+    /// by problem size; the result is bitwise identical either way (see
+    /// the module docs).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         if self.ndim() != 2 || other.ndim() != 2 || self.shape[1] != other.shape[0] {
             return Err(anyhow!("matmul shape mismatch {:?} x {:?}", self.shape, other.shape));
@@ -64,21 +155,81 @@ impl Tensor {
         let (m, k) = (self.shape[0], self.shape[1]);
         let n = other.shape[1];
         let mut out = vec![0.0f32; m * n];
-        // ikj loop order: streams `other` rows, vectorizes the j loop.
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
+        if k > 0 {
+            let parallel = m.saturating_mul(k).saturating_mul(n) >= PAR_MULS_THRESHOLD;
+            for_each_chunk(&mut out, n, parallel, |row, orow| {
+                matmul_rows(&self.data, &other.data, orow, row, k, n);
+            });
         }
         Tensor::from_vec(out, &[m, n])
+    }
+
+    /// Batched matrix product: `self (B,m,k) @ other (B,k,n) -> (B,m,n)`,
+    /// parallel over the batch for large products.
+    pub fn bmm(&self, other: &Tensor) -> Result<Tensor> {
+        let (b, m, k, n) = bmm_dims(self, other, 1)?;
+        let mut out = vec![0.0f32; b * m * n];
+        if k > 0 {
+            let parallel = (b * m).saturating_mul(k).saturating_mul(n) >= PAR_MULS_THRESHOLD;
+            for_each_chunk(&mut out, m * n, parallel, |i, chunk| {
+                matmul_rows(&self.data[i * m * k..], &other.data[i * k * n..], chunk, 0, k, n);
+            });
+        }
+        Tensor::from_vec(out, &[b, m, n])
+    }
+
+    /// Batched product with the second operand transposed:
+    /// `self (B,m,k) @ other (B,n,k)^T -> (B,m,n)` — the attention
+    /// `Q K^T` shape, contracted without materializing the transpose.
+    pub fn bmm_nt(&self, other: &Tensor) -> Result<Tensor> {
+        let (b, m, k, n) = bmm_dims(self, other, 2)?;
+        let mut out = vec![0.0f32; b * m * n];
+        let parallel = (b * m).saturating_mul(k).saturating_mul(n) >= PAR_MULS_THRESHOLD;
+        for_each_chunk(&mut out, m * n, parallel, |i, chunk| {
+            let a = &self.data[i * m * k..(i + 1) * m * k];
+            let bb = &other.data[i * n * k..(i + 1) * n * k];
+            for (ii, orow) in chunk.chunks_mut(n).enumerate() {
+                let arow = &a[ii * k..(ii + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &bb[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    *o = acc;
+                }
+            }
+        });
+        Tensor::from_vec(out, &[b, m, n])
+    }
+
+    /// Batched product with the first operand transposed:
+    /// `self (B,k,m)^T @ other (B,k,n) -> (B,m,n)` — the attention
+    /// backward shapes (`P^T dCtx`, `dS^T Q`).
+    pub fn bmm_tn(&self, other: &Tensor) -> Result<Tensor> {
+        let (b, m, k, n) = bmm_dims(self, other, 3)?;
+        let mut out = vec![0.0f32; b * m * n];
+        if k > 0 {
+            let parallel = (b * m).saturating_mul(k).saturating_mul(n) >= PAR_MULS_THRESHOLD;
+            for_each_chunk(&mut out, m * n, parallel, |i, chunk| {
+                let a = &self.data[i * k * m..(i + 1) * k * m];
+                let bb = &other.data[i * k * n..(i + 1) * k * n];
+                for p in 0..k {
+                    let arow = &a[p * m..(p + 1) * m];
+                    let brow = &bb[p * n..(p + 1) * n];
+                    for (ii, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut chunk[ii * n..(ii + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+        Tensor::from_vec(out, &[b, m, n])
     }
 
     /// 2-D transpose.
@@ -109,6 +260,24 @@ impl Tensor {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
+}
+
+/// Validate batched-matmul operands and return `(batch, m, k, n)`.
+///
+/// `variant`: 1 = `a b`, 2 = `a b^T`, 3 = `a^T b` (per-batch transposes).
+fn bmm_dims(a: &Tensor, b: &Tensor, variant: u8) -> Result<(usize, usize, usize, usize)> {
+    if a.ndim() != 3 || b.ndim() != 3 || a.shape[0] != b.shape[0] {
+        return Err(anyhow!("bmm needs (B,_,_) x (B,_,_), got {:?} x {:?}", a.shape, b.shape));
+    }
+    let (m, k, kb, n) = match variant {
+        1 => (a.shape[1], a.shape[2], b.shape[1], b.shape[2]),
+        2 => (a.shape[1], a.shape[2], b.shape[2], b.shape[1]),
+        _ => (a.shape[2], a.shape[1], b.shape[1], b.shape[2]),
+    };
+    if k != kb {
+        return Err(anyhow!("bmm contraction mismatch {:?} x {:?}", a.shape, b.shape));
+    }
+    Ok((a.shape[0], m, k, n))
 }
 
 /// Thin SVD of a 2-D tensor via one-sided Jacobi rotation on the smaller
@@ -190,10 +359,8 @@ fn sym_eig_psd(a: &Tensor) -> Result<(Tensor, Vec<f32>)> {
                 }
                 let app = m[idx(p, p)];
                 let aqq = m[idx(q, q)];
-                let theta = 0.5 * (aqq - app).atan2(2.0 * apq).mul_add(-1.0, std::f32::consts::FRAC_PI_2) / 2.0;
                 // Standard Jacobi rotation angle:
                 let phi = 0.5 * (2.0 * apq).atan2(app - aqq);
-                let _ = theta;
                 let (s, c) = phi.sin_cos();
                 for k in 0..n {
                     let akp = m[idx(k, p)];
@@ -251,6 +418,98 @@ mod tests {
         let b = Tensor::from_vec(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]).unwrap();
         let c = a.matmul(&b).unwrap();
         assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    /// Reference triple-loop product (jik order — deliberately a
+    /// *different* accumulation order than the kernel).
+    fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        for j in 0..n {
+            for i in 0..m {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a.data[i * k + p] as f64 * b.data[p * n + j] as f64;
+                }
+                out.data[i * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parallel_path_matches_naive() {
+        // 150*80*120 = 1.44M muls: crosses PAR_MULS_THRESHOLD, so this
+        // exercises the threaded blocked kernel.
+        let mut rng = SplitMix64::new(9);
+        let a = Tensor::randn(&[150, 80], 1.0, &mut rng);
+        let b = Tensor::randn(&[80, 120], 1.0, &mut rng);
+        assert!(150 * 80 * 120 >= super::PAR_MULS_THRESHOLD);
+        let c = a.matmul(&b).unwrap();
+        let reference = matmul_naive(&a, &b);
+        let scale = reference.norm() / (reference.numel() as f32).sqrt();
+        assert!(c.max_abs_diff(&reference) < 1e-4 * (1.0 + scale));
+    }
+
+    #[test]
+    fn matmul_is_deterministic_across_dispatch() {
+        // Same inputs -> bitwise-equal output on repeated runs (the
+        // thread split must not change accumulation order).
+        let mut rng = SplitMix64::new(10);
+        let a = Tensor::randn(&[130, 90], 1.0, &mut rng);
+        let b = Tensor::randn(&[90, 110], 1.0, &mut rng);
+        let c1 = a.matmul(&b).unwrap();
+        let c2 = a.matmul(&b).unwrap();
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn bmm_matches_per_batch_matmul() {
+        let mut rng = SplitMix64::new(11);
+        let a = Tensor::randn(&[3, 5, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[3, 7, 4], 1.0, &mut rng);
+        let c = a.bmm(&b).unwrap();
+        assert_eq!(c.shape, vec![3, 5, 4]);
+        for i in 0..3 {
+            let ai = Tensor::from_vec(a.data[i * 35..(i + 1) * 35].to_vec(), &[5, 7]).unwrap();
+            let bi = Tensor::from_vec(b.data[i * 28..(i + 1) * 28].to_vec(), &[7, 4]).unwrap();
+            let ci = ai.matmul(&bi).unwrap();
+            assert_eq!(&c.data[i * 20..(i + 1) * 20], &ci.data[..]);
+        }
+    }
+
+    #[test]
+    fn bmm_nt_and_tn_match_explicit_transposes() {
+        let mut rng = SplitMix64::new(12);
+        let a = Tensor::randn(&[2, 6, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 4, 5], 1.0, &mut rng);
+        let nt = a.bmm_nt(&b).unwrap(); // (2, 6, 4)
+        let at = Tensor::randn(&[2, 5, 6], 1.0, &mut rng);
+        let bt = Tensor::randn(&[2, 5, 4], 1.0, &mut rng);
+        let tn = at.bmm_tn(&bt).unwrap(); // (2, 6, 4)
+        assert_eq!(nt.shape, vec![2, 6, 4]);
+        assert_eq!(tn.shape, vec![2, 6, 4]);
+        for i in 0..2 {
+            let ai = Tensor::from_vec(a.data[i * 30..(i + 1) * 30].to_vec(), &[6, 5]).unwrap();
+            let bi = Tensor::from_vec(b.data[i * 20..(i + 1) * 20].to_vec(), &[4, 5]).unwrap();
+            let expect = ai.matmul(&bi.t().unwrap()).unwrap();
+            assert!(
+                Tensor::from_vec(nt.data[i * 24..(i + 1) * 24].to_vec(), &[6, 4])
+                    .unwrap()
+                    .max_abs_diff(&expect)
+                    < 1e-5
+            );
+            let ati = Tensor::from_vec(at.data[i * 30..(i + 1) * 30].to_vec(), &[5, 6]).unwrap();
+            let bti = Tensor::from_vec(bt.data[i * 20..(i + 1) * 20].to_vec(), &[5, 4]).unwrap();
+            let expect = ati.t().unwrap().matmul(&bti).unwrap();
+            assert!(
+                Tensor::from_vec(tn.data[i * 24..(i + 1) * 24].to_vec(), &[6, 4])
+                    .unwrap()
+                    .max_abs_diff(&expect)
+                    < 1e-5
+            );
+        }
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! Elementwise / normalization ops on dense tensors — the nonlinear
 //! kernels of the paper's accelerator (softmax, GELU, LayerNorm, tanh;
-//! Fig. 8's "NL" units), implemented natively for the rust inference
-//! engine ([`crate::inference`]).
+//! Fig. 8's "NL" units) plus the shared multi-head-attention block.
+//!
+//! Both the inference engine ([`crate::inference`]) and the native
+//! training path ([`crate::train`]) run their forward passes through
+//! these functions; training additionally keeps the attention
+//! probabilities returned by [`multi_head_attention`] for the backward
+//! pass.
 
 use super::dense::Tensor;
+use anyhow::{anyhow, Result};
 
 /// Row-wise softmax over the last axis of a 2-D tensor, with an optional
 /// key mask (0.0 entries are excluded, as in masked attention).
@@ -99,9 +105,76 @@ pub fn add_row(a: &Tensor, row: &[f32]) -> Tensor {
     out
 }
 
+/// Split `(S, H)` row-major activations into head-major `(heads, S, dh)`.
+pub fn pack_heads(x: &Tensor, n_heads: usize) -> Result<Tensor> {
+    if x.ndim() != 2 || x.shape[1] % n_heads != 0 {
+        return Err(anyhow!("pack_heads: bad shape {:?} for {n_heads} heads", x.shape));
+    }
+    let (s, h) = (x.shape[0], x.shape[1]);
+    let dh = h / n_heads;
+    let mut out = Tensor::zeros(&[n_heads, s, dh]);
+    for head in 0..n_heads {
+        for i in 0..s {
+            let src = &x.data[i * h + head * dh..i * h + (head + 1) * dh];
+            out.data[(head * s + i) * dh..(head * s + i + 1) * dh].copy_from_slice(src);
+        }
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_heads`]: `(heads, S, dh)` back to `(S, H)`.
+pub fn unpack_heads(x: &Tensor) -> Result<Tensor> {
+    if x.ndim() != 3 {
+        return Err(anyhow!("unpack_heads: need (heads, S, dh), got {:?}", x.shape));
+    }
+    let (n_heads, s, dh) = (x.shape[0], x.shape[1], x.shape[2]);
+    let h = n_heads * dh;
+    let mut out = Tensor::zeros(&[s, h]);
+    for head in 0..n_heads {
+        for i in 0..s {
+            let src = &x.data[(head * s + i) * dh..(head * s + i + 1) * dh];
+            out.data[i * h + head * dh..i * h + (head + 1) * dh].copy_from_slice(src);
+        }
+    }
+    Ok(out)
+}
+
+/// Masked multi-head self-attention on `(S, H)` activations (the
+/// accelerator's MM + softmax path, paper Fig. 8).
+///
+/// Returns the context `(S, H)` and the per-head attention
+/// probabilities `(heads, S, S)` — the latter is exactly what the
+/// backward pass must keep, and is discarded by inference.
+pub fn multi_head_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &[f32],
+    n_heads: usize,
+) -> Result<(Tensor, Tensor)> {
+    let (s, h) = (q.shape[0], q.shape[1]);
+    if k.shape != q.shape || v.shape != q.shape || mask.len() != s {
+        return Err(anyhow!("attention shape mismatch q {:?} mask {}", q.shape, mask.len()));
+    }
+    let dh = h / n_heads;
+    let qh = pack_heads(q, n_heads)?;
+    let kh = pack_heads(k, n_heads)?;
+    let vh = pack_heads(v, n_heads)?;
+    let mut scores = qh.bmm_nt(&kh)?; // (heads, S, S)
+    let scale = 1.0 / (dh as f32).sqrt();
+    for x in scores.data.iter_mut() {
+        *x *= scale;
+    }
+    let probs = softmax_rows(&scores.reshape(&[n_heads * s, s])?, Some(mask))
+        .reshape(&[n_heads, s, s])?;
+    let ctx = probs.bmm(&vh)?; // (heads, S, dh)
+    Ok((unpack_heads(&ctx)?, probs))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::SplitMix64;
 
     #[test]
     fn softmax_rows_sum_to_one() {
@@ -149,5 +222,32 @@ mod tests {
         let x = Tensor::from_vec(vec![-100.0, 0.0, 100.0], &[1, 3]).unwrap();
         let y = tanh(&x);
         assert_eq!(y.data, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn pack_unpack_heads_roundtrip() {
+        let mut rng = SplitMix64::new(41);
+        let x = Tensor::randn(&[5, 12], 1.0, &mut rng);
+        let packed = pack_heads(&x, 3).unwrap();
+        assert_eq!(packed.shape, vec![3, 5, 4]);
+        assert_eq!(unpack_heads(&packed).unwrap(), x);
+    }
+
+    #[test]
+    fn attention_probs_rows_sum_to_one_and_respect_mask() {
+        let mut rng = SplitMix64::new(42);
+        let (s, h, heads) = (6, 8, 2);
+        let q = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let k = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let v = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let mask = [1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let (ctx, probs) = multi_head_attention(&q, &k, &v, &mask, heads).unwrap();
+        assert_eq!(ctx.shape, vec![s, h]);
+        assert_eq!(probs.shape, vec![heads, s, s]);
+        for row in probs.data.chunks(s) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            assert_eq!(row[4], 0.0);
+            assert_eq!(row[5], 0.0);
+        }
     }
 }

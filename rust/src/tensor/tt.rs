@@ -27,13 +27,35 @@ pub struct TTMatrix {
 pub struct ContractionStats {
     /// Scalar multiplications executed.
     pub muls: u64,
-    /// Peak bytes of *live intermediate* tensors (excluding inputs/outputs).
+    /// Peak *live intermediate* tensor size in elements (excluding
+    /// inputs/outputs).
     pub peak_intermediate_elems: u64,
     /// Sum of all intermediate tensor sizes (elements) — what training
     /// must store for reuse in backprop.
     pub stored_intermediate_elems: u64,
     /// Number of contraction steps.
     pub steps: u32,
+}
+
+impl ContractionStats {
+    /// Record one contraction step.
+    ///
+    /// The accounting rule is uniform across every engine: a step's
+    /// product counts toward `stored_intermediate_elems` (and the peak)
+    /// **iff it is an intermediate** — i.e. anything except the tensor
+    /// the contraction ultimately returns.  The backward pass must keep
+    /// exactly these tensors, so the stored count is also the training
+    /// activation cache (validated against Eqs. 19/21 in
+    /// [`crate::costmodel`]).
+    pub fn record_step(&mut self, muls: u64, product_elems: u64, is_intermediate: bool) {
+        self.muls += muls;
+        self.steps += 1;
+        if is_intermediate {
+            self.stored_intermediate_elems += product_elems;
+            self.peak_intermediate_elems = self.peak_intermediate_elems.max(product_elems);
+        }
+    }
+
 }
 
 impl TTMatrix {
@@ -187,31 +209,54 @@ impl TTMatrix {
 
     /// Merge the output-mode cores into Z3 (M, r_d) — paper kernel MUL0.
     pub fn merge_left(&self) -> Result<Tensor> {
-        let d = self.d();
-        let mut z = self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?;
-        for k in 1..d {
-            let g = &self.cores[k];
-            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
-            z = z.matmul(&g.reshape(&[rp, mk * rk])?)?.reshape(&[z.shape[0] * mk, rk])?;
-        }
-        Ok(z)
+        Ok(self.merge_left_chain()?.pop().expect("d >= 1"))
     }
 
     /// Merge the input-mode cores into Z1 (r_d, N) — paper kernel MUL0.
     pub fn merge_right(&self) -> Result<Tensor> {
+        Ok(self.merge_right_chain()?.pop().expect("d >= 1"))
+    }
+
+    /// Every state of the left-merge chain: `L_0` is core 0 reshaped to
+    /// (m_1, r_1); `L_k` folds core `k` in; the last state is Z3
+    /// (M, r_d).  The backward pass consumes the full chain — state
+    /// `L_{k-1}` is the left operand of the step that produced `L_k`.
+    pub fn merge_left_chain(&self) -> Result<Vec<Tensor>> {
+        let d = self.d();
+        let mut states = vec![self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?];
+        for k in 1..d {
+            let g = &self.cores[k];
+            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            let next = {
+                let prev = states.last().expect("nonempty");
+                prev.matmul(&g.reshape(&[rp, mk * rk])?)?
+                    .reshape(&[prev.shape[0] * mk, rk])?
+            };
+            states.push(next);
+        }
+        Ok(states)
+    }
+
+    /// Every state of the right-merge chain: `R_0` is core 2d-1 reshaped
+    /// to (r_{2d-1}, n_d); `R_j` folds core `2d-1-j` in; the last state
+    /// is Z1 (r_d, N).
+    pub fn merge_right_chain(&self) -> Result<Vec<Tensor>> {
         let d = self.d();
         let d2 = 2 * d;
         let last = &self.cores[d2 - 1];
-        let mut z = last.reshape(&[last.shape[0], last.shape[1]])?;
+        let mut states = vec![last.reshape(&[last.shape[0], last.shape[1]])?];
         for k in (d..d2 - 1).rev() {
             let g = &self.cores[k];
             let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
-            z = g
-                .reshape(&[rp * nk, rk])?
-                .matmul(&z)?
-                .reshape(&[rp, nk * z.shape[1]])?;
+            let next = {
+                let prev = states.last().expect("nonempty");
+                g.reshape(&[rp * nk, rk])?
+                    .matmul(prev)?
+                    .reshape(&[rp, nk * prev.shape[1]])?
+            };
+            states.push(next);
         }
-        Ok(z)
+        Ok(states)
     }
 
     /// `Y = W X` with X (N, K) via **right-to-left** contraction (the
@@ -253,19 +298,22 @@ impl TTMatrix {
                         let mut acc = 0.0f32;
                         for e in 0..nk {
                             for f in 0..r_cur {
-                                acc += cur3.data[a * nk * r_cur * k_dim + (e * r_cur + f) * k_dim + c]
-                                    * g.data[b * nk * r_cur + e * r_cur + f];
+                                let xi = a * nk * r_cur * k_dim + (e * r_cur + f) * k_dim + c;
+                                acc += cur3.data[xi] * g.data[b * nk * r_cur + e * r_cur + f];
                             }
                         }
                         next.data[a * rp * k_dim + b * k_dim + c] = acc;
                     }
                 }
             }
-            stats.muls += (rows * rp * k_dim * nk * r_cur) as u64;
-            stats.steps += 1;
-            let interm = (rows * rp * k_dim) as u64;
-            stats.stored_intermediate_elems += interm;
-            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+            // Every input-side product is an intermediate: even the last
+            // one (the (r_d, K) middle state) is consumed by the output
+            // side, not returned.
+            stats.record_step(
+                (rows * rp * k_dim * nk * r_cur) as u64,
+                (rows * rp * k_dim) as u64,
+                true,
+            );
             cur = next.reshape(&[rows * rp, k_dim])?;
             r_cur = rp;
             n_left = rows;
@@ -295,20 +343,71 @@ impl TTMatrix {
                     }
                 }
             }
-            stats.muls += (mk * m_built * rp * k_dim * r_cur) as u64;
-            stats.steps += 1;
-            let interm = (mk * m_built * rp * k_dim) as u64;
-            if k > 0 {
-                stats.stored_intermediate_elems += interm;
-                stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
-            }
+            // Output-side products are intermediates except the k == 0
+            // step, whose product is the returned Y itself.
+            stats.record_step(
+                (mk * m_built * rp * k_dim * r_cur) as u64,
+                (mk * m_built * rp * k_dim) as u64,
+                k > 0,
+            );
             m_built *= mk;
             r_cur = rp;
             cur = next.reshape(&[m_built * rp, k_dim])?;
         }
         debug_assert_eq!(r_cur, 1);
         let y = cur.reshape(&[self.m(), k_dim])?;
+        self.debug_check_stats(&stats, k_dim, false);
         Ok((y, stats))
+    }
+
+    /// Debug-build invariant: executed counts must equal the analytic
+    /// cost model (Eqs. 18/19 for right-to-left, Eqs. 20/21 for BTT).
+    fn debug_check_stats(&self, stats: &ContractionStats, k_dim: usize, btt: bool) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let shape = crate::costmodel::LinearShape {
+            m_modes: self.m_modes.clone(),
+            n_modes: self.n_modes.clone(),
+            ranks: self.ranks.clone(),
+        };
+        let (muls, mem) = if btt {
+            (shape.btt_muls(k_dim as u64), shape.btt_memory(k_dim as u64))
+        } else {
+            (shape.tt_rl_muls(k_dim as u64), shape.tt_rl_memory(k_dim as u64))
+        };
+        debug_assert_eq!(stats.muls, muls, "executed muls diverge from cost model");
+        debug_assert_eq!(
+            stats.stored_intermediate_elems, mem,
+            "stored intermediates diverge from cost model"
+        );
+    }
+
+    /// Record the K-independent merge-chain costs (the first terms of
+    /// Eqs. 20/21) into `stats` — the single accounting source shared
+    /// by [`TTMatrix::matmul_btt`] and the training layer's
+    /// instrumented forward (`crate::train::layers`).
+    pub fn record_merge_stats(&self, stats: &mut ContractionStats) {
+        let d = self.d();
+        // Left merge: muls = sum over steps of (m_1..m_k) r_{k-1} m_k r_k.
+        let mut m_acc = self.m_modes[0];
+        for k in 1..d {
+            let g = &self.cores[k];
+            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            let muls = (m_acc * rp * mk * rk) as u64;
+            m_acc *= mk;
+            stats.record_step(muls, (m_acc * rk) as u64, true);
+        }
+        // Right merge, symmetric over the input modes.
+        let d2 = 2 * d;
+        let mut n_acc = self.cores[d2 - 1].shape[1];
+        for k in (d..d2 - 1).rev() {
+            let g = &self.cores[k];
+            let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            let muls = (rp * nk * rk * n_acc) as u64;
+            n_acc *= nk;
+            stats.record_step(muls, (rp * n_acc) as u64, true);
+        }
     }
 
     /// `Y = W X` with X (N, K) via the paper's **bidirectional** (BTT)
@@ -325,51 +424,19 @@ impl TTMatrix {
         let r_d = self.ranks[d];
         let mut stats = ContractionStats::default();
 
-        // Left merge: Z3 (M, r_d).  muls: sum over steps of
-        // (m_1..m_{k+1}) * r_k * r_{k+1}.
-        let mut z3 = self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?;
-        let mut m_acc = self.m_modes[0];
-        for k in 1..d {
-            let g = &self.cores[k];
-            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
-            z3 = z3.matmul(&g.reshape(&[rp, mk * rk])?)?.reshape(&[m_acc * mk, rk])?;
-            stats.muls += (m_acc * rp * mk * rk) as u64;
-            stats.steps += 1;
-            m_acc *= mk;
-            let interm = (m_acc * rk) as u64;
-            stats.stored_intermediate_elems += interm;
-            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
-        }
-        // Right merge: Z1 (r_d, N).
-        let d2 = 2 * d;
-        let last = &self.cores[d2 - 1];
-        let mut z1 = last.reshape(&[last.shape[0], last.shape[1]])?;
-        let mut n_acc = last.shape[1];
-        for k in (d..d2 - 1).rev() {
-            let g = &self.cores[k];
-            let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
-            z1 = g
-                .reshape(&[rp * nk, rk])?
-                .matmul(&z1)?
-                .reshape(&[rp, nk * n_acc])?;
-            stats.muls += (rp * nk * rk * n_acc) as u64;
-            stats.steps += 1;
-            n_acc *= nk;
-            let interm = (rp * n_acc) as u64;
-            stats.stored_intermediate_elems += interm;
-            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
-        }
+        // Merges: Z3 (M, r_d) and Z1 (r_d, N), costed by the shared
+        // accounting helper.
+        self.record_merge_stats(&mut stats);
+        let z3 = self.merge_left()?;
+        let z1 = self.merge_right()?;
         // Apply: Z2 = Z1 X (r_d, K); Y = Z3 Z2 (M, K).  These are the only
-        // K-dependent steps (the last term of Eqs. 20-21).
+        // K-dependent steps (the last term of Eqs. 20-21).  Z2 is an
+        // intermediate; Y is the returned output.
         let z2 = z1.matmul(x)?;
-        stats.muls += (r_d * n * k_dim) as u64;
-        stats.steps += 1;
-        let interm = (r_d * k_dim) as u64;
-        stats.stored_intermediate_elems += interm;
-        stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(interm);
+        stats.record_step((r_d * n * k_dim) as u64, (r_d * k_dim) as u64, true);
         let y = z3.matmul(&z2)?;
-        stats.muls += (m * r_d * k_dim) as u64;
-        stats.steps += 1;
+        stats.record_step((m * r_d * k_dim) as u64, (m * k_dim) as u64, false);
+        self.debug_check_stats(&stats, k_dim, true);
         Ok((y, stats))
     }
 }

@@ -91,6 +91,98 @@ impl TTMEmbedding {
         acc.reshape(&[self.hidden()])
     }
 
+    /// Embedding lookup that also returns the chain states
+    /// `A_0..A_{d-1}` (`A_{d-1}` reshapes to the returned row) — the
+    /// activations the backward pass reuses.
+    pub fn lookup_cached(&self, token: usize) -> Result<(Tensor, Vec<Tensor>)> {
+        if token >= self.vocab() {
+            return Err(anyhow!("token {token} out of vocab {}", self.vocab()));
+        }
+        let digits = self.token_digits(token);
+        let mut states = vec![self.slice(0, digits[0])?];
+        let mut m_acc = self.hid_modes[0];
+        for k in 1..self.cores.len() {
+            let sl = self.slice(k, digits[k])?;
+            let rk = self.ranks[k + 1];
+            let mk = self.hid_modes[k];
+            let next = {
+                let prev = states.last().expect("nonempty");
+                prev.matmul(&sl)?.reshape(&[m_acc * mk, rk])?
+            };
+            states.push(next);
+            m_acc *= mk;
+        }
+        let row = states.last().expect("nonempty").reshape(&[self.hidden()])?;
+        Ok((row, states))
+    }
+
+    /// Backward of [`TTMEmbedding::lookup_cached`]: scatter-add the core
+    /// gradients for `d_row` (d hidden,) into `grads` (one tensor per
+    /// core, same shapes as [`TTMEmbedding::cores`]).
+    pub fn lookup_vjp(
+        &self,
+        token: usize,
+        states: &[Tensor],
+        d_row: &[f32],
+        grads: &mut [Tensor],
+    ) -> Result<()> {
+        let d = self.cores.len();
+        if grads.len() != d || states.len() != d || d_row.len() != self.hidden() {
+            return Err(anyhow!("lookup_vjp: inconsistent cache/grads for token {token}"));
+        }
+        let digits = self.token_digits(token);
+        // d_state starts as the row gradient viewed as A_{d-1}'s shape.
+        let mut d_state = Tensor::from_vec(d_row.to_vec(), &states[d - 1].shape)?;
+        for k in (1..d).rev() {
+            let prev = &states[k - 1]; // (m_prev, r_k)
+            let m_prev = prev.shape[0];
+            let mk = self.hid_modes[k];
+            let rk = self.ranks[k + 1];
+            let dflat = d_state.reshape(&[m_prev, mk * rk])?;
+            // Gradient of the sliced core: A_{k-1}^T dA_k.
+            let d_slice = prev.t()?.matmul(&dflat)?; // (r_k, mk * rk)
+            self.scatter_slice_grad(k, digits[k], &d_slice, &mut grads[k])?;
+            // Pull the gradient through to the previous chain state.
+            let sl = self.slice(k, digits[k])?; // (r_k, mk * rk)
+            d_state = dflat.matmul(&sl.t()?)?; // (m_prev, r_k)
+        }
+        self.scatter_slice_grad(0, digits[0], &d_state, &mut grads[0])?;
+        Ok(())
+    }
+
+    /// Add a sliced-core gradient back into the full core gradient at
+    /// vocab digit `j` (inverse indexing of [`TTMEmbedding::slice`]).
+    fn scatter_slice_grad(
+        &self,
+        k: usize,
+        j: usize,
+        d_slice: &Tensor,
+        grad: &mut Tensor,
+    ) -> Result<()> {
+        let core = &self.cores[k];
+        let (rp, mk, nk, rk) = (core.shape[0], core.shape[1], core.shape[2], core.shape[3]);
+        if grad.shape != core.shape {
+            return Err(anyhow!("grad shape {:?} != core {:?}", grad.shape, core.shape));
+        }
+        if k == 0 {
+            for a in 0..mk {
+                for b in 0..rk {
+                    grad.data[(a * nk + j) * rk + b] += d_slice.data[a * rk + b];
+                }
+            }
+        } else {
+            for r in 0..rp {
+                for a in 0..mk {
+                    for b in 0..rk {
+                        grad.data[((r * mk + a) * nk + j) * rk + b] +=
+                            d_slice.data[r * mk * rk + a * rk + b];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Core k sliced at vocab digit j: (r_{k-1}, m_k * r_k) matrix
     /// ordered so the chain matmul in `lookup` is contiguous.
     fn slice(&self, k: usize, j: usize) -> Result<Tensor> {
@@ -161,6 +253,51 @@ mod tests {
             let row = e.lookup(t).unwrap();
             for h in 0..48 {
                 assert!((row.data[h] - dense.at2(t, h)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_cached_matches_lookup() {
+        let mut rng = SplitMix64::new(23);
+        let e = TTMEmbedding::randn(&[4, 4, 3], &[3, 3, 3], 4, 0.5, &mut rng);
+        for t in [0usize, 7, 19, 26] {
+            let (row, states) = e.lookup_cached(t).unwrap();
+            assert_eq!(row, e.lookup(t).unwrap());
+            assert_eq!(states.len(), e.cores.len());
+        }
+    }
+
+    #[test]
+    fn lookup_vjp_matches_finite_difference() {
+        let mut rng = SplitMix64::new(24);
+        let mut e = TTMEmbedding::randn(&[3, 2], &[2, 3], 3, 0.5, &mut rng);
+        let token = 4usize;
+        let h = e.hidden();
+        let d_row: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+        let (_, states) = e.lookup_cached(token).unwrap();
+        let mut grads: Vec<Tensor> =
+            e.cores.iter().map(|c| Tensor::zeros(&c.shape)).collect();
+        e.lookup_vjp(token, &states, &d_row, &mut grads).unwrap();
+        // loss(w) = <d_row, lookup(token)> — central differences on every
+        // core entry must match the scattered analytic gradient.
+        let eps = 1e-2f32;
+        for k in 0..e.cores.len() {
+            for idx in 0..e.cores[k].numel() {
+                let orig = e.cores[k].data[idx];
+                e.cores[k].data[idx] = orig + eps;
+                let up: f32 =
+                    e.lookup(token).unwrap().data.iter().zip(&d_row).map(|(a, b)| a * b).sum();
+                e.cores[k].data[idx] = orig - eps;
+                let dn: f32 =
+                    e.lookup(token).unwrap().data.iter().zip(&d_row).map(|(a, b)| a * b).sum();
+                e.cores[k].data[idx] = orig;
+                let fd = (up - dn) / (2.0 * eps);
+                let an = grads[k].data[idx];
+                assert!(
+                    (fd - an).abs() < 1e-3 * (1.0 + an.abs()),
+                    "core {k}[{idx}]: fd {fd} vs analytic {an}"
+                );
             }
         }
     }

@@ -1,0 +1,341 @@
+//! Backward passes (VJPs) of the transformer's nonlinear blocks —
+//! LayerNorm, GELU, masked softmax, multi-head attention, tanh and the
+//! joint cross-entropy objective.  Each mirrors the forward in
+//! [`crate::tensor::ops`] and consumes only what a memory-lean BP stage
+//! would keep (normalized activations, attention probabilities).
+
+use crate::tensor::{ops, Tensor};
+use anyhow::{anyhow, Result};
+
+/// Cache of one LayerNorm application.
+pub struct LayerNormCache {
+    /// Normalized activations (x - mu) * inv, per row.
+    xhat: Tensor,
+    /// 1 / sqrt(var + eps), per row.
+    inv: Vec<f32>,
+}
+
+/// LayerNorm forward that also returns the backward cache.  Produces
+/// bitwise the same output as [`ops::layer_norm`].
+pub fn layer_norm_fwd(x: &Tensor, g: &[f32], b: &[f32], eps: f32) -> (Tensor, LayerNormCache) {
+    let (rows, cols) = (x.shape[0], x.shape[1]);
+    debug_assert_eq!(g.len(), cols);
+    let mut out = Tensor::zeros(&[rows, cols]);
+    let mut xhat = Tensor::zeros(&[rows, cols]);
+    let mut inv_all = vec![0.0f32; rows];
+    for i in 0..rows {
+        let row = &x.data[i * cols..(i + 1) * cols];
+        let mu = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        inv_all[i] = inv;
+        for j in 0..cols {
+            let xh = (row[j] - mu) * inv;
+            xhat.data[i * cols + j] = xh;
+            out.data[i * cols + j] = xh * g[j] + b[j];
+        }
+    }
+    (out, LayerNormCache { xhat, inv: inv_all })
+}
+
+/// LayerNorm backward: returns `(dx, dg, db)`.
+pub fn layer_norm_vjp(
+    cache: &LayerNormCache,
+    g: &[f32],
+    dy: &Tensor,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (rows, cols) = (dy.shape[0], dy.shape[1]);
+    let mut dx = Tensor::zeros(&[rows, cols]);
+    let mut dg = vec![0.0f32; cols];
+    let mut db = vec![0.0f32; cols];
+    for i in 0..rows {
+        let dyr = &dy.data[i * cols..(i + 1) * cols];
+        let xhr = &cache.xhat.data[i * cols..(i + 1) * cols];
+        let mut m1 = 0.0f32; // mean of dy * g
+        let mut m2 = 0.0f32; // mean of dy * g * xhat
+        for j in 0..cols {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+            dg[j] += dyr[j] * xhr[j];
+            db[j] += dyr[j];
+        }
+        m1 /= cols as f32;
+        m2 /= cols as f32;
+        let inv = cache.inv[i];
+        for j in 0..cols {
+            let dxh = dyr[j] * g[j];
+            dx.data[i * cols + j] = inv * (dxh - m1 - xhr[j] * m2);
+        }
+    }
+    (dx, dg, db)
+}
+
+/// GELU backward (tanh approximation, matching [`ops::gelu`]).
+pub fn gelu_vjp(x: &Tensor, dy: &Tensor) -> Tensor {
+    debug_assert_eq!(x.shape, dy.shape);
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    let mut out = dy.clone();
+    for (o, &xv) in out.data.iter_mut().zip(&x.data) {
+        let u = c * (xv + 0.044715 * xv * xv * xv);
+        let t = u.tanh();
+        let du = c * (1.0 + 3.0 * 0.044715 * xv * xv);
+        *o *= 0.5 * (1.0 + t) + 0.5 * xv * (1.0 - t * t) * du;
+    }
+    out
+}
+
+/// Tanh backward from the forward *output* `y`: `dx = dy * (1 - y^2)`.
+pub fn tanh_vjp(y: &Tensor, dy: &Tensor) -> Tensor {
+    debug_assert_eq!(y.shape, dy.shape);
+    let mut out = dy.clone();
+    for (o, &yv) in out.data.iter_mut().zip(&y.data) {
+        *o *= 1.0 - yv * yv;
+    }
+    out
+}
+
+/// Row-wise softmax backward from probabilities `p` (masked entries have
+/// `p = 0` and therefore receive zero gradient): per row,
+/// `ds_j = p_j * (dp_j - sum_k p_k dp_k)`.
+pub fn softmax_rows_vjp(p: &Tensor, dp: &Tensor) -> Tensor {
+    let last = *p.shape.last().expect("softmax needs an axis");
+    let mut out = Tensor::zeros(&p.shape);
+    for ((orow, prow), dprow) in out
+        .data
+        .chunks_mut(last)
+        .zip(p.data.chunks(last))
+        .zip(dp.data.chunks(last))
+    {
+        let dot: f32 = prow.iter().zip(dprow).map(|(&a, &b)| a * b).sum();
+        for ((o, &pv), &dpv) in orow.iter_mut().zip(prow).zip(dprow) {
+            *o = pv * (dpv - dot);
+        }
+    }
+    out
+}
+
+/// Backward of [`ops::multi_head_attention`]: given the packed
+/// probabilities `(heads, S, S)` and `d_ctx (S, H)`, return
+/// `(dq, dk, dv)` on `(S, H)`.
+pub fn multi_head_attention_vjp(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &Tensor,
+    d_ctx: &Tensor,
+    n_heads: usize,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let (s, h) = (q.shape[0], q.shape[1]);
+    if probs.ndim() != 3 || probs.shape != [n_heads, s, s] {
+        return Err(anyhow!("probs must be ({n_heads}, {s}, {s}), got {:?}", probs.shape));
+    }
+    let dh = h / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let qh = ops::pack_heads(q, n_heads)?;
+    let kh = ops::pack_heads(k, n_heads)?;
+    let vh = ops::pack_heads(v, n_heads)?;
+    let dctx_h = ops::pack_heads(d_ctx, n_heads)?; // (heads, S, dh)
+
+    // ctx = P V  =>  dV = P^T dctx, dP = dctx V^T.
+    let dv_h = probs.bmm_tn(&dctx_h)?; // (heads, S, dh)
+    let dp = dctx_h.bmm_nt(&vh)?; // (heads, S, S)
+    // P = softmax(scale * Q K^T) row-wise.
+    let mut ds = softmax_rows_vjp(probs, &dp);
+    for x in ds.data.iter_mut() {
+        *x *= scale;
+    }
+    // scores = Q K^T  =>  dQ = dS K, dK = dS^T Q.
+    let dq_h = ds.bmm(&kh)?; // (heads, S, dh)
+    let dk_h = ds.bmm_tn(&qh)?; // (heads, S, dh)
+    Ok((
+        ops::unpack_heads(&dq_h)?,
+        ops::unpack_heads(&dk_h)?,
+        ops::unpack_heads(&dv_h)?,
+    ))
+}
+
+/// Cross-entropy over one logits row: returns `(loss, dlogits)` with
+/// `dlogits = softmax(logits) - onehot(label)`.
+pub fn cross_entropy_logits(logits: &[f32], label: usize) -> Result<(f32, Vec<f32>)> {
+    if label >= logits.len() {
+        return Err(anyhow!("label {label} out of range {}", logits.len()));
+    }
+    let maxv = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let sum: f32 = logits.iter().map(|&v| (v - maxv).exp()).sum();
+    let lse = maxv + sum.ln();
+    let loss = lse - logits[label];
+    let mut dl: Vec<f32> = logits.iter().map(|&v| (v - lse).exp()).collect();
+    dl[label] -= 1.0;
+    Ok((loss, dl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    /// Central-difference check: `f(w)` evaluates the scalar loss with
+    /// the probed parameter set to `w`; the derivative at `center` must
+    /// match `analytic`.
+    fn fd_check<F: FnMut(f32) -> f32>(mut f: F, center: f32, analytic: f32, tag: &str) {
+        let eps = 1e-2f32;
+        let up = f(center + eps);
+        let dn = f(center - eps);
+        let fd = (up - dn) / (2.0 * eps);
+        assert!(
+            (fd - analytic).abs() < 1e-3 * (1.0 + analytic.abs()),
+            "{tag}: fd {fd} vs analytic {analytic}"
+        );
+    }
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn layer_norm_fwd_matches_ops() {
+        let mut rng = SplitMix64::new(71);
+        let x = Tensor::randn(&[4, 9], 1.0, &mut rng);
+        let g: Vec<f32> = (0..9).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..9).map(|_| 0.1 * rng.normal() as f32).collect();
+        let (y, _) = layer_norm_fwd(&x, &g, &b, 1e-5);
+        assert_eq!(y, ops::layer_norm(&x, &g, &b, 1e-5));
+    }
+
+    #[test]
+    fn layer_norm_vjp_finite_difference() {
+        let mut rng = SplitMix64::new(72);
+        let mut x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let mut g: Vec<f32> = (0..6).map(|_| 1.0 + 0.2 * rng.normal() as f32).collect();
+        let mut b = vec![0.0f32; 6];
+        let dy = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let (_, cache) = layer_norm_fwd(&x, &g, &b, 1e-5);
+        let (dx, dg, db) = layer_norm_vjp(&cache, &g, &dy);
+        for idx in [0usize, 7, 17] {
+            let orig = x.data[idx];
+            fd_check(
+                |w| {
+                    x.data[idx] = w;
+                    dot(&ops::layer_norm(&x, &g, &b, 1e-5).data, &dy.data)
+                },
+                orig,
+                dx.data[idx],
+                "dx",
+            );
+            x.data[idx] = orig;
+        }
+        for idx in [0usize, 3, 5] {
+            let orig = g[idx];
+            fd_check(
+                |w| {
+                    g[idx] = w;
+                    dot(&ops::layer_norm(&x, &g, &b, 1e-5).data, &dy.data)
+                },
+                orig,
+                dg[idx],
+                "dg",
+            );
+            g[idx] = orig;
+        }
+        let orig = b[2];
+        fd_check(
+            |w| {
+                b[2] = w;
+                dot(&ops::layer_norm(&x, &g, &b, 1e-5).data, &dy.data)
+            },
+            orig,
+            db[2],
+            "db",
+        );
+    }
+
+    #[test]
+    fn gelu_vjp_finite_difference() {
+        let mut rng = SplitMix64::new(73);
+        let mut x = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let dy = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let dx = gelu_vjp(&x, &dy);
+        for idx in 0..10 {
+            let orig = x.data[idx];
+            fd_check(
+                |w| {
+                    x.data[idx] = w;
+                    dot(&ops::gelu(&x).data, &dy.data)
+                },
+                orig,
+                dx.data[idx],
+                "gelu",
+            );
+            x.data[idx] = orig;
+        }
+    }
+
+    #[test]
+    fn attention_vjp_finite_difference() {
+        let mut rng = SplitMix64::new(74);
+        let (s, h, heads) = (5usize, 8usize, 2usize);
+        let mut q = Tensor::randn(&[s, h], 0.7, &mut rng);
+        let mut k = Tensor::randn(&[s, h], 0.7, &mut rng);
+        let mut v = Tensor::randn(&[s, h], 0.7, &mut rng);
+        let mask = [1.0, 1.0, 1.0, 1.0, 0.0];
+        let d_ctx = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let (_, probs) = ops::multi_head_attention(&q, &k, &v, &mask, heads).unwrap();
+        let (dq, dk, dv) = multi_head_attention_vjp(&q, &k, &v, &probs, &d_ctx, heads).unwrap();
+        for idx in [0usize, 9, 21, 33] {
+            let orig = q.data[idx];
+            fd_check(
+                |w| {
+                    q.data[idx] = w;
+                    let (ctx, _) = ops::multi_head_attention(&q, &k, &v, &mask, heads).unwrap();
+                    dot(&ctx.data, &d_ctx.data)
+                },
+                orig,
+                dq.data[idx],
+                "dq",
+            );
+            q.data[idx] = orig;
+        }
+        for idx in [2usize, 14, 30] {
+            let orig = k.data[idx];
+            fd_check(
+                |w| {
+                    k.data[idx] = w;
+                    let (ctx, _) = ops::multi_head_attention(&q, &k, &v, &mask, heads).unwrap();
+                    dot(&ctx.data, &d_ctx.data)
+                },
+                orig,
+                dk.data[idx],
+                "dk",
+            );
+            k.data[idx] = orig;
+        }
+        for idx in [1usize, 18, 35] {
+            let orig = v.data[idx];
+            fd_check(
+                |w| {
+                    v.data[idx] = w;
+                    let (ctx, _) = ops::multi_head_attention(&q, &k, &v, &mask, heads).unwrap();
+                    dot(&ctx.data, &d_ctx.data)
+                },
+                orig,
+                dv.data[idx],
+                "dv",
+            );
+            v.data[idx] = orig;
+        }
+    }
+
+    #[test]
+    fn cross_entropy_gradient_and_value() {
+        let logits = [1.0f32, 2.0, 0.5];
+        let (loss, dl) = cross_entropy_logits(&logits, 1).unwrap();
+        // loss = lse - logits[1]; probabilities sum to 1.
+        assert!(loss > 0.0);
+        let psum: f32 = dl.iter().sum::<f32>() + 1.0; // undo the -1 at label
+        assert!((psum - 1.0).abs() < 1e-5);
+        // dl[label] = p_label - 1 < 0; others positive.
+        assert!(dl[1] < 0.0 && dl[0] > 0.0 && dl[2] > 0.0);
+        assert!(cross_entropy_logits(&logits, 3).is_err());
+    }
+}

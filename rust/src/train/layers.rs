@@ -1,0 +1,313 @@
+//! TT-format linear layer with a hand-derived backward pass through the
+//! bidirectional (BTT) contraction — the paper's BP stage for one layer.
+//!
+//! Forward (row-major, K = sequence length):
+//!
+//! ```text
+//! Z3 = fold(G_1 .. G_d)          (M, r_d)   left merge, K-independent
+//! Z1 = fold(G_2d .. G_{d+1})     (r_d, N)   right merge, K-independent
+//! Z2 = X Z1^T                    (K, r_d)
+//! Y  = Z2 Z3^T + b               (K, M)
+//! ```
+//!
+//! Backward reuses the cached chain states (the paper's "stored
+//! intermediates", Eq. 21) and costs exactly `2x` the forward
+//! multiplies — [`crate::costmodel::LinearShape::btt_bwd_muls`] is the
+//! analytic form, asserted against the executed
+//! [`ContractionStats`] in the tests.
+
+use crate::tensor::{ops, ContractionStats, Tensor, TTMatrix};
+use anyhow::{anyhow, Result};
+
+/// A trainable TT-format linear layer (cores + dense bias).
+#[derive(Debug, Clone)]
+pub struct TTLinear {
+    pub tt: TTMatrix,
+    pub bias: Vec<f32>,
+}
+
+/// Forward activations cached for the BP stage.
+pub struct TTLinearCache {
+    /// Layer input (K, N).
+    pub x: Tensor,
+    /// Left-merge chain states; last is Z3 (M, r_d).
+    left_chain: Vec<Tensor>,
+    /// Right-merge chain states; last is Z1 (r_d, N).
+    right_chain: Vec<Tensor>,
+    /// Z2 = X Z1^T (K, r_d).
+    z2: Tensor,
+}
+
+impl TTLinearCache {
+    /// Elements this cache stores beyond weights and the layer input —
+    /// must equal Eq. 21 (`LinearShape::btt_training_cache_elems`).
+    /// The first chain state on each side is a reshaped core (weight
+    /// memory, not an activation) and is excluded.
+    pub fn stored_elems(&self) -> u64 {
+        let chain: usize = self
+            .left_chain
+            .iter()
+            .skip(1)
+            .chain(self.right_chain.iter().skip(1))
+            .map(Tensor::numel)
+            .sum();
+        (chain + self.z2.numel()) as u64
+    }
+}
+
+/// Parameter gradients of one layer.
+pub struct TTLinearGrads {
+    /// One gradient tensor per TT core (same shapes as the cores).
+    pub cores: Vec<Tensor>,
+    pub bias: Vec<f32>,
+}
+
+impl TTLinear {
+    pub fn new(tt: TTMatrix, bias: Vec<f32>) -> Result<TTLinear> {
+        if bias.len() != tt.m() {
+            return Err(anyhow!("bias len {} != M {}", bias.len(), tt.m()));
+        }
+        Ok(TTLinear { tt, bias })
+    }
+
+    /// Random layer with zero bias (TT cores scaled for `target_std` of
+    /// the reconstructed dense matrix).
+    pub fn randn(
+        m_modes: &[usize],
+        n_modes: &[usize],
+        rank: usize,
+        target_std: f32,
+        rng: &mut crate::util::rng::SplitMix64,
+    ) -> TTLinear {
+        let tt = TTMatrix::randn(m_modes, n_modes, rank, target_std, rng);
+        let bias = vec![0.0; tt.m()];
+        TTLinear { tt, bias }
+    }
+
+    /// Forward pass `Y = X W^T + b` on row-major `x (K, N)`, caching the
+    /// BTT intermediates for backward.  Instrumented identically to
+    /// [`TTMatrix::matmul_btt`] (the executed counts equal Eqs. 20/21).
+    pub fn forward(
+        &self,
+        x: &Tensor,
+        stats: &mut ContractionStats,
+    ) -> Result<(Tensor, TTLinearCache)> {
+        let d = self.tt.d();
+        let (m, n) = (self.tt.m(), self.tt.n());
+        if x.ndim() != 2 || x.shape[1] != n {
+            return Err(anyhow!("x must be (K, {n}), got {:?}", x.shape));
+        }
+        let k_dim = x.shape[0];
+        let r_d = self.tt.ranks[d];
+
+        let left_chain = self.tt.merge_left_chain()?;
+        let right_chain = self.tt.merge_right_chain()?;
+        // Merge costs via the shared accounting helper (same source of
+        // truth as matmul_btt).
+        self.tt.record_merge_stats(stats);
+
+        let z3 = left_chain.last().expect("d >= 1");
+        let z1 = right_chain.last().expect("d >= 1");
+        let z2 = x.matmul(&z1.t()?)?; // (K, r_d)
+        stats.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, true);
+        let y = z2.matmul(&z3.t()?)?; // (K, M)
+        stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
+        let y = ops::add_row(&y, &self.bias);
+        Ok((
+            y,
+            TTLinearCache {
+                x: x.clone(),
+                left_chain,
+                right_chain,
+                z2,
+            },
+        ))
+    }
+
+    /// Backward pass: given `dY (K, M)` and the forward cache, return
+    /// `dX (K, N)` and the parameter gradients.  Executed multiplies are
+    /// recorded into `stats` and equal `btt_bwd_muls` (2x Eq. 20).
+    pub fn backward(
+        &self,
+        dy: &Tensor,
+        cache: &TTLinearCache,
+        stats: &mut ContractionStats,
+    ) -> Result<(Tensor, TTLinearGrads)> {
+        let d = self.tt.d();
+        let d2 = 2 * d;
+        let (m, n) = (self.tt.m(), self.tt.n());
+        let r_d = self.tt.ranks[d];
+        if dy.ndim() != 2 || dy.shape[1] != m || dy.shape[0] != cache.x.shape[0] {
+            return Err(anyhow!("dy must be (K, {m}), got {:?}", dy.shape));
+        }
+        let k_dim = dy.shape[0];
+
+        // Bias gradient: column sums of dY (additions only).
+        let mut dbias = vec![0.0f32; m];
+        for row in dy.data.chunks(m) {
+            for (b, &v) in dbias.iter_mut().zip(row) {
+                *b += v;
+            }
+        }
+
+        let z3 = cache.left_chain.last().expect("d >= 1");
+        let z1 = cache.right_chain.last().expect("d >= 1");
+        // The four K-wide products (2 K r_d (M + N) multiplies).
+        let dz3 = dy.t()?.matmul(&cache.z2)?; // (M, r_d)
+        stats.record_step((m * k_dim * r_d) as u64, (m * r_d) as u64, false);
+        let dz2 = dy.matmul(z3)?; // (K, r_d)
+        stats.record_step((k_dim * m * r_d) as u64, (k_dim * r_d) as u64, false);
+        let dz1 = dz2.t()?.matmul(&cache.x)?; // (r_d, N)
+        stats.record_step((r_d * k_dim * n) as u64, (r_d * n) as u64, false);
+        let dx = dz2.matmul(z1)?; // (K, N)
+        stats.record_step((k_dim * r_d * n) as u64, (k_dim * n) as u64, false);
+
+        let mut core_grads: Vec<Tensor> =
+            self.tt.cores.iter().map(|c| Tensor::zeros(&c.shape)).collect();
+
+        // Unroll the left merge: dL_k -> (dG_k, dL_{k-1}).
+        let mut d_state = dz3;
+        for k in (1..d).rev() {
+            let g = &self.tt.cores[k];
+            let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            let prev = &cache.left_chain[k - 1]; // (m_prev, rp)
+            let m_prev = prev.shape[0];
+            let dflat = d_state.reshape(&[m_prev, mk * rk])?;
+            let dg = prev.t()?.matmul(&dflat)?; // (rp, mk*rk)
+            stats.record_step((rp * m_prev * mk * rk) as u64, (rp * mk * rk) as u64, false);
+            core_grads[k] = dg.reshape(&[rp, mk, rk])?;
+            d_state = dflat.matmul(&g.reshape(&[rp, mk * rk])?.t()?)?; // (m_prev, rp)
+            stats.record_step((m_prev * mk * rk * rp) as u64, (m_prev * rp) as u64, false);
+        }
+        core_grads[0] = d_state.reshape(&self.tt.cores[0].shape)?;
+
+        // Unroll the right merge: dR_j -> (dG_{2d-1-j}, dR_{j-1}).
+        let mut d_state = dz1;
+        for j in (1..d).rev() {
+            let c = d2 - 1 - j;
+            let g = &self.tt.cores[c];
+            let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
+            let prev = &cache.right_chain[j - 1]; // (rk, n_prev)
+            let n_prev = prev.shape[1];
+            let dflat = d_state.reshape(&[rp * nk, n_prev])?;
+            let dg = dflat.matmul(&prev.t()?)?; // (rp*nk, rk)
+            stats.record_step((rp * nk * n_prev * rk) as u64, (rp * nk * rk) as u64, false);
+            core_grads[c] = dg.reshape(&[rp, nk, rk])?;
+            d_state = g.reshape(&[rp * nk, rk])?.t()?.matmul(&dflat)?; // (rk, n_prev)
+            stats.record_step((rk * rp * nk * n_prev) as u64, (rk * n_prev) as u64, false);
+        }
+        core_grads[d2 - 1] = d_state.reshape(&self.tt.cores[d2 - 1].shape)?;
+
+        Ok((dx, TTLinearGrads { cores: core_grads, bias: dbias }))
+    }
+
+    /// Fused SGD update (the paper's PU stage): `w -= lr * dw` applied
+    /// in place, core by core, as gradients become available.
+    pub fn sgd_update(&mut self, grads: &TTLinearGrads, lr: f32) {
+        for (core, g) in self.tt.cores.iter_mut().zip(&grads.cores) {
+            for (w, &dw) in core.data.iter_mut().zip(&g.data) {
+                *w -= lr * dw;
+            }
+        }
+        for (b, &db) in self.bias.iter_mut().zip(&grads.bias) {
+            *b -= lr * db;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::LinearShape;
+    use crate::util::rng::SplitMix64;
+
+    fn layer(rng: &mut SplitMix64) -> TTLinear {
+        TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng)
+    }
+
+    #[test]
+    fn forward_matches_btt_contraction() {
+        let mut rng = SplitMix64::new(51);
+        let l = layer(&mut rng);
+        let x = Tensor::randn(&[5, 12], 1.0, &mut rng); // (K, N)
+        let mut stats = ContractionStats::default();
+        let (y, _) = l.forward(&x, &mut stats).unwrap();
+        // Column-major reference through the instrumented engine.
+        let (y_cols, ref_stats) = l.tt.matmul_btt(&x.t().unwrap()).unwrap();
+        let y_ref = ops::add_row(&y_cols.t().unwrap(), &l.bias);
+        assert!(y.max_abs_diff(&y_ref) < 1e-4);
+        assert_eq!(stats.muls, ref_stats.muls);
+        assert_eq!(stats.stored_intermediate_elems, ref_stats.stored_intermediate_elems);
+    }
+
+    #[test]
+    fn backward_stats_match_cost_model() {
+        let mut rng = SplitMix64::new(52);
+        let l = layer(&mut rng);
+        let k_dim = 7usize;
+        let x = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
+        let shape = LinearShape {
+            m_modes: l.tt.m_modes.clone(),
+            n_modes: l.tt.n_modes.clone(),
+            ranks: l.tt.ranks.clone(),
+        };
+        let mut fwd = ContractionStats::default();
+        let (y, cache) = l.forward(&x, &mut fwd).unwrap();
+        assert_eq!(fwd.muls, shape.btt_muls(k_dim as u64), "Eq.20");
+        assert_eq!(
+            fwd.stored_intermediate_elems,
+            shape.btt_memory(k_dim as u64),
+            "Eq.21"
+        );
+        assert_eq!(cache.stored_elems(), shape.btt_training_cache_elems(k_dim as u64));
+        let dy = Tensor::randn(&[k_dim, y.shape[1]], 1.0, &mut rng);
+        let mut bwd = ContractionStats::default();
+        l.backward(&dy, &cache, &mut bwd).unwrap();
+        assert_eq!(bwd.muls, shape.btt_bwd_muls(k_dim as u64), "BP = 2x Eq.20");
+    }
+
+    #[test]
+    fn dx_matches_dense_gradient() {
+        // dX = dY W_dense: the TT backward must agree with the dense
+        // chain rule.
+        let mut rng = SplitMix64::new(53);
+        let l = layer(&mut rng);
+        let x = Tensor::randn(&[6, 12], 1.0, &mut rng);
+        let mut stats = ContractionStats::default();
+        let (y, cache) = l.forward(&x, &mut stats).unwrap();
+        let dy = Tensor::randn(&[6, y.shape[1]], 1.0, &mut rng);
+        let (dx, grads) = l.backward(&dy, &cache, &mut stats).unwrap();
+        let w = l.tt.to_dense().unwrap(); // (M, N)
+        let dx_dense = dy.matmul(&w).unwrap();
+        assert!(dx.max_abs_diff(&dx_dense) < 1e-4);
+        // Bias gradient: column sums of dY.
+        for j in 0..y.shape[1] {
+            let want: f32 = (0..6).map(|i| dy.at2(i, j)).sum();
+            assert!((grads.bias[j] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sgd_update_reduces_reconstruction_loss() {
+        // A few SGD steps on L = ||Y - Y*||^2 / 2 must reduce L.
+        let mut rng = SplitMix64::new(54);
+        let mut l = layer(&mut rng);
+        let x = Tensor::randn(&[8, 12], 1.0, &mut rng);
+        let target = Tensor::randn(&[8, 12], 0.5, &mut rng);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..60 {
+            let mut stats = ContractionStats::default();
+            let (y, cache) = l.forward(&x, &mut stats).unwrap();
+            let mut dy = y.clone();
+            for (d, &t) in dy.data.iter_mut().zip(&target.data) {
+                *d -= t;
+            }
+            last = 0.5 * dy.norm().powi(2);
+            first.get_or_insert(last);
+            let (_, grads) = l.backward(&dy, &cache, &mut stats).unwrap();
+            l.sgd_update(&grads, 0.01);
+        }
+        assert!(last < 0.5 * first.unwrap(), "loss {last} vs {first:?}");
+    }
+}

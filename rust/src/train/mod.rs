@@ -1,0 +1,38 @@
+//! Rust-native training subsystem: the paper's FP -> BP -> PU loop with
+//! **hand-derived backward passes** over the TT/TTM tensor substrate.
+//!
+//! The PJRT path ([`crate::runtime`], `pjrt` feature) executes a fused
+//! HLO train step lowered by JAX; this module is its self-contained
+//! twin, closing the paper's on-device-training story without a
+//! Python/XLA toolchain anywhere in the loop:
+//!
+//! * [`layers`] — the BTT linear layer: forward caches the merged
+//!   Z1/Z3 chain states (the paper's stored intermediates, Eq. 21) and
+//!   backward re-walks them, costing exactly `2x` Eq. 20 multiplies
+//!   ([`crate::costmodel::LinearShape::btt_bwd_muls`]); everything is
+//!   instrumented with the same [`crate::tensor::ContractionStats`] the
+//!   forward engines use, so the BP stage validates against the
+//!   analytic cost model, not just against finite differences.
+//! * [`blocks`] — VJPs of LayerNorm, GELU, masked softmax, multi-head
+//!   attention, tanh and the joint intent+slot cross-entropy.
+//! * [`model`] — [`NativeTrainModel`]: the full tensorized transformer
+//!   with cached forward, backward, and a fused in-place SGD update
+//!   (the PU stage applies each gradient the moment it is produced).
+//! * [`native`] — [`NativeTrainer`]: the
+//!   [`crate::coordinator::TrainBackend`] implementation, including
+//!   name-verified `.npy` checkpoints interchangeable with the PJRT
+//!   engine's.
+//!
+//! Gradient correctness is pinned two ways: finite-difference checks
+//! (unit tests here and `rust/tests/native_training.rs`) and — when HLO
+//! artifacts are present — a loss-trajectory parity test against the
+//! JAX-autodiff PJRT path.
+
+pub mod blocks;
+pub mod layers;
+pub mod model;
+pub mod native;
+
+pub use layers::{TTLinear, TTLinearGrads};
+pub use model::NativeTrainModel;
+pub use native::NativeTrainer;

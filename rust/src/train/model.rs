@@ -1,0 +1,569 @@
+//! The trainable tensorized transformer: forward with activation
+//! caching, hand-derived backward, and a fused SGD update — the paper's
+//! FP -> BP -> PU loop executed natively on the rust tensor substrate.
+//!
+//! The parameter naming scheme is identical to the AOT manifest
+//! (`python/compile/model.py` / [`crate::inference::NativeModel`]), so a
+//! trained native model exports straight into the inference engine and
+//! native checkpoints interchange with PJRT ones.
+
+use crate::config::ModelConfig;
+use crate::inference::ParamMap;
+use crate::tensor::{ops, ContractionStats, Tensor, TTMEmbedding, TTMatrix};
+use crate::train::blocks::{self, LayerNormCache};
+use crate::train::layers::{TTLinear, TTLinearCache};
+use crate::util::rng::SplitMix64;
+use anyhow::{anyhow, Result};
+
+/// One trainable encoder block (paper Eq. 1).
+pub struct TrainEncoderLayer {
+    pub wq: TTLinear,
+    pub wk: TTLinear,
+    pub wv: TTLinear,
+    pub wo: TTLinear,
+    pub w1: TTLinear,
+    pub w2: TTLinear,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+/// The full trainable model (batch 1, the paper's on-device setting).
+pub struct NativeTrainModel {
+    pub cfg: ModelConfig,
+    pub embedding: TTMEmbedding,
+    pub pos: Tensor,
+    pub layers: Vec<TrainEncoderLayer>,
+    pub pool: TTLinear,
+    pub intent_w: Tensor,
+    pub intent_b: Vec<f32>,
+    pub slot_w: Tensor,
+    pub slot_b: Vec<f32>,
+}
+
+/// Per-block forward activations kept for the BP stage.
+struct LayerFwd {
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    probs: Tensor,
+    wq_c: TTLinearCache,
+    wk_c: TTLinearCache,
+    wv_c: TTLinearCache,
+    wo_c: TTLinearCache,
+    ln1_c: LayerNormCache,
+    /// Post-LN1 activations (input of the FFN and of residual 2).
+    x1: Tensor,
+    /// FFN hidden pre-GELU.
+    h1: Tensor,
+    w1_c: TTLinearCache,
+    w2_c: TTLinearCache,
+    ln2_c: LayerNormCache,
+}
+
+/// Whole-step forward cache.
+struct ForwardCaches {
+    mask: Vec<f32>,
+    emb_states: Vec<Vec<Tensor>>,
+    layer_fwd: Vec<LayerFwd>,
+    pool_c: TTLinearCache,
+    pooled: Tensor,
+    intent_logits: Vec<f32>,
+    slot_logits: Tensor,
+}
+
+fn sgd_vec(w: &mut [f32], g: &[f32], lr: f32) {
+    for (wi, &gi) in w.iter_mut().zip(g) {
+        *wi -= lr * gi;
+    }
+}
+
+fn validate_cfg(cfg: &ModelConfig) -> Result<()> {
+    let tt_m: usize = cfg.tt_m.iter().product();
+    let tt_n: usize = cfg.tt_n.iter().product();
+    let ttm_h: usize = cfg.ttm_hid_modes.iter().product();
+    let ttm_v: usize = cfg.ttm_vocab_modes.iter().product();
+    if tt_m != cfg.d_hid || tt_n != cfg.d_hid || ttm_h != cfg.d_hid {
+        return Err(anyhow!(
+            "mode products ({tt_m}, {tt_n}, {ttm_h}) must equal d_hid {}",
+            cfg.d_hid
+        ));
+    }
+    if ttm_v < cfg.vocab {
+        return Err(anyhow!("vocab modes cover {ttm_v} < vocab {}", cfg.vocab));
+    }
+    if cfg.batch != 1 {
+        return Err(anyhow!("the native trainer is batch-1 (got batch {})", cfg.batch));
+    }
+    Ok(())
+}
+
+impl NativeTrainModel {
+    /// Seeded random initialization mirroring
+    /// `python/compile/model.py::init_params` (TTM/pos std 0.02, linear
+    /// target std sqrt(1/d_hid), LayerNorm (1, 0), head std
+    /// sqrt(1/d_hid)).
+    pub fn random_init(cfg: &ModelConfig, seed: u64) -> Result<NativeTrainModel> {
+        validate_cfg(cfg)?;
+        let mut rng = SplitMix64::new(seed);
+        let lin_std = (1.0 / cfg.d_hid as f32).sqrt();
+        let linear =
+            |rng: &mut SplitMix64| TTLinear::randn(&cfg.tt_m, &cfg.tt_n, cfg.tt_rank, lin_std, rng);
+        let embedding = TTMEmbedding::randn(
+            &cfg.ttm_hid_modes,
+            &cfg.ttm_vocab_modes,
+            cfg.ttm_rank,
+            0.02,
+            &mut rng,
+        );
+        let pos = Tensor::randn(&[cfg.seq_len, cfg.d_hid], 0.02, &mut rng);
+        let layers = (0..cfg.n_layers)
+            .map(|_| TrainEncoderLayer {
+                wq: linear(&mut rng),
+                wk: linear(&mut rng),
+                wv: linear(&mut rng),
+                wo: linear(&mut rng),
+                w1: linear(&mut rng),
+                w2: linear(&mut rng),
+                ln1_g: vec![1.0; cfg.d_hid],
+                ln1_b: vec![0.0; cfg.d_hid],
+                ln2_g: vec![1.0; cfg.d_hid],
+                ln2_b: vec![0.0; cfg.d_hid],
+            })
+            .collect();
+        let pool = linear(&mut rng);
+        let head_std = (1.0 / cfg.d_hid as f32).sqrt();
+        Ok(NativeTrainModel {
+            cfg: cfg.clone(),
+            embedding,
+            pos,
+            layers,
+            pool,
+            intent_w: Tensor::randn(&[cfg.n_intents, cfg.d_hid], head_std, &mut rng),
+            intent_b: vec![0.0; cfg.n_intents],
+            slot_w: Tensor::randn(&[cfg.n_slots, cfg.d_hid], head_std, &mut rng),
+            slot_b: vec![0.0; cfg.n_slots],
+        })
+    }
+
+    /// Assemble from a flat name -> array map (manifest naming scheme).
+    pub fn from_params(cfg: &ModelConfig, params: &ParamMap) -> Result<NativeTrainModel> {
+        validate_cfg(cfg)?;
+        let get = |name: &str| -> Result<(&Vec<usize>, &Vec<f32>)> {
+            params
+                .get(name)
+                .map(|(s, d)| (s, d))
+                .ok_or_else(|| anyhow!("missing parameter '{name}'"))
+        };
+        let tensor = |name: &str| -> Result<Tensor> {
+            let (shape, data) = get(name)?;
+            Tensor::from_vec(data.clone(), shape)
+        };
+        let vec1 = |name: &str| -> Result<Vec<f32>> { Ok(get(name)?.1.clone()) };
+
+        let d = cfg.ttm_vocab_modes.len();
+        let mut ttm_cores = Vec::with_capacity(d);
+        for k in 0..d {
+            ttm_cores.push(tensor(&format!("embed.ttm.{k}"))?);
+        }
+        let mut ranks = vec![cfg.ttm_rank; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        let embedding = TTMEmbedding {
+            cores: ttm_cores,
+            hid_modes: cfg.ttm_hid_modes.clone(),
+            vocab_modes: cfg.ttm_vocab_modes.clone(),
+            ranks,
+        };
+
+        let tt_linear = |prefix: &str| -> Result<TTLinear> {
+            let d2 = cfg.tt_m.len() + cfg.tt_n.len();
+            let mut cores = Vec::with_capacity(d2);
+            for k in 0..d2 {
+                cores.push(tensor(&format!("{prefix}.cores.{k}"))?);
+            }
+            let tt = TTMatrix {
+                cores,
+                m_modes: cfg.tt_m.clone(),
+                n_modes: cfg.tt_n.clone(),
+                ranks: cfg.tt_ranks(),
+            };
+            TTLinear::new(tt, vec1(&format!("{prefix}.bias"))?)
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |name: &str| format!("layers.{i}.{name}");
+            layers.push(TrainEncoderLayer {
+                wq: tt_linear(&p("wq"))?,
+                wk: tt_linear(&p("wk"))?,
+                wv: tt_linear(&p("wv"))?,
+                wo: tt_linear(&p("wo"))?,
+                w1: tt_linear(&p("w1"))?,
+                w2: tt_linear(&p("w2"))?,
+                ln1_g: vec1(&p("ln1.g"))?,
+                ln1_b: vec1(&p("ln1.b"))?,
+                ln2_g: vec1(&p("ln2.g"))?,
+                ln2_b: vec1(&p("ln2.b"))?,
+            });
+        }
+
+        Ok(NativeTrainModel {
+            cfg: cfg.clone(),
+            embedding,
+            pos: tensor("embed.pos")?,
+            layers,
+            pool: tt_linear("cls.pool")?,
+            intent_w: tensor("cls.intent_w")?,
+            intent_b: vec1("cls.intent_b")?,
+            slot_w: tensor("cls.slot_w")?,
+            slot_b: vec1("cls.slot_b")?,
+        })
+    }
+
+    /// Export all parameters as a flat name -> array map (the inverse of
+    /// [`NativeTrainModel::from_params`]; feeds
+    /// [`crate::inference::NativeModel`] and checkpointing).
+    pub fn to_params(&self) -> ParamMap {
+        let mut map = ParamMap::new();
+        let put_t = |map: &mut ParamMap, name: String, t: &Tensor| {
+            map.insert(name, (t.shape.clone(), t.data.clone()));
+        };
+        let put_v = |map: &mut ParamMap, name: String, v: &[f32]| {
+            map.insert(name, (vec![v.len()], v.to_vec()));
+        };
+        for (k, core) in self.embedding.cores.iter().enumerate() {
+            put_t(&mut map, format!("embed.ttm.{k}"), core);
+        }
+        put_t(&mut map, "embed.pos".to_string(), &self.pos);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let lins = [
+                ("wq", &layer.wq),
+                ("wk", &layer.wk),
+                ("wv", &layer.wv),
+                ("wo", &layer.wo),
+                ("w1", &layer.w1),
+                ("w2", &layer.w2),
+            ];
+            for (name, lin) in lins {
+                for (k, core) in lin.tt.cores.iter().enumerate() {
+                    put_t(&mut map, format!("layers.{i}.{name}.cores.{k}"), core);
+                }
+                put_v(&mut map, format!("layers.{i}.{name}.bias"), &lin.bias);
+            }
+            put_v(&mut map, format!("layers.{i}.ln1.g"), &layer.ln1_g);
+            put_v(&mut map, format!("layers.{i}.ln1.b"), &layer.ln1_b);
+            put_v(&mut map, format!("layers.{i}.ln2.g"), &layer.ln2_g);
+            put_v(&mut map, format!("layers.{i}.ln2.b"), &layer.ln2_b);
+        }
+        for (k, core) in self.pool.tt.cores.iter().enumerate() {
+            put_t(&mut map, format!("cls.pool.cores.{k}"), core);
+        }
+        put_v(&mut map, "cls.pool.bias".to_string(), &self.pool.bias);
+        put_t(&mut map, "cls.intent_w".to_string(), &self.intent_w);
+        put_v(&mut map, "cls.intent_b".to_string(), &self.intent_b);
+        put_t(&mut map, "cls.slot_w".to_string(), &self.slot_w);
+        put_v(&mut map, "cls.slot_b".to_string(), &self.slot_b);
+        map
+    }
+
+    /// Forward pass with full activation caching (batch 1).
+    fn forward_train(&self, tokens: &[i32], stats: &mut ContractionStats) -> Result<ForwardCaches> {
+        let cfg = &self.cfg;
+        let (s, h) = (cfg.seq_len, cfg.d_hid);
+        if tokens.len() != s {
+            return Err(anyhow!("expected {s} tokens, got {}", tokens.len()));
+        }
+        let mask: Vec<f32> = tokens
+            .iter()
+            .map(|&t| if t == cfg.pad_id { 0.0 } else { 1.0 })
+            .collect();
+
+        // Embedding: TTM lookup (cached) + positional table.
+        let mut x = Tensor::zeros(&[s, h]);
+        let mut emb_states = Vec::with_capacity(s);
+        for (i, &t) in tokens.iter().enumerate() {
+            let (row, states) = self.embedding.lookup_cached(t as usize)?;
+            for j in 0..h {
+                x.data[i * h + j] = row.data[j] + self.pos.at2(i, j);
+            }
+            emb_states.push(states);
+        }
+
+        let mut layer_fwd = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let (q, wq_c) = layer.wq.forward(&x, stats)?;
+            let (k, wk_c) = layer.wk.forward(&x, stats)?;
+            let (v, wv_c) = layer.wv.forward(&x, stats)?;
+            let (ctx, probs) = ops::multi_head_attention(&q, &k, &v, &mask, cfg.n_heads)?;
+            let (o, wo_c) = layer.wo.forward(&ctx, stats)?;
+            let res1 = ops::add(&x, &o);
+            let (x1, ln1_c) = blocks::layer_norm_fwd(&res1, &layer.ln1_g, &layer.ln1_b, 1e-5);
+            let (h1, w1_c) = layer.w1.forward(&x1, stats)?;
+            let g1 = ops::gelu(&h1);
+            let (ffn, w2_c) = layer.w2.forward(&g1, stats)?;
+            let res2 = ops::add(&x1, &ffn);
+            let (x2, ln2_c) = blocks::layer_norm_fwd(&res2, &layer.ln2_g, &layer.ln2_b, 1e-5);
+            layer_fwd.push(LayerFwd {
+                q,
+                k,
+                v,
+                probs,
+                wq_c,
+                wk_c,
+                wv_c,
+                wo_c,
+                ln1_c,
+                x1,
+                h1,
+                w1_c,
+                w2_c,
+                ln2_c,
+            });
+            x = x2;
+        }
+
+        let (pool_pre, pool_c) = self.pool.forward(&x, stats)?;
+        let pooled = ops::tanh(&pool_pre);
+        let cls_row = Tensor::from_vec(pooled.data[..h].to_vec(), &[1, h])?;
+        let intent = ops::add_row(&cls_row.matmul(&self.intent_w.t()?)?, &self.intent_b);
+        let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
+        Ok(ForwardCaches {
+            mask,
+            emb_states,
+            layer_fwd,
+            pool_c,
+            pooled,
+            intent_logits: intent.data,
+            slot_logits: slots,
+        })
+    }
+
+    /// Inference (same contract as the PJRT engine's eval): returns
+    /// `(intent_logits, slot_logits (S * n_slots))`.
+    pub fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut stats = ContractionStats::default();
+        let fwd = self.forward_train(tokens, &mut stats)?;
+        Ok((fwd.intent_logits, fwd.slot_logits.data))
+    }
+
+    /// One fused SGD step (FP -> BP -> PU): forward with caching, joint
+    /// cross-entropy, hand-derived backward, and in-place updates as
+    /// each gradient becomes available.  Returns `(loss, step stats)`.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<(f32, ContractionStats)> {
+        let cfg_nh = self.cfg.n_heads;
+        let (s, h) = (self.cfg.seq_len, self.cfg.d_hid);
+        let ns = self.cfg.n_slots;
+        if intent.len() != 1 || slots.len() != s {
+            return Err(anyhow!(
+                "native train_step is batch-1: need 1 intent / {s} slots, got {} / {}",
+                intent.len(),
+                slots.len()
+            ));
+        }
+        if intent[0] < 0 || intent[0] as usize >= self.cfg.n_intents {
+            return Err(anyhow!("intent label {} out of range", intent[0]));
+        }
+        let mut stats = ContractionStats::default();
+        let fwd = self.forward_train(tokens, &mut stats)?;
+
+        // ---- Joint loss and logit gradients (paper loss_fn) ----------
+        let denom: f32 = fwd.mask.iter().sum::<f32>();
+        let denom = denom.max(1.0);
+        let (loss_intent, d_il) =
+            blocks::cross_entropy_logits(&fwd.intent_logits, intent[0] as usize)?;
+        let mut loss_slots = 0.0f32;
+        let mut d_slot = Tensor::zeros(&[s, ns]);
+        for p in 0..s {
+            if fwd.mask[p] == 0.0 {
+                continue;
+            }
+            if slots[p] < 0 || slots[p] as usize >= ns {
+                return Err(anyhow!("slot label {} out of range at {p}", slots[p]));
+            }
+            let row = &fwd.slot_logits.data[p * ns..(p + 1) * ns];
+            let (l, dl) = blocks::cross_entropy_logits(row, slots[p] as usize)?;
+            loss_slots += l / denom;
+            for (o, &dv) in d_slot.data[p * ns..(p + 1) * ns].iter_mut().zip(&dl) {
+                *o = dv / denom;
+            }
+        }
+        let loss = loss_intent + loss_slots;
+
+        // ---- Classifier heads ----------------------------------------
+        // d_pooled from both heads, computed before any head update.
+        let mut d_pooled = d_slot.matmul(&self.slot_w)?; // (S, H)
+        for (c, &dil) in d_il.iter().enumerate() {
+            for j in 0..h {
+                d_pooled.data[j] += dil * self.intent_w.at2(c, j);
+            }
+        }
+        let d_slot_w = d_slot.t()?.matmul(&fwd.pooled)?; // (n_slots, H)
+        let mut d_slot_b = vec![0.0f32; ns];
+        for row in d_slot.data.chunks(ns) {
+            for (b, &v) in d_slot_b.iter_mut().zip(row) {
+                *b += v;
+            }
+        }
+        for (c, &dil) in d_il.iter().enumerate() {
+            for j in 0..h {
+                self.intent_w.data[c * h + j] -= lr * dil * fwd.pooled.data[j];
+            }
+        }
+        sgd_vec(&mut self.intent_b, &d_il, lr);
+        for (w, &g) in self.slot_w.data.iter_mut().zip(&d_slot_w.data) {
+            *w -= lr * g;
+        }
+        sgd_vec(&mut self.slot_b, &d_slot_b, lr);
+
+        // ---- Pooler --------------------------------------------------
+        let d_pool_pre = blocks::tanh_vjp(&fwd.pooled, &d_pooled);
+        let (mut dx, pool_grads) = self.pool.backward(&d_pool_pre, &fwd.pool_c, &mut stats)?;
+        self.pool.sgd_update(&pool_grads, lr);
+
+        // ---- Encoder blocks, reversed --------------------------------
+        for (layer, f) in self.layers.iter_mut().zip(fwd.layer_fwd.iter()).rev() {
+            let (d_res2, dg2, db2) = blocks::layer_norm_vjp(&f.ln2_c, &layer.ln2_g, &dx);
+            sgd_vec(&mut layer.ln2_g, &dg2, lr);
+            sgd_vec(&mut layer.ln2_b, &db2, lr);
+            let (d_g1, w2_grads) = layer.w2.backward(&d_res2, &f.w2_c, &mut stats)?;
+            layer.w2.sgd_update(&w2_grads, lr);
+            let d_h1 = blocks::gelu_vjp(&f.h1, &d_g1);
+            let (d_x1_ffn, w1_grads) = layer.w1.backward(&d_h1, &f.w1_c, &mut stats)?;
+            layer.w1.sgd_update(&w1_grads, lr);
+            let d_x1 = ops::add(&d_res2, &d_x1_ffn);
+            let (d_res1, dg1, db1) = blocks::layer_norm_vjp(&f.ln1_c, &layer.ln1_g, &d_x1);
+            sgd_vec(&mut layer.ln1_g, &dg1, lr);
+            sgd_vec(&mut layer.ln1_b, &db1, lr);
+            let (d_ctx, wo_grads) = layer.wo.backward(&d_res1, &f.wo_c, &mut stats)?;
+            layer.wo.sgd_update(&wo_grads, lr);
+            let (dq, dk, dv) =
+                blocks::multi_head_attention_vjp(&f.q, &f.k, &f.v, &f.probs, &d_ctx, cfg_nh)?;
+            let (dx_q, wq_grads) = layer.wq.backward(&dq, &f.wq_c, &mut stats)?;
+            layer.wq.sgd_update(&wq_grads, lr);
+            let (dx_k, wk_grads) = layer.wk.backward(&dk, &f.wk_c, &mut stats)?;
+            layer.wk.sgd_update(&wk_grads, lr);
+            let (dx_v, wv_grads) = layer.wv.backward(&dv, &f.wv_c, &mut stats)?;
+            layer.wv.sgd_update(&wv_grads, lr);
+            dx = ops::add(&ops::add(&ops::add(&d_res1, &dx_q), &dx_k), &dx_v);
+        }
+
+        // ---- Embedding + positional table ----------------------------
+        let mut emb_grads: Vec<Tensor> = self
+            .embedding
+            .cores
+            .iter()
+            .map(|c| Tensor::zeros(&c.shape))
+            .collect();
+        for (i, &t) in tokens.iter().enumerate() {
+            let d_row = &dx.data[i * h..(i + 1) * h];
+            self.embedding
+                .lookup_vjp(t as usize, &fwd.emb_states[i], d_row, &mut emb_grads)?;
+        }
+        for (core, g) in self.embedding.cores.iter_mut().zip(&emb_grads) {
+            for (w, &dw) in core.data.iter_mut().zip(&g.data) {
+                *w -= lr * dw;
+            }
+        }
+        for (w, &dw) in self.pos.data.iter_mut().zip(&dx.data) {
+            *w -= lr * dw;
+        }
+
+        Ok((loss, stats))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::inference::NativeModel;
+
+    pub(crate) fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            n_layers: 1,
+            d_hid: 48,
+            n_heads: 4,
+            seq_len: 8,
+            batch: 1,
+            vocab: 27,
+            n_intents: 5,
+            n_slots: 7,
+            tt_m: vec![4, 4, 3],
+            tt_n: vec![3, 4, 4],
+            tt_rank: 3,
+            ttm_vocab_modes: vec![3, 3, 3],
+            ttm_hid_modes: vec![4, 4, 3],
+            ttm_rank: 4,
+            pad_id: 0,
+            cls_id: 1,
+            unk_id: 2,
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_preserves_model() {
+        let cfg = tiny_cfg();
+        let model = NativeTrainModel::random_init(&cfg, 7).unwrap();
+        let map = model.to_params();
+        let back = NativeTrainModel::from_params(&cfg, &map).unwrap();
+        let tokens = vec![1, 5, 9, 13, 0, 0, 0, 0];
+        assert_eq!(model.eval(&tokens).unwrap(), back.eval(&tokens).unwrap());
+    }
+
+    #[test]
+    fn eval_matches_inference_engine() {
+        // The trainable model and the merged-factor inference engine run
+        // the same forward math on the same parameters.
+        let cfg = tiny_cfg();
+        let model = NativeTrainModel::random_init(&cfg, 8).unwrap();
+        let infer = NativeModel::from_params(&cfg, &model.to_params()).unwrap();
+        for tokens in [vec![1, 5, 9, 13, 0, 0, 0, 0], vec![1, 3, 2, 7, 11, 26, 0, 0]] {
+            let (il_t, sl_t) = model.eval(&tokens).unwrap();
+            let (il_i, sl_i) = infer.forward(&tokens).unwrap();
+            let d_i = il_t
+                .iter()
+                .zip(&il_i)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let d_s = sl_t
+                .iter()
+                .zip(&sl_i)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d_i < 1e-5, "intent logits diverge: {d_i}");
+            assert!(d_s < 1e-5, "slot logits diverge: {d_s}");
+        }
+    }
+
+    #[test]
+    fn train_step_reports_positive_finite_loss_and_updates() {
+        let cfg = tiny_cfg();
+        let mut model = NativeTrainModel::random_init(&cfg, 9).unwrap();
+        let tokens = vec![1, 5, 9, 13, 4, 0, 0, 0];
+        let slots = vec![0, 1, 2, 3, 1, 0, 0, 0];
+        let before = model.eval(&tokens).unwrap();
+        let (loss, stats) = model.train_step(&tokens, &[2], &slots, 0.05).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(stats.muls > 0);
+        let after = model.eval(&tokens).unwrap();
+        assert_ne!(before, after, "parameters did not move");
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let cfg = tiny_cfg();
+        let mut model = NativeTrainModel::random_init(&cfg, 10).unwrap();
+        let tokens = vec![1, 5, 9, 13, 0, 0, 0, 0];
+        let slots = vec![0i32; 8];
+        assert!(model.train_step(&tokens, &[99], &slots, 0.01).is_err());
+        let bad_slots = vec![0, 99, 0, 0, 0, 0, 0, 0];
+        assert!(model.train_step(&tokens, &[1], &bad_slots, 0.01).is_err());
+    }
+}

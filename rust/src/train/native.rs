@@ -1,0 +1,151 @@
+//! [`NativeTrainer`]: the rust-native [`TrainBackend`] — end-to-end
+//! on-device training with no XLA, no Python and no HLO artifacts.
+
+use super::model::NativeTrainModel;
+use crate::config::ModelConfig;
+use crate::coordinator::backend::{StepOutput, TrainBackend};
+use crate::inference::{NativeModel, ParamMap};
+use crate::tensor::ContractionStats;
+use crate::util::npy;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::time::Instant;
+
+/// Native training backend over [`NativeTrainModel`].
+pub struct NativeTrainer {
+    pub model: NativeTrainModel,
+    /// Instrumentation of the most recent step (forward Eqs. 20/21 +
+    /// backward 2x counts, summed over every TT layer).
+    pub last_stats: ContractionStats,
+    /// Merged-factor inference engine for eval, built lazily and
+    /// invalidated whenever parameters change — evaluation loops reuse
+    /// the merged Z1/Z3 factors instead of re-merging per example.
+    eval_model: RefCell<Option<NativeModel>>,
+}
+
+impl NativeTrainer {
+    pub fn new(model: NativeTrainModel) -> NativeTrainer {
+        NativeTrainer {
+            model,
+            last_stats: ContractionStats::default(),
+            eval_model: RefCell::new(None),
+        }
+    }
+
+    /// Fresh model with seeded random parameters — training from scratch
+    /// requires nothing but a [`ModelConfig`].
+    pub fn random_init(cfg: &ModelConfig, seed: u64) -> Result<NativeTrainer> {
+        Ok(NativeTrainer::new(NativeTrainModel::random_init(cfg, seed)?))
+    }
+
+    /// Build from a flat parameter map (e.g. exported from a live PJRT
+    /// engine, for cross-backend parity).
+    pub fn from_params(cfg: &ModelConfig, params: &ParamMap) -> Result<NativeTrainer> {
+        Ok(NativeTrainer::new(NativeTrainModel::from_params(cfg, params)?))
+    }
+}
+
+impl TrainBackend for NativeTrainer {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let t0 = Instant::now();
+        let (loss, stats) = self.model.train_step(tokens, intent, slots, lr)?;
+        self.last_stats = stats;
+        *self.eval_model.borrow_mut() = None; // parameters moved
+        Ok(StepOutput {
+            loss,
+            execute_secs: t0.elapsed().as_secs_f64(),
+            host_secs: 0.0,
+        })
+    }
+
+    fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut cached = self.eval_model.borrow_mut();
+        if cached.is_none() {
+            *cached = Some(NativeModel::from_params(&self.model.cfg, &self.model.to_params())?);
+        }
+        cached.as_ref().expect("just built").forward(tokens)
+    }
+
+    /// One `.npy` per parameter, named `%04d.<name>.npy` in canonical
+    /// (sorted-name) order — interchangeable with the PJRT engine's
+    /// checkpoints, which are matched by name, not position.
+    fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (i, (name, (shape, data))) in self.model.to_params().iter().enumerate() {
+            let safe = npy::safe_param_name(name);
+            npy::write_npy_f32(&dir.join(format!("{i:04}.{safe}.npy")), data, shape)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild the model from a checkpoint directory, keyed by each
+    /// file's embedded parameter name (a renamed file is an error, not a
+    /// silent mix-up).
+    fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        let mut params = ParamMap::new();
+        for (name, path) in npy::checkpoint_entries(dir)? {
+            let (shape, data) = npy::read_npy_f32(&path)?;
+            if params.insert(name.clone(), (shape, data)).is_some() {
+                return Err(anyhow!("duplicate parameter '{name}' in checkpoint {dir:?}"));
+            }
+        }
+        self.model = NativeTrainModel::from_params(&self.model.cfg, &params)?;
+        *self.eval_model.borrow_mut() = None; // parameters replaced
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::model::tests::tiny_cfg;
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_params() {
+        let cfg = tiny_cfg();
+        let mut t = NativeTrainer::random_init(&cfg, 31).unwrap();
+        let tokens = vec![1, 5, 9, 13, 0, 0, 0, 0];
+        let slots = vec![0i32; 8];
+        t.train_step(&tokens, &[1], &slots, 0.01).unwrap();
+        let before = t.eval(&tokens).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("native_ckpt_{}", std::process::id()));
+        t.save_checkpoint(&dir).unwrap();
+        // Perturb, then restore.
+        t.train_step(&tokens, &[1], &slots, 0.5).unwrap();
+        assert_ne!(t.eval(&tokens).unwrap(), before);
+        t.load_checkpoint(&dir).unwrap();
+        assert_eq!(t.eval(&tokens).unwrap(), before);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn renamed_checkpoint_file_is_rejected() {
+        let cfg = tiny_cfg();
+        let mut t = NativeTrainer::random_init(&cfg, 32).unwrap();
+        let dir = std::env::temp_dir().join(format!("native_ckpt_ren_{}", std::process::id()));
+        t.save_checkpoint(&dir).unwrap();
+        // Rename one file's name component: the load must fail loudly.
+        let victim = dir.join("0000.cls.intent_b.npy");
+        assert!(victim.exists(), "canonical first entry moved?");
+        std::fs::rename(&victim, dir.join("0000.cls.intent_x.npy")).unwrap();
+        let err = t.load_checkpoint(&dir);
+        assert!(err.is_err(), "renamed parameter silently accepted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,10 +4,12 @@
 //! dependency closure, so the library carries its own minimal JSON parser
 //! ([`json`]), CLI argument parser ([`cli`]), deterministic RNG shared
 //! with the python data generator ([`rng`]), property-testing loop
-//! ([`prop`]) and wall-clock measurement helpers ([`timer`]).
+//! ([`prop`]), `.npy` checkpoint reader/writer ([`npy`]) and wall-clock
+//! measurement helpers ([`timer`]).
 
 pub mod cli;
 pub mod json;
+pub mod npy;
 pub mod prop;
 pub mod rng;
 pub mod timer;

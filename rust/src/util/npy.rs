@@ -1,0 +1,189 @@
+//! Minimal `.npy` (format 1.0/2.0) reader/writer for little-endian f32
+//! row-major arrays — the checkpoint format shared by the PJRT engine,
+//! the native trainer and numpy.
+//!
+//! Also carries the checkpoint directory convention: one
+//! `%04d.<param-name>.npy` file per array, where `<param-name>` is the
+//! manifest name with `/` mapped to `_`.  [`checkpoint_entries`] parses
+//! the directory back so loaders can verify each file's *embedded
+//! parameter name* instead of trusting sort order — a renamed or
+//! swapped file becomes a hard error, not silently-wrong weights.
+
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Write one f32 array as `.npy` format 1.0.
+pub fn write_npy_f32(path: &Path, data: &[f32], shape: &[usize]) -> Result<()> {
+    let dims = shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({dims},)"),
+        _ => format!("({dims})"),
+    };
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // Pad so magic(6) + version(2) + len(2) + header is a multiple of 64.
+    let base = 6 + 2 + 2;
+    let total = (base + header.len() + 1).div_ceil(64) * 64;
+    while base + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"\x93NUMPY")?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read a `.npy` file written by [`write_npy_f32`] or numpy
+/// (`<f4`, C order only).  Returns `(shape, data)`.
+pub fn read_npy_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        return Err(anyhow!("{path:?}: not an npy file"));
+    }
+    let header_len = match magic[6] {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => return Err(anyhow!("{path:?}: unsupported npy version {v}")),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+    if !header.contains("'<f4'") {
+        return Err(anyhow!("{path:?}: only '<f4' dtype supported ({header})"));
+    }
+    if header.contains("'fortran_order': True") {
+        return Err(anyhow!("{path:?}: fortran order not supported"));
+    }
+    let shape = parse_shape(&header)
+        .ok_or_else(|| anyhow!("{path:?}: cannot parse shape from header ({header})"))?;
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    if payload.len() < numel * 4 {
+        return Err(anyhow!(
+            "{path:?}: payload {} bytes < {} expected",
+            payload.len(),
+            numel * 4
+        ));
+    }
+    let data = payload[..numel * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((shape, data))
+}
+
+fn parse_shape(header: &str) -> Option<Vec<usize>> {
+    let start = header.find("'shape':")? + "'shape':".len();
+    let open = header[start..].find('(')? + start;
+    let close = header[open..].find(')')? + open;
+    let inner = &header[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(part.parse().ok()?);
+    }
+    Some(shape)
+}
+
+/// List a checkpoint directory's `.npy` files sorted by filename,
+/// returning each file's embedded parameter-name component
+/// (`<index>.<name>.npy` -> `<name>`).
+pub fn checkpoint_entries(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading checkpoint dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "npy").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for path in paths {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow!("bad checkpoint filename {path:?}"))?;
+        let name = stem
+            .split_once('.')
+            .map(|(_, rest)| rest.to_string())
+            .ok_or_else(|| {
+                anyhow!("checkpoint file {path:?} lacks the <index>.<name>.npy layout")
+            })?;
+        out.push((name, path));
+    }
+    Ok(out)
+}
+
+/// Filesystem-safe form of a parameter name (manifest convention).
+pub fn safe_param_name(name: &str) -> String {
+    name.replace('/', "_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("npy_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("0000.a.b.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 2.0).collect();
+        write_npy_f32(&path, &data, &[3, 4]).unwrap();
+        let (shape, back) = read_npy_f32(&path).unwrap();
+        assert_eq!(shape, vec![3, 4]);
+        assert_eq!(back, data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn npy_scalar_and_1d_shapes() {
+        let dir = std::env::temp_dir().join(format!("npy_sh_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("0000.x.npy");
+        write_npy_f32(&path, &[1.0, 2.0, 3.0], &[3]).unwrap();
+        let (shape, data) = read_npy_f32(&path).unwrap();
+        assert_eq!(shape, vec![3]);
+        assert_eq!(data, vec![1.0, 2.0, 3.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_entries_extract_names_in_order() {
+        let dir = std::env::temp_dir().join(format!("npy_ck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_npy_f32(&dir.join("0001.beta.npy"), &[1.0], &[1]).unwrap();
+        write_npy_f32(&dir.join("0000.alpha.x.npy"), &[2.0], &[1]).unwrap();
+        let entries = checkpoint_entries(&dir).unwrap();
+        let names: Vec<&str> = entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["alpha.x", "beta"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! Mirrors the subset of the real binding's API that
+//! `tt_trainer::runtime` uses, so the `pjrt` feature compiles without
+//! libxla_extension.  Every operation that would reach a real PJRT
+//! client fails with [`Error::Unavailable`] instead; constructors that
+//! cannot fail return inert values.  See the workspace `Cargo.toml` for
+//! how to substitute a real binding.
+
+use std::path::Path;
+
+/// Stub error: always "PJRT unavailable".
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs a real PJRT runtime.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: built against the offline `xla` stub; patch in a real \
+                 PJRT binding to execute HLO artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry.
+pub trait ArrayElement: Copy + Default {}
+
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+
+/// Host tensor (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn scalar<T: ArrayElement>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn vec1<T: ArrayElement>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::Unavailable("Literal::to_tuple2"))
+    }
+}
+
+/// npy/npz readers (on the real binding, a byte-level deserializer).
+pub trait FromRawBytes: Sized {
+    type Context;
+
+    fn read_npy<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Self>;
+
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npy<P: AsRef<Path>>(_path: P, _ctx: &()) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::read_npy"))
+    }
+
+    fn read_npz<P: AsRef<Path>>(_path: P, _ctx: &()) -> Result<Vec<(String, Literal)>> {
+        Err(Error::Unavailable("Literal::read_npz"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
