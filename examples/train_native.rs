@@ -6,12 +6,14 @@
 //!
 //! ```bash
 //! cargo run --release --example train_native -- --layers 2 --steps 300
+//! cargo run --release --example train_native -- --optimizer adam --batch 8
 //! ```
 
 use tt_trainer::config::ModelConfig;
 use tt_trainer::coordinator::Trainer;
 use tt_trainer::data::Dataset;
 use tt_trainer::inference::NativeModel;
+use tt_trainer::optim::{OptimConfig, OptimKind};
 use tt_trainer::train::NativeTrainer;
 use tt_trainer::util::cli::Args;
 
@@ -20,8 +22,14 @@ fn main() -> anyhow::Result<()> {
     let layers = args.get_usize("layers", 2);
     let steps = args.get_usize("steps", 300);
     let eval_n = args.get_usize("eval-n", 200);
-    let lr = args.get_f64("lr", 4e-3) as f32;
     let seed = args.get_usize("seed", 42) as u64;
+    let optim_defaults = OptimConfig::default();
+    let optim = OptimConfig {
+        kind: OptimKind::parse(args.get_or("optimizer", optim_defaults.kind.name()))?,
+        batch_size: args.get_usize("batch", optim_defaults.batch_size).max(1),
+        ..optim_defaults
+    };
+    let lr = args.get_f64("lr", optim.kind.default_lr() as f64) as f32;
 
     let cfg = ModelConfig::paper(layers);
     println!("=== native E2E: {layers}-ENC tensorized transformer ===");
@@ -31,9 +39,15 @@ fn main() -> anyhow::Result<()> {
         cfg.dense_equivalent_params() as f64 / cfg.tensor_params() as f64
     );
 
-    let backend = NativeTrainer::random_init(&cfg, seed)?;
+    println!(
+        "optimizer {} | batch {} | lr {lr}",
+        optim.kind.name(),
+        optim.batch_size
+    );
+    let batch = optim.batch_size;
+    let backend = NativeTrainer::random_init(&cfg, seed)?.with_optim(optim);
     let (train, test) = Dataset::paper_splits(&cfg, seed);
-    let mut trainer = Trainer::new(backend, lr);
+    let mut trainer = Trainer::with_batch(backend, lr, batch);
 
     let ev0 = trainer.evaluate(&test, Some(eval_n))?;
     println!(
@@ -61,9 +75,10 @@ fn main() -> anyhow::Result<()> {
         done, ev1.intent_acc, ev1.slot_acc, ev1.n
     );
     println!(
-        "timing: {:.2}s compute | {:.1} ms mean step | {:.1}M muls/step (FP+BP, Eqs. 18-21)",
+        "timing: {:.2}s compute | {:.1} ms mean step | {:.0} tokens/s | {:.1}M muls/step (FP+BP, Eqs. 18-21)",
         trainer.metrics.execute_secs,
         1e3 * trainer.metrics.execute_secs / trainer.metrics.steps.max(1) as f64,
+        trainer.metrics.tokens_per_sec(),
         trainer.backend.last_stats.muls as f64 / 1e6
     );
 

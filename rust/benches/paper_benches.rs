@@ -23,10 +23,11 @@
 //! Run: `cargo bench --offline` (optionally `-- <section>`)
 
 use tt_trainer::config::ModelConfig;
-use tt_trainer::coordinator::TrainBackend;
+use tt_trainer::coordinator::{TrainBackend, Trainer};
 use tt_trainer::costmodel::{compare_all, sweeps, LinearShape};
 use tt_trainer::data::Dataset;
 use tt_trainer::fpga::{bram, energy, resources, schedule};
+use tt_trainer::optim::{OptimConfig, OptimKind};
 #[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
 use tt_trainer::tensor::{Tensor, TTMatrix};
@@ -85,45 +86,77 @@ fn main() {
     }
 }
 
-/// Measured rust-native train-step latency (FP + BP + fused SGD) — the
-/// artifact-free counterpart of the `pjrt` section.
+/// Measured rust-native training throughput (FP + BP + PU) across
+/// optimizer x batch — the artifact-free counterpart of the `pjrt`
+/// section.  Also emits `BENCH_native_train.json` so the perf
+/// trajectory of the native trainer is recorded across PRs.
 fn native_train() {
-    hdr("native-train", "measured native train/eval step latency (no artifacts)");
-    for layers in [2usize, 4] {
-        let cfg = ModelConfig::paper(layers);
-        let mut backend = match NativeTrainer::random_init(&cfg, 42) {
-            Ok(b) => b,
+    hdr("native-train", "measured native training throughput (no artifacts)");
+    let cfg = ModelConfig::paper(2);
+    let data = Dataset::synth(&cfg, 42, 64);
+    let grid = [
+        (OptimKind::Sgd, 1usize),
+        (OptimKind::Sgd, 8),
+        (OptimKind::Adam, 1),
+        (OptimKind::Adam, 8),
+    ];
+    let mut rows = Vec::new();
+    for (kind, batch) in grid {
+        let optim = OptimConfig { kind, batch_size: batch, ..Default::default() };
+        let backend = match NativeTrainer::random_init(&cfg, 42) {
+            Ok(b) => b.with_optim(optim),
             Err(e) => {
-                println!("L{layers}: init failed: {e} (skipped)");
-                continue;
+                println!("init failed: {e} (skipped)");
+                return;
             }
         };
-        let data = Dataset::synth(&cfg, 42, 8);
-        let ex = data.examples[0].clone();
-        let mut losses = Vec::new();
+        let mut trainer = Trainer::with_batch(backend, kind.default_lr(), batch);
         let stats = bench(
             || {
-                let out = backend
-                    .train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3)
-                    .unwrap();
-                losses.push(out.loss);
+                trainer.train_steps(&data, 1).unwrap();
             },
-            2,
-            10,
+            1,
+            4,
         );
+        let steps_per_sec = 1.0 / stats.p50;
+        let tokens_per_sec = (batch * cfg.seq_len) as f64 / stats.p50;
+        let mean_loss = trainer.metrics.recent_loss(4);
         println!(
-            "L{layers}: train_step {} | {:.1}M muls/step (FP+BP)",
+            "{:<8} batch {batch}: step {} | {:.2} steps/s | {:.0} tokens/s | loss {mean_loss:.4}",
+            kind.name(),
             stats.fmt_ms(),
-            (backend.last_stats.muls as f64) / 1e6
+            steps_per_sec,
+            tokens_per_sec
         );
-        let eval_stats = bench(
-            || {
-                backend.eval(&ex.tokens).unwrap();
-            },
-            2,
-            10,
-        );
-        println!("L{layers}: eval       {}", eval_stats.fmt_ms());
+        rows.push(format!(
+            "    {{\"optimizer\": \"{}\", \"batch\": {batch}, \"p50_step_secs\": {:.6}, \
+             \"steps_per_sec\": {steps_per_sec:.3}, \"tokens_per_sec\": {tokens_per_sec:.1}, \
+             \"mean_loss\": {mean_loss:.5}}}",
+            kind.name(),
+            stats.p50
+        ));
+    }
+    // Eval latency through the merged-factor engine (batch 1).
+    let backend = NativeTrainer::random_init(&cfg, 42).expect("init");
+    let ex = data.examples[0].clone();
+    let eval_stats = bench(
+        || {
+            backend.eval(&ex.tokens).unwrap();
+        },
+        2,
+        10,
+    );
+    println!("eval (batch 1): {}", eval_stats.fmt_ms());
+    let json = format!(
+        "{{\n  \"bench\": \"native_train\",\n  \"model\": \"tt_L2\",\n  \"seq_len\": {},\n  \
+         \"eval_p50_secs\": {:.6},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        cfg.seq_len,
+        eval_stats.p50,
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_native_train.json", &json) {
+        Ok(()) => println!("wrote BENCH_native_train.json"),
+        Err(e) => println!("could not write BENCH_native_train.json: {e}"),
     }
 }
 

@@ -151,16 +151,25 @@ impl ModelConfig {
     }
 }
 
-/// SGD hyper-parameters (paper Sec. VI-A).
+/// Training-loop hyper-parameters (paper Sec. VI-A).
+///
+/// `Default` is the **single source of truth** for the paper's training
+/// setup: the lr / batch-size fallbacks of the CLI and the manifest
+/// route through it, as do [`crate::optim::OptimConfig`]'s defaults.
+/// (The CLI's `--epochs` fallback is deliberately 1 — a smoke-run
+/// default — not the paper's 40-epoch `epochs` here, which manifests
+/// inherit.)
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub lr: f32,
     pub epochs: usize,
+    /// Mini-batch size (the paper's on-device setting is 1).
+    pub batch_size: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { lr: 4e-3, epochs: 40 }
+        TrainConfig { lr: 4e-3, epochs: 40, batch_size: 1 }
     }
 }
 

@@ -35,7 +35,15 @@ pub trait TrainBackend {
     /// The model configuration this backend was built for.
     fn config(&self) -> &ModelConfig;
 
-    /// One SGD step (FP -> BP -> PU) on a single batch.
+    /// Whether this backend accepts a runtime mini-batch of `batch`
+    /// examples.  The PJRT engine executes an HLO artifact compiled for
+    /// a fixed `config().batch`; the native trainer accepts any `B >= 1`
+    /// (the contraction K dimension carries `B * S`).
+    fn supports_batch(&self, batch: usize) -> bool {
+        batch == self.config().batch.max(1)
+    }
+
+    /// One optimizer step (FP -> BP -> PU) on a mini-batch.
     ///
     /// `tokens`/`slots` are `(batch, seq)` row-major, `intent` is
     /// `(batch,)`.  Updates parameters in place.

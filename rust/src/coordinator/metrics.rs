@@ -1,4 +1,5 @@
-//! Training metrics: loss curves, joint intent/slot accuracy, timing.
+//! Training metrics: loss curves, joint intent/slot accuracy, timing,
+//! throughput (tokens/sec) and per-epoch wall-clock.
 
 use std::fmt::Write as _;
 
@@ -9,23 +10,35 @@ pub struct Metrics {
     pub losses: Vec<(usize, f32)>,
     /// (epoch, intent_acc, slot_acc) evaluation points.
     pub evals: Vec<(usize, f64, f64)>,
-    /// Cumulative seconds inside PJRT execute.
+    /// Cumulative seconds inside backend execute (PJRT or native
+    /// FP+BP+PU).
     pub execute_secs: f64,
-    /// Cumulative seconds of host-side overhead.
+    /// Cumulative seconds of host-side overhead (batch packing +
+    /// backend host work).
     pub host_secs: f64,
     pub steps: usize,
+    /// Token/slot positions processed (`B * S` per step).
+    pub tokens: usize,
+    /// Wall-clock seconds of each completed epoch.
+    pub epoch_secs: Vec<f64>,
 }
 
 impl Metrics {
-    pub fn record_step(&mut self, loss: f32, execute_secs: f64, host_secs: f64) {
+    pub fn record_step(&mut self, loss: f32, execute_secs: f64, host_secs: f64, tokens: usize) {
         self.losses.push((self.steps, loss));
         self.execute_secs += execute_secs;
         self.host_secs += host_secs;
         self.steps += 1;
+        self.tokens += tokens;
     }
 
     pub fn record_eval(&mut self, epoch: usize, intent_acc: f64, slot_acc: f64) {
         self.evals.push((epoch, intent_acc, slot_acc));
+    }
+
+    /// Record one epoch's wall-clock seconds.
+    pub fn record_epoch_secs(&mut self, secs: f64) {
+        self.epoch_secs.push(secs);
     }
 
     /// Mean loss over the last `n` steps.
@@ -45,6 +58,35 @@ impl Metrics {
         } else {
             self.host_secs / total
         }
+    }
+
+    /// Optimizer steps per second of step time (execute + host).
+    pub fn steps_per_sec(&self) -> f64 {
+        let total = self.execute_secs + self.host_secs;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.steps as f64 / total
+        }
+    }
+
+    /// Token/slot positions per second of step time (execute + host).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total = self.execute_secs + self.host_secs;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / total
+        }
+    }
+
+    /// Mean wall-clock seconds per completed epoch (NaN before the
+    /// first epoch finishes).
+    pub fn mean_epoch_secs(&self) -> f64 {
+        if self.epoch_secs.is_empty() {
+            return f64::NAN;
+        }
+        self.epoch_secs.iter().sum::<f64>() / self.epoch_secs.len() as f64
     }
 
     /// Loss curve as CSV (step,loss) for EXPERIMENTS.md / plotting.
@@ -82,10 +124,11 @@ mod tests {
     fn recent_loss_window() {
         let mut m = Metrics::default();
         for l in [4.0f32, 3.0, 2.0, 1.0] {
-            m.record_step(l, 0.01, 0.001);
+            m.record_step(l, 0.01, 0.001, 32);
         }
         assert_eq!(m.recent_loss(2), 1.5);
         assert_eq!(m.steps, 4);
+        assert_eq!(m.tokens, 128);
     }
 
     #[test]
@@ -97,7 +140,7 @@ mod tests {
     #[test]
     fn csv_well_formed() {
         let mut m = Metrics::default();
-        m.record_step(1.0, 0.0, 0.0);
+        m.record_step(1.0, 0.0, 0.0, 32);
         m.record_eval(0, 0.5, 0.25);
         assert!(m.loss_csv().lines().count() == 2);
         assert!(m.eval_csv().contains("0,0.5000,0.2500"));
@@ -106,7 +149,28 @@ mod tests {
     #[test]
     fn overhead_fraction() {
         let mut m = Metrics::default();
-        m.record_step(1.0, 0.9, 0.1);
+        m.record_step(1.0, 0.9, 0.1, 32);
         assert!((m.host_overhead_frac() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_counters() {
+        let mut m = Metrics::default();
+        // 2 steps of batch 4 x seq 8 = 32 tokens each, 0.5 s total each.
+        m.record_step(1.0, 0.4, 0.1, 32);
+        m.record_step(0.9, 0.4, 0.1, 32);
+        assert!((m.tokens_per_sec() - 64.0).abs() < 1e-9);
+        assert!((m.steps_per_sec() - 2.0).abs() < 1e-9);
+        assert!(m.mean_epoch_secs().is_nan());
+        m.record_epoch_secs(2.0);
+        m.record_epoch_secs(4.0);
+        assert!((m.mean_epoch_secs() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_time_throughput_is_defined() {
+        let m = Metrics::default();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.steps_per_sec(), 0.0);
     }
 }

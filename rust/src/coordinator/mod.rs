@@ -1,10 +1,13 @@
 //! L3 training coordinator (the paper's accelerator control plane).
 //!
 //! * [`backend`] — the [`TrainBackend`] abstraction: one trait driving
-//!   either the PJRT engine or the rust-native trainer.
-//! * [`trainer`] — FP/BP/PU stage loop over any backend, epochs,
-//!   evaluation (Table III metrics), loss-curve capture (Fig. 13).
-//! * [`metrics`] — loss/accuracy/timing records and CSV export.
+//!   either the PJRT engine or the rust-native trainer (including the
+//!   per-backend mini-batch capability, `supports_batch`).
+//! * [`trainer`] — FP/BP/PU stage loop over any backend: mini-batch
+//!   packing, epochs, evaluation (Table III metrics), loss-curve
+//!   capture (Fig. 13).
+//! * [`metrics`] — loss/accuracy/timing/throughput records (tokens/sec,
+//!   per-epoch wall-clock) and CSV export.
 
 pub mod backend;
 pub mod metrics;

@@ -1,23 +1,39 @@
 //! Training coordinator: the L3 analogue of the paper's accelerator
 //! control flow (Fig. 8) — it owns the FP -> BP -> PU stage loop, feeds
-//! batches, tracks metrics and checkpoints.
+//! mini-batches, tracks metrics and checkpoints.
 //!
 //! The coordinator is generic over [`TrainBackend`]: the three training
 //! stages either run as a single fused PJRT executable
 //! (`<variant>_train.hlo.txt`, exactly like the paper fuses them into one
 //! fabric pass) or natively in rust via [`crate::train::NativeTrainer`];
-//! the coordinator sequences samples and epochs around either engine.
+//! the coordinator sequences batches and epochs around either engine.
+//!
+//! Mini-batching is a coordinator concern: examples are packed into
+//! `(B, S)` row-major blocks before the backend step (the native
+//! trainer widens the contraction K dimension to `B * S`; the PJRT
+//! engine takes whatever batch its artifact was compiled for —
+//! [`TrainBackend::supports_batch`] arbitrates).
 
 use super::backend::TrainBackend;
 use super::metrics::{argmax, Metrics};
-use crate::data::Dataset;
+use crate::config::TrainConfig;
+use crate::data::{Dataset, Example};
 use anyhow::{anyhow, Result};
+use std::time::Instant;
 
 /// Epoch-level training driver over any [`TrainBackend`].
 pub struct Trainer<B: TrainBackend> {
     pub backend: B,
     pub metrics: Metrics,
     pub lr: f32,
+    /// Mini-batch size used by [`Trainer::train_epoch`] /
+    /// [`Trainer::train_steps`] (the final batch of an epoch may be
+    /// smaller).
+    pub batch_size: usize,
+    /// Example cursor for step-driven training: chunked
+    /// [`Trainer::train_steps`] calls continue through the split instead
+    /// of retraining its head.
+    cursor: usize,
 }
 
 /// Joint evaluation result (paper Table III columns).
@@ -31,43 +47,105 @@ pub struct EvalResult {
 
 impl<B: TrainBackend> Trainer<B> {
     pub fn new(backend: B, lr: f32) -> Trainer<B> {
-        Trainer { backend, metrics: Metrics::default(), lr }
+        Trainer::with_batch(backend, lr, 1)
     }
 
-    /// One pass over (a prefix of) the dataset; returns mean loss.
+    /// Trainer with an explicit mini-batch size.
+    pub fn with_batch(backend: B, lr: f32, batch_size: usize) -> Trainer<B> {
+        Trainer {
+            backend,
+            metrics: Metrics::default(),
+            lr,
+            batch_size: batch_size.max(1),
+            cursor: 0,
+        }
+    }
+
+    /// Evaluation-only construction: no learning rate to pick — the
+    /// (unused) step hypers come from [`TrainConfig::default`], the
+    /// single source of truth for training fallbacks.
+    pub fn evaluator(backend: B) -> Trainer<B> {
+        Trainer::new(backend, TrainConfig::default().lr)
+    }
+
+    /// Pack a batch of examples into `(B, S)` blocks and run one
+    /// backend step.  Returns the step's (batch-mean) loss.
+    fn step_batch(&mut self, batch: &[&Example]) -> Result<f32> {
+        let b = batch.len();
+        if !self.backend.supports_batch(b) {
+            return Err(anyhow!(
+                "backend '{}' does not support batch size {b} (compiled batch: {})",
+                self.backend.backend_name(),
+                self.backend.config().batch
+            ));
+        }
+        let s = self.backend.config().seq_len;
+        let t0 = Instant::now();
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut intents = Vec::with_capacity(b);
+        let mut slots = Vec::with_capacity(b * s);
+        for ex in batch {
+            tokens.extend_from_slice(&ex.tokens);
+            intents.push(ex.intent);
+            slots.extend_from_slice(&ex.slots);
+        }
+        let pack_secs = t0.elapsed().as_secs_f64();
+        let out = self
+            .backend
+            .train_step(&tokens, &intents, &slots, self.lr)?;
+        self.metrics
+            .record_step(out.loss, out.execute_secs, out.host_secs + pack_secs, b * s);
+        Ok(out.loss)
+    }
+
+    /// One pass over (a prefix of) the dataset in `batch_size` blocks;
+    /// returns the per-example mean loss and records the epoch's
+    /// wall-clock in the metrics.  A final partial block that the
+    /// backend cannot take (fixed-batch PJRT artifacts) is dropped, like
+    /// a drop-remainder data loader — not an error mid-epoch.
     pub fn train_epoch(&mut self, data: &Dataset, limit: Option<usize>) -> Result<f32> {
         let n = limit.unwrap_or(data.len()).min(data.len());
+        let t0 = Instant::now();
         let mut total = 0.0f32;
-        for ex in data.examples.iter().take(n) {
-            let out = self
-                .backend
-                .train_step(&ex.tokens, &[ex.intent], &ex.slots, self.lr)?;
-            self.metrics
-                .record_step(out.loss, out.execute_secs, out.host_secs);
-            total += out.loss;
+        let mut seen = 0usize;
+        for batch in data.examples[..n].chunks(self.batch_size) {
+            if batch.len() < self.batch_size && !self.backend.supports_batch(batch.len()) {
+                break; // drop the remainder for fixed-batch backends
+            }
+            let refs: Vec<&Example> = batch.iter().collect();
+            let loss = self.step_batch(&refs)?;
+            total += loss * batch.len() as f32;
+            seen += batch.len();
         }
-        Ok(total / n.max(1) as f32)
+        if seen == 0 && n > 0 {
+            // Every chunk was an unsupported partial batch: failing loud
+            // beats reporting a 0.0-loss epoch that trained nothing.
+            return Err(anyhow!(
+                "train_epoch: {n} examples cannot fill one batch of {} for backend '{}'",
+                self.batch_size,
+                self.backend.backend_name()
+            ));
+        }
+        self.metrics.record_epoch_secs(t0.elapsed().as_secs_f64());
+        Ok(total / seen.max(1) as f32)
     }
 
-    /// Train for a fixed number of steps, cycling the dataset and
-    /// continuing from wherever previous step-driven calls stopped (the
-    /// cursor is the metrics' global step count, so chunked progress
-    /// loops advance through the split instead of retraining its head).
-    /// Returns the running mean loss over these steps (0.0 for zero
-    /// steps, like [`Trainer::train_epoch`] on an empty prefix).
+    /// Train for a fixed number of optimizer steps, cycling the dataset
+    /// in `batch_size` blocks and continuing from wherever previous
+    /// step-driven calls stopped.  Returns the running mean loss over
+    /// these steps (0.0 for zero steps, like [`Trainer::train_epoch`] on
+    /// an empty prefix).
     pub fn train_steps(&mut self, data: &Dataset, steps: usize) -> Result<f32> {
         if steps > 0 && data.is_empty() {
             return Err(anyhow!("train_steps: dataset is empty"));
         }
         let mut total = 0.0f32;
         for _ in 0..steps {
-            let ex = &data.examples[self.metrics.steps % data.len()];
-            let out = self
-                .backend
-                .train_step(&ex.tokens, &[ex.intent], &ex.slots, self.lr)?;
-            self.metrics
-                .record_step(out.loss, out.execute_secs, out.host_secs);
-            total += out.loss;
+            let refs: Vec<&Example> = (0..self.batch_size)
+                .map(|j| &data.examples[(self.cursor + j) % data.len()])
+                .collect();
+            self.cursor = (self.cursor + self.batch_size) % data.len();
+            total += self.step_batch(&refs)?;
         }
         Ok(total / steps.max(1) as f32)
     }

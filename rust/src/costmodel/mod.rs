@@ -239,6 +239,16 @@ impl LinearShape {
     pub fn training_factor() -> u64 {
         3
     }
+
+    /// PU-stage optimizer-state elements for this layer: state mirrors
+    /// the compressed parameters (cores + bias), `state_multiplier`
+    /// copies (0 for SGD, 1 for momentum, 2 for Adam/AdamW — see
+    /// `crate::optim::OptimKind::state_multiplier`).  K-independent:
+    /// unlike the Eq. 21 caches, optimizer state never carries the
+    /// sequence dimension.
+    pub fn optimizer_state_elems(&self, state_multiplier: u64) -> u64 {
+        state_multiplier * (self.tt_params() + self.m())
+    }
 }
 
 /// One row of a Fig. 6-style comparison.
@@ -415,6 +425,18 @@ mod tests {
             );
             assert_eq!(shape.btt_training_cache_elems(k), shape.btt_memory(k));
         }
+    }
+
+    #[test]
+    fn optimizer_state_is_k_independent_and_scales_with_multiplier() {
+        let shape = LinearShape::paper();
+        let params = shape.tt_params() + shape.m();
+        assert_eq!(shape.optimizer_state_elems(0), 0);
+        assert_eq!(shape.optimizer_state_elems(1), params);
+        assert_eq!(shape.optimizer_state_elems(2), 2 * params);
+        // Dense-equivalent Adam state would be 2 M N; compressed state
+        // keeps the full compression ratio.
+        assert!(shape.optimizer_state_elems(2) < 2 * shape.mm_weight() / 20);
     }
 
     #[test]

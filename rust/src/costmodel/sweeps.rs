@@ -1,11 +1,16 @@
-//! Parameter sweeps regenerating the paper's Fig. 6 and Fig. 7.
+//! Parameter sweeps regenerating the paper's Fig. 6 and Fig. 7, plus
+//! the PU-stage optimizer-state column.
 //!
 //! Fig. 6: computation and memory of MM / TTM / TT / BTT at the Table II
 //! attention shape, seq len 32.
 //! Fig. 7 (top): reduction ratios vs sequence length 8..512 at rank 12.
 //! Fig. 7 (bottom): reduction ratios vs TT rank 1..48 at seq len 32.
+//! [`optimizer_state_table`]: whole-model optimizer-state memory per
+//! update rule, compressed vs dense-equivalent.
 
 use super::{compare_all, CostRow, LinearShape};
+use crate::config::ModelConfig;
+use crate::optim::{OptimKind, StateFootprint};
 
 /// One sweep point: the independent variable plus all method rows.
 #[derive(Debug, Clone)]
@@ -69,6 +74,32 @@ pub fn render_sweep(points: &[SweepPoint], x_name: &str) -> String {
     out
 }
 
+/// PU-stage optimizer-state column for a whole model: per update rule,
+/// the state multiplier, the compressed state size (fp32), and what the
+/// same rule would cost on the uncompressed model — the paper's
+/// on-chip-optimizer story in one table.
+pub fn optimizer_state_table(cfg: &ModelConfig) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>11} {:>14} {:>12} {:>14}\n",
+        "optimizer", "state/param", "state elems", "state MB", "dense-equiv MB"
+    ));
+    for kind in OptimKind::all() {
+        let fp = StateFootprint::for_model(cfg, kind);
+        let dense_mb =
+            (kind.state_multiplier() * cfg.dense_equivalent_params()) as f64 * 4.0 / 1e6;
+        out.push_str(&format!(
+            "{:<10} {:>10}x {:>14} {:>12.3} {:>14.1}\n",
+            kind.name(),
+            kind.state_multiplier(),
+            fp.state_elems,
+            fp.state_mb(),
+            dense_mb
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +144,18 @@ mod tests {
         let pts = seq_len_sweep(12, &[8, 16]);
         let s = render_sweep(&pts, "seq");
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn optimizer_state_table_covers_all_rules() {
+        let s = optimizer_state_table(&ModelConfig::paper(2));
+        assert_eq!(s.lines().count(), 5, "header + 4 optimizer rows");
+        for kind in OptimKind::all() {
+            assert!(s.contains(kind.name()), "missing row for {:?}", kind);
+        }
+        // Adam state on the compressed 2-ENC model stays well under a
+        // single MB while the dense equivalent would be ~73 MB.
+        let adam = StateFootprint::for_model(&ModelConfig::paper(2), OptimKind::Adam);
+        assert!(adam.state_mb() < 3.0, "compressed Adam state {} MB", adam.state_mb());
     }
 }

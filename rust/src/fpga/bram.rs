@@ -167,6 +167,26 @@ pub fn paper_core_set(n_layers: usize, rank: usize) -> Vec<(CoreArray, usize)> {
     ]
 }
 
+/// Optimizer-state arrays for the same model: state lives in the same
+/// compressed TT/TTM-core layout as the parameters (the paper's PU
+/// stage keeps all optimizer information on chip), so each state copy
+/// is one more array of every core shape — `multiplier` copies per core
+/// (0 for SGD, 1 for momentum, 2 for Adam/AdamW; see
+/// `crate::optim::OptimKind::state_multiplier`).
+pub fn optimizer_state_core_set(
+    n_layers: usize,
+    rank: usize,
+    multiplier: usize,
+) -> Vec<(CoreArray, usize)> {
+    if multiplier == 0 {
+        return Vec::new();
+    }
+    paper_core_set(n_layers, rank)
+        .into_iter()
+        .map(|(array, count)| (array, count * multiplier))
+        .collect()
+}
+
 /// Fig. 12 / Fig. 14 driver: efficiency of each strategy for a model.
 pub fn strategy_comparison(n_layers: usize, rank: usize) -> Vec<Allocation> {
     let cores = paper_core_set(n_layers, rank);
@@ -245,6 +265,18 @@ mod tests {
                 ungrouped.total_blocks
             );
         });
+    }
+
+    #[test]
+    fn optimizer_state_scales_like_the_cores() {
+        // Adam state (2x) holds exactly twice the bits of the parameter
+        // cores, and the grouped allocator places it in at most 2x the
+        // blocks plus per-array rounding.
+        let params = allocate(&paper_core_set(2, 12), Strategy::ReshapeGrouped, 3);
+        let adam = allocate(&optimizer_state_core_set(2, 12, 2), Strategy::ReshapeGrouped, 3);
+        assert_eq!(adam.total_bits, 2 * params.total_bits);
+        assert!(adam.total_blocks <= 2 * params.total_blocks + 16);
+        assert!(optimizer_state_core_set(2, 12, 0).is_empty(), "SGD keeps no state");
     }
 
     #[test]

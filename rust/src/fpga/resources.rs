@@ -15,6 +15,7 @@
 
 use super::bram::{self, Strategy};
 use crate::config::{ModelConfig, U50};
+use crate::optim::OptimKind;
 
 /// Utilization of one fabric resource.
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +41,18 @@ pub struct ResourceReport {
     pub uram: Util,
     pub dynamic_power_w: f64,
     pub static_power_w: f64,
+    /// PU-stage update rule this report was sized for.
+    pub optim_kind: OptimKind,
+    /// BRAM blocks holding optimizer state (0 when it spilled to URAM).
+    pub optim_state_bram: usize,
+    /// URAM blocks holding optimizer state.
+    pub optim_state_uram: usize,
+    /// Unclamped BRAM demand — unlike `bram.used` (display, clamped to
+    /// the device), this may exceed the budget and is what feasibility
+    /// checks must look at.
+    pub bram_required: usize,
+    /// Unclamped URAM demand (see `bram_required`).
+    pub uram_required: usize,
 }
 
 impl ResourceReport {
@@ -50,6 +63,13 @@ impl ResourceReport {
     /// On-chip memory in MB (BRAM + URAM actually occupied).
     pub fn onchip_memory_mb(&self) -> f64 {
         (self.bram.used * U50::BRAM_BITS + self.uram.used * U50::URAM_BITS) as f64 / 8.0 / 1e6
+    }
+
+    /// Optimizer-state share of the on-chip memory, in MB.
+    pub fn optim_state_mb(&self) -> f64 {
+        (self.optim_state_bram * U50::BRAM_BITS + self.optim_state_uram * U50::URAM_BITS) as f64
+            / 8.0
+            / 1e6
     }
 }
 
@@ -116,8 +136,20 @@ fn activation_words(cfg: &ModelConfig) -> (usize, usize) {
     (working + btt, stash)
 }
 
-/// Build the Table IV row for a model configuration.
+/// Build the Table IV row for a model configuration (PU stage = plain
+/// SGD, the paper's setting: no optimizer state on chip).
 pub fn report(cfg: &ModelConfig) -> ResourceReport {
+    report_with_optim(cfg, OptimKind::Sgd)
+}
+
+/// Table IV row with the PU stage's optimizer state charged against the
+/// on-chip budget.  State mirrors the compressed parameter layout
+/// (`crate::optim::StateFootprint`): the TT/TTM-core share goes through
+/// the same grouped-reshape BRAM allocator as the cores themselves and
+/// the dense share (LN/bias/pos/head tensors) is word-packed; when the
+/// parameter BRAM plus state no longer fits the 1344-block budget, the
+/// state spills to URAM (like the deep-config activation stash).
+pub fn report_with_optim(cfg: &ModelConfig, optim: OptimKind) -> ResourceReport {
     let (dsp, lut, ff) = KernelCosts::total();
 
     // Parameter storage in BRAM via the grouped-reshape allocator.
@@ -150,6 +182,26 @@ pub fn report(cfg: &ModelConfig) -> ResourceReport {
         uram_used += (work_words * 32).div_ceil(U50::URAM_BITS) + work_bram / 2;
     }
 
+    // PU-stage optimizer state in the compressed layout: the TT/TTM-core
+    // share through the grouped allocator, the dense share word-packed.
+    let mult = optim.state_multiplier();
+    let state_cores = bram::optimizer_state_core_set(cfg.n_layers, cfg.tt_rank, mult);
+    let state_alloc = bram::allocate(&state_cores, Strategy::ReshapeGrouped, group_k);
+    let dense_state_words = mult * small_words;
+    let state_bram_blocks =
+        state_alloc.total_blocks + (dense_state_words * 32).div_ceil(U50::BRAM_BITS);
+    let state_bits = state_alloc.total_bits + dense_state_words * 32;
+    let (optim_state_bram, optim_state_uram) =
+        if mult == 0 {
+            (0, 0)
+        } else if bram_used + state_bram_blocks <= U50::BRAM_BLOCKS {
+            (state_bram_blocks, 0)
+        } else {
+            (0, state_bits.div_ceil(U50::URAM_BITS))
+        };
+    bram_used += optim_state_bram;
+    uram_used += optim_state_uram;
+
     // Dynamic power: calibrated linear model in active compute + memory.
     let dynamic = 20.55 + 0.07 * cfg.n_layers as f64;
 
@@ -162,6 +214,11 @@ pub fn report(cfg: &ModelConfig) -> ResourceReport {
         uram: Util { used: uram_used.min(U50::URAM_BLOCKS), available: U50::URAM_BLOCKS },
         dynamic_power_w: dynamic,
         static_power_w: U50::STATIC_POWER_W,
+        optim_kind: optim,
+        optim_state_bram,
+        optim_state_uram,
+        bram_required: bram_used,
+        uram_required: uram_used,
     }
 }
 
@@ -217,6 +274,73 @@ mod tests {
             assert!(r.bram.used <= r.bram.available);
             assert!(r.uram.used <= r.uram.available);
         }
+    }
+
+    #[test]
+    fn optimizer_state_fits_the_device_for_every_rule() {
+        // Acceptance: the BRAM/URAM report carries an optimizer-state
+        // row and that state stays within the U50 budget for all four
+        // update rules at every paper depth.  Checked on the *unclamped*
+        // demand fields (`bram_required`/`uram_required`), not the
+        // display-clamped Util — the seed's calibrated base model
+        // already oversubscribes BRAM slightly at L4 (the paper's HLS
+        // moves arrays to URAM more aggressively than our threshold
+        // model), so the meaningful guarantees are: state never worsens
+        // BRAM demand unless it genuinely fits, and total URAM demand
+        // including state stays within the 640-block budget.
+        for layers in [2usize, 4, 6] {
+            let base = report(&ModelConfig::paper(layers));
+            for kind in OptimKind::all() {
+                let r = report_with_optim(&ModelConfig::paper(layers), kind);
+                assert!(
+                    r.uram_required <= r.uram.available,
+                    "L{layers} {kind:?} URAM demand {} over budget",
+                    r.uram_required
+                );
+                if r.optim_state_bram > 0 {
+                    // State was placed in BRAM => the whole BRAM plan fits.
+                    assert!(
+                        r.bram_required <= r.bram.available,
+                        "L{layers} {kind:?} BRAM demand {} over budget with on-BRAM state",
+                        r.bram_required
+                    );
+                } else {
+                    // State spilled to URAM (or is empty): BRAM demand
+                    // is exactly the SGD baseline, never worse.
+                    assert_eq!(
+                        r.bram_required, base.bram_required,
+                        "L{layers} {kind:?} state changed BRAM demand despite spilling"
+                    );
+                }
+                let state_blocks = r.optim_state_bram + r.optim_state_uram;
+                if kind.state_multiplier() == 0 {
+                    assert_eq!(state_blocks, 0, "SGD keeps no optimizer state");
+                } else {
+                    assert!(state_blocks > 0, "L{layers} {kind:?} state row missing");
+                    // Compressed-space state stays small: the Adam pair
+                    // of moments on the deepest model is a few MB, far
+                    // under the 22.5 MB URAM budget on its own.
+                    assert!(
+                        r.optim_state_mb() < 6.0,
+                        "L{layers} {kind:?} state {:.1} MB",
+                        r.optim_state_mb()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adam_state_exceeds_momentum_state() {
+        let cfg = ModelConfig::paper(4);
+        let mom = report_with_optim(&cfg, OptimKind::Momentum);
+        let adam = report_with_optim(&cfg, OptimKind::Adam);
+        let blocks = |r: &ResourceReport| r.optim_state_bram * U50::BRAM_BITS
+            + r.optim_state_uram * U50::URAM_BITS;
+        assert!(blocks(&adam) > blocks(&mom), "2x state must outweigh 1x");
+        // AdamW keeps the same two moments as Adam.
+        let adamw = report_with_optim(&cfg, OptimKind::AdamW);
+        assert_eq!(blocks(&adam), blocks(&adamw));
     }
 
     #[test]

@@ -27,10 +27,23 @@
 //!   hand-derived backward through the BTT contraction (gradients of
 //!   the TT cores via the merged Z1/Z3 chain states), attention /
 //!   LayerNorm / GELU VJPs, the joint intent+slot cross-entropy, and a
-//!   fused SGD update — no XLA, no Python, no artifacts.  Backward
-//!   FLOPs/memory carry the same [`tensor::ContractionStats`]
+//!   pluggable parameter update — no XLA, no Python, no artifacts.
+//!   Backward FLOPs/memory carry the same [`tensor::ContractionStats`]
 //!   instrumentation as the forward engines and validate against the
 //!   cost model's Eqs. 18-21 ([`costmodel::LinearShape::btt_bwd_muls`]).
+//!
+//! ## The PU stage
+//!
+//! The paper's parameter-update stage keeps gradients *and* optimizer
+//! state on chip in the same compressed TT/TTM-core layout as the
+//! weights — the [`optim`] subsystem reproduces that: an
+//! [`optim::Optimizer`] trait with SGD / momentum / Adam / AdamW rules
+//! whose per-parameter state buffers mirror the core shapes exactly
+//! (0x / 1x / 2x the compressed parameter count), a mini-batch path
+//! where the contraction K dimension carries `B * S` tokens, and an
+//! [`optim::StateFootprint`] report that [`costmodel`] and
+//! [`fpga::resources`] charge against the U50 BRAM/URAM budget right
+//! next to the cores and the Eq. 21 activation caches.
 //!
 //! After `make artifacts` the binary is self-contained with either
 //! backend; with the native backend it is self-contained from a bare
@@ -51,6 +64,7 @@ pub mod costmodel;
 pub mod data;
 pub mod fpga;
 pub mod inference;
+pub mod optim;
 pub mod runtime;
 pub mod tensor;
 pub mod train;

@@ -25,6 +25,7 @@ use tt_trainer::coordinator::{TrainBackend, Trainer};
 use tt_trainer::costmodel::{compare_all, sweeps, LinearShape};
 use tt_trainer::data::Dataset;
 use tt_trainer::fpga::{bram, energy, resources, schedule};
+use tt_trainer::optim::{OptimConfig, OptimKind};
 use tt_trainer::runtime::Manifest;
 use tt_trainer::train::NativeTrainer;
 use tt_trainer::util::cli::Args;
@@ -59,6 +60,8 @@ COMMANDS:
                   --steps N | --epochs E [--limit N]
                   --lr 0.004 --seed 42 --ckpt DIR --loss-csv FILE
                   native:  --layers 2 [--init-ckpt DIR]
+                           --optimizer sgd|momentum|adam|adamw --batch N
+                           --weight-decay 0.0
                   pjrt:    --variant tt_L2 --artifacts DIR
   eval          evaluate on the test split
                   --backend native|pjrt [--limit N]
@@ -81,6 +84,11 @@ const DEFAULT_BACKEND: &str = "native";
 fn cmd_info(args: &Args) -> Result<()> {
     let m = manifest(args)?;
     println!("manifest: seed={} lr={} epochs={}", m.seed, m.lr, m.epochs);
+    println!(
+        "PU stage: optimizer={} batch={}",
+        m.optim.kind.name(),
+        m.optim.batch_size
+    );
     println!("\nTable II/III view:");
     println!(
         "{:<8} {:>7} {:>12} {:>12} {:>11} {:>9}",
@@ -119,13 +127,34 @@ fn native_backend(args: &Args, seed: u64, load_keys: &[&str]) -> Result<NativeTr
     Ok(backend)
 }
 
+/// PU-stage configuration from the CLI (`--optimizer`, `--batch`,
+/// `--weight-decay`); everything else falls back to the
+/// [`OptimConfig::default`] / [`tt_trainer::config::TrainConfig`] chain.
+fn optim_from_args(args: &Args) -> Result<OptimConfig> {
+    let defaults = OptimConfig::default();
+    Ok(OptimConfig {
+        kind: OptimKind::parse(args.get_or("optimizer", defaults.kind.name()))?,
+        batch_size: args.get_usize("batch", defaults.batch_size).max(1),
+        weight_decay: args.get_f64("weight-decay", defaults.weight_decay as f64) as f32,
+        ..defaults
+    })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42) as u64;
     match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
-            let lr = args.get_f64("lr", 4e-3) as f32;
-            let backend = native_backend(args, seed, &["init-ckpt"])?;
-            run_training(Trainer::new(backend, lr), args, seed)
+            let optim = optim_from_args(args)?;
+            // Per-rule default lr; explicit --lr always wins.
+            let lr = args.get_f64("lr", optim.kind.default_lr() as f64) as f32;
+            let batch = optim.batch_size;
+            println!(
+                "optimizer {} | batch {batch} | weight decay {}",
+                optim.kind.name(),
+                optim.weight_decay
+            );
+            let backend = native_backend(args, seed, &["init-ckpt"])?.with_optim(optim);
+            run_training(Trainer::with_batch(backend, lr, batch), args, seed)
         }
         "pjrt" => cmd_train_pjrt(args, seed),
         other => Err(anyhow!("unknown --backend '{other}' (native|pjrt)")),
@@ -144,8 +173,22 @@ fn cmd_train_pjrt(args: &Args, seed: u64) -> Result<()> {
         spec.params.len(),
         spec.compression_ratio()
     );
+    // The PJRT artifact bakes its PU stage in at compile time: the
+    // manifest records which optimizer was lowered, and the runtime
+    // batch must be the compiled one.
+    let batch = spec.config.batch.max(1);
+    println!(
+        "PU stage (compiled into the artifact): optimizer {} | batch {batch}",
+        m.optim.kind.name()
+    );
+    if m.optim.batch_size != batch {
+        println!(
+            "note: manifest train.batch_size {} != compiled batch {batch}; using the compiled batch",
+            m.optim.batch_size
+        );
+    }
     let engine = Engine::load(spec)?;
-    run_training(Trainer::new(engine, lr), args, seed)
+    run_training(Trainer::with_batch(engine, lr, batch), args, seed)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -184,17 +227,21 @@ fn run_training<B: TrainBackend>(mut trainer: Trainer<B>, args: &Args, seed: u64
             let ev = trainer.evaluate(&test, Some(200))?;
             trainer.metrics.record_eval(e, ev.intent_acc, ev.slot_acc);
             println!(
-                "epoch {e}: loss {mean:.4} | intent acc {:.3} | slot acc {:.3}",
-                ev.intent_acc, ev.slot_acc
+                "epoch {e}: loss {mean:.4} | intent acc {:.3} | slot acc {:.3} | {:.2}s wall",
+                ev.intent_acc,
+                ev.slot_acc,
+                trainer.metrics.epoch_secs.last().copied().unwrap_or(f64::NAN)
             );
         }
     }
     println!(
-        "timing: {:.2}s execute, {:.2}s host ({:.1}% overhead), {} steps",
+        "timing: {:.2}s execute, {:.2}s host ({:.1}% overhead), {} steps | {:.1} steps/s | {:.0} tokens/s",
         trainer.metrics.execute_secs,
         trainer.metrics.host_secs,
         100.0 * trainer.metrics.host_overhead_frac(),
-        trainer.metrics.steps
+        trainer.metrics.steps,
+        trainer.metrics.steps_per_sec(),
+        trainer.metrics.tokens_per_sec()
     );
     if let Some(dir) = args.get("ckpt") {
         trainer.backend.save_checkpoint(Path::new(dir))?;
@@ -212,7 +259,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
             let backend = native_backend(args, seed, &["init-ckpt", "ckpt"])?;
-            run_eval(Trainer::new(backend, 4e-3), args, seed)
+            run_eval(Trainer::evaluator(backend), args, seed)
         }
         "pjrt" => cmd_eval_pjrt(args, seed),
         other => Err(anyhow!("unknown --backend '{other}' (native|pjrt)")),
@@ -225,7 +272,7 @@ fn cmd_eval_pjrt(args: &Args, seed: u64) -> Result<()> {
     let m = manifest(args)?;
     let spec = m.variant(args.get_or("variant", "tt_L2"))?;
     let engine = Engine::load(spec)?;
-    run_eval(Trainer::new(engine, m.lr), args, seed)
+    run_eval(Trainer::evaluator(engine), args, seed)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -274,6 +321,13 @@ fn cmd_cost_model() -> Result<()> {
         "BTT bwd muls at K=32: {} (training cache: {} elements)",
         shape.btt_bwd_muls(32),
         shape.btt_training_cache_elems(32)
+    );
+    println!("\n=== PU stage: optimizer state in compressed TT space (2-ENC) ===");
+    print!("{}", sweeps::optimizer_state_table(&ModelConfig::paper(2)));
+    println!(
+        "per TT linear at K-independent state: 1x = {} elems, 2x = {} elems",
+        shape.optimizer_state_elems(1),
+        shape.optimizer_state_elems(2)
     );
     println!("\n=== Fig. 7 (top): sequence-length sweep at rank 12 ===");
     print!(
@@ -362,6 +416,27 @@ fn cmd_fpga_report() -> Result<()> {
             r.total_power_w()
         );
     }
+    println!("\n=== Optimizer state vs the U50 budget (PU stage) ===");
+    println!(
+        "{:<7} {:<10} {:>11} {:>11} {:>10} {:>9} {:>9}",
+        "model", "optimizer", "state BRAM", "state URAM", "state MB", "BRAM", "URAM"
+    );
+    for layers in [2usize, 4, 6] {
+        for kind in OptimKind::all() {
+            let r = resources::report_with_optim(&ModelConfig::paper(layers), kind);
+            println!(
+                "{:<7} {:<10} {:>11} {:>11} {:>10.2} {:>9} {:>9}",
+                format!("{layers}-ENC"),
+                kind.name(),
+                r.optim_state_bram,
+                r.optim_state_uram,
+                r.optim_state_mb(),
+                format!("{}/{}", r.bram.used, r.bram.available),
+                format!("{}/{}", r.uram.used, r.uram.available)
+            );
+        }
+    }
+
     println!("\n=== Table V: GPU vs FPGA ===");
     print!("{}", energy::render_table_v(&energy::table_v()));
     println!("\n=== Fig. 1 summary (GPU-TT vs FPGA) ===");

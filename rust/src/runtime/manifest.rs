@@ -1,6 +1,7 @@
 //! Typed view over `artifacts/manifest.json`.
 
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, TrainConfig};
+use crate::optim::{OptimConfig, OptimKind};
 use crate::util::json::Value;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
@@ -45,11 +46,17 @@ impl VariantSpec {
 }
 
 /// Parsed manifest: the contract between `aot.py` and this runtime.
+///
+/// Training fallbacks route through [`TrainConfig::default`] (the single
+/// source of truth for the paper's setup); a manifest may additionally
+/// carry `train.optimizer` / `train.batch_size` for the PU stage.
 #[derive(Debug)]
 pub struct Manifest {
     pub seed: u64,
     pub lr: f32,
     pub epochs: usize,
+    /// PU-stage optimizer configuration (defaults to SGD, batch 1).
+    pub optim: OptimConfig,
     pub variants: Vec<VariantSpec>,
     pub dir: PathBuf,
 }
@@ -128,10 +135,30 @@ impl Manifest {
                 name,
             });
         }
+        let defaults = TrainConfig::default();
+        let optim_defaults = OptimConfig::default();
+        let optim = OptimConfig {
+            kind: match train.get("optimizer").and_then(Value::as_str) {
+                Some(kind) => OptimKind::parse(kind)?,
+                None => optim_defaults.kind,
+            },
+            batch_size: train
+                .get("batch_size")
+                .and_then(Value::as_usize)
+                .unwrap_or(defaults.batch_size),
+            ..optim_defaults
+        };
         Ok(Manifest {
             seed: root.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
-            lr: train.get("lr").and_then(Value::as_f64).unwrap_or(4e-3) as f32,
-            epochs: train.get("epochs").and_then(Value::as_usize).unwrap_or(40),
+            lr: train
+                .get("lr")
+                .and_then(Value::as_f64)
+                .unwrap_or(defaults.lr as f64) as f32,
+            epochs: train
+                .get("epochs")
+                .and_then(Value::as_usize)
+                .unwrap_or(defaults.epochs),
+            optim,
             variants,
             dir,
         })

@@ -8,9 +8,12 @@
 //!
 //! All products run through one cache-blocked `ikj` kernel that streams
 //! rows of the right operand and skips zero left entries.  Large products
-//! are split row-wise across `std::thread` workers.  Both the k-blocking
-//! and the row split preserve the exact floating-point accumulation
-//! order of the serial kernel, so results are **bitwise identical**
+//! are split row-wise across a **lazily-initialized persistent worker
+//! pool** (spawned once per process, fed through a shared queue — no
+//! per-call thread spawn on the hot path; the calling thread works the
+//! first band while the pool works the rest).  Both the k-blocking and
+//! the row split preserve the exact floating-point accumulation order
+//! of the serial kernel, so results are **bitwise identical**
 //! regardless of size or thread count — parity tests and checkpoint
 //! determinism do not depend on the dispatch decision.
 //!
@@ -20,22 +23,103 @@
 //! attention in both the forward and backward pass.
 
 use anyhow::{anyhow, Result};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Multiply-accumulate count above which `matmul` switches to the
-/// thread-parallel path (threads cost ~10us each to launch; below this
-/// the serial kernel wins).
+/// thread-parallel path (handing bands to the pool still costs a queue
+/// round-trip; below this the serial kernel wins).
 const PAR_MULS_THRESHOLD: usize = 1 << 20;
 
 /// k-dimension block of the inner kernel: 64 rows of the right operand
 /// (<= 64 * 4 * n bytes) stay hot in L1/L2 while an output row is built.
 const BLOCK_K: usize = 64;
 
-fn worker_count(rows: usize) -> usize {
-    std::thread::available_parallelism()
-        .map(|t| t.get())
-        .unwrap_or(1)
-        .min(rows)
-        .max(1)
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+//
+// Threads cost ~10us each to launch; the old per-call `thread::scope`
+// paid that on every large matmul.  The pool spawns its workers once
+// (first parallel product) and feeds them through a shared LIFO queue;
+// a per-dispatch latch blocks the caller until its jobs drain, which is
+// also what makes the short-lived borrows in each job sound.
+// ---------------------------------------------------------------------------
+
+/// A queued unit of work.  Jobs are erased to `'static` at dispatch; the
+/// dispatching call guarantees their real borrows outlive execution by
+/// blocking on the latch before returning.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    queue: Mutex<Vec<Job>>,
+    work_ready: Condvar,
+    /// Worker threads parked on `work_ready` (0 on single-core hosts —
+    /// the caller then runs everything inline).
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .saturating_sub(1);
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("tt-matmul-{i}"))
+                .spawn(worker_loop)
+                .expect("spawning matmul worker");
+        }
+        Pool { queue: Mutex::new(Vec::new()), work_ready: Condvar::new(), workers }
+    })
+}
+
+fn worker_loop() {
+    // Workers racing into `pool()` during initialization block on the
+    // OnceLock until the initializer (on the first caller) completes.
+    let p = pool();
+    let mut guard = p.queue.lock().unwrap();
+    loop {
+        if let Some(job) = guard.pop() {
+            drop(guard);
+            job();
+            guard = p.queue.lock().unwrap();
+        } else {
+            guard = p.work_ready.wait(guard).unwrap();
+        }
+    }
+}
+
+/// Completion latch for one dispatch: counts outstanding jobs and
+/// records whether any of them panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    all_done: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch { state: Mutex::new((jobs, false)), all_done: Condvar::new() }
+    }
+
+    fn finish(&self, panicked: bool) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        g.1 |= panicked;
+        if g.0 == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    /// Block until every job finished; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.all_done.wait(g).unwrap();
+        }
+        g.1
+    }
 }
 
 /// Blocked `ikj` kernel over a contiguous band of output rows.
@@ -64,7 +148,9 @@ fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, k: usize, n: 
 }
 
 /// Run `f(batch_index, out_chunk)` for every `stride`-sized chunk of
-/// `out`, optionally fanning the chunks out across threads.
+/// `out`, optionally fanning the chunks out across the persistent
+/// worker pool.  Each chunk is computed wholly within one band, so the
+/// band split never changes any element's accumulation order.
 fn for_each_chunk<F>(out: &mut [f32], stride: usize, parallel: bool, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -73,23 +159,57 @@ where
         return;
     }
     let chunks = out.len() / stride;
-    if !parallel || chunks < 2 {
+    let lanes = if parallel { pool().workers + 1 } else { 1 };
+    if lanes < 2 || chunks < 2 {
         for (i, chunk) in out.chunks_mut(stride).enumerate() {
             f(i, chunk);
         }
         return;
     }
-    let per_worker = chunks.div_ceil(worker_count(chunks));
-    std::thread::scope(|scope| {
-        for (w, group) in out.chunks_mut(per_worker * stride).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (j, chunk) in group.chunks_mut(stride).enumerate() {
-                    f(w * per_worker + j, chunk);
-                }
-            });
+    let per_worker = chunks.div_ceil(lanes.min(chunks));
+    let mut bands: Vec<(usize, &mut [f32])> =
+        out.chunks_mut(per_worker * stride).enumerate().collect();
+    let latch = Latch::new(bands.len() - 1);
+    {
+        let p = pool();
+        let mut queue = p.queue.lock().unwrap();
+        for (w, band) in bands.drain(1..) {
+            let f_ref = &f;
+            let latch_ref = &latch;
+            let job = move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    for (j, chunk) in band.chunks_mut(stride).enumerate() {
+                        f_ref(w * per_worker + j, chunk);
+                    }
+                }));
+                latch_ref.finish(result.is_err());
+            };
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(job);
+            // SAFETY: lifetime erasure only.  The borrows inside `job`
+            // (`f`, `latch`, the band of `out`) stay valid until
+            // `latch.wait()` below returns, and `finish` runs even when
+            // the job panics (catch_unwind), so `wait` cannot miss a
+            // job and this function cannot return while any job still
+            // holds a borrow.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            queue.push(job);
         }
-    });
+        p.work_ready.notify_all();
+    }
+    // Band 0 runs on the calling thread while the pool works the rest.
+    let band0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let (_, band) = bands.pop().expect("band 0");
+        for (j, chunk) in band.chunks_mut(stride).enumerate() {
+            f(j, chunk);
+        }
+    }));
+    let worker_panicked = latch.wait();
+    if let Err(payload) = band0 {
+        std::panic::resume_unwind(payload);
+    }
+    if worker_panicked {
+        panic!("matmul worker panicked");
+    }
 }
 
 /// Dense row-major tensor.
@@ -462,6 +582,28 @@ mod tests {
         let c1 = a.matmul(&b).unwrap();
         let c2 = a.matmul(&b).unwrap();
         assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn pool_survives_concurrent_callers_and_stays_deterministic() {
+        // Several user threads hammering the shared persistent pool at
+        // once: every product must match the single-threaded result
+        // bitwise (bands are independent; the queue only schedules).
+        let mut rng = SplitMix64::new(13);
+        let a = Tensor::randn(&[140, 90], 1.0, &mut rng);
+        let b = Tensor::randn(&[90, 100], 1.0, &mut rng);
+        assert!(140 * 90 * 100 >= super::PAR_MULS_THRESHOLD);
+        let want = a.matmul(&b).unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (a, b, want) = (&a, &b, &want);
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        assert_eq!(a.matmul(b).unwrap().data, want.data);
+                    }
+                });
+            }
+        });
     }
 
     #[test]

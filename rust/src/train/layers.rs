@@ -16,6 +16,7 @@
 //! analytic form, asserted against the executed
 //! [`ContractionStats`] in the tests.
 
+use crate::optim::{Hyper, ModelOptim};
 use crate::tensor::{ops, ContractionStats, Tensor, TTMatrix};
 use anyhow::{anyhow, Result};
 
@@ -201,17 +202,22 @@ impl TTLinear {
         Ok((dx, TTLinearGrads { cores: core_grads, bias: dbias }))
     }
 
-    /// Fused SGD update (the paper's PU stage): `w -= lr * dw` applied
-    /// in place, core by core, as gradients become available.
-    pub fn sgd_update(&mut self, grads: &TTLinearGrads, lr: f32) {
-        for (core, g) in self.tt.cores.iter_mut().zip(&grads.cores) {
-            for (w, &dw) in core.data.iter_mut().zip(&g.data) {
-                *w -= lr * dw;
-            }
+    /// The paper's PU stage for this layer: dispatch every core (and the
+    /// bias) through the pluggable optimizer, in place, as gradients
+    /// become available.  `prefix` is the layer's checkpoint/manifest
+    /// name (e.g. `layers.0.wq`), which keys the per-core optimizer
+    /// state — state buffers mirror the compressed core shapes exactly.
+    pub fn apply_update(
+        &mut self,
+        grads: &TTLinearGrads,
+        opt: &mut ModelOptim,
+        prefix: &str,
+        hyper: &Hyper,
+    ) {
+        for (k, (core, g)) in self.tt.cores.iter_mut().zip(&grads.cores).enumerate() {
+            opt.step(&format!("{prefix}.cores.{k}"), &mut core.data, &g.data, hyper);
         }
-        for (b, &db) in self.bias.iter_mut().zip(&grads.bias) {
-            *b -= lr * db;
-        }
+        opt.step(&format!("{prefix}.bias"), &mut self.bias, &grads.bias, hyper);
     }
 }
 
@@ -288,26 +294,46 @@ mod tests {
     }
 
     #[test]
-    fn sgd_update_reduces_reconstruction_loss() {
-        // A few SGD steps on L = ||Y - Y*||^2 / 2 must reduce L.
-        let mut rng = SplitMix64::new(54);
-        let mut l = layer(&mut rng);
-        let x = Tensor::randn(&[8, 12], 1.0, &mut rng);
-        let target = Tensor::randn(&[8, 12], 0.5, &mut rng);
-        let mut first = None;
-        let mut last = 0.0f32;
-        for _ in 0..60 {
-            let mut stats = ContractionStats::default();
-            let (y, cache) = l.forward(&x, &mut stats).unwrap();
-            let mut dy = y.clone();
-            for (d, &t) in dy.data.iter_mut().zip(&target.data) {
-                *d -= t;
+    fn optimizer_update_reduces_reconstruction_loss() {
+        // PU-stage steps on L = ||Y - Y*||^2 / 2 must reduce L, for the
+        // stateless and the stateful update rules alike (each at a
+        // learning rate suited to its step-size semantics: momentum's
+        // effective rate is lr / (1 - mu), Adam's step is ~lr itself).
+        use crate::optim::{OptimConfig, OptimKind};
+        for (kind, lr) in [
+            (OptimKind::Sgd, 0.01f32),
+            (OptimKind::Momentum, 0.003),
+            (OptimKind::Adam, 0.05),
+            (OptimKind::AdamW, 0.05),
+        ] {
+            let mut rng = SplitMix64::new(54);
+            let mut l = layer(&mut rng);
+            let x = Tensor::randn(&[8, 12], 1.0, &mut rng);
+            let target = Tensor::randn(&[8, 12], 0.5, &mut rng);
+            let mut opt = ModelOptim::new(OptimConfig { kind, ..Default::default() });
+            let hyper = opt.hyper(lr);
+            let mut first = None;
+            let mut last = 0.0f32;
+            for _ in 0..80 {
+                let mut stats = ContractionStats::default();
+                let (y, cache) = l.forward(&x, &mut stats).unwrap();
+                let mut dy = y.clone();
+                for (d, &t) in dy.data.iter_mut().zip(&target.data) {
+                    *d -= t;
+                }
+                last = 0.5 * dy.norm().powi(2);
+                first.get_or_insert(last);
+                let (_, grads) = l.backward(&dy, &cache, &mut stats).unwrap();
+                l.apply_update(&grads, &mut opt, "probe", &hyper);
             }
-            last = 0.5 * dy.norm().powi(2);
-            first.get_or_insert(last);
-            let (_, grads) = l.backward(&dy, &cache, &mut stats).unwrap();
-            l.sgd_update(&grads, 0.01);
+            assert!(last < 0.6 * first.unwrap(), "{kind:?}: loss {last} vs {first:?}");
+            // One slot per core + bias, state sized by the rule.
+            let elems: u64 = l.tt.cores.iter().map(|c| c.numel() as u64).sum::<u64>()
+                + l.bias.len() as u64;
+            assert_eq!(
+                opt.allocated_state_elems(),
+                kind.state_multiplier() as u64 * elems
+            );
         }
-        assert!(last < 0.5 * first.unwrap(), "loss {last} vs {first:?}");
     }
 }

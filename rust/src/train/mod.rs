@@ -16,8 +16,11 @@
 //! * [`blocks`] — VJPs of LayerNorm, GELU, masked softmax, multi-head
 //!   attention, tanh and the joint intent+slot cross-entropy.
 //! * [`model`] — [`NativeTrainModel`]: the full tensorized transformer
-//!   with cached forward, backward, and a fused in-place SGD update
-//!   (the PU stage applies each gradient the moment it is produced).
+//!   with cached forward and backward over `(B, S)` mini-batches (the
+//!   contraction K dimension carries `B * S`), and a pluggable in-place
+//!   PU stage ([`crate::optim`]: SGD / momentum / Adam / AdamW, state
+//!   in the compressed core layout) that applies each gradient the
+//!   moment it is produced.
 //! * [`native`] — [`NativeTrainer`]: the
 //!   [`crate::coordinator::TrainBackend`] implementation, including
 //!   name-verified `.npy` checkpoints interchangeable with the PJRT

@@ -1,6 +1,19 @@
 //! The trainable tensorized transformer: forward with activation
-//! caching, hand-derived backward, and a fused SGD update — the paper's
-//! FP -> BP -> PU loop executed natively on the rust tensor substrate.
+//! caching, hand-derived backward, and a pluggable parameter update —
+//! the paper's FP -> BP -> PU loop executed natively on the rust tensor
+//! substrate.
+//!
+//! Mini-batches ride the contraction K dimension: a `(B, S)` token
+//! block runs every TT linear layer at `K = B * S` (the BTT cost model
+//! is linear in K, Eqs. 20/21), attention and the CLS pooling are
+//! applied per example, and the loss-level gradients carry `1/B` so
+//! every parameter gradient downstream is the batch **mean**,
+//! accumulated in ascending example order by the deterministic blocked
+//! kernels.
+//!
+//! The PU stage dispatches through [`crate::optim::ModelOptim`]:
+//! SGD / momentum / Adam / AdamW, with per-parameter state in the same
+//! compressed core layout as the weights.
 //!
 //! The parameter naming scheme is identical to the AOT manifest
 //! (`python/compile/model.py` / [`crate::inference::NativeModel`]), so a
@@ -9,6 +22,7 @@
 
 use crate::config::ModelConfig;
 use crate::inference::ParamMap;
+use crate::optim::{ModelOptim, OptimConfig};
 use crate::tensor::{ops, ContractionStats, Tensor, TTMEmbedding, TTMatrix};
 use crate::train::blocks::{self, LayerNormCache};
 use crate::train::layers::{TTLinear, TTLinearCache};
@@ -29,7 +43,8 @@ pub struct TrainEncoderLayer {
     pub ln2_b: Vec<f32>,
 }
 
-/// The full trainable model (batch 1, the paper's on-device setting).
+/// The full trainable model (any runtime batch size; the paper's
+/// on-device setting is B = 1).
 pub struct NativeTrainModel {
     pub cfg: ModelConfig,
     pub embedding: TTMEmbedding,
@@ -40,14 +55,18 @@ pub struct NativeTrainModel {
     pub intent_b: Vec<f32>,
     pub slot_w: Tensor,
     pub slot_b: Vec<f32>,
+    /// The PU stage: pluggable per-parameter update rules + state.
+    pub optim: ModelOptim,
 }
 
-/// Per-block forward activations kept for the BP stage.
+/// Per-block forward activations kept for the BP stage (all `(B*S, H)`
+/// except the per-example attention probabilities).
 struct LayerFwd {
     q: Tensor,
     k: Tensor,
     v: Tensor,
-    probs: Tensor,
+    /// Attention probabilities, one `(heads, S, S)` tensor per example.
+    probs: Vec<Tensor>,
     wq_c: TTLinearCache,
     wk_c: TTLinearCache,
     wv_c: TTLinearCache,
@@ -64,19 +83,25 @@ struct LayerFwd {
 
 /// Whole-step forward cache.
 struct ForwardCaches {
+    /// Examples in this block.
+    batch: usize,
     mask: Vec<f32>,
     emb_states: Vec<Vec<Tensor>>,
     layer_fwd: Vec<LayerFwd>,
     pool_c: TTLinearCache,
     pooled: Tensor,
-    intent_logits: Vec<f32>,
+    /// CLS rows of `pooled`, `(B, H)`.
+    cls: Tensor,
+    /// `(B, n_intents)` row-major.
+    intent_logits: Tensor,
+    /// `(B*S, n_slots)` row-major.
     slot_logits: Tensor,
 }
 
-fn sgd_vec(w: &mut [f32], g: &[f32], lr: f32) {
-    for (wi, &gi) in w.iter_mut().zip(g) {
-        *wi -= lr * gi;
-    }
+/// Copy `nrows` rows starting at `r0` out of a 2-D tensor.
+fn rows(t: &Tensor, r0: usize, nrows: usize) -> Result<Tensor> {
+    let w = t.shape[1];
+    Tensor::from_vec(t.data[r0 * w..(r0 + nrows) * w].to_vec(), &[nrows, w])
 }
 
 fn validate_cfg(cfg: &ModelConfig) -> Result<()> {
@@ -92,9 +117,6 @@ fn validate_cfg(cfg: &ModelConfig) -> Result<()> {
     }
     if ttm_v < cfg.vocab {
         return Err(anyhow!("vocab modes cover {ttm_v} < vocab {}", cfg.vocab));
-    }
-    if cfg.batch != 1 {
-        return Err(anyhow!("the native trainer is batch-1 (got batch {})", cfg.batch));
     }
     Ok(())
 }
@@ -144,6 +166,7 @@ impl NativeTrainModel {
             intent_b: vec![0.0; cfg.n_intents],
             slot_w: Tensor::randn(&[cfg.n_slots, cfg.d_hid], head_std, &mut rng),
             slot_b: vec![0.0; cfg.n_slots],
+            optim: ModelOptim::new(OptimConfig::default()),
         })
     }
 
@@ -219,7 +242,14 @@ impl NativeTrainModel {
             intent_b: vec1("cls.intent_b")?,
             slot_w: tensor("cls.slot_w")?,
             slot_b: vec1("cls.slot_b")?,
+            optim: ModelOptim::new(OptimConfig::default()),
         })
+    }
+
+    /// Swap the PU-stage update rule.  Existing optimizer state is
+    /// dropped (it belongs to the previous rule).
+    pub fn set_optim(&mut self, cfg: OptimConfig) {
+        self.optim = ModelOptim::new(cfg);
     }
 
     /// Export all parameters as a flat name -> array map (the inverse of
@@ -268,25 +298,33 @@ impl NativeTrainModel {
         map
     }
 
-    /// Forward pass with full activation caching (batch 1).
+    /// Forward pass with full activation caching over a `(B, S)` token
+    /// block (row-major).  Every TT linear layer runs at `K = B * S`;
+    /// attention and pooling are applied per example.
     fn forward_train(&self, tokens: &[i32], stats: &mut ContractionStats) -> Result<ForwardCaches> {
         let cfg = &self.cfg;
         let (s, h) = (cfg.seq_len, cfg.d_hid);
-        if tokens.len() != s {
-            return Err(anyhow!("expected {s} tokens, got {}", tokens.len()));
+        if tokens.is_empty() || tokens.len() % s != 0 {
+            return Err(anyhow!(
+                "tokens must be (B, {s}) row-major, got {} ids",
+                tokens.len()
+            ));
         }
+        let b = tokens.len() / s;
+        let k_rows = b * s;
         let mask: Vec<f32> = tokens
             .iter()
             .map(|&t| if t == cfg.pad_id { 0.0 } else { 1.0 })
             .collect();
 
-        // Embedding: TTM lookup (cached) + positional table.
-        let mut x = Tensor::zeros(&[s, h]);
-        let mut emb_states = Vec::with_capacity(s);
+        // Embedding: TTM lookup (cached) + positional table (per slot).
+        let mut x = Tensor::zeros(&[k_rows, h]);
+        let mut emb_states = Vec::with_capacity(k_rows);
         for (i, &t) in tokens.iter().enumerate() {
             let (row, states) = self.embedding.lookup_cached(t as usize)?;
+            let p = i % s;
             for j in 0..h {
-                x.data[i * h + j] = row.data[j] + self.pos.at2(i, j);
+                x.data[i * h + j] = row.data[j] + self.pos.at2(p, j);
             }
             emb_states.push(states);
         }
@@ -296,7 +334,24 @@ impl NativeTrainModel {
             let (q, wq_c) = layer.wq.forward(&x, stats)?;
             let (k, wk_c) = layer.wk.forward(&x, stats)?;
             let (v, wv_c) = layer.wv.forward(&x, stats)?;
-            let (ctx, probs) = ops::multi_head_attention(&q, &k, &v, &mask, cfg.n_heads)?;
+            // Attention never mixes examples: per-example heads over the
+            // (S, H) slices of the K-stacked projections.
+            let mut ctx = Tensor::zeros(&[k_rows, h]);
+            let mut probs = Vec::with_capacity(b);
+            for e in 0..b {
+                let qe = rows(&q, e * s, s)?;
+                let ke = rows(&k, e * s, s)?;
+                let ve = rows(&v, e * s, s)?;
+                let (ctx_e, probs_e) = ops::multi_head_attention(
+                    &qe,
+                    &ke,
+                    &ve,
+                    &mask[e * s..(e + 1) * s],
+                    cfg.n_heads,
+                )?;
+                ctx.data[e * s * h..(e + 1) * s * h].copy_from_slice(&ctx_e.data);
+                probs.push(probs_e);
+            }
             let (o, wo_c) = layer.wo.forward(&ctx, stats)?;
             let res1 = ops::add(&x, &o);
             let (x1, ln1_c) = blocks::layer_norm_fwd(&res1, &layer.ln1_g, &layer.ln1_b, 1e-5);
@@ -326,31 +381,40 @@ impl NativeTrainModel {
 
         let (pool_pre, pool_c) = self.pool.forward(&x, stats)?;
         let pooled = ops::tanh(&pool_pre);
-        let cls_row = Tensor::from_vec(pooled.data[..h].to_vec(), &[1, h])?;
-        let intent = ops::add_row(&cls_row.matmul(&self.intent_w.t()?)?, &self.intent_b);
+        // Per-example CLS rows drive the intent head.
+        let mut cls = Tensor::zeros(&[b, h]);
+        for e in 0..b {
+            cls.data[e * h..(e + 1) * h].copy_from_slice(&pooled.data[e * s * h..e * s * h + h]);
+        }
+        let intent = ops::add_row(&cls.matmul(&self.intent_w.t()?)?, &self.intent_b);
         let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
         Ok(ForwardCaches {
+            batch: b,
             mask,
             emb_states,
             layer_fwd,
             pool_c,
             pooled,
-            intent_logits: intent.data,
+            cls,
+            intent_logits: intent,
             slot_logits: slots,
         })
     }
 
     /// Inference (same contract as the PJRT engine's eval): returns
-    /// `(intent_logits, slot_logits (S * n_slots))`.
+    /// `(intent_logits (B*n_intents), slot_logits (B*S*n_slots))`
+    /// row-major for a `(B, S)` token block.
     pub fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
         let mut stats = ContractionStats::default();
         let fwd = self.forward_train(tokens, &mut stats)?;
-        Ok((fwd.intent_logits, fwd.slot_logits.data))
+        Ok((fwd.intent_logits.data, fwd.slot_logits.data))
     }
 
-    /// One fused SGD step (FP -> BP -> PU): forward with caching, joint
-    /// cross-entropy, hand-derived backward, and in-place updates as
-    /// each gradient becomes available.  Returns `(loss, step stats)`.
+    /// One training step (FP -> BP -> PU) over a `(B, S)` mini-batch:
+    /// forward with caching, joint cross-entropy averaged over the
+    /// batch, hand-derived backward at `K = B * S`, and in-place
+    /// optimizer updates as each gradient becomes available.  Returns
+    /// `(mean loss, step stats)`.
     pub fn train_step(
         &mut self,
         tokens: &[i32],
@@ -361,97 +425,141 @@ impl NativeTrainModel {
         let cfg_nh = self.cfg.n_heads;
         let (s, h) = (self.cfg.seq_len, self.cfg.d_hid);
         let ns = self.cfg.n_slots;
-        if intent.len() != 1 || slots.len() != s {
+        let ni = self.cfg.n_intents;
+        let b = intent.len();
+        if b == 0 || tokens.len() != b * s || slots.len() != b * s {
             return Err(anyhow!(
-                "native train_step is batch-1: need 1 intent / {s} slots, got {} / {}",
-                intent.len(),
+                "train_step: need (B, {s}) tokens/slots and (B,) intents, got {} / {} / {b}",
+                tokens.len(),
                 slots.len()
             ));
         }
-        if intent[0] < 0 || intent[0] as usize >= self.cfg.n_intents {
-            return Err(anyhow!("intent label {} out of range", intent[0]));
+        for &iv in intent {
+            if iv < 0 || iv as usize >= ni {
+                return Err(anyhow!("intent label {iv} out of range"));
+            }
         }
         let mut stats = ContractionStats::default();
         let fwd = self.forward_train(tokens, &mut stats)?;
+        debug_assert_eq!(fwd.batch, b);
+        let inv_b = 1.0 / b as f32;
 
-        // ---- Joint loss and logit gradients (paper loss_fn) ----------
-        let denom: f32 = fwd.mask.iter().sum::<f32>();
-        let denom = denom.max(1.0);
-        let (loss_intent, d_il) =
-            blocks::cross_entropy_logits(&fwd.intent_logits, intent[0] as usize)?;
-        let mut loss_slots = 0.0f32;
-        let mut d_slot = Tensor::zeros(&[s, ns]);
-        for p in 0..s {
-            if fwd.mask[p] == 0.0 {
-                continue;
+        // ---- Joint loss and logit gradients (paper loss_fn, batch mean)
+        let mut loss = 0.0f32;
+        let mut d_il = Tensor::zeros(&[b, ni]);
+        let mut d_slot = Tensor::zeros(&[b * s, ns]);
+        for e in 0..b {
+            let irow = &fwd.intent_logits.data[e * ni..(e + 1) * ni];
+            let (li, dli) = blocks::cross_entropy_logits(irow, intent[e] as usize)?;
+            loss += li * inv_b;
+            for (o, &v) in d_il.data[e * ni..(e + 1) * ni].iter_mut().zip(&dli) {
+                *o = v * inv_b;
             }
-            if slots[p] < 0 || slots[p] as usize >= ns {
-                return Err(anyhow!("slot label {} out of range at {p}", slots[p]));
-            }
-            let row = &fwd.slot_logits.data[p * ns..(p + 1) * ns];
-            let (l, dl) = blocks::cross_entropy_logits(row, slots[p] as usize)?;
-            loss_slots += l / denom;
-            for (o, &dv) in d_slot.data[p * ns..(p + 1) * ns].iter_mut().zip(&dl) {
-                *o = dv / denom;
+            let m = &fwd.mask[e * s..(e + 1) * s];
+            let denom = m.iter().sum::<f32>().max(1.0);
+            for p in 0..s {
+                if m[p] == 0.0 {
+                    continue;
+                }
+                let gp = e * s + p;
+                if slots[gp] < 0 || slots[gp] as usize >= ns {
+                    return Err(anyhow!("slot label {} out of range at {p}", slots[gp]));
+                }
+                let row = &fwd.slot_logits.data[gp * ns..(gp + 1) * ns];
+                let (l, dl) = blocks::cross_entropy_logits(row, slots[gp] as usize)?;
+                loss += l * inv_b / denom;
+                for (o, &dv) in d_slot.data[gp * ns..(gp + 1) * ns].iter_mut().zip(&dl) {
+                    *o = dv * inv_b / denom;
+                }
             }
         }
-        let loss = loss_intent + loss_slots;
+
+        let hyper = self.optim.hyper(lr);
 
         // ---- Classifier heads ----------------------------------------
         // d_pooled from both heads, computed before any head update.
-        let mut d_pooled = d_slot.matmul(&self.slot_w)?; // (S, H)
-        for (c, &dil) in d_il.iter().enumerate() {
-            for j in 0..h {
-                d_pooled.data[j] += dil * self.intent_w.at2(c, j);
+        let mut d_pooled = d_slot.matmul(&self.slot_w)?; // (B*S, H)
+        for e in 0..b {
+            for (c, &dil) in d_il.data[e * ni..(e + 1) * ni].iter().enumerate() {
+                for j in 0..h {
+                    d_pooled.data[e * s * h + j] += dil * self.intent_w.at2(c, j);
+                }
             }
         }
         let d_slot_w = d_slot.t()?.matmul(&fwd.pooled)?; // (n_slots, H)
         let mut d_slot_b = vec![0.0f32; ns];
         for row in d_slot.data.chunks(ns) {
-            for (b, &v) in d_slot_b.iter_mut().zip(row) {
-                *b += v;
+            for (bb, &v) in d_slot_b.iter_mut().zip(row) {
+                *bb += v;
             }
         }
-        for (c, &dil) in d_il.iter().enumerate() {
-            for j in 0..h {
-                self.intent_w.data[c * h + j] -= lr * dil * fwd.pooled.data[j];
+        let d_intent_w = d_il.t()?.matmul(&fwd.cls)?; // (n_intents, H)
+        let mut d_intent_b = vec![0.0f32; ni];
+        for row in d_il.data.chunks(ni) {
+            for (bb, &v) in d_intent_b.iter_mut().zip(row) {
+                *bb += v;
             }
         }
-        sgd_vec(&mut self.intent_b, &d_il, lr);
-        for (w, &g) in self.slot_w.data.iter_mut().zip(&d_slot_w.data) {
-            *w -= lr * g;
-        }
-        sgd_vec(&mut self.slot_b, &d_slot_b, lr);
+        self.optim.step("cls.intent_w", &mut self.intent_w.data, &d_intent_w.data, &hyper);
+        self.optim.step("cls.intent_b", &mut self.intent_b, &d_intent_b, &hyper);
+        self.optim.step("cls.slot_w", &mut self.slot_w.data, &d_slot_w.data, &hyper);
+        self.optim.step("cls.slot_b", &mut self.slot_b, &d_slot_b, &hyper);
 
         // ---- Pooler --------------------------------------------------
         let d_pool_pre = blocks::tanh_vjp(&fwd.pooled, &d_pooled);
         let (mut dx, pool_grads) = self.pool.backward(&d_pool_pre, &fwd.pool_c, &mut stats)?;
-        self.pool.sgd_update(&pool_grads, lr);
+        self.pool.apply_update(&pool_grads, &mut self.optim, "cls.pool", &hyper);
 
         // ---- Encoder blocks, reversed --------------------------------
-        for (layer, f) in self.layers.iter_mut().zip(fwd.layer_fwd.iter()).rev() {
+        for (li, (layer, f)) in self
+            .layers
+            .iter_mut()
+            .zip(fwd.layer_fwd.iter())
+            .enumerate()
+            .rev()
+        {
+            let p = |name: &str| format!("layers.{li}.{name}");
             let (d_res2, dg2, db2) = blocks::layer_norm_vjp(&f.ln2_c, &layer.ln2_g, &dx);
-            sgd_vec(&mut layer.ln2_g, &dg2, lr);
-            sgd_vec(&mut layer.ln2_b, &db2, lr);
+            self.optim.step(&p("ln2.g"), &mut layer.ln2_g, &dg2, &hyper);
+            self.optim.step(&p("ln2.b"), &mut layer.ln2_b, &db2, &hyper);
             let (d_g1, w2_grads) = layer.w2.backward(&d_res2, &f.w2_c, &mut stats)?;
-            layer.w2.sgd_update(&w2_grads, lr);
+            layer.w2.apply_update(&w2_grads, &mut self.optim, &p("w2"), &hyper);
             let d_h1 = blocks::gelu_vjp(&f.h1, &d_g1);
             let (d_x1_ffn, w1_grads) = layer.w1.backward(&d_h1, &f.w1_c, &mut stats)?;
-            layer.w1.sgd_update(&w1_grads, lr);
+            layer.w1.apply_update(&w1_grads, &mut self.optim, &p("w1"), &hyper);
             let d_x1 = ops::add(&d_res2, &d_x1_ffn);
             let (d_res1, dg1, db1) = blocks::layer_norm_vjp(&f.ln1_c, &layer.ln1_g, &d_x1);
-            sgd_vec(&mut layer.ln1_g, &dg1, lr);
-            sgd_vec(&mut layer.ln1_b, &db1, lr);
+            self.optim.step(&p("ln1.g"), &mut layer.ln1_g, &dg1, &hyper);
+            self.optim.step(&p("ln1.b"), &mut layer.ln1_b, &db1, &hyper);
             let (d_ctx, wo_grads) = layer.wo.backward(&d_res1, &f.wo_c, &mut stats)?;
-            layer.wo.sgd_update(&wo_grads, lr);
-            let (dq, dk, dv) =
-                blocks::multi_head_attention_vjp(&f.q, &f.k, &f.v, &f.probs, &d_ctx, cfg_nh)?;
+            layer.wo.apply_update(&wo_grads, &mut self.optim, &p("wo"), &hyper);
+            // Attention backward, per example (like the forward).
+            let mut dq = Tensor::zeros(&[b * s, h]);
+            let mut dk = Tensor::zeros(&[b * s, h]);
+            let mut dv = Tensor::zeros(&[b * s, h]);
+            for e in 0..b {
+                let qe = rows(&f.q, e * s, s)?;
+                let ke = rows(&f.k, e * s, s)?;
+                let ve = rows(&f.v, e * s, s)?;
+                let d_ctx_e = rows(&d_ctx, e * s, s)?;
+                let (dqe, dke, dve) = blocks::multi_head_attention_vjp(
+                    &qe,
+                    &ke,
+                    &ve,
+                    &f.probs[e],
+                    &d_ctx_e,
+                    cfg_nh,
+                )?;
+                dq.data[e * s * h..(e + 1) * s * h].copy_from_slice(&dqe.data);
+                dk.data[e * s * h..(e + 1) * s * h].copy_from_slice(&dke.data);
+                dv.data[e * s * h..(e + 1) * s * h].copy_from_slice(&dve.data);
+            }
             let (dx_q, wq_grads) = layer.wq.backward(&dq, &f.wq_c, &mut stats)?;
-            layer.wq.sgd_update(&wq_grads, lr);
+            layer.wq.apply_update(&wq_grads, &mut self.optim, &p("wq"), &hyper);
             let (dx_k, wk_grads) = layer.wk.backward(&dk, &f.wk_c, &mut stats)?;
-            layer.wk.sgd_update(&wk_grads, lr);
+            layer.wk.apply_update(&wk_grads, &mut self.optim, &p("wk"), &hyper);
             let (dx_v, wv_grads) = layer.wv.backward(&dv, &f.wv_c, &mut stats)?;
-            layer.wv.sgd_update(&wv_grads, lr);
+            layer.wv.apply_update(&wv_grads, &mut self.optim, &p("wv"), &hyper);
             dx = ops::add(&ops::add(&ops::add(&d_res1, &dx_q), &dx_k), &dx_v);
         }
 
@@ -467,14 +575,17 @@ impl NativeTrainModel {
             self.embedding
                 .lookup_vjp(t as usize, &fwd.emb_states[i], d_row, &mut emb_grads)?;
         }
-        for (core, g) in self.embedding.cores.iter_mut().zip(&emb_grads) {
-            for (w, &dw) in core.data.iter_mut().zip(&g.data) {
-                *w -= lr * dw;
+        for (k, (core, g)) in self.embedding.cores.iter_mut().zip(&emb_grads).enumerate() {
+            self.optim.step(&format!("embed.ttm.{k}"), &mut core.data, &g.data, &hyper);
+        }
+        // Positional-table gradient: sum over examples (ascending order).
+        let mut d_pos = vec![0.0f32; s * h];
+        for e in 0..b {
+            for (dp, &dv) in d_pos.iter_mut().zip(&dx.data[e * s * h..(e + 1) * s * h]) {
+                *dp += dv;
             }
         }
-        for (w, &dw) in self.pos.data.iter_mut().zip(&dx.data) {
-            *w -= lr * dw;
-        }
+        self.optim.step("embed.pos", &mut self.pos.data, &d_pos, &hyper);
 
         Ok((loss, stats))
     }
@@ -484,6 +595,7 @@ impl NativeTrainModel {
 pub(crate) mod tests {
     use super::*;
     use crate::inference::NativeModel;
+    use crate::optim::OptimKind;
 
     pub(crate) fn tiny_cfg() -> ModelConfig {
         ModelConfig {
@@ -565,5 +677,132 @@ pub(crate) mod tests {
         assert!(model.train_step(&tokens, &[99], &slots, 0.01).is_err());
         let bad_slots = vec![0, 99, 0, 0, 0, 0, 0, 0];
         assert!(model.train_step(&tokens, &[1], &bad_slots, 0.01).is_err());
+        // Mismatched batch shapes must fail loudly.
+        assert!(model.train_step(&tokens, &[1, 2], &slots, 0.01).is_err());
+        assert!(model.train_step(&tokens[..4], &[1], &slots, 0.01).is_err());
+    }
+
+    /// Two examples at the tiny config: tokens + per-position slots.
+    fn two_examples() -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+        let tokens = vec![
+            1, 5, 9, 13, 4, 0, 0, 0, // example 0
+            1, 3, 2, 7, 11, 26, 6, 0, // example 1
+        ];
+        let intents = vec![2, 4];
+        let slots = vec![
+            0, 1, 2, 3, 1, 0, 0, 0, //
+            0, 2, 2, 4, 5, 6, 1, 0, //
+        ];
+        (tokens, intents, slots)
+    }
+
+    #[test]
+    fn batched_eval_matches_per_example_eval() {
+        let cfg = tiny_cfg();
+        let model = NativeTrainModel::random_init(&cfg, 11).unwrap();
+        let (tokens, _, _) = two_examples();
+        let (il, sl) = model.eval(&tokens).unwrap();
+        assert_eq!(il.len(), 2 * cfg.n_intents);
+        assert_eq!(sl.len(), 2 * cfg.seq_len * cfg.n_slots);
+        for e in 0..2 {
+            let (il_e, sl_e) = model.eval(&tokens[e * 8..(e + 1) * 8]).unwrap();
+            let di = il[e * cfg.n_intents..(e + 1) * cfg.n_intents]
+                .iter()
+                .zip(&il_e)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let ds = sl[e * 8 * cfg.n_slots..(e + 1) * 8 * cfg.n_slots]
+                .iter()
+                .zip(&sl_e)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(di < 1e-5 && ds < 1e-5, "example {e}: di {di} ds {ds}");
+        }
+    }
+
+    #[test]
+    fn batched_loss_is_mean_of_per_example_losses() {
+        let cfg = tiny_cfg();
+        let mut model = NativeTrainModel::random_init(&cfg, 12).unwrap();
+        let (tokens, intents, slots) = two_examples();
+        // lr = 0 probes the loss without moving parameters.
+        let mut per_example = Vec::new();
+        for e in 0..2 {
+            let (l, _) = model
+                .train_step(
+                    &tokens[e * 8..(e + 1) * 8],
+                    &intents[e..e + 1],
+                    &slots[e * 8..(e + 1) * 8],
+                    0.0,
+                )
+                .unwrap();
+            per_example.push(l);
+        }
+        let (batch_loss, _) = model.train_step(&tokens, &intents, &slots, 0.0).unwrap();
+        let mean = (per_example[0] + per_example[1]) / 2.0;
+        assert!(
+            (batch_loss - mean).abs() < 1e-5,
+            "batch loss {batch_loss} vs per-example mean {mean}"
+        );
+    }
+
+    #[test]
+    fn batched_step_is_bitwise_deterministic() {
+        let cfg = tiny_cfg();
+        let (tokens, intents, slots) = two_examples();
+        let run = || {
+            let mut model = NativeTrainModel::random_init(&cfg, 13).unwrap();
+            model.set_optim(OptimConfig { kind: OptimKind::Adam, ..Default::default() });
+            for _ in 0..3 {
+                model.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+            }
+            model.to_params()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "repeated batched Adam training diverged bitwise");
+    }
+
+    #[test]
+    fn adam_state_is_twice_the_compressed_param_count() {
+        let cfg = tiny_cfg();
+        let mut model = NativeTrainModel::random_init(&cfg, 14).unwrap();
+        model.set_optim(OptimConfig { kind: OptimKind::Adam, ..Default::default() });
+        let (tokens, intents, slots) = two_examples();
+        assert_eq!(model.optim.allocated_state_elems(), 0);
+        model.train_step(&tokens, &intents, &slots, 1e-3).unwrap();
+        // After one full step every trainable tensor has a slot: Adam
+        // state is exactly 2x the compressed parameter count.
+        assert_eq!(
+            model.optim.allocated_state_elems(),
+            2 * cfg.tensor_params() as u64
+        );
+    }
+
+    #[test]
+    fn stateful_optimizers_fit_a_batch_and_reduce_loss() {
+        // Overfit one 2-example batch: every stateful rule must cut the
+        // joint loss well below its cold-start value (lr per rule:
+        // momentum's effective rate is lr / (1 - mu)).
+        let cfg = tiny_cfg();
+        let (tokens, intents, slots) = two_examples();
+        for (kind, lr) in [
+            (OptimKind::Momentum, 5e-3f32),
+            (OptimKind::Adam, 1e-2),
+            (OptimKind::AdamW, 1e-2),
+        ] {
+            let mut model = NativeTrainModel::random_init(&cfg, 15).unwrap();
+            model.set_optim(OptimConfig { kind, weight_decay: 1e-4, ..Default::default() });
+            let (first, _) = model.train_step(&tokens, &intents, &slots, lr).unwrap();
+            let mut last = first;
+            for _ in 0..60 {
+                let (l, _) = model.train_step(&tokens, &intents, &slots, lr).unwrap();
+                last = l;
+            }
+            assert!(
+                last < 0.6 * first,
+                "{kind:?}: loss {last} vs start {first} after 60 batched steps"
+            );
+        }
     }
 }

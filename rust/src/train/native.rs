@@ -5,6 +5,7 @@ use super::model::NativeTrainModel;
 use crate::config::ModelConfig;
 use crate::coordinator::backend::{StepOutput, TrainBackend};
 use crate::inference::{NativeModel, ParamMap};
+use crate::optim::OptimConfig;
 use crate::tensor::ContractionStats;
 use crate::util::npy;
 use anyhow::{anyhow, Result};
@@ -44,6 +45,13 @@ impl NativeTrainer {
     pub fn from_params(cfg: &ModelConfig, params: &ParamMap) -> Result<NativeTrainer> {
         Ok(NativeTrainer::new(NativeTrainModel::from_params(cfg, params)?))
     }
+
+    /// Swap the PU-stage update rule (builder style); existing optimizer
+    /// state is dropped.
+    pub fn with_optim(mut self, cfg: OptimConfig) -> NativeTrainer {
+        self.model.set_optim(cfg);
+        self
+    }
 }
 
 impl TrainBackend for NativeTrainer {
@@ -53,6 +61,12 @@ impl TrainBackend for NativeTrainer {
 
     fn config(&self) -> &ModelConfig {
         &self.model.cfg
+    }
+
+    /// The native trainer takes any runtime batch size — the contraction
+    /// K dimension simply becomes `B * S`.
+    fn supports_batch(&self, batch: usize) -> bool {
+        batch >= 1
     }
 
     fn train_step(
@@ -73,12 +87,27 @@ impl TrainBackend for NativeTrainer {
         })
     }
 
+    /// Inference through the cached merged-factor engine.  Accepts a
+    /// `(B, S)` block: the engine runs per example and the logits are
+    /// concatenated row-major, matching the trait contract.
     fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let s = self.model.cfg.seq_len;
+        if tokens.is_empty() || tokens.len() % s != 0 {
+            return Err(anyhow!("eval needs (B, {s}) tokens, got {}", tokens.len()));
+        }
         let mut cached = self.eval_model.borrow_mut();
         if cached.is_none() {
             *cached = Some(NativeModel::from_params(&self.model.cfg, &self.model.to_params())?);
         }
-        cached.as_ref().expect("just built").forward(tokens)
+        let engine = cached.as_ref().expect("just built");
+        let mut intents = Vec::new();
+        let mut slots = Vec::new();
+        for chunk in tokens.chunks(s) {
+            let (il, sl) = engine.forward(chunk)?;
+            intents.extend_from_slice(&il);
+            slots.extend_from_slice(&sl);
+        }
+        Ok((intents, slots))
     }
 
     /// One `.npy` per parameter, named `%04d.<name>.npy` in canonical
@@ -95,7 +124,9 @@ impl TrainBackend for NativeTrainer {
 
     /// Rebuild the model from a checkpoint directory, keyed by each
     /// file's embedded parameter name (a renamed file is an error, not a
-    /// silent mix-up).
+    /// silent mix-up).  The PU-stage update rule is kept; its state is
+    /// reset (checkpoints carry parameters only — optimizer-state
+    /// persistence is a ROADMAP follow-up).
     fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
         let mut params = ParamMap::new();
         for (name, path) in npy::checkpoint_entries(dir)? {
@@ -104,7 +135,9 @@ impl TrainBackend for NativeTrainer {
                 return Err(anyhow!("duplicate parameter '{name}' in checkpoint {dir:?}"));
             }
         }
+        let optim_cfg = self.model.optim.cfg.clone();
         self.model = NativeTrainModel::from_params(&self.model.cfg, &params)?;
+        self.model.set_optim(optim_cfg);
         *self.eval_model.borrow_mut() = None; // parameters replaced
         Ok(())
     }
