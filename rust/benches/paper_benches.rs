@@ -31,7 +31,7 @@ use tt_trainer::optim::{OptimConfig, OptimKind};
 #[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
 use tt_trainer::tensor::{Tensor, TTMatrix};
-use tt_trainer::train::NativeTrainer;
+use tt_trainer::train::{ComputePath, NativeTrainer};
 use tt_trainer::util::rng::SplitMix64;
 use tt_trainer::util::timer::bench;
 
@@ -87,29 +87,39 @@ fn main() {
 }
 
 /// Measured rust-native training throughput (FP + BP + PU) across
-/// optimizer x batch — the artifact-free counterpart of the `pjrt`
-/// section.  Also emits `BENCH_native_train.json` so the perf
-/// trajectory of the native trainer is recorded across PRs.
+/// optimizer x batch x compute schedule — the artifact-free counterpart
+/// of the `pjrt` section.  Also emits `BENCH_native_train.json` so the
+/// perf trajectory of the native trainer is recorded across PRs; the
+/// fused/batched rows and the looped baseline come from the same run,
+/// so the JSON itself documents the schedule speedup.
 fn native_train() {
     hdr("native-train", "measured native training throughput (no artifacts)");
     let cfg = ModelConfig::paper(2);
     let data = Dataset::synth(&cfg, 42, 64);
+    // (optimizer, batch, schedule): the default fused/batched hot path
+    // across the optimizer grid, plus the two batch-8 baselines that
+    // isolate the fused-QKV and batched-attention wins.
+    let unfused_batched = ComputePath { fused_qkv: false, batched_attention: true };
     let grid = [
-        (OptimKind::Sgd, 1usize),
-        (OptimKind::Sgd, 8),
-        (OptimKind::Adam, 1),
-        (OptimKind::Adam, 8),
+        (OptimKind::Sgd, 1usize, ComputePath::fused()),
+        (OptimKind::Sgd, 8, ComputePath::fused()),
+        (OptimKind::Adam, 1, ComputePath::fused()),
+        (OptimKind::Adam, 8, ComputePath::fused()),
+        (OptimKind::Adam, 8, unfused_batched),
+        (OptimKind::Adam, 8, ComputePath::looped()),
     ];
     let mut rows = Vec::new();
-    for (kind, batch) in grid {
+    let mut fused_b8 = None;
+    let mut looped_b8 = None;
+    for (kind, batch, path) in grid {
         let optim = OptimConfig { kind, batch_size: batch, ..Default::default() };
-        let backend = match NativeTrainer::random_init(&cfg, 42) {
-            Ok(b) => b.with_optim(optim),
-            Err(e) => {
-                println!("init failed: {e} (skipped)");
-                return;
-            }
-        };
+        // Fail loudly: a silent early return would leave
+        // BENCH_native_train.json unwritten and surface only as a
+        // confusing missing-artifact error in CI.
+        let backend = NativeTrainer::random_init(&cfg, 42)
+            .expect("paper config init")
+            .with_optim(optim)
+            .with_compute_path(path);
         let mut trainer = Trainer::with_batch(backend, kind.default_lr(), batch);
         let stats = bench(
             || {
@@ -121,21 +131,37 @@ fn native_train() {
         let steps_per_sec = 1.0 / stats.p50;
         let tokens_per_sec = (batch * cfg.seq_len) as f64 / stats.p50;
         let mean_loss = trainer.metrics.recent_loss(4);
+        let qkv = if path.fused_qkv { "fused" } else { "separate" };
+        let attn = if path.batched_attention { "batched" } else { "looped" };
+        if kind == OptimKind::Adam && batch == 8 {
+            if path == ComputePath::fused() {
+                fused_b8 = Some(steps_per_sec);
+            } else if path == ComputePath::looped() {
+                looped_b8 = Some(steps_per_sec);
+            }
+        }
         println!(
-            "{:<8} batch {batch}: step {} | {:.2} steps/s | {:.0} tokens/s | loss {mean_loss:.4}",
+            "{:<8} batch {batch} qkv {qkv:<8} attn {attn:<7}: step {} | {:.2} steps/s | \
+             {:.0} tokens/s | loss {mean_loss:.4}",
             kind.name(),
             stats.fmt_ms(),
             steps_per_sec,
             tokens_per_sec
         );
         rows.push(format!(
-            "    {{\"optimizer\": \"{}\", \"batch\": {batch}, \"p50_step_secs\": {:.6}, \
+            "    {{\"optimizer\": \"{}\", \"batch\": {batch}, \"qkv\": \"{qkv}\", \
+             \"attention\": \"{attn}\", \"p50_step_secs\": {:.6}, \
              \"steps_per_sec\": {steps_per_sec:.3}, \"tokens_per_sec\": {tokens_per_sec:.1}, \
              \"mean_loss\": {mean_loss:.5}}}",
             kind.name(),
             stats.p50
         ));
     }
+    let speedup = match (fused_b8, looped_b8) {
+        (Some(f), Some(l)) if l > 0.0 => f / l,
+        _ => 0.0,
+    };
+    println!("fused/batched vs looped baseline (adam, batch 8): {speedup:.2}x steps/s");
     // Eval latency through the merged-factor engine (batch 1).
     let backend = NativeTrainer::random_init(&cfg, 42).expect("init");
     let ex = data.examples[0].clone();
@@ -149,7 +175,8 @@ fn native_train() {
     println!("eval (batch 1): {}", eval_stats.fmt_ms());
     let json = format!(
         "{{\n  \"bench\": \"native_train\",\n  \"model\": \"tt_L2\",\n  \"seq_len\": {},\n  \
-         \"eval_p50_secs\": {:.6},\n  \"rows\": [\n{}\n  ]\n}}\n",
+         \"eval_p50_secs\": {:.6},\n  \"fused_vs_looped_speedup_b8\": {speedup:.3},\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
         cfg.seq_len,
         eval_stats.p50,
         rows.join(",\n")
@@ -218,6 +245,13 @@ fn fig9() {
     println!("rescheduled (2 MUL0 units): {resched}");
     assert_eq!(naive, resched, "rescheduling must not increase latency");
     println!("=> same makespan with 1/3 of the MUL0 kernel instances");
+    let fused = schedule::fig9_fused_makespan(&shape, 32, 12);
+    println!("fused QKV (2 MUL0 units):   {fused} (the schedule the native trainer executes)");
+    println!(
+        "=> fused fwd muls {} vs 3x separate {}",
+        shape.btt_fwd_qkv_muls(32),
+        3 * shape.btt_muls(32)
+    );
 }
 
 fn fig10() {

@@ -139,35 +139,114 @@ impl LinearShape {
 
     // -- BTT (paper Eq. 20 / 21) ---------------------------------------------
 
-    /// Eq. 20: forward multiplies of the bidirectional contraction.
-    pub fn btt_muls(&self, k_dim: u64) -> u64 {
+    /// K-independent multiplies of the **left (output-side) merge
+    /// chain** `G_1..G_d -> Z3` — the `m`-sum of Eq. 20, split out so
+    /// the fused-QKV expression below can charge it per projection.
+    pub fn btt_left_merge_muls(&self) -> u64 {
         let d = self.d();
         let r = |i: usize| self.ranks[i] as u64;
-        let mut total = 0u64;
-        for k in 0..d.saturating_sub(1) {
-            // right merge: r_{2d-k-1} r_{2d-k-2} prod_{i=d-k-1}^{d} n_i
-            let prod_n: u64 = self.n_modes[d - k - 2..].iter().map(|&x| x as u64).product();
-            total += r(2 * d - k - 1) * r(2 * d - k - 2) * prod_n;
-            // left merge: r_{k+1} r_{k+2} prod_{i=1}^{k+2} m_i
-            let prod_m: u64 = self.m_modes[..k + 2].iter().map(|&x| x as u64).product();
-            total += r(k + 1) * r(k + 2) * prod_m;
-        }
-        total + k_dim * r(d) * (self.m() + self.n())
+        (0..d.saturating_sub(1))
+            .map(|k| {
+                let prod_m: u64 = self.m_modes[..k + 2].iter().map(|&x| x as u64).product();
+                r(k + 1) * r(k + 2) * prod_m
+            })
+            .sum()
+    }
+
+    /// K-independent multiplies of the **right (input-side) merge
+    /// chain** `G_2d..G_{d+1} -> Z1` — the `n`-sum of Eq. 20, shared
+    /// across Q/K/V by the fused path.
+    pub fn btt_right_merge_muls(&self) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        (0..d.saturating_sub(1))
+            .map(|k| {
+                let prod_n: u64 = self.n_modes[d - k - 2..].iter().map(|&x| x as u64).product();
+                r(2 * d - k - 1) * r(2 * d - k - 2) * prod_n
+            })
+            .sum()
+    }
+
+    /// Stored elements of the left merge chain (the `m`-terms of
+    /// Eq. 21; the first chain state is a reshaped core and excluded).
+    pub fn btt_left_chain_elems(&self) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        (0..d.saturating_sub(1))
+            .map(|k| {
+                let prod_m: u64 = self.m_modes[..k + 2].iter().map(|&x| x as u64).product();
+                r(k + 1) * prod_m
+            })
+            .sum()
+    }
+
+    /// Stored elements of the right merge chain (the `n`-terms of
+    /// Eq. 21).
+    pub fn btt_right_chain_elems(&self) -> u64 {
+        let d = self.d();
+        let r = |i: usize| self.ranks[i] as u64;
+        (0..d.saturating_sub(1))
+            .map(|k| {
+                let prod_n: u64 = self.n_modes[d - k - 2..].iter().map(|&x| x as u64).product();
+                r(2 * d - k - 2) * prod_n
+            })
+            .sum()
+    }
+
+    /// Eq. 20: forward multiplies of the bidirectional contraction —
+    /// both merges plus the two K-dependent applies.
+    pub fn btt_muls(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        self.btt_left_merge_muls()
+            + self.btt_right_merge_muls()
+            + k_dim * r_d * (self.m() + self.n())
     }
 
     /// Eq. 21: intermediate memory (elements) of the BTT contraction —
     /// only the final Z2 term carries K.
     pub fn btt_memory(&self, k_dim: u64) -> u64 {
-        let d = self.d();
-        let r = |i: usize| self.ranks[i] as u64;
-        let mut total = 0u64;
-        for k in 0..d.saturating_sub(1) {
-            let prod_n: u64 = self.n_modes[d - k - 2..].iter().map(|&x| x as u64).product();
-            total += r(2 * d - k - 2) * prod_n;
-            let prod_m: u64 = self.m_modes[..k + 2].iter().map(|&x| x as u64).product();
-            total += r(k + 1) * prod_m;
-        }
-        total + k_dim * r(d)
+        let r_d = self.ranks[self.d()] as u64;
+        self.btt_left_chain_elems() + self.btt_right_chain_elems() + k_dim * r_d
+    }
+
+    // -- Fused QKV (Fig. 9 rescheduling, executed) ---------------------------
+
+    /// Forward multiplies of the **fused QKV** pass (three projections
+    /// with tied input-side cores, `crate::train::layers::
+    /// forward_qkv_fused`).  The companion of Eq. 20 for the fused
+    /// schedule: the right merge and the K-wide `Z2 = X Z1^T` are
+    /// charged **once**, the left merges and output applies three
+    /// times —
+    ///
+    /// ```text
+    /// C_qkv = 3 C_left + C_right + K r_d (N + 3 M)
+    /// ```
+    ///
+    /// vs `3 (C_left + C_right + K r_d (N + M))` for three separate
+    /// forwards: strictly fewer for every K >= 1.
+    pub fn btt_fwd_qkv_muls(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        3 * self.btt_left_merge_muls()
+            + self.btt_right_merge_muls()
+            + k_dim * r_d * (self.n() + 3 * self.m())
+    }
+
+    /// BP-stage multiplies of the fused QKV pass: exactly 2x the fused
+    /// forward (the input-side gradient flows through one summed dZ2,
+    /// so dZ1/dX and the right-chain unroll are also charged once).
+    pub fn btt_qkv_bwd_muls(&self, k_dim: u64) -> u64 {
+        2 * self.btt_fwd_qkv_muls(k_dim)
+    }
+
+    /// Eq. 21 companion for the fused QKV pass: three left chains, one
+    /// shared right chain, one shared K-carrying Z2.
+    ///
+    /// ```text
+    /// M_qkv = 3 M_left + M_right + K r_d
+    /// ```
+    pub fn btt_qkv_memory(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        3 * self.btt_left_chain_elems() + self.btt_right_chain_elems() + k_dim * r_d
     }
 
     // -- TTM right-to-left (Table I row 2, generalized) ----------------------
@@ -412,6 +491,69 @@ mod tests {
             assert!(shape.btt_muls(k) <= shape.tt_rl_muls(k));
             assert!(shape.btt_memory(k) <= shape.tt_rl_memory(k));
         });
+    }
+
+    #[test]
+    fn merge_split_reassembles_eq20_eq21() {
+        // The left/right split must reassemble exactly into Eq. 20/21.
+        prop::check(34, 20, |rng| {
+            let d = 2 + rng.below(2) as usize;
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(5) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(5) as usize).collect();
+            let rank = 1 + rng.below(6) as usize;
+            let k = 1 + rng.below(24) as u64;
+            let shape = LinearShape::uniform(&m_modes, &n_modes, rank);
+            let r_d = shape.ranks[shape.d()] as u64;
+            assert_eq!(
+                shape.btt_muls(k),
+                shape.btt_left_merge_muls()
+                    + shape.btt_right_merge_muls()
+                    + k * r_d * (shape.m() + shape.n())
+            );
+            assert_eq!(
+                shape.btt_memory(k),
+                shape.btt_left_chain_elems() + shape.btt_right_chain_elems() + k * r_d
+            );
+        });
+    }
+
+    #[test]
+    fn fused_qkv_strictly_cheaper_than_three_forwards() {
+        // The fused-QKV expression saves two right merges and two
+        // K-wide Z2 products vs three separate forwards, for every
+        // shape and every K >= 1.
+        prop::check(35, 30, |rng| {
+            let d = 1 + rng.below(3) as usize; // d in {1, 2, 3}
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(6) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(6) as usize).collect();
+            let rank = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(64) as u64;
+            let shape = LinearShape::uniform(&m_modes, &n_modes, rank);
+            let r_d = shape.ranks[shape.d()] as u64;
+            assert!(shape.btt_fwd_qkv_muls(k) < 3 * shape.btt_muls(k));
+            assert!(shape.btt_qkv_memory(k) < 3 * shape.btt_memory(k));
+            // Exactly the claimed saving: 2 right merges + 2 K r_d N.
+            assert_eq!(
+                3 * shape.btt_muls(k) - shape.btt_fwd_qkv_muls(k),
+                2 * shape.btt_right_merge_muls() + 2 * k * r_d * shape.n()
+            );
+            // And BP stays the 2x rule (3x training factor overall).
+            assert_eq!(shape.btt_qkv_bwd_muls(k), 2 * shape.btt_fwd_qkv_muls(k));
+        });
+    }
+
+    #[test]
+    fn fused_qkv_paper_shape_saving() {
+        // At the Table II shape and seq len 32 the fused schedule drops
+        // about a third of the QKV forward multiplies.
+        let shape = LinearShape::paper();
+        let sep = 3 * shape.btt_muls(32);
+        let fused = shape.btt_fwd_qkv_muls(32);
+        let saving = (sep - fused) as f64 / sep as f64;
+        assert!(
+            (0.25..0.45).contains(&saving),
+            "fused saves {saving:.2} of 3x separate (expected ~1/3)"
+        );
     }
 
     #[test]

@@ -322,6 +322,16 @@ fn cmd_cost_model() -> Result<()> {
         shape.btt_bwd_muls(32),
         shape.btt_training_cache_elems(32)
     );
+    println!("\n=== Fused QKV (Fig. 9 rescheduling, executed) ===");
+    println!(
+        "3x separate fwd: {} muls | fused fwd: {} muls ({:.1}% saved) | fused bwd: {} | cache: {} elements",
+        3 * shape.btt_muls(32),
+        shape.btt_fwd_qkv_muls(32),
+        100.0 * (3 * shape.btt_muls(32) - shape.btt_fwd_qkv_muls(32)) as f64
+            / (3 * shape.btt_muls(32)) as f64,
+        shape.btt_qkv_bwd_muls(32),
+        shape.btt_qkv_memory(32)
+    );
     println!("\n=== PU stage: optimizer state in compressed TT space (2-ENC) ===");
     print!("{}", sweeps::optimizer_state_table(&ModelConfig::paper(2)));
     println!(

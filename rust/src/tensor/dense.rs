@@ -6,16 +6,21 @@
 //!
 //! ## Matmul kernels
 //!
-//! All products run through one cache-blocked `ikj` kernel that streams
-//! rows of the right operand and skips zero left entries.  Large products
-//! are split row-wise across a **lazily-initialized persistent worker
-//! pool** (spawned once per process, fed through a shared queue — no
-//! per-call thread spawn on the hot path; the calling thread works the
-//! first band while the pool works the rest).  Both the k-blocking and
-//! the row split preserve the exact floating-point accumulation order
-//! of the serial kernel, so results are **bitwise identical**
-//! regardless of size or thread count — parity tests and checkpoint
-//! determinism do not depend on the dispatch decision.
+//! All products run through cache-blocked, **register-blocked
+//! microkernels** built for the autovectorizer: the innermost updates
+//! are fixed-width tiles (`axpy4`, `dot4`) expressed over
+//! `chunks_exact` slices with unrolled accumulators, so the compiler
+//! lifts them to SIMD lanes without any `unsafe` intrinsics.  Large
+//! products are split row-wise across a **lazily-initialized persistent
+//! worker pool** (spawned once per process, fed through a shared queue —
+//! no per-call thread spawn on the hot path; the calling thread works
+//! the first band while the pool works the rest).  Each output element's
+//! accumulation order is *fixed by the kernel shape alone* (ascending
+//! k-blocks, four-term quads within a block), never by the dispatch
+//! decision: the k-blocking and the row split both preserve it, so
+//! results are **bitwise identical** regardless of size or thread
+//! count — parity tests and checkpoint determinism do not depend on
+//! problem size or core count.
 //!
 //! The batched variants ([`Tensor::bmm`], [`Tensor::bmm_nt`],
 //! [`Tensor::bmm_tn`]) contract stacks of matrices (batch-major 3-D
@@ -33,6 +38,75 @@ const PAR_MULS_THRESHOLD: usize = 1 << 20;
 /// k-dimension block of the inner kernel: 64 rows of the right operand
 /// (<= 64 * 4 * n bytes) stay hot in L1/L2 while an output row is built.
 const BLOCK_K: usize = 64;
+
+/// Contraction-side unroll of the microkernels: four left-operand
+/// scalars (and their four right-operand rows) are folded per pass.
+const UNROLL_K: usize = 4;
+
+/// Output-side tile of [`axpy4`]: wide enough for two 4-lane (or one
+/// 8-lane) SIMD register per update, fixed so the compiler unrolls it.
+const TILE_N: usize = 8;
+
+// ---------------------------------------------------------------------------
+// SIMD-friendly microkernels
+//
+// Plain safe Rust; the fixed-width tiles below are what the
+// autovectorizer needs to emit packed FMAs.  Accumulation order is part
+// of the kernel contract (see the module docs): `axpy4` folds its four
+// terms left-to-right into the existing output, `dot4` keeps four
+// independent lane accumulators and reduces them pairwise at the end —
+// both fully deterministic and independent of dispatch.
+// ---------------------------------------------------------------------------
+
+/// `o[j] += a[0] b0[j] + a[1] b1[j] + a[2] b2[j] + a[3] b3[j]` over the
+/// full row, tiled `TILE_N` wide with a scalar tail.
+#[inline]
+fn axpy4(o: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    let n = o.len();
+    let main = n - n % TILE_N;
+    let (o_main, o_tail) = o.split_at_mut(main);
+    for (t, ot) in o_main.chunks_exact_mut(TILE_N).enumerate() {
+        let off = t * TILE_N;
+        let c0 = &b0[off..off + TILE_N];
+        let c1 = &b1[off..off + TILE_N];
+        let c2 = &b2[off..off + TILE_N];
+        let c3 = &b3[off..off + TILE_N];
+        for l in 0..TILE_N {
+            ot[l] += a[0] * c0[l] + a[1] * c1[l] + a[2] * c2[l] + a[3] * c3[l];
+        }
+    }
+    for (l, ov) in o_tail.iter_mut().enumerate() {
+        let j = main + l;
+        *ov += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+    }
+}
+
+/// Single-row update `o[j] += a * b[j]` (the `UNROLL_K` remainder path).
+#[inline]
+fn axpy1(o: &mut [f32], a: f32, b: &[f32]) {
+    for (ov, &bv) in o.iter_mut().zip(b) {
+        *ov += a * bv;
+    }
+}
+
+/// Dot product with four independent lane accumulators (`chunks_exact`
+/// quads), reduced pairwise — the inner kernel of [`Tensor::bmm_nt`].
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut qa = a.chunks_exact(4);
+    let mut qb = b.chunks_exact(4);
+    for (ca, cb) in (&mut qa).zip(&mut qb) {
+        for l in 0..4 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in qa.remainder().iter().zip(qb.remainder()) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
 
 // ---------------------------------------------------------------------------
 // Persistent worker pool
@@ -124,23 +198,39 @@ impl Latch {
 
 /// Blocked `ikj` kernel over a contiguous band of output rows.
 ///
-/// `out` holds rows `row0..row0 + out.len() / n` of the product; the
-/// accumulation order over `p` is ascending (blocks in order, rows in
-/// order within a block), identical to the naive streaming kernel.
+/// `out` holds rows `row0..row0 + out.len() / n` of the product.  The
+/// accumulation order over `p` is ascending k-blocks, [`UNROLL_K`]-wide
+/// [`axpy4`] quads within a block (scalar tail last) — fixed by the
+/// kernel, independent of band split and thread count.  All-zero quads
+/// of the left operand are skipped (exact: adding a `0.0 * x` term is
+/// the identity the skip elides).
 fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], row0: usize, k: usize, n: usize) {
     for (i, orow) in out.chunks_mut(n).enumerate() {
         let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
         let mut p0 = 0;
         while p0 < k {
             let p1 = (p0 + BLOCK_K).min(k);
-            for (p, &av) in arow[p0..p1].iter().enumerate() {
-                if av == 0.0 {
-                    continue;
+            let mut quads = arow[p0..p1].chunks_exact(UNROLL_K);
+            let mut p = p0;
+            for q in quads.by_ref() {
+                let av = [q[0], q[1], q[2], q[3]];
+                if av != [0.0; 4] {
+                    axpy4(
+                        orow,
+                        av,
+                        &b[p * n..(p + 1) * n],
+                        &b[(p + 1) * n..(p + 2) * n],
+                        &b[(p + 2) * n..(p + 3) * n],
+                        &b[(p + 3) * n..(p + 4) * n],
+                    );
                 }
-                let brow = &b[(p0 + p) * n..(p0 + p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
+                p += UNROLL_K;
+            }
+            for &av in quads.remainder() {
+                if av != 0.0 {
+                    axpy1(orow, av, &b[p * n..(p + 1) * n]);
                 }
+                p += 1;
             }
             p0 = p1;
         }
@@ -311,12 +401,7 @@ impl Tensor {
             for (ii, orow) in chunk.chunks_mut(n).enumerate() {
                 let arow = &a[ii * k..(ii + 1) * k];
                 for (j, o) in orow.iter_mut().enumerate() {
-                    let brow = &bb[j * k..(j + 1) * k];
-                    let mut acc = 0.0f32;
-                    for (&av, &bv) in arow.iter().zip(brow) {
-                        acc += av * bv;
-                    }
-                    *o = acc;
+                    *o = dot4(arow, &bb[j * k..(j + 1) * k]);
                 }
             }
         });
@@ -334,16 +419,36 @@ impl Tensor {
             for_each_chunk(&mut out, m * n, parallel, |i, chunk| {
                 let a = &self.data[i * k * m..(i + 1) * k * m];
                 let bb = &other.data[i * k * n..(i + 1) * k * n];
-                for p in 0..k {
+                // Contraction rows four at a time: the left scalars for
+                // output row `ii` are a strided gather (stride m), the
+                // four right rows are contiguous — same axpy4 microkernel
+                // and quad accumulation order as `matmul_rows`.
+                let k_main = k - k % UNROLL_K;
+                for p in (0..k_main).step_by(UNROLL_K) {
+                    let (b0, b1, b2, b3) = (
+                        &bb[p * n..(p + 1) * n],
+                        &bb[(p + 1) * n..(p + 2) * n],
+                        &bb[(p + 2) * n..(p + 3) * n],
+                        &bb[(p + 3) * n..(p + 4) * n],
+                    );
+                    for ii in 0..m {
+                        let av = [
+                            a[p * m + ii],
+                            a[(p + 1) * m + ii],
+                            a[(p + 2) * m + ii],
+                            a[(p + 3) * m + ii],
+                        ];
+                        if av != [0.0; 4] {
+                            axpy4(&mut chunk[ii * n..(ii + 1) * n], av, b0, b1, b2, b3);
+                        }
+                    }
+                }
+                for p in k_main..k {
                     let arow = &a[p * m..(p + 1) * m];
                     let brow = &bb[p * n..(p + 1) * n];
                     for (ii, &av) in arow.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let orow = &mut chunk[ii * n..(ii + 1) * n];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
+                        if av != 0.0 {
+                            axpy1(&mut chunk[ii * n..(ii + 1) * n], av, brow);
                         }
                     }
                 }
@@ -570,6 +675,40 @@ mod tests {
         let reference = matmul_naive(&a, &b);
         let scale = reference.norm() / (reference.numel() as f32).sqrt();
         assert!(c.max_abs_diff(&reference) < 1e-4 * (1.0 + scale));
+    }
+
+    #[test]
+    fn microkernel_handles_ragged_tile_sizes() {
+        // Dimensions chosen to exercise every remainder path of the
+        // register-blocked kernels: k % UNROLL_K != 0, n % TILE_N != 0,
+        // and a k crossing the BLOCK_K boundary with a tail.
+        let mut rng = SplitMix64::new(21);
+        for &(m, k, n) in &[(3usize, 5usize, 7usize), (4, 66, 9), (1, 131, 13), (7, 4, 1)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = a.matmul(&b).unwrap();
+            let reference = matmul_naive(&a, &b);
+            let scale = reference.norm() / (reference.numel() as f32).sqrt();
+            assert!(
+                c.max_abs_diff(&reference) < 1e-4 * (1.0 + scale),
+                "({m},{k},{n}) diverges from f64 reference"
+            );
+        }
+    }
+
+    #[test]
+    fn microkernel_zero_quad_skip_is_exact() {
+        // Rows with embedded all-zero quads must produce the same result
+        // as the dense reference (the skip only elides exact identities).
+        let mut rng = SplitMix64::new(22);
+        let mut a = Tensor::randn(&[2, 12], 1.0, &mut rng);
+        for j in 4..8 {
+            a.data[j] = 0.0; // zero quad in row 0
+        }
+        let b = Tensor::randn(&[12, 10], 1.0, &mut rng);
+        let c = a.matmul(&b).unwrap();
+        let reference = matmul_naive(&a, &b);
+        assert!(c.max_abs_diff(&reference) < 1e-5);
     }
 
     #[test]

@@ -5,8 +5,15 @@
 //! Both the inference engine ([`crate::inference`]) and the native
 //! training path ([`crate::train`]) run their forward passes through
 //! these functions; training additionally keeps the attention
-//! probabilities returned by [`multi_head_attention`] for the backward
-//! pass.
+//! probabilities returned by [`multi_head_attention`] /
+//! [`multi_head_attention_batched`] for the backward pass.
+//!
+//! The batched attention contracts the whole `(B, heads, S, S)` score
+//! block through the `bmm*` kernels (persistent worker pool) in three
+//! launches; the pad mask is applied as an **additive `-inf` bias**, so
+//! pad columns never branch inside the kernels yet still receive an
+//! exact-zero probability.  The single-example
+//! [`multi_head_attention`] is the `B = 1` view of the same code path.
 
 use super::dense::Tensor;
 use anyhow::{anyhow, Result};
@@ -139,8 +146,143 @@ pub fn unpack_heads(x: &Tensor) -> Result<Tensor> {
     Ok(out)
 }
 
+/// Batched head split: `(B*S, H)` row-major activations to head-major
+/// `(B*heads, S, dh)`, slicing the K-stacked buffer directly by offset
+/// (no per-example sub-tensors are materialized).
+pub fn pack_heads_batched(x: &Tensor, batch: usize, n_heads: usize) -> Result<Tensor> {
+    if x.ndim() != 2 || batch == 0 || x.shape[0] % batch != 0 || x.shape[1] % n_heads != 0 {
+        return Err(anyhow!(
+            "pack_heads_batched: bad shape {:?} for batch {batch} x {n_heads} heads",
+            x.shape
+        ));
+    }
+    let (s, h) = (x.shape[0] / batch, x.shape[1]);
+    let dh = h / n_heads;
+    let mut out = Tensor::zeros(&[batch * n_heads, s, dh]);
+    for e in 0..batch {
+        for head in 0..n_heads {
+            for i in 0..s {
+                let src = &x.data[(e * s + i) * h + head * dh..(e * s + i) * h + (head + 1) * dh];
+                let dst = ((e * n_heads + head) * s + i) * dh;
+                out.data[dst..dst + dh].copy_from_slice(src);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_heads_batched`]: `(B*heads, S, dh)` back to
+/// `(B*S, H)`.
+pub fn unpack_heads_batched(x: &Tensor, batch: usize) -> Result<Tensor> {
+    if x.ndim() != 3 || batch == 0 || x.shape[0] % batch != 0 {
+        return Err(anyhow!(
+            "unpack_heads_batched: need (B*heads, S, dh), got {:?} at batch {batch}",
+            x.shape
+        ));
+    }
+    let (n_heads, s, dh) = (x.shape[0] / batch, x.shape[1], x.shape[2]);
+    let h = n_heads * dh;
+    let mut out = Tensor::zeros(&[batch * s, h]);
+    for e in 0..batch {
+        for head in 0..n_heads {
+            for i in 0..s {
+                let src = ((e * n_heads + head) * s + i) * dh;
+                let dst = (e * s + i) * h + head * dh;
+                out.data[dst..dst + dh].copy_from_slice(&x.data[src..src + dh]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Key mask (1.0 = keep, 0.0 = pad) to the additive score bias the
+/// batched attention consumes: `0.0` for valid keys, `-inf` for pads.
+/// Adding `-inf` drives the padded scores' `exp` to an exact `0.0`, so
+/// pad columns never branch in the softmax and receive exactly zero
+/// probability — the same semantics as the exclusion mask of
+/// [`softmax_rows`].
+pub fn attention_bias_from_mask(mask: &[f32]) -> Vec<f32> {
+    mask.iter()
+        .map(|&m| if m > 0.5 { 0.0 } else { f32::NEG_INFINITY })
+        .collect()
+}
+
+/// Row-wise softmax over rows that may contain `-inf` entries (from the
+/// additive attention bias): branch-free over columns — `exp(-inf)`
+/// underflows to an exact 0.0 — with an all-masked-row guard (such a
+/// row stays all-zero, matching [`softmax_rows`] on a fully-excluded
+/// mask).
+fn softmax_rows_biased(x: &mut Tensor, cols: usize) {
+    for row in x.data.chunks_mut(cols) {
+        let maxv = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if maxv == f32::NEG_INFINITY {
+            for v in row.iter_mut() {
+                *v = 0.0;
+            }
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - maxv).exp();
+            sum += *v;
+        }
+        if sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+}
+
+/// Batched masked multi-head self-attention over a `(B*S, H)` block of
+/// K-stacked activations — the whole mini-batch's attention in three
+/// `bmm` launches on the persistent worker pool instead of `B`
+/// per-example calls.
+///
+/// `bias` is the `(B*S,)` additive key bias from
+/// [`attention_bias_from_mask`]; pad columns carry `-inf` and therefore
+/// never branch inside the kernels.  Returns the context `(B*S, H)` and
+/// the probabilities `(B*heads, S, S)` — exactly what
+/// [`crate::train::blocks::multi_head_attention_vjp_batched`] consumes.
+pub fn multi_head_attention_batched(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bias: &[f32],
+    n_heads: usize,
+    batch: usize,
+) -> Result<(Tensor, Tensor)> {
+    if k.shape != q.shape || v.shape != q.shape || bias.len() != q.shape[0] {
+        return Err(anyhow!(
+            "attention shape mismatch q {:?} bias {}",
+            q.shape,
+            bias.len()
+        ));
+    }
+    let qh = pack_heads_batched(q, batch, n_heads)?;
+    let kh = pack_heads_batched(k, batch, n_heads)?;
+    let vh = pack_heads_batched(v, batch, n_heads)?;
+    let (s, dh) = (qh.shape[1], qh.shape[2]);
+    let mut scores = qh.bmm_nt(&kh)?; // (B*heads, S, S)
+    let scale = 1.0 / (dh as f32).sqrt();
+    for (bh, mat) in scores.data.chunks_mut(s * s).enumerate() {
+        let ebias = &bias[(bh / n_heads) * s..(bh / n_heads + 1) * s];
+        for row in mat.chunks_mut(s) {
+            for (x, &b) in row.iter_mut().zip(ebias) {
+                *x = *x * scale + b;
+            }
+        }
+    }
+    softmax_rows_biased(&mut scores, s);
+    let probs = scores;
+    let ctx = probs.bmm(&vh)?; // (B*heads, S, dh)
+    Ok((unpack_heads_batched(&ctx, batch)?, probs))
+}
+
 /// Masked multi-head self-attention on `(S, H)` activations (the
-/// accelerator's MM + softmax path, paper Fig. 8).
+/// accelerator's MM + softmax path, paper Fig. 8) — the single-example
+/// view of [`multi_head_attention_batched`], kept for inference and the
+/// looped reference schedule.
 ///
 /// Returns the context `(S, H)` and the per-head attention
 /// probabilities `(heads, S, S)` — the latter is exactly what the
@@ -152,23 +294,12 @@ pub fn multi_head_attention(
     mask: &[f32],
     n_heads: usize,
 ) -> Result<(Tensor, Tensor)> {
-    let (s, h) = (q.shape[0], q.shape[1]);
+    let s = q.shape[0];
     if k.shape != q.shape || v.shape != q.shape || mask.len() != s {
         return Err(anyhow!("attention shape mismatch q {:?} mask {}", q.shape, mask.len()));
     }
-    let dh = h / n_heads;
-    let qh = pack_heads(q, n_heads)?;
-    let kh = pack_heads(k, n_heads)?;
-    let vh = pack_heads(v, n_heads)?;
-    let mut scores = qh.bmm_nt(&kh)?; // (heads, S, S)
-    let scale = 1.0 / (dh as f32).sqrt();
-    for x in scores.data.iter_mut() {
-        *x *= scale;
-    }
-    let probs = softmax_rows(&scores.reshape(&[n_heads * s, s])?, Some(mask))
-        .reshape(&[n_heads, s, s])?;
-    let ctx = probs.bmm(&vh)?; // (heads, S, dh)
-    Ok((unpack_heads(&ctx)?, probs))
+    let bias = attention_bias_from_mask(mask);
+    multi_head_attention_batched(q, k, v, &bias, n_heads, 1)
 }
 
 #[cfg(test)]
@@ -231,6 +362,81 @@ mod tests {
         let packed = pack_heads(&x, 3).unwrap();
         assert_eq!(packed.shape, vec![3, 5, 4]);
         assert_eq!(unpack_heads(&packed).unwrap(), x);
+    }
+
+    #[test]
+    fn pack_heads_batched_roundtrip_and_b1_equivalence() {
+        let mut rng = SplitMix64::new(43);
+        let x = Tensor::randn(&[2 * 5, 12], 1.0, &mut rng); // B=2, S=5, H=12
+        let packed = pack_heads_batched(&x, 2, 3).unwrap();
+        assert_eq!(packed.shape, vec![6, 5, 4]);
+        assert_eq!(unpack_heads_batched(&packed, 2).unwrap(), x);
+        // batch = 1 degenerates to the single-example pack.
+        let x1 = Tensor::randn(&[5, 12], 1.0, &mut rng);
+        assert_eq!(
+            pack_heads_batched(&x1, 1, 3).unwrap(),
+            pack_heads(&x1, 3).unwrap()
+        );
+    }
+
+    #[test]
+    fn batched_attention_matches_per_example_on_ragged_masks() {
+        // Two examples with different pad counts: the batched kernel
+        // must reproduce the per-example reference bitwise (same bmm
+        // microkernels, additive -inf bias == exclusion mask).
+        let mut rng = SplitMix64::new(44);
+        let (b, s, h, heads) = (2usize, 6usize, 8usize, 2usize);
+        let q = Tensor::randn(&[b * s, h], 1.0, &mut rng);
+        let k = Tensor::randn(&[b * s, h], 1.0, &mut rng);
+        let v = Tensor::randn(&[b * s, h], 1.0, &mut rng);
+        let mask = [1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0];
+        let bias = attention_bias_from_mask(&mask);
+        let (ctx, probs) = multi_head_attention_batched(&q, &k, &v, &bias, heads, b).unwrap();
+        assert_eq!(ctx.shape, vec![b * s, h]);
+        assert_eq!(probs.shape, vec![b * heads, s, s]);
+        for e in 0..b {
+            let slice = |t: &Tensor| {
+                Tensor::from_vec(t.data[e * s * h..(e + 1) * s * h].to_vec(), &[s, h]).unwrap()
+            };
+            let (ctx_e, probs_e) = multi_head_attention(
+                &slice(&q),
+                &slice(&k),
+                &slice(&v),
+                &mask[e * s..(e + 1) * s],
+                heads,
+            )
+            .unwrap();
+            assert_eq!(&ctx.data[e * s * h..(e + 1) * s * h], &ctx_e.data[..]);
+            assert_eq!(
+                &probs.data[e * heads * s * s..(e + 1) * heads * s * s],
+                &probs_e.data[..]
+            );
+        }
+        // Pad columns carry exactly zero probability in every row.
+        for (bh, mat) in probs.data.chunks(s * s).enumerate() {
+            let e = bh / heads;
+            for row in mat.chunks(s) {
+                for (j, &p) in row.iter().enumerate() {
+                    if mask[e * s + j] == 0.0 {
+                        assert_eq!(p, 0.0);
+                    }
+                }
+                assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_example_yields_zero_probs_not_nan() {
+        let mut rng = SplitMix64::new(45);
+        let (s, h, heads) = (4usize, 8usize, 2usize);
+        let q = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let kk = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let v = Tensor::randn(&[s, h], 1.0, &mut rng);
+        let bias = attention_bias_from_mask(&[0.0; 4]);
+        let (ctx, probs) = multi_head_attention_batched(&q, &kk, &v, &bias, heads, 1).unwrap();
+        assert!(probs.data.iter().all(|&p| p == 0.0));
+        assert!(ctx.data.iter().all(|&c| c == 0.0));
     }
 
     #[test]

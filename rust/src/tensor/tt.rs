@@ -388,8 +388,18 @@ impl TTMatrix {
     /// by [`TTMatrix::matmul_btt`] and the training layer's
     /// instrumented forward (`crate::train::layers`).
     pub fn record_merge_stats(&self, stats: &mut ContractionStats) {
+        self.record_merge_left_stats(stats);
+        self.record_merge_right_stats(stats);
+    }
+
+    /// Left (output-side) merge costs only: `G_1..G_d -> Z3`.  Split out
+    /// so the fused QKV layer (`crate::train::layers::forward_qkv_fused`)
+    /// can charge the three per-projection left merges while charging
+    /// the shared right merge **once** — the Fig. 9 rescheduling
+    /// realized in accounting as well as in compute.
+    pub fn record_merge_left_stats(&self, stats: &mut ContractionStats) {
         let d = self.d();
-        // Left merge: muls = sum over steps of (m_1..m_k) r_{k-1} m_k r_k.
+        // muls per step: (m_1..m_k) r_{k-1} m_k r_k.
         let mut m_acc = self.m_modes[0];
         for k in 1..d {
             let g = &self.cores[k];
@@ -398,7 +408,12 @@ impl TTMatrix {
             m_acc *= mk;
             stats.record_step(muls, (m_acc * rk) as u64, true);
         }
-        // Right merge, symmetric over the input modes.
+    }
+
+    /// Right (input-side) merge costs only: `G_{2d}..G_{d+1} -> Z1`,
+    /// symmetric to [`TTMatrix::record_merge_left_stats`].
+    pub fn record_merge_right_stats(&self, stats: &mut ContractionStats) {
+        let d = self.d();
         let d2 = 2 * d;
         let mut n_acc = self.cores[d2 - 1].shape[1];
         for k in (d..d2 - 1).rev() {

@@ -115,9 +115,61 @@ pub fn softmax_rows_vjp(p: &Tensor, dp: &Tensor) -> Tensor {
     out
 }
 
-/// Backward of [`ops::multi_head_attention`]: given the packed
-/// probabilities `(heads, S, S)` and `d_ctx (S, H)`, return
-/// `(dq, dk, dv)` on `(S, H)`.
+/// Backward of [`ops::multi_head_attention_batched`]: given the packed
+/// probabilities `(B*heads, S, S)` and `d_ctx (B*S, H)`, return
+/// `(dq, dk, dv)` on `(B*S, H)`.  The whole mini-batch's attention
+/// backward runs in four `bmm` launches (pad columns carry exact-zero
+/// probabilities, so they contribute exact-zero gradient — the additive
+/// bias itself is constant and needs none).
+pub fn multi_head_attention_vjp_batched(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &Tensor,
+    d_ctx: &Tensor,
+    n_heads: usize,
+    batch: usize,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let (rows, h) = (q.shape[0], q.shape[1]);
+    if batch == 0 || rows % batch != 0 {
+        return Err(anyhow!("bad batch {batch} for {rows} rows"));
+    }
+    let s = rows / batch;
+    if probs.ndim() != 3 || probs.shape != [batch * n_heads, s, s] {
+        return Err(anyhow!(
+            "probs must be ({}, {s}, {s}), got {:?}",
+            batch * n_heads,
+            probs.shape
+        ));
+    }
+    let dh = h / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let qh = ops::pack_heads_batched(q, batch, n_heads)?;
+    let kh = ops::pack_heads_batched(k, batch, n_heads)?;
+    let vh = ops::pack_heads_batched(v, batch, n_heads)?;
+    let dctx_h = ops::pack_heads_batched(d_ctx, batch, n_heads)?; // (B*heads, S, dh)
+
+    // ctx = P V  =>  dV = P^T dctx, dP = dctx V^T.
+    let dv_h = probs.bmm_tn(&dctx_h)?; // (B*heads, S, dh)
+    let dp = dctx_h.bmm_nt(&vh)?; // (B*heads, S, S)
+    // P = softmax(scale * Q K^T + bias) row-wise.
+    let mut ds = softmax_rows_vjp(probs, &dp);
+    for x in ds.data.iter_mut() {
+        *x *= scale;
+    }
+    // scores = Q K^T  =>  dQ = dS K, dK = dS^T Q.
+    let dq_h = ds.bmm(&kh)?; // (B*heads, S, dh)
+    let dk_h = ds.bmm_tn(&qh)?; // (B*heads, S, dh)
+    Ok((
+        ops::unpack_heads_batched(&dq_h, batch)?,
+        ops::unpack_heads_batched(&dk_h, batch)?,
+        ops::unpack_heads_batched(&dv_h, batch)?,
+    ))
+}
+
+/// Backward of [`ops::multi_head_attention`]: the single-example view
+/// of [`multi_head_attention_vjp_batched`] (kept for the looped
+/// reference schedule and the unit tests).
 pub fn multi_head_attention_vjp(
     q: &Tensor,
     k: &Tensor,
@@ -126,33 +178,7 @@ pub fn multi_head_attention_vjp(
     d_ctx: &Tensor,
     n_heads: usize,
 ) -> Result<(Tensor, Tensor, Tensor)> {
-    let (s, h) = (q.shape[0], q.shape[1]);
-    if probs.ndim() != 3 || probs.shape != [n_heads, s, s] {
-        return Err(anyhow!("probs must be ({n_heads}, {s}, {s}), got {:?}", probs.shape));
-    }
-    let dh = h / n_heads;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let qh = ops::pack_heads(q, n_heads)?;
-    let kh = ops::pack_heads(k, n_heads)?;
-    let vh = ops::pack_heads(v, n_heads)?;
-    let dctx_h = ops::pack_heads(d_ctx, n_heads)?; // (heads, S, dh)
-
-    // ctx = P V  =>  dV = P^T dctx, dP = dctx V^T.
-    let dv_h = probs.bmm_tn(&dctx_h)?; // (heads, S, dh)
-    let dp = dctx_h.bmm_nt(&vh)?; // (heads, S, S)
-    // P = softmax(scale * Q K^T) row-wise.
-    let mut ds = softmax_rows_vjp(probs, &dp);
-    for x in ds.data.iter_mut() {
-        *x *= scale;
-    }
-    // scores = Q K^T  =>  dQ = dS K, dK = dS^T Q.
-    let dq_h = ds.bmm(&kh)?; // (heads, S, dh)
-    let dk_h = ds.bmm_tn(&qh)?; // (heads, S, dh)
-    Ok((
-        ops::unpack_heads(&dq_h)?,
-        ops::unpack_heads(&dk_h)?,
-        ops::unpack_heads(&dv_h)?,
-    ))
+    multi_head_attention_vjp_batched(q, k, v, probs, d_ctx, n_heads, 1)
 }
 
 /// Cross-entropy over one logits row: returns `(loss, dlogits)` with

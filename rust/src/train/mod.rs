@@ -12,7 +12,12 @@
 //!   ([`crate::costmodel::LinearShape::btt_bwd_muls`]); everything is
 //!   instrumented with the same [`crate::tensor::ContractionStats`] the
 //!   forward engines use, so the BP stage validates against the
-//!   analytic cost model, not just against finite differences.
+//!   analytic cost model, not just against finite differences.  The
+//!   **fused QKV** entry points ([`forward_qkv_fused`] /
+//!   [`backward_qkv_fused`]) execute the paper's Fig. 9 rescheduling:
+//!   Q/K/V with tied input-side cores share one right merge and one
+//!   `Z2 = X Z1^T` in both directions
+//!   ([`crate::costmodel::LinearShape::btt_fwd_qkv_muls`]).
 //! * [`blocks`] — VJPs of LayerNorm, GELU, masked softmax, multi-head
 //!   attention, tanh and the joint intent+slot cross-entropy.
 //! * [`model`] — [`NativeTrainModel`]: the full tensorized transformer
@@ -36,6 +41,9 @@ pub mod layers;
 pub mod model;
 pub mod native;
 
-pub use layers::{TTLinear, TTLinearGrads};
-pub use model::NativeTrainModel;
+pub use layers::{
+    backward_qkv_fused, forward_qkv_fused, qkv_input_cores_shared, QkvFusedCache, QkvFusedGrads,
+    TTLinear, TTLinearGrads,
+};
+pub use model::{ComputePath, NativeTrainModel};
 pub use native::NativeTrainer;

@@ -52,6 +52,14 @@ impl NativeTrainer {
         self.model.set_optim(cfg);
         self
     }
+
+    /// Select the compute schedule (builder style): the fused/batched
+    /// hot path (default) or the pre-fusion looped reference — the
+    /// baseline the `native-train` bench compares against.
+    pub fn with_compute_path(mut self, path: crate::train::ComputePath) -> NativeTrainer {
+        self.model.compute_path = path;
+        self
+    }
 }
 
 impl TrainBackend for NativeTrainer {

@@ -1,0 +1,276 @@
+//! Kernel parity tests for the fused compute path: the fused QKV
+//! TT-linear must match three separate TT forwards (and its backward
+//! must match finite differences), and batched attention must match the
+//! per-example reference on ragged pad masks — forward and VJP.  These
+//! are the acceptance gates of the fused/batched schedule and run in CI
+//! as a named step.
+
+use tt_trainer::costmodel::LinearShape;
+use tt_trainer::tensor::{ops, ContractionStats, Tensor};
+use tt_trainer::train::blocks;
+use tt_trainer::train::{
+    backward_qkv_fused, forward_qkv_fused, qkv_input_cores_shared, TTLinear,
+};
+use tt_trainer::util::rng::SplitMix64;
+
+/// Paper-shaped (but tiny) Q/K/V triplet with tied input-side cores.
+fn triplet(rng: &mut SplitMix64) -> (TTLinear, TTLinear, TTLinear) {
+    let wq = TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
+    let mut wk = TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
+    let mut wv = TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
+    let d = wq.tt.d();
+    for c in d..2 * d {
+        wk.tt.cores[c] = wq.tt.cores[c].clone();
+        wv.tt.cores[c] = wq.tt.cores[c].clone();
+    }
+    assert!(qkv_input_cores_shared(&wq, &wk, &wv));
+    (wq, wk, wv)
+}
+
+#[test]
+fn fused_qkv_forward_matches_three_separate_forwards() {
+    let mut rng = SplitMix64::new(101);
+    let (wq, wk, wv) = triplet(&mut rng);
+    let k_dim = 9usize;
+    let x = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
+    let mut fused = ContractionStats::default();
+    let ([yq, yk, yv], _) = forward_qkv_fused(&wq, &wk, &wv, &x, &mut fused).unwrap();
+    let mut sep = ContractionStats::default();
+    for (w, y) in [(&wq, &yq), (&wk, &yk), (&wv, &yv)] {
+        let (y_ref, _) = w.forward(&x, &mut sep).unwrap();
+        assert!(
+            y.max_abs_diff(&y_ref) <= 1e-6,
+            "fused projection diverges: {}",
+            y.max_abs_diff(&y_ref)
+        );
+    }
+    // Acceptance: fewer contraction MULs than 3x separate forwards,
+    // matching the new cost-model expression.
+    assert!(fused.muls < sep.muls);
+    let shape = LinearShape {
+        m_modes: wq.tt.m_modes.clone(),
+        n_modes: wq.tt.n_modes.clone(),
+        ranks: wq.tt.ranks.clone(),
+    };
+    assert_eq!(fused.muls, shape.btt_fwd_qkv_muls(k_dim as u64));
+    assert_eq!(sep.muls, 3 * shape.btt_muls(k_dim as u64));
+    assert_eq!(fused.stored_intermediate_elems, shape.btt_qkv_memory(k_dim as u64));
+}
+
+#[test]
+fn fused_qkv_gradients_match_finite_differences() {
+    // loss = <probe_q, Q> + <probe_k, K> + <probe_v, V>: central
+    // differences on every core entry (tied input cores perturbed in
+    // lockstep, matching the tied parameterization's chain rule) and
+    // every bias entry must match the fused backward.
+    let mut rng = SplitMix64::new(102);
+    let (wq, wk, wv) = triplet(&mut rng);
+    let d = wq.tt.d();
+    let mut lins = [wq, wk, wv];
+    let k_dim = 4usize;
+    let x = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
+    let probes: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[k_dim, 12], 1.0, &mut rng)).collect();
+
+    let loss = |lins: &[TTLinear; 3], probes: &[Tensor]| -> f32 {
+        let mut stats = ContractionStats::default();
+        let (ys, _) =
+            forward_qkv_fused(&lins[0], &lins[1], &lins[2], &x, &mut stats).unwrap();
+        ys.iter()
+            .zip(probes)
+            .map(|(y, p)| y.data.iter().zip(&p.data).map(|(a, b)| a * b).sum::<f32>())
+            .sum()
+    };
+
+    let mut stats = ContractionStats::default();
+    let (_, cache) = forward_qkv_fused(&lins[0], &lins[1], &lins[2], &x, &mut stats).unwrap();
+    let (_, grads) = backward_qkv_fused(
+        &lins[0], &lins[1], &lins[2], &probes[0], &probes[1], &probes[2], &cache, &mut stats,
+    )
+    .unwrap();
+
+    let eps = 1e-2f32;
+    // Per-projection output-side cores.
+    for p in 0..3 {
+        for k in 0..d {
+            for idx in 0..lins[p].tt.cores[k].numel() {
+                let orig = lins[p].tt.cores[k].data[idx];
+                lins[p].tt.cores[k].data[idx] = orig + eps;
+                let up = loss(&lins, &probes);
+                lins[p].tt.cores[k].data[idx] = orig - eps;
+                let dn = loss(&lins, &probes);
+                lins[p].tt.cores[k].data[idx] = orig;
+                let fd = (up - dn) / (2.0 * eps);
+                let an = grads.m_cores[p][k].data[idx];
+                assert!(
+                    (fd - an).abs() < 1e-3 * (1.0 + an.abs()),
+                    "proj {p} m-core {k}[{idx}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+    // Tied input-side cores: perturb all three copies together (the
+    // tied parameterization's derivative is the summed gradient).
+    for k in 0..d {
+        let c = d + k;
+        for idx in 0..lins[0].tt.cores[c].numel() {
+            let orig = lins[0].tt.cores[c].data[idx];
+            let mut set = |lins: &mut [TTLinear; 3], v: f32| {
+                for l in lins.iter_mut() {
+                    l.tt.cores[c].data[idx] = v;
+                }
+            };
+            set(&mut lins, orig + eps);
+            let up = loss(&lins, &probes);
+            set(&mut lins, orig - eps);
+            let dn = loss(&lins, &probes);
+            set(&mut lins, orig);
+            let fd = (up - dn) / (2.0 * eps);
+            let an = grads.n_cores[k].data[idx];
+            assert!(
+                (fd - an).abs() < 1e-3 * (1.0 + an.abs()),
+                "shared n-core {c}[{idx}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+    // Biases.
+    for (p, g) in grads.bias.iter().enumerate() {
+        // d(loss)/d(bias_j) = column sum of the probe.
+        for (j, &an) in g.iter().enumerate() {
+            let want: f32 = (0..k_dim).map(|i| probes[p].at2(i, j)).sum();
+            assert!((an - want).abs() < 1e-4, "proj {p} bias[{j}]");
+        }
+    }
+}
+
+/// Independent naive attention reference: explicit triple loops and an
+/// exclusion-mask softmax, sharing **no** code with the `bmm`/packing
+/// kernels under test — a shared-kernel regression cannot cancel out of
+/// this comparison.
+fn naive_attention(q: &Tensor, k: &Tensor, v: &Tensor, mask: &[f32], n_heads: usize) -> Tensor {
+    let (s, h) = (q.shape[0], q.shape[1]);
+    let dh = h / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[s, h]);
+    for head in 0..n_heads {
+        for i in 0..s {
+            // scores for query i against every key, masked softmax in f64.
+            let mut row = vec![0.0f64; s];
+            for j in 0..s {
+                let mut acc = 0.0f64;
+                for t in 0..dh {
+                    acc += q.data[i * h + head * dh + t] as f64
+                        * k.data[j * h + head * dh + t] as f64;
+                }
+                row[j] = acc * scale as f64;
+            }
+            let maxv = row
+                .iter()
+                .zip(mask)
+                .filter(|(_, &m)| m > 0.5)
+                .map(|(&x, _)| x)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0.0f64;
+            let mut probs = vec![0.0f64; s];
+            for j in 0..s {
+                if mask[j] > 0.5 {
+                    probs[j] = (row[j] - maxv).exp();
+                    sum += probs[j];
+                }
+            }
+            for t in 0..dh {
+                let mut acc = 0.0f64;
+                for j in 0..s {
+                    acc += probs[j] / sum * v.data[j * h + head * dh + t] as f64;
+                }
+                ctx.data[i * h + head * dh + t] = acc as f32;
+            }
+        }
+    }
+    ctx
+}
+
+#[test]
+fn batched_attention_matches_independent_naive_reference() {
+    // The batched kernel vs a from-scratch f64 implementation (not the
+    // B = 1 view of itself): catches regressions in the shared
+    // bias/softmax/bmm path that a self-comparison would cancel out.
+    let mut rng = SplitMix64::new(104);
+    let (b, s, h, heads) = (2usize, 6usize, 8usize, 2usize);
+    let q = Tensor::randn(&[b * s, h], 0.8, &mut rng);
+    let k = Tensor::randn(&[b * s, h], 0.8, &mut rng);
+    let v = Tensor::randn(&[b * s, h], 0.8, &mut rng);
+    let mask = [1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+    let bias = ops::attention_bias_from_mask(&mask);
+    let (ctx, _) = ops::multi_head_attention_batched(&q, &k, &v, &bias, heads, b).unwrap();
+    for e in 0..b {
+        let slice = |t: &Tensor| {
+            Tensor::from_vec(t.data[e * s * h..(e + 1) * s * h].to_vec(), &[s, h]).unwrap()
+        };
+        let want = naive_attention(
+            &slice(&q),
+            &slice(&k),
+            &slice(&v),
+            &mask[e * s..(e + 1) * s],
+            heads,
+        );
+        let got = slice(&ctx);
+        assert!(
+            got.max_abs_diff(&want) < 1e-5,
+            "example {e}: batched attention diverges from naive f64 reference by {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn batched_attention_matches_per_example_reference_on_ragged_masks() {
+    let mut rng = SplitMix64::new(103);
+    let (b, s, h, heads) = (3usize, 7usize, 12usize, 3usize);
+    let q = Tensor::randn(&[b * s, h], 0.8, &mut rng);
+    let k = Tensor::randn(&[b * s, h], 0.8, &mut rng);
+    let v = Tensor::randn(&[b * s, h], 0.8, &mut rng);
+    // Ragged pads: 2, 0 and 5 pad positions respectively.
+    let mut mask = vec![1.0f32; b * s];
+    for &p in &[5usize, 6, 16, 17, 18, 19, 20] {
+        mask[p] = 0.0;
+    }
+    let bias = ops::attention_bias_from_mask(&mask);
+    let (ctx, probs) = ops::multi_head_attention_batched(&q, &k, &v, &bias, heads, b).unwrap();
+    let d_ctx = Tensor::randn(&[b * s, h], 1.0, &mut rng);
+    let (dq, dk, dv) =
+        blocks::multi_head_attention_vjp_batched(&q, &k, &v, &probs, &d_ctx, heads, b).unwrap();
+
+    for e in 0..b {
+        let slice = |t: &Tensor| {
+            Tensor::from_vec(t.data[e * s * h..(e + 1) * s * h].to_vec(), &[s, h]).unwrap()
+        };
+        let (qe, ke, ve) = (slice(&q), slice(&k), slice(&v));
+        let me = &mask[e * s..(e + 1) * s];
+        let (ctx_e, probs_e) = ops::multi_head_attention(&qe, &ke, &ve, me, heads).unwrap();
+        assert_eq!(
+            &ctx.data[e * s * h..(e + 1) * s * h],
+            &ctx_e.data[..],
+            "example {e}: batched ctx != per-example reference"
+        );
+        let (dqe, dke, dve) =
+            blocks::multi_head_attention_vjp(&qe, &ke, &ve, &probs_e, &slice(&d_ctx), heads)
+                .unwrap();
+        for (name, got, want) in [("dq", &dq, &dqe), ("dk", &dk, &dke), ("dv", &dv, &dve)] {
+            assert_eq!(
+                &got.data[e * s * h..(e + 1) * s * h],
+                &want.data[..],
+                "example {e}: batched {name} != per-example reference"
+            );
+        }
+        // Pad positions receive exactly zero dK/dV (no key/value grad
+        // can flow through a zero-probability column).
+        for (p, &m) in me.iter().enumerate() {
+            if m == 0.0 {
+                for j in 0..h {
+                    assert_eq!(dk.data[(e * s + p) * h + j], 0.0);
+                    assert_eq!(dv.data[(e * s + p) * h + j], 0.0);
+                }
+            }
+        }
+    }
+}
