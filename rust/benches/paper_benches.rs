@@ -30,7 +30,7 @@ use tt_trainer::fpga::{bram, energy, resources, schedule};
 use tt_trainer::optim::{OptimConfig, OptimKind};
 #[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
-use tt_trainer::tensor::{Tensor, TTMatrix};
+use tt_trainer::tensor::{Precision, Tensor, TTMatrix};
 use tt_trainer::train::{ComputePath, NativeTrainer};
 use tt_trainer::util::rng::SplitMix64;
 use tt_trainer::util::timer::bench;
@@ -87,35 +87,42 @@ fn main() {
 }
 
 /// Measured rust-native training throughput (FP + BP + PU) across
-/// optimizer x batch x compute schedule — the artifact-free counterpart
-/// of the `pjrt` section.  Also emits `BENCH_native_train.json` so the
-/// perf trajectory of the native trainer is recorded across PRs; the
-/// fused/batched rows and the looped baseline come from the same run,
-/// so the JSON itself documents the schedule speedup.
+/// optimizer x batch x compute schedule x storage precision — the
+/// artifact-free counterpart of the `pjrt` section.  Also emits
+/// `BENCH_native_train.json` so the perf trajectory of the native
+/// trainer is recorded across PRs; the fused/batched rows, the looped
+/// baseline and the bf16 storage-path rows come from the same run, so
+/// the JSON itself documents both the schedule speedup and the
+/// mixed-precision throughput/bytes trade.
 fn native_train() {
     hdr("native-train", "measured native training throughput (no artifacts)");
     let cfg = ModelConfig::paper(2);
     let data = Dataset::synth(&cfg, 42, 64);
-    // (optimizer, batch, schedule): the default fused/batched hot path
-    // across the optimizer grid, plus the two batch-8 baselines that
-    // isolate the fused-QKV and batched-attention wins.
+    // (optimizer, batch, schedule, precision): the default fused/batched
+    // f32 hot path across the optimizer grid, the two batch-8 baselines
+    // that isolate the fused-QKV and batched-attention wins, and the
+    // bf16 storage-path rows (halved Eq. 21 cache + optimizer state).
     let unfused_batched = ComputePath { fused_qkv: false, batched_attention: true };
     let grid = [
-        (OptimKind::Sgd, 1usize, ComputePath::fused()),
-        (OptimKind::Sgd, 8, ComputePath::fused()),
-        (OptimKind::Adam, 1, ComputePath::fused()),
-        (OptimKind::Adam, 8, ComputePath::fused()),
-        (OptimKind::Adam, 8, unfused_batched),
-        (OptimKind::Adam, 8, ComputePath::looped()),
+        (OptimKind::Sgd, 1usize, ComputePath::fused(), Precision::F32),
+        (OptimKind::Sgd, 8, ComputePath::fused(), Precision::F32),
+        (OptimKind::Adam, 1, ComputePath::fused(), Precision::F32),
+        (OptimKind::Adam, 8, ComputePath::fused(), Precision::F32),
+        (OptimKind::Adam, 8, unfused_batched, Precision::F32),
+        (OptimKind::Adam, 8, ComputePath::looped(), Precision::F32),
+        (OptimKind::Adam, 1, ComputePath::fused(), Precision::Bf16),
+        (OptimKind::Adam, 8, ComputePath::fused(), Precision::Bf16),
     ];
     let mut rows = Vec::new();
     let mut fused_b8 = None;
     let mut looped_b8 = None;
-    for (kind, batch, path) in grid {
-        let optim = OptimConfig { kind, batch_size: batch, ..Default::default() };
+    let mut bf16_b8 = None;
+    for (kind, batch, path, precision) in grid {
+        let optim = OptimConfig { kind, batch_size: batch, precision, ..Default::default() };
         // Fail loudly: a silent early return would leave
         // BENCH_native_train.json unwritten and surface only as a
         // confusing missing-artifact error in CI.
+        // with_optim applies the config's storage precision model-wide.
         let backend = NativeTrainer::random_init(&cfg, 42)
             .expect("paper config init")
             .with_optim(optim)
@@ -131,29 +138,42 @@ fn native_train() {
         let steps_per_sec = 1.0 / stats.p50;
         let tokens_per_sec = (batch * cfg.seq_len) as f64 / stats.p50;
         let mean_loss = trainer.metrics.recent_loss(4);
+        // On-chip bytes of this configuration: the step's Eq. 21 cache
+        // at the storage width plus the moments actually allocated.
+        let eq21_cache_bytes =
+            trainer.backend.last_stats.stored_intermediate_elems * precision.bytes();
+        let optim_state_bytes = trainer.backend.model.optim.allocated_state_bytes();
         let qkv = if path.fused_qkv { "fused" } else { "separate" };
         let attn = if path.batched_attention { "batched" } else { "looped" };
-        if kind == OptimKind::Adam && batch == 8 {
-            if path == ComputePath::fused() {
-                fused_b8 = Some(steps_per_sec);
-            } else if path == ComputePath::looped() {
-                looped_b8 = Some(steps_per_sec);
+        if kind == OptimKind::Adam && batch == 8 && path == ComputePath::fused() {
+            match precision {
+                Precision::F32 => fused_b8 = Some(steps_per_sec),
+                Precision::Bf16 => bf16_b8 = Some(steps_per_sec),
+                Precision::F16 => {}
             }
         }
+        if kind == OptimKind::Adam && batch == 8 && path == ComputePath::looped() {
+            looped_b8 = Some(steps_per_sec);
+        }
         println!(
-            "{:<8} batch {batch} qkv {qkv:<8} attn {attn:<7}: step {} | {:.2} steps/s | \
-             {:.0} tokens/s | loss {mean_loss:.4}",
+            "{:<8} batch {batch} qkv {qkv:<8} attn {attn:<7} prec {:<4}: step {} | \
+             {:.2} steps/s | {:.0} tokens/s | cache {} B | state {} B | loss {mean_loss:.4}",
             kind.name(),
+            precision.name(),
             stats.fmt_ms(),
             steps_per_sec,
-            tokens_per_sec
+            tokens_per_sec,
+            eq21_cache_bytes,
+            optim_state_bytes
         );
         rows.push(format!(
             "    {{\"optimizer\": \"{}\", \"batch\": {batch}, \"qkv\": \"{qkv}\", \
-             \"attention\": \"{attn}\", \"p50_step_secs\": {:.6}, \
+             \"attention\": \"{attn}\", \"precision\": \"{}\", \"p50_step_secs\": {:.6}, \
              \"steps_per_sec\": {steps_per_sec:.3}, \"tokens_per_sec\": {tokens_per_sec:.1}, \
-             \"mean_loss\": {mean_loss:.5}}}",
+             \"eq21_cache_bytes\": {eq21_cache_bytes}, \
+             \"optim_state_bytes\": {optim_state_bytes}, \"mean_loss\": {mean_loss:.5}}}",
             kind.name(),
+            precision.name(),
             stats.p50
         ));
     }
@@ -161,7 +181,12 @@ fn native_train() {
         (Some(f), Some(l)) if l > 0.0 => f / l,
         _ => 0.0,
     };
+    let bf16_speedup = match (bf16_b8, fused_b8) {
+        (Some(b), Some(f)) if f > 0.0 => b / f,
+        _ => 0.0,
+    };
     println!("fused/batched vs looped baseline (adam, batch 8): {speedup:.2}x steps/s");
+    println!("bf16 vs f32 storage path (adam, batch 8, fused): {bf16_speedup:.2}x steps/s");
     // Eval latency through the merged-factor engine (batch 1).
     let backend = NativeTrainer::random_init(&cfg, 42).expect("init");
     let ex = data.examples[0].clone();
@@ -176,7 +201,7 @@ fn native_train() {
     let json = format!(
         "{{\n  \"bench\": \"native_train\",\n  \"model\": \"tt_L2\",\n  \"seq_len\": {},\n  \
          \"eval_p50_secs\": {:.6},\n  \"fused_vs_looped_speedup_b8\": {speedup:.3},\n  \
-         \"rows\": [\n{}\n  ]\n}}\n",
+         \"bf16_vs_f32_speedup_b8\": {bf16_speedup:.3},\n  \"rows\": [\n{}\n  ]\n}}\n",
         cfg.seq_len,
         eval_stats.p50,
         rows.join(",\n")

@@ -328,6 +328,29 @@ impl LinearShape {
     pub fn optimizer_state_elems(&self, state_multiplier: u64) -> u64 {
         state_multiplier * (self.tt_params() + self.m())
     }
+
+    // -- Per-precision byte accounting (mixed-precision storage path) --------
+
+    /// Eq. 21 intermediate memory in **bytes** at a storage precision —
+    /// element counts are precision-independent, the bytes halve for
+    /// the 16-bit formats.
+    pub fn btt_memory_bytes(&self, k_dim: u64, precision: crate::tensor::Precision) -> u64 {
+        self.btt_memory(k_dim) * precision.bytes()
+    }
+
+    /// Fused-QKV Eq. 21 cache in bytes at a storage precision.
+    pub fn btt_qkv_memory_bytes(&self, k_dim: u64, precision: crate::tensor::Precision) -> u64 {
+        self.btt_qkv_memory(k_dim) * precision.bytes()
+    }
+
+    /// PU-stage optimizer-state bytes at a storage precision.
+    pub fn optimizer_state_bytes(
+        &self,
+        state_multiplier: u64,
+        precision: crate::tensor::Precision,
+    ) -> u64 {
+        self.optimizer_state_elems(state_multiplier) * precision.bytes()
+    }
 }
 
 /// One row of a Fig. 6-style comparison.
@@ -579,6 +602,32 @@ mod tests {
         // Dense-equivalent Adam state would be 2 M N; compressed state
         // keeps the full compression ratio.
         assert!(shape.optimizer_state_elems(2) < 2 * shape.mm_weight() / 20);
+    }
+
+    #[test]
+    fn half_precision_byte_accounting_halves_every_row() {
+        use crate::tensor::Precision;
+        let shape = LinearShape::paper();
+        for k in [1u64, 8, 32] {
+            for prec in [Precision::Bf16, Precision::F16] {
+                assert_eq!(
+                    2 * shape.btt_memory_bytes(k, prec),
+                    shape.btt_memory_bytes(k, Precision::F32)
+                );
+                assert_eq!(
+                    2 * shape.btt_qkv_memory_bytes(k, prec),
+                    shape.btt_qkv_memory_bytes(k, Precision::F32)
+                );
+                assert_eq!(
+                    2 * shape.optimizer_state_bytes(2, prec),
+                    shape.optimizer_state_bytes(2, Precision::F32)
+                );
+            }
+        }
+        assert_eq!(
+            shape.btt_memory_bytes(32, Precision::F32),
+            4 * shape.btt_memory(32)
+        );
     }
 
     #[test]

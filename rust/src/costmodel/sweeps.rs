@@ -11,6 +11,7 @@
 use super::{compare_all, CostRow, LinearShape};
 use crate::config::ModelConfig;
 use crate::optim::{OptimKind, StateFootprint};
+use crate::tensor::Precision;
 
 /// One sweep point: the independent variable plus all method rows.
 #[derive(Debug, Clone)]
@@ -74,20 +75,32 @@ pub fn render_sweep(points: &[SweepPoint], x_name: &str) -> String {
     out
 }
 
-/// PU-stage optimizer-state column for a whole model: per update rule,
-/// the state multiplier, the compressed state size (fp32), and what the
-/// same rule would cost on the uncompressed model — the paper's
-/// on-chip-optimizer story in one table.
+/// PU-stage optimizer-state column for a whole model at fp32 storage:
+/// per update rule, the state multiplier, the compressed state size,
+/// and what the same rule would cost on the uncompressed model — the
+/// paper's on-chip-optimizer story in one table.
 pub fn optimizer_state_table(cfg: &ModelConfig) -> String {
+    optimizer_state_table_prec(cfg, Precision::F32)
+}
+
+/// [`optimizer_state_table`] at a storage [`Precision`] — the
+/// per-precision sweep row of the mixed-precision path (element counts
+/// unchanged, bytes halved for bf16/f16).
+pub fn optimizer_state_table_prec(cfg: &ModelConfig, precision: Precision) -> String {
     let mut out = String::new();
     out.push_str(&format!(
         "{:<10} {:>11} {:>14} {:>12} {:>14}\n",
-        "optimizer", "state/param", "state elems", "state MB", "dense-equiv MB"
+        "optimizer",
+        "state/param",
+        "state elems",
+        format!("{} MB", precision.name()),
+        "dense-equiv MB"
     ));
     for kind in OptimKind::all() {
-        let fp = StateFootprint::for_model(cfg, kind);
-        let dense_mb =
-            (kind.state_multiplier() * cfg.dense_equivalent_params()) as f64 * 4.0 / 1e6;
+        let fp = StateFootprint::for_model_prec(cfg, kind, precision);
+        let dense_mb = (kind.state_multiplier() * cfg.dense_equivalent_params()) as f64
+            * precision.bytes() as f64
+            / 1e6;
         out.push_str(&format!(
             "{:<10} {:>10}x {:>14} {:>12.3} {:>14.1}\n",
             kind.name(),
@@ -157,5 +170,17 @@ mod tests {
         // single MB while the dense equivalent would be ~73 MB.
         let adam = StateFootprint::for_model(&ModelConfig::paper(2), OptimKind::Adam);
         assert!(adam.state_mb() < 3.0, "compressed Adam state {} MB", adam.state_mb());
+    }
+
+    #[test]
+    fn per_precision_state_table_halves_the_bytes() {
+        let cfg = ModelConfig::paper(2);
+        let bf16 = optimizer_state_table_prec(&cfg, Precision::Bf16);
+        assert_eq!(bf16.lines().count(), 5, "header + 4 optimizer rows");
+        assert!(bf16.contains("bf16 MB"), "precision missing from header");
+        let f = StateFootprint::for_model_prec(&cfg, OptimKind::Adam, Precision::F32);
+        let b = StateFootprint::for_model_prec(&cfg, OptimKind::Adam, Precision::Bf16);
+        assert_eq!(b.state_elems, f.state_elems);
+        assert!((2.0 * b.state_mb() - f.state_mb()).abs() < 1e-9);
     }
 }

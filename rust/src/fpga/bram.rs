@@ -13,7 +13,11 @@ use crate::config::U50;
 /// Legal BRAM36 width configurations (bits).
 pub const WIDTHS: [usize; 7] = [1, 2, 4, 9, 18, 36, 72];
 
-/// fp32 word width used throughout the paper.
+/// Default element width: the paper's fp32 words.  The allocator itself
+/// is precision-parameterized (`*_at` variants take the element width in
+/// bits, e.g. 16 for the bf16/f16 storage path — see
+/// [`crate::tensor::Precision::bits`]); the historical entry points
+/// below fix the width to this fp32 default.
 pub const BW: usize = 32;
 
 /// Allocation strategies from the paper (Sec. V-C + Fig. 12 legend).
@@ -63,8 +67,23 @@ pub struct CoreArray {
     pub depth: usize,
 }
 
-/// Blocks used by one array under (strategy, W); Eqs. 22-25.
+/// Blocks used by one array under (strategy, W) at the fp32 element
+/// width; Eqs. 22-25.
 pub fn blocks_for(array: CoreArray, group_k: usize, strategy: Strategy, w: usize) -> usize {
+    blocks_for_width(array, group_k, strategy, w, BW)
+}
+
+/// Blocks used by one array under (strategy, W) for elements of
+/// `elem_bits` bits — Eqs. 22-25 generalized to the mixed-precision
+/// storage path (16-bit elements halve every `n_w` term, never
+/// increasing the block count).
+pub fn blocks_for_width(
+    array: CoreArray,
+    group_k: usize,
+    strategy: Strategy,
+    w: usize,
+    elem_bits: usize,
+) -> usize {
     let d = U50::BRAM_BITS / w;
     let depth = array.depth * group_k; // grouping concatenates along depth
     let (n_w, n_d) = if matches!(
@@ -72,20 +91,31 @@ pub fn blocks_for(array: CoreArray, group_k: usize, strategy: Strategy, w: usize
         Strategy::PartitionDefault | Strategy::PartitionGrouped
     ) {
         // Eq. 22/24: one bank per rank lane, each B_w bits wide.
-        (array.r * BW.div_ceil(w), depth.div_ceil(d))
+        (array.r * elem_bits.div_ceil(w), depth.div_ceil(d))
     } else {
         // Eq. 23/25: lanes packed into one B_w * r wide word.
-        ((BW * array.r).div_ceil(w), depth.div_ceil(d))
+        ((elem_bits * array.r).div_ceil(w), depth.div_ceil(d))
     };
     n_w * n_d
 }
 
-/// Best width configuration for an array: the paper's optimization
-/// `min_W F(theta, beta)` over the legal widths.
+/// Best width configuration for an array at the fp32 element width: the
+/// paper's optimization `min_W F(theta, beta)` over the legal widths.
 pub fn best_width(array: CoreArray, group_k: usize, strategy: Strategy) -> (usize, usize) {
+    best_width_at(array, group_k, strategy, BW)
+}
+
+/// [`best_width`] optimizing over the *real* element width of the
+/// stored format rather than the hard-coded fp32 word.
+pub fn best_width_at(
+    array: CoreArray,
+    group_k: usize,
+    strategy: Strategy,
+    elem_bits: usize,
+) -> (usize, usize) {
     WIDTHS
         .iter()
-        .map(|&w| (w, blocks_for(array, group_k, strategy, w)))
+        .map(|&w| (w, blocks_for_width(array, group_k, strategy, w, elem_bits)))
         .min_by_key(|&(_, blocks)| blocks)
         .unwrap()
 }
@@ -108,32 +138,43 @@ pub fn paper_group_k(d: usize, n_layers: usize) -> usize {
     ((d - 1) * n_layers).max(1)
 }
 
-/// Allocate a set of identical-shaped core arrays.
+/// Allocate a set of identical-shaped core arrays at the fp32 element
+/// width.
 ///
 /// `cores`: (array, count) pairs — e.g. the 2d cores of each of the 6
 /// linear layers across L encoders.  `group_k` applies to every array
 /// kind (cores are grouped only with same-shape peers, conservatively).
 pub fn allocate(cores: &[(CoreArray, usize)], strategy: Strategy, group_k: usize) -> Allocation {
+    allocate_at(cores, strategy, group_k, BW)
+}
+
+/// [`allocate`] for elements of `elem_bits` bits — the mixed-precision
+/// storage path places 16-bit cores/state through the same grouped
+/// allocator at half the bits per element.
+pub fn allocate_at(
+    cores: &[(CoreArray, usize)],
+    strategy: Strategy,
+    group_k: usize,
+    elem_bits: usize,
+) -> Allocation {
     let mut total_blocks = 0usize;
     let mut total_bits = 0usize;
     for &(array, count) in cores {
-        let bits = array.r * array.depth * BW * count;
+        let bits = array.r * array.depth * elem_bits * count;
         total_bits += bits;
         if strategy.grouped() {
             let k = group_k.min(count).max(1);
-            let groups = count.div_ceil(k);
             // Last group may be smaller; model it exactly.
             let full = count / k;
             let rem = count - full * k;
-            let (_, blocks_full) = best_width(array, k, strategy);
+            let (_, blocks_full) = best_width_at(array, k, strategy, elem_bits);
             total_blocks += full * blocks_full;
             if rem > 0 {
-                let (_, blocks_rem) = best_width(array, rem, strategy);
+                let (_, blocks_rem) = best_width_at(array, rem, strategy, elem_bits);
                 total_blocks += blocks_rem;
             }
-            let _ = groups;
         } else {
-            let (_, blocks) = best_width(array, 1, strategy);
+            let (_, blocks) = best_width_at(array, 1, strategy, elem_bits);
             total_blocks += count * blocks;
         }
     }
@@ -277,6 +318,51 @@ mod tests {
         assert_eq!(adam.total_bits, 2 * params.total_bits);
         assert!(adam.total_blocks <= 2 * params.total_blocks + 16);
         assert!(optimizer_state_core_set(2, 12, 0).is_empty(), "SGD keeps no state");
+    }
+
+    #[test]
+    fn halving_the_element_width_never_increases_blocks() {
+        // The mixed-precision guarantee behind the bf16/f16 storage
+        // path: for every array shape, count, grouping factor, strategy
+        // and legal BRAM width, 16-bit elements never need more blocks
+        // than 32-bit elements — and the total bits halve exactly.
+        prop::check(44, 40, |rng| {
+            let core = CoreArray {
+                r: 1 + rng.below(24) as usize,
+                depth: 1 + rng.below(1024) as usize,
+            };
+            let count = 1 + rng.below(48) as usize;
+            let k = 1 + rng.below(12) as usize;
+            for s in Strategy::all() {
+                for &w in &WIDTHS {
+                    assert!(
+                        blocks_for_width(core, k, s, w, 16) <= blocks_for_width(core, k, s, w, 32),
+                        "{s:?} W={w}: halving the element width increased blocks"
+                    );
+                }
+                let full = allocate_at(&[(core, count)], s, k, 32);
+                let half = allocate_at(&[(core, count)], s, k, 16);
+                assert!(
+                    half.total_blocks <= full.total_blocks,
+                    "{s:?}: 16-bit allocation {} > 32-bit {}",
+                    half.total_blocks,
+                    full.total_blocks
+                );
+                assert_eq!(2 * half.total_bits, full.total_bits);
+            }
+        });
+    }
+
+    #[test]
+    fn fp32_wrappers_match_the_width_parameterized_allocator() {
+        let core = CoreArray { r: 12, depth: 96 };
+        for s in Strategy::all() {
+            assert_eq!(best_width(core, 3, s), best_width_at(core, 3, s, BW));
+            assert_eq!(
+                allocate(&[(core, 13)], s, 3).total_blocks,
+                allocate_at(&[(core, 13)], s, 3, BW).total_blocks
+            );
+        }
     }
 
     #[test]

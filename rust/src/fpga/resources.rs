@@ -15,7 +15,9 @@
 
 use super::bram::{self, Strategy};
 use crate::config::{ModelConfig, U50};
+use crate::costmodel::LinearShape;
 use crate::optim::OptimKind;
+use crate::tensor::Precision;
 
 /// Utilization of one fabric resource.
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +55,16 @@ pub struct ResourceReport {
     pub bram_required: usize,
     /// Unclamped URAM demand (see `bram_required`).
     pub uram_required: usize,
+    /// Storage precision this report was sized for (cores, Eq. 21
+    /// caches, activations and optimizer state all at this width).
+    pub precision: Precision,
+    /// Eq. 21 training-cache bytes of the executed (fused-QKV)
+    /// schedule at `precision` — exactly half the f32 figure for
+    /// bf16/f16.
+    pub eq21_cache_bytes: u64,
+    /// Optimizer-state bytes at rest at `precision` (core share + dense
+    /// share), before block rounding.
+    pub optim_state_bytes: u64,
 }
 
 impl ResourceReport {
@@ -143,30 +155,44 @@ pub fn report(cfg: &ModelConfig) -> ResourceReport {
 }
 
 /// Table IV row with the PU stage's optimizer state charged against the
-/// on-chip budget.  State mirrors the compressed parameter layout
-/// (`crate::optim::StateFootprint`): the TT/TTM-core share goes through
-/// the same grouped-reshape BRAM allocator as the cores themselves and
-/// the dense share (LN/bias/pos/head tensors) is word-packed; when the
-/// parameter BRAM plus state no longer fits the 1344-block budget, the
-/// state spills to URAM (like the deep-config activation stash).
+/// on-chip budget at the fp32 storage width.
 pub fn report_with_optim(cfg: &ModelConfig, optim: OptimKind) -> ResourceReport {
-    let (dsp, lut, ff) = KernelCosts::total();
+    report_with_optim_prec(cfg, optim, Precision::F32)
+}
 
-    // Parameter storage in BRAM via the grouped-reshape allocator.
+/// Table IV row with the PU stage's optimizer state charged against the
+/// on-chip budget at the given storage [`Precision`].  State mirrors
+/// the compressed parameter layout (`crate::optim::StateFootprint`):
+/// the TT/TTM-core share goes through the same grouped-reshape BRAM
+/// allocator as the cores themselves — width-parameterized, so 16-bit
+/// storage halves the word width everywhere — and the dense share
+/// (LN/bias/pos/head tensors) is word-packed; when the parameter BRAM
+/// plus state no longer fits the 1344-block budget, the state spills to
+/// URAM (like the deep-config activation stash).
+pub fn report_with_optim_prec(
+    cfg: &ModelConfig,
+    optim: OptimKind,
+    precision: Precision,
+) -> ResourceReport {
+    let (dsp, lut, ff) = KernelCosts::total();
+    let elem_bits = precision.bits();
+
+    // Parameter storage in BRAM via the grouped-reshape allocator at
+    // the storage element width.
     let cores = bram::paper_core_set(cfg.n_layers, cfg.tt_rank);
     let group_k = bram::paper_group_k(cfg.tt_m.len(), cfg.n_layers);
-    let alloc = bram::allocate(&cores, Strategy::ReshapeGrouped, group_k);
+    let alloc = bram::allocate_at(&cores, Strategy::ReshapeGrouped, group_k, elem_bits);
 
     // Activation working set: BRAM; deep-layer stash: URAM.
     let (work_words, stash_words) = activation_words(cfg);
-    let work_bram = (work_words * 32).div_ceil(U50::BRAM_BITS);
-    let stash_uram = (stash_words * 32).div_ceil(U50::URAM_BITS);
+    let work_bram = (work_words * elem_bits).div_ceil(U50::BRAM_BITS);
+    let stash_uram = (stash_words * elem_bits).div_ceil(U50::URAM_BITS);
 
     // Biases, LN params, head weights: small, BRAM.
     let small_words = cfg.n_layers * 10 * cfg.d_hid
         + (cfg.n_intents + cfg.n_slots) * (cfg.d_hid + 1)
         + cfg.seq_len * cfg.d_hid;
-    let small_bram = (small_words * 32).div_ceil(U50::BRAM_BITS);
+    let small_bram = (small_words * elem_bits).div_ceil(U50::BRAM_BITS);
 
     // HLS pragma overhead: fixed partitioned control FIFOs etc.  As L
     // grows the synthesizer retargets the largest activation arrays from
@@ -179,18 +205,18 @@ pub fn report_with_optim(cfg: &ModelConfig, optim: OptimKind) -> ResourceReport 
     if cfg.n_layers >= 6 {
         // Deep configs: HLS moves the double-buffered working set to URAM.
         bram_used -= work_bram;
-        uram_used += (work_words * 32).div_ceil(U50::URAM_BITS) + work_bram / 2;
+        uram_used += (work_words * elem_bits).div_ceil(U50::URAM_BITS) + work_bram / 2;
     }
 
     // PU-stage optimizer state in the compressed layout: the TT/TTM-core
     // share through the grouped allocator, the dense share word-packed.
     let mult = optim.state_multiplier();
     let state_cores = bram::optimizer_state_core_set(cfg.n_layers, cfg.tt_rank, mult);
-    let state_alloc = bram::allocate(&state_cores, Strategy::ReshapeGrouped, group_k);
+    let state_alloc = bram::allocate_at(&state_cores, Strategy::ReshapeGrouped, group_k, elem_bits);
     let dense_state_words = mult * small_words;
     let state_bram_blocks =
-        state_alloc.total_blocks + (dense_state_words * 32).div_ceil(U50::BRAM_BITS);
-    let state_bits = state_alloc.total_bits + dense_state_words * 32;
+        state_alloc.total_blocks + (dense_state_words * elem_bits).div_ceil(U50::BRAM_BITS);
+    let state_bits = state_alloc.total_bits + dense_state_words * elem_bits;
     let (optim_state_bram, optim_state_uram) =
         if mult == 0 {
             (0, 0)
@@ -201,6 +227,20 @@ pub fn report_with_optim(cfg: &ModelConfig, optim: OptimKind) -> ResourceReport 
         };
     bram_used += optim_state_bram;
     uram_used += optim_state_uram;
+
+    // Eq. 21 training-cache bytes of the executed (fused-QKV) schedule:
+    // per encoder one fused QKV cache + wo/w1/w2, plus the pooler.
+    let shape = LinearShape {
+        m_modes: cfg.tt_m.clone(),
+        n_modes: cfg.tt_n.clone(),
+        ranks: cfg.tt_ranks(),
+    };
+    let k_dim = (cfg.batch * cfg.seq_len) as u64;
+    let eq21_elems = cfg.n_layers as u64
+        * (shape.btt_qkv_memory(k_dim) + 3 * shape.btt_memory(k_dim))
+        + shape.btt_memory(k_dim);
+    let eq21_cache_bytes = eq21_elems * precision.bytes();
+    let optim_state_bytes = state_bits as u64 / 8;
 
     // Dynamic power: calibrated linear model in active compute + memory.
     let dynamic = 20.55 + 0.07 * cfg.n_layers as f64;
@@ -219,6 +259,9 @@ pub fn report_with_optim(cfg: &ModelConfig, optim: OptimKind) -> ResourceReport 
         optim_state_uram,
         bram_required: bram_used,
         uram_required: uram_used,
+        precision,
+        eq21_cache_bytes,
+        optim_state_bytes,
     }
 }
 
@@ -341,6 +384,48 @@ mod tests {
         // AdamW keeps the same two moments as Adam.
         let adamw = report_with_optim(&cfg, OptimKind::AdamW);
         assert_eq!(blocks(&adam), blocks(&adamw));
+    }
+
+    #[test]
+    fn bf16_halves_adam_state_and_eq21_cache_bytes() {
+        // Acceptance: under the bf16 storage path the U50 report
+        // charges the Adam moments and the Eq. 21 caches at exactly
+        // half the f32 bytes, and total demand never grows.
+        for layers in [2usize, 4, 6] {
+            let cfg = ModelConfig::paper(layers);
+            let f = report_with_optim_prec(&cfg, OptimKind::Adam, Precision::F32);
+            assert_eq!(f.precision, Precision::F32);
+            for prec in [Precision::Bf16, Precision::F16] {
+                let h = report_with_optim_prec(&cfg, OptimKind::Adam, prec);
+                assert_eq!(2 * h.eq21_cache_bytes, f.eq21_cache_bytes, "L{layers} {prec:?}");
+                assert_eq!(2 * h.optim_state_bytes, f.optim_state_bytes, "L{layers} {prec:?}");
+                assert!(h.eq21_cache_bytes > 0 && h.optim_state_bytes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn half_precision_never_increases_onchip_demand() {
+        // Compare the placement-independent demand: the base plan
+        // (everything except the state, whose BRAM-vs-URAM placement
+        // may legitimately differ between widths) and the state bytes.
+        for layers in [2usize, 4, 6] {
+            let cfg = ModelConfig::paper(layers);
+            for kind in OptimKind::all() {
+                let f = report_with_optim_prec(&cfg, kind, Precision::F32);
+                let h = report_with_optim_prec(&cfg, kind, Precision::Bf16);
+                assert!(
+                    h.bram_required - h.optim_state_bram <= f.bram_required - f.optim_state_bram,
+                    "L{layers} {kind:?}: bf16 base BRAM demand grew"
+                );
+                assert!(
+                    h.uram_required - h.optim_state_uram <= f.uram_required - f.optim_state_uram,
+                    "L{layers} {kind:?}: bf16 base URAM demand grew"
+                );
+                assert!(h.optim_state_bytes <= f.optim_state_bytes);
+                assert!(h.uram_required <= h.uram.available, "L{layers} {kind:?}");
+            }
+        }
     }
 
     #[test]

@@ -93,6 +93,47 @@
 //! records both in `BENCH_native_train.json` (uploaded as a CI
 //! artifact).
 //!
+//! ## Precision
+//!
+//! The native trainer runs a **mixed-precision storage path**
+//! ([`tensor::Precision`]: `f32` / `bf16` / `f16`; CLI
+//! `--precision bf16`) in the spirit of the paper's low-precision
+//! predecessor (arXiv:2104.03420): storage happens at the selected
+//! width, compute always accumulates in f32.
+//!
+//! * **Storage width** — the TT-linear Eq. 21 activation caches
+//!   ([`train::TTLinear::forward_prec`], genuinely `u16`-packed via
+//!   [`tensor::PackedTensor`]) and the optimizer moments
+//!   ([`tensor::PackedVec`]) live physically at the selected width;
+//!   the TTM embedding chain states and the parameter cores are
+//!   rounded to representable values (round-on-store — chain states
+//!   before each next fold, cores by the PU stage and once on entry by
+//!   `NativeTrainModel::set_precision`) while their runtime buffers
+//!   stay f32 — the width-parameterized accounting charges everything
+//!   at 16 bits ([`fpga::resources::report_with_optim_prec`],
+//!   `fpga::bram::*_at`), halving the Adam 2x state and the Eq. 21
+//!   caches the U50 report carries.
+//! * **Accumulation width** — every contraction widens on load (exact
+//!   for both 16-bit formats) and runs the unchanged f32 microkernels
+//!   ([`tensor::dense`]); results round to the storage width only on
+//!   store, with **round-to-nearest-even** ([`tensor::precision`]).
+//! * **Determinism contract** — the conversions are pure integer bit
+//!   manipulation, so the kernels' bitwise-deterministic band split
+//!   becomes a per-precision guarantee: same inputs + same precision =
+//!   same bits, any thread count.  `Precision::F32` is bitwise the
+//!   legacy full-precision path.
+//! * **Checkpointing** — optimizer moments (and the Adam step count)
+//!   serialize into the npy checkpoint set as name-verified
+//!   `optim.state.*` entries, so `--optimizer adam` training resumes
+//!   exactly; parameter-only checkpoints (e.g. PJRT exports) still load
+//!   and start the PU state fresh.
+//!
+//! The `rust/tests/precision_parity.rs` suite bounds the bf16 loss
+//! trajectory against f32 over 24 native training steps and
+//! finite-difference-checks gradients through the rounding round-trip;
+//! `BENCH_native_train.json` records fp32-vs-bf16 steps/sec, tokens/sec
+//! and on-chip bytes (`bf16_vs_f32_speedup_b8` summary).
+//!
 //! After `make artifacts` the binary is self-contained with either
 //! backend; with the native backend it is self-contained from a bare
 //! `cargo build` — the paper's end-to-end on-device training claim is

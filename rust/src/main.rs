@@ -27,6 +27,7 @@ use tt_trainer::data::Dataset;
 use tt_trainer::fpga::{bram, energy, resources, schedule};
 use tt_trainer::optim::{OptimConfig, OptimKind};
 use tt_trainer::runtime::Manifest;
+use tt_trainer::tensor::Precision;
 use tt_trainer::train::NativeTrainer;
 use tt_trainer::util::cli::Args;
 
@@ -62,10 +63,15 @@ COMMANDS:
                   native:  --layers 2 [--init-ckpt DIR]
                            --optimizer sgd|momentum|adam|adamw --batch N
                            --weight-decay 0.0
+                           --precision f32|bf16|f16 (storage path:
+                             Eq. 21 caches, optimizer moments and stored
+                             params at 16 bits; compute stays f32)
                   pjrt:    --variant tt_L2 --artifacts DIR
   eval          evaluate on the test split
                   --backend native|pjrt [--limit N]
                   native:  --layers 2 --ckpt DIR (or --init-ckpt DIR)
+                           --precision f32|bf16|f16 (round stored
+                             params first: weights-at-rest preview)
                   pjrt:    --variant tt_L2 --artifacts DIR
   cost-model    Fig. 6 comparison + Fig. 7 sweeps
   bram          BRAM allocator study (Figs. 11/12/14)
@@ -111,11 +117,21 @@ fn cmd_info(args: &Args) -> Result<()> {
 /// Build the native backend from CLI options (no artifacts needed).
 /// `load_keys` are the options that may name a checkpoint to load —
 /// `--init-ckpt` everywhere, plus `--ckpt` for eval (where it cannot
-/// mean anything else).
-fn native_backend(args: &Args, seed: u64, load_keys: &[&str]) -> Result<NativeTrainer> {
+/// mean anything else).  The PU-stage configuration (including its
+/// storage precision, which `with_optim` applies model-wide) goes in
+/// **before** any checkpoint load: restoring optimizer state requires
+/// the configured rule to be in place when the checkpoint's
+/// `optim.kind` is matched (and `set_optim` would discard
+/// already-imported moments).
+fn native_backend(
+    args: &Args,
+    seed: u64,
+    load_keys: &[&str],
+    optim: OptimConfig,
+) -> Result<NativeTrainer> {
     let layers = args.get_usize("layers", 2);
     let cfg = ModelConfig::paper(layers);
-    let mut backend = NativeTrainer::random_init(&cfg, seed)?;
+    let mut backend = NativeTrainer::random_init(&cfg, seed)?.with_optim(optim);
     if let Some(dir) = load_keys.iter().find_map(|k| args.get(k)) {
         backend.load_checkpoint(Path::new(dir))?;
         println!("loaded checkpoint from {dir}");
@@ -144,16 +160,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42) as u64;
     match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
-            let optim = optim_from_args(args)?;
+            let precision = Precision::parse(args.get_or("precision", "f32"))?;
+            let optim = OptimConfig { precision, ..optim_from_args(args)? };
             // Per-rule default lr; explicit --lr always wins.
             let lr = args.get_f64("lr", optim.kind.default_lr() as f64) as f32;
             let batch = optim.batch_size;
             println!(
-                "optimizer {} | batch {batch} | weight decay {}",
+                "optimizer {} | batch {batch} | weight decay {} | precision {}",
                 optim.kind.name(),
-                optim.weight_decay
+                optim.weight_decay,
+                precision.name()
             );
-            let backend = native_backend(args, seed, &["init-ckpt"])?.with_optim(optim);
+            let backend = native_backend(args, seed, &["init-ckpt"], optim)?;
             run_training(Trainer::with_batch(backend, lr, batch), args, seed)
         }
         "pjrt" => cmd_train_pjrt(args, seed),
@@ -258,7 +276,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42) as u64;
     match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
-            let backend = native_backend(args, seed, &["init-ckpt", "ckpt"])?;
+            // Eval reads parameters only (optimizer state in the
+            // checkpoint is irrelevant here); --precision rounds the
+            // stored parameters first, previewing weights-at-rest
+            // accuracy at a half format.
+            let precision = Precision::parse(args.get_or("precision", "f32"))?;
+            if precision.is_half() {
+                println!("evaluating with parameters rounded to {}", precision.name());
+            }
+            // Stateless default rule; the config only carries the
+            // storage precision for the weights-at-rest rounding.
+            let optim = OptimConfig { precision, ..OptimConfig::default() };
+            let backend = native_backend(args, seed, &["init-ckpt", "ckpt"], optim)?;
             run_eval(Trainer::evaluator(backend), args, seed)
         }
         "pjrt" => cmd_eval_pjrt(args, seed),
@@ -338,6 +367,16 @@ fn cmd_cost_model() -> Result<()> {
         "per TT linear at K-independent state: 1x = {} elems, 2x = {} elems",
         shape.optimizer_state_elems(1),
         shape.optimizer_state_elems(2)
+    );
+    println!("\n=== PU stage at bf16 storage (mixed-precision path, halved bytes) ===");
+    print!(
+        "{}",
+        sweeps::optimizer_state_table_prec(&ModelConfig::paper(2), Precision::Bf16)
+    );
+    println!(
+        "Eq. 21 cache per TT linear at K=32: {} B (f32) -> {} B (bf16)",
+        shape.btt_memory_bytes(32, Precision::F32),
+        shape.btt_memory_bytes(32, Precision::Bf16)
     );
     println!("\n=== Fig. 7 (top): sequence-length sweep at rank 12 ===");
     print!(
@@ -445,6 +484,25 @@ fn cmd_fpga_report() -> Result<()> {
                 format!("{}/{}", r.uram.used, r.uram.available)
             );
         }
+    }
+
+    println!("\n=== Mixed-precision storage path (Adam): f32 vs bf16 bytes ===");
+    println!(
+        "{:<7} {:>16} {:>16} {:>16} {:>16}",
+        "model", "eq21 f32 (KB)", "eq21 bf16 (KB)", "state f32 (KB)", "state bf16 (KB)"
+    );
+    for layers in [2usize, 4, 6] {
+        let cfg = ModelConfig::paper(layers);
+        let f = resources::report_with_optim_prec(&cfg, OptimKind::Adam, Precision::F32);
+        let b = resources::report_with_optim_prec(&cfg, OptimKind::Adam, Precision::Bf16);
+        println!(
+            "{:<7} {:>16.1} {:>16.1} {:>16.1} {:>16.1}",
+            format!("{layers}-ENC"),
+            f.eq21_cache_bytes as f64 / 1e3,
+            b.eq21_cache_bytes as f64 / 1e3,
+            f.optim_state_bytes as f64 / 1e3,
+            b.optim_state_bytes as f64 / 1e3
+        );
     }
 
     println!("\n=== Table V: GPU vs FPGA ===");

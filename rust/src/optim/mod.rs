@@ -31,6 +31,7 @@
 //!   contract against this helper.
 
 use crate::config::{ModelConfig, TrainConfig};
+use crate::tensor::{PackedVec, Precision};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
@@ -108,14 +109,36 @@ impl OptimKind {
         }
     }
 
-    /// Fresh per-parameter state for this rule.
+    /// Fresh per-parameter state for this rule (f32 state).
     pub fn build(&self) -> Box<dyn Optimizer> {
+        self.build_prec(Precision::F32)
+    }
+
+    /// Fresh per-parameter state with moments stored at `prec` —
+    /// halving the on-chip state footprint for the 16-bit formats
+    /// (updates still accumulate in f32; see [`PackedVec`]).
+    pub fn build_prec(&self, prec: Precision) -> Box<dyn Optimizer> {
         match self {
             OptimKind::Sgd => Box::new(Sgd),
-            OptimKind::Momentum => Box::new(Momentum::default()),
-            OptimKind::Adam => Box::new(Adam::default()),
-            OptimKind::AdamW => Box::new(AdamW::default()),
+            OptimKind::Momentum => Box::new(Momentum::new(prec)),
+            OptimKind::Adam => Box::new(Adam::new(prec)),
+            OptimKind::AdamW => Box::new(AdamW::new(prec)),
         }
+    }
+
+    /// Stable numeric code for checkpoint metadata
+    /// (`optim.kind` entry; see `crate::train::NativeTrainer`).
+    pub fn code(&self) -> u32 {
+        match self {
+            OptimKind::Sgd => 0,
+            OptimKind::Momentum => 1,
+            OptimKind::Adam => 2,
+            OptimKind::AdamW => 3,
+        }
+    }
+
+    pub fn from_code(code: u32) -> Option<OptimKind> {
+        OptimKind::all().into_iter().find(|k| k.code() == code)
     }
 }
 
@@ -134,6 +157,14 @@ pub struct OptimConfig {
     pub beta2: f32,
     pub eps: f32,
     pub weight_decay: f32,
+    /// Storage precision of the PU stage: optimizer moments are kept
+    /// packed at this width (except the Adam-family second moment,
+    /// which stores at bf16 under an f16 path — see
+    /// `moment2_precision`) and every updated parameter is rounded on
+    /// store (round-to-nearest-even), so the cores a half-precision
+    /// model trains are always exactly representable at this width.
+    /// Updates themselves accumulate in f32.
+    pub precision: Precision,
 }
 
 impl Default for OptimConfig {
@@ -146,6 +177,7 @@ impl Default for OptimConfig {
             beta2: 0.999,
             eps: 1e-8,
             weight_decay: 0.0,
+            precision: Precision::F32,
         }
     }
 }
@@ -175,6 +207,29 @@ pub trait Optimizer {
     fn state_elems(&self) -> u64;
 
     fn name(&self) -> &'static str;
+
+    /// State bytes at rest (half-width rules report half the f32
+    /// figure).  Default: f32 storage.
+    fn state_bytes(&self) -> u64 {
+        4 * self.state_elems()
+    }
+
+    /// Serialize the state as named f32 slots (widened — exact for the
+    /// half formats) for optimizer-state checkpointing.  Stateless
+    /// rules export nothing.
+    fn export_state(&self) -> Vec<(&'static str, Vec<f32>)> {
+        Vec::new()
+    }
+
+    /// Restore one named slot written by [`Optimizer::export_state`].
+    fn import_state(&mut self, slot: &str, _values: &[f32]) -> Result<()> {
+        Err(anyhow!("optimizer '{}' has no state slot '{slot}'", self.name()))
+    }
+
+    /// Re-pack already-allocated state at a new storage precision
+    /// (rounding when narrowing, exact when widening).  No-op for
+    /// stateless rules.
+    fn set_state_precision(&mut self, _prec: Precision) {}
 }
 
 /// Plain SGD: `p -= lr * (g + wd * p)` — stateless, the seed trainer's
@@ -208,111 +263,256 @@ impl Optimizer for Sgd {
 }
 
 /// Heavy-ball momentum: `v = mu*v + (g + wd*p); p -= lr * v` —
-/// 1x parameter-count state in the compressed layout.
-#[derive(Debug, Default, Clone)]
+/// 1x parameter-count state in the compressed layout (stored at the
+/// configured [`Precision`]; the update accumulates in f32).
+#[derive(Debug, Clone)]
 pub struct Momentum {
-    v: Vec<f32>,
+    prec: Precision,
+    v: PackedVec,
+}
+
+impl Default for Momentum {
+    fn default() -> Self {
+        Momentum::new(Precision::F32)
+    }
+}
+
+impl Momentum {
+    pub fn new(prec: Precision) -> Momentum {
+        Momentum { prec, v: PackedVec::empty(prec) }
+    }
 }
 
 impl Optimizer for Momentum {
     fn step(&mut self, param: &mut [f32], grad: &[f32], hyper: &Hyper) {
         debug_assert_eq!(param.len(), grad.len());
         if self.v.is_empty() {
-            self.v = vec![0.0; param.len()];
+            self.v = PackedVec::zeros(self.prec, param.len());
         }
+        // A mis-restored state buffer must fail loudly: zip would
+        // otherwise silently stop updating the tail parameters.
+        assert_eq!(self.v.len(), param.len(), "momentum state length mismatch");
         let (lr, mu, wd) = (hyper.lr, hyper.momentum, hyper.weight_decay);
-        for ((p, &g), v) in param.iter_mut().zip(grad).zip(self.v.iter_mut()) {
-            let g = g + wd * *p;
-            *v = mu * *v + g;
-            *p -= lr * *v;
-        }
+        self.v.update_in_place(|v| {
+            for ((p, &g), v) in param.iter_mut().zip(grad).zip(v.iter_mut()) {
+                let g = g + wd * *p;
+                *v = mu * *v + g;
+                *p -= lr * *v;
+            }
+        });
     }
 
     fn state_elems(&self) -> u64 {
         self.v.len() as u64
     }
 
+    fn state_bytes(&self) -> u64 {
+        self.v.bytes()
+    }
+
     fn name(&self) -> &'static str {
         "momentum"
+    }
+
+    fn export_state(&self) -> Vec<(&'static str, Vec<f32>)> {
+        if self.v.is_empty() {
+            return Vec::new();
+        }
+        vec![("v", self.v.to_f32())]
+    }
+
+    fn import_state(&mut self, slot: &str, values: &[f32]) -> Result<()> {
+        match slot {
+            "v" => {
+                self.v = PackedVec::from_f32(self.prec, values);
+                Ok(())
+            }
+            other => Err(anyhow!("momentum: unknown state slot '{other}'")),
+        }
+    }
+
+    fn set_state_precision(&mut self, prec: Precision) {
+        self.prec = prec;
+        self.v = PackedVec::from_f32(prec, &self.v.to_f32());
+    }
+}
+
+/// Shared moment-slot plumbing of the Adam family: two [`PackedVec`]
+/// moments and the step counter, with export/import for exact training
+/// resume.
+macro_rules! adam_family_state {
+    ($name:literal) => {
+        fn state_elems(&self) -> u64 {
+            (self.m.len() + self.v.len()) as u64
+        }
+
+        fn state_bytes(&self) -> u64 {
+            self.m.bytes() + self.v.bytes()
+        }
+
+        fn name(&self) -> &'static str {
+            $name
+        }
+
+        fn export_state(&self) -> Vec<(&'static str, Vec<f32>)> {
+            if self.m.is_empty() {
+                return Vec::new();
+            }
+            vec![
+                ("m", self.m.to_f32()),
+                ("v", self.v.to_f32()),
+                // f32 represents the step count exactly up to 2^24.
+                ("t", vec![self.t as f32]),
+            ]
+        }
+
+        fn import_state(&mut self, slot: &str, values: &[f32]) -> Result<()> {
+            match slot {
+                "m" => self.m = PackedVec::from_f32(self.prec, values),
+                "v" => self.v = PackedVec::from_f32(moment2_precision(self.prec), values),
+                "t" => {
+                    self.t = *values
+                        .first()
+                        .ok_or_else(|| anyhow!(concat!($name, ": empty 't' slot")))?
+                        as u32
+                }
+                other => {
+                    return Err(anyhow!(concat!($name, ": unknown state slot '{}'"), other))
+                }
+            }
+            Ok(())
+        }
+
+        fn set_state_precision(&mut self, prec: Precision) {
+            self.prec = prec;
+            self.m = PackedVec::from_f32(prec, &self.m.to_f32());
+            self.v = PackedVec::from_f32(moment2_precision(prec), &self.v.to_f32());
+        }
+    };
+}
+
+/// Storage precision of the Adam-family **second** moment for a
+/// configured precision: f16's narrow exponent flushes the tiny
+/// squared-gradient increments `(1 - beta2) g^2` to zero below the
+/// 2^-24 subnormal floor (any |g| < ~2.5e-4), leaving `v = 0` while
+/// `m` stays finite — the update `m_hat / (sqrt(0) + eps)` then blows
+/// up by ~1/eps.  bf16 has f32's exponent range at the same 16-bit
+/// width, so the range-critical moment stores at bf16 under an f16
+/// path; the byte accounting is unchanged.
+fn moment2_precision(prec: Precision) -> Precision {
+    match prec {
+        Precision::F16 => Precision::Bf16,
+        p => p,
     }
 }
 
 /// Adam (Kingma & Ba) with coupled L2: 2x parameter-count state
-/// (first + second moment) in the compressed layout.
-#[derive(Debug, Default, Clone)]
+/// (first + second moment) in the compressed layout, stored at the
+/// configured [`Precision`] with f32-accumulated updates.
+#[derive(Debug, Clone)]
 pub struct Adam {
-    m: Vec<f32>,
-    v: Vec<f32>,
+    prec: Precision,
+    m: PackedVec,
+    v: PackedVec,
     t: u32,
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Adam::new(Precision::F32)
+    }
+}
+
+impl Adam {
+    pub fn new(prec: Precision) -> Adam {
+        Adam { prec, m: PackedVec::empty(prec), v: PackedVec::empty(moment2_precision(prec)), t: 0 }
+    }
 }
 
 impl Optimizer for Adam {
     fn step(&mut self, param: &mut [f32], grad: &[f32], hyper: &Hyper) {
         debug_assert_eq!(param.len(), grad.len());
         if self.m.is_empty() {
-            self.m = vec![0.0; param.len()];
-            self.v = vec![0.0; param.len()];
+            self.m = PackedVec::zeros(self.prec, param.len());
+            self.v = PackedVec::zeros(moment2_precision(self.prec), param.len());
         }
+        // A mis-restored state buffer must fail loudly and clearly.
+        assert_eq!(self.m.len(), param.len(), "moment state length mismatch");
+        assert_eq!(self.v.len(), param.len(), "moment state length mismatch");
         self.t += 1;
         let (b1, b2) = (hyper.beta1, hyper.beta2);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
-        for (i, (p, &g)) in param.iter_mut().zip(grad).enumerate() {
-            let g = g + hyper.weight_decay * *p;
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            *p -= hyper.lr * mhat / (vhat.sqrt() + hyper.eps);
-        }
+        let v_sv = &mut self.v;
+        self.m.update_in_place(|m| {
+            v_sv.update_in_place(|v| {
+                for (i, (p, &g)) in param.iter_mut().zip(grad).enumerate() {
+                    let g = g + hyper.weight_decay * *p;
+                    m[i] = b1 * m[i] + (1.0 - b1) * g;
+                    v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    *p -= hyper.lr * mhat / (vhat.sqrt() + hyper.eps);
+                }
+            });
+        });
     }
 
-    fn state_elems(&self) -> u64 {
-        (self.m.len() + self.v.len()) as u64
-    }
-
-    fn name(&self) -> &'static str {
-        "adam"
-    }
+    adam_family_state!("adam");
 }
 
 /// AdamW (Loshchilov & Hutter): Adam moments with *decoupled* weight
 /// decay applied directly to the parameter.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct AdamW {
-    m: Vec<f32>,
-    v: Vec<f32>,
+    prec: Precision,
+    m: PackedVec,
+    v: PackedVec,
     t: u32,
+}
+
+impl Default for AdamW {
+    fn default() -> Self {
+        AdamW::new(Precision::F32)
+    }
+}
+
+impl AdamW {
+    pub fn new(prec: Precision) -> AdamW {
+        AdamW { prec, m: PackedVec::empty(prec), v: PackedVec::empty(moment2_precision(prec)), t: 0 }
+    }
 }
 
 impl Optimizer for AdamW {
     fn step(&mut self, param: &mut [f32], grad: &[f32], hyper: &Hyper) {
         debug_assert_eq!(param.len(), grad.len());
         if self.m.is_empty() {
-            self.m = vec![0.0; param.len()];
-            self.v = vec![0.0; param.len()];
+            self.m = PackedVec::zeros(self.prec, param.len());
+            self.v = PackedVec::zeros(moment2_precision(self.prec), param.len());
         }
+        // A mis-restored state buffer must fail loudly and clearly.
+        assert_eq!(self.m.len(), param.len(), "moment state length mismatch");
+        assert_eq!(self.v.len(), param.len(), "moment state length mismatch");
         self.t += 1;
         let (b1, b2) = (hyper.beta1, hyper.beta2);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
-        for (i, (p, &g)) in param.iter_mut().zip(grad).enumerate() {
-            *p -= hyper.lr * hyper.weight_decay * *p;
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            *p -= hyper.lr * mhat / (vhat.sqrt() + hyper.eps);
-        }
+        let v_sv = &mut self.v;
+        self.m.update_in_place(|m| {
+            v_sv.update_in_place(|v| {
+                for (i, (p, &g)) in param.iter_mut().zip(grad).enumerate() {
+                    *p -= hyper.lr * hyper.weight_decay * *p;
+                    m[i] = b1 * m[i] + (1.0 - b1) * g;
+                    v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    *p -= hyper.lr * mhat / (vhat.sqrt() + hyper.eps);
+                }
+            });
+        });
     }
 
-    fn state_elems(&self) -> u64 {
-        (self.m.len() + self.v.len()) as u64
-    }
-
-    fn name(&self) -> &'static str {
-        "adamw"
-    }
+    adam_family_state!("adamw");
 }
 
 /// Name-keyed optimizer bundle for a whole model's PU stage.
@@ -336,17 +536,71 @@ impl ModelOptim {
         self.cfg.hyper(lr)
     }
 
-    /// Apply one update to the named parameter tensor.
+    /// Apply one update to the named parameter tensor.  Under a
+    /// half-precision storage path the updated parameter is rounded on
+    /// store, so the cores at rest are always exactly representable at
+    /// the configured width (the update itself accumulated in f32).
     pub fn step(&mut self, name: &str, param: &mut [f32], grad: &[f32], hyper: &Hyper) {
         debug_assert_eq!(param.len(), grad.len(), "grad shape mismatch for '{name}'");
-        let kind = self.cfg.kind;
-        let slot = self.slots.entry(name.to_string()).or_insert_with(|| kind.build());
+        let (kind, prec) = (self.cfg.kind, self.cfg.precision);
+        let slot = self
+            .slots
+            .entry(name.to_string())
+            .or_insert_with(|| kind.build_prec(prec));
         slot.step(param, grad, hyper);
+        prec.round_slice_in_place(param);
+    }
+
+    /// Switch the PU stage's storage precision: future slots build at
+    /// `prec`, and **already-allocated** moment buffers are re-packed
+    /// (rounding when narrowing, exact when widening) so the
+    /// moments-at-this-width contract holds mid-lifecycle too.
+    pub fn set_precision(&mut self, prec: Precision) {
+        self.cfg.precision = prec;
+        for slot in self.slots.values_mut() {
+            slot.set_state_precision(prec);
+        }
     }
 
     /// Optimizer-state elements currently allocated across all slots.
     pub fn allocated_state_elems(&self) -> u64 {
         self.slots.values().map(|s| s.state_elems()).sum()
+    }
+
+    /// Optimizer-state bytes at rest across all slots (half the f32
+    /// figure under the 16-bit storage path).
+    pub fn allocated_state_bytes(&self) -> u64 {
+        self.slots.values().map(|s| s.state_bytes()).sum()
+    }
+
+    /// Serialize every slot's state as `<param-name>.<slot>` entries
+    /// (widened to f32 — exact for the half formats), in deterministic
+    /// name order, for optimizer-state checkpointing.
+    pub fn export_state(&self) -> Vec<(String, Vec<f32>)> {
+        let mut out = Vec::new();
+        for (name, slot) in &self.slots {
+            for (tag, vals) in slot.export_state() {
+                out.push((format!("{name}.{tag}"), vals));
+            }
+        }
+        out
+    }
+
+    /// Restore state written by [`ModelOptim::export_state`].  Entries
+    /// are name-verified: an unknown slot tag is a hard error, and each
+    /// `<param-name>` keys the same per-core slot the PU stage uses.
+    pub fn import_state(&mut self, entries: &[(String, Vec<f32>)]) -> Result<()> {
+        let (kind, prec) = (self.cfg.kind, self.cfg.precision);
+        for (key, vals) in entries {
+            let (param, slot) = key
+                .rsplit_once('.')
+                .ok_or_else(|| anyhow!("malformed optimizer-state key '{key}'"))?;
+            self.slots
+                .entry(param.to_string())
+                .or_insert_with(|| kind.build_prec(prec))
+                .import_state(slot, vals)?;
+        }
+        Ok(())
     }
 }
 
@@ -370,6 +624,9 @@ pub struct StateFootprint {
     pub param_elems: u64,
     /// Optimizer-state elements (multiplier x `param_elems`).
     pub state_elems: u64,
+    /// Storage precision of the moments — the element count is
+    /// precision-independent, the bytes are not.
+    pub precision: Precision,
 }
 
 impl StateFootprint {
@@ -377,16 +634,27 @@ impl StateFootprint {
     /// scalar ([`ModelConfig::tensor_params`]) times the rule's
     /// multiplier.
     pub fn for_model(cfg: &ModelConfig, kind: OptimKind) -> StateFootprint {
+        StateFootprint::for_model_prec(cfg, kind, Precision::F32)
+    }
+
+    /// [`StateFootprint::for_model`] with moments stored at `precision`
+    /// — the 16-bit formats halve the Adam pair the U50 report charges.
+    pub fn for_model_prec(
+        cfg: &ModelConfig,
+        kind: OptimKind,
+        precision: Precision,
+    ) -> StateFootprint {
         let param_elems = cfg.tensor_params() as u64;
         StateFootprint {
             kind,
             param_elems,
             state_elems: kind.state_multiplier() as u64 * param_elems,
+            precision,
         }
     }
 
     pub fn state_bytes(&self) -> u64 {
-        4 * self.state_elems
+        self.precision.bytes() * self.state_elems
     }
 
     pub fn state_mb(&self) -> f64 {
@@ -613,7 +881,159 @@ mod tests {
     fn kind_parsing_roundtrips() {
         for kind in OptimKind::all() {
             assert_eq!(OptimKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(OptimKind::from_code(kind.code()), Some(kind));
         }
         assert!(OptimKind::parse("rmsprop").is_err());
+        assert_eq!(OptimKind::from_code(99), None);
+    }
+
+    #[test]
+    fn half_precision_moments_halve_bytes_and_still_minimize() {
+        // The 16-bit moment path keeps the element count and halves the
+        // bytes, stores only representable values (round-on-store), and
+        // still drives the quadratic to near its minimum.
+        let target: Vec<f32> = vec![1.0, -2.0, 0.5, 3.0];
+        for prec in [Precision::Bf16, Precision::F16] {
+            for kind in [OptimKind::Momentum, OptimKind::Adam, OptimKind::AdamW] {
+                let mut opt = kind.build_prec(prec);
+                let h = OptimConfig::default().hyper(0.1);
+                let mut p = vec![0.0f32; 4];
+                let loss = |p: &[f32]| -> f32 {
+                    p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / 2.0
+                };
+                let start = loss(&p);
+                for _ in 0..200 {
+                    let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+                    opt.step(&mut p, &g, &h);
+                }
+                assert!(
+                    loss(&p) < 0.05 * start,
+                    "{kind:?}@{prec:?}: loss {} vs start {start}",
+                    loss(&p)
+                );
+                assert_eq!(opt.state_elems(), (kind.state_multiplier() * 4) as u64);
+                assert_eq!(opt.state_bytes(), (kind.state_multiplier() * 4 * 2) as u64);
+                // Every stored moment is a fixed point of its slot's
+                // storage rounding (the Adam-family second moment 'v'
+                // stores at bf16 under an f16 path — range, not
+                // mantissa, is what the squared-gradient buffer needs).
+                let adam_family = matches!(kind, OptimKind::Adam | OptimKind::AdamW);
+                for (tag, vals) in opt.export_state() {
+                    if tag == "t" {
+                        continue;
+                    }
+                    let slot_prec = if tag == "v" && adam_family {
+                        moment2_precision(prec)
+                    } else {
+                        prec
+                    };
+                    for v in vals {
+                        assert_eq!(slot_prec.round(v).to_bits(), v.to_bits(), "{tag} not stored");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f16_second_moment_does_not_underflow_to_explosive_updates() {
+        // Gradients of ~1e-4 make the squared-gradient increment
+        // (1-b2) g^2 = 1e-11 — far below f16's 2^-24 subnormal floor.
+        // Because the second moment stores at bf16 under an f16 path,
+        // v accumulates instead of flushing to zero, and the update
+        // stays ~lr-sized rather than blowing up by ~1/sqrt(0)+eps.
+        for kind in [OptimKind::Adam, OptimKind::AdamW] {
+            let mut opt = kind.build_prec(Precision::F16);
+            let h = OptimConfig::default().hyper(1e-2);
+            let mut p = vec![0.5f32; 4];
+            for step in 0..50 {
+                let g = vec![1e-4f32; 4];
+                opt.step(&mut p, &g, &h);
+                for &v in &p {
+                    assert!(
+                        v.is_finite() && v.abs() < 10.0,
+                        "{kind:?}: update exploded to {v} at step {step}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn export_import_state_resumes_exactly() {
+        // Freeze an Adam slot mid-run, restore it into a fresh
+        // optimizer, continue both: trajectories must stay bitwise
+        // equal (the optimizer-state-checkpointing contract).
+        for prec in [Precision::F32, Precision::Bf16] {
+            let n = 7usize;
+            let h = hyper(0.05);
+            let mut a = OptimKind::Adam.build_prec(prec);
+            let mut p_a: Vec<f32> = (0..n).map(|i| 0.2 * (i as f32 - 3.0)).collect();
+            for step in 0..5 {
+                a.step(&mut p_a, &grad_at(step, n), &h);
+            }
+            let mut b = OptimKind::Adam.build_prec(prec);
+            for (tag, vals) in a.export_state() {
+                b.import_state(tag, &vals).unwrap();
+            }
+            let mut p_b = p_a.clone();
+            for step in 5..15 {
+                let g = grad_at(step, n);
+                a.step(&mut p_a, &g, &h);
+                b.step(&mut p_b, &g, &h);
+                assert_eq!(p_a, p_b, "{prec:?}: resumed Adam diverged at step {step}");
+            }
+            assert!(b.import_state("bogus", &[0.0]).is_err());
+        }
+    }
+
+    #[test]
+    fn set_precision_repacks_existing_moment_slots() {
+        // Switching precision mid-lifecycle must re-pack moments that
+        // were already allocated, not only future slots.
+        let mut mo = ModelOptim::new(OptimConfig { kind: OptimKind::Adam, ..Default::default() });
+        let h = mo.hyper(0.01);
+        let mut p = vec![0.5f32; 6];
+        mo.step("a", &mut p, &[0.1; 6], &h);
+        assert_eq!(mo.allocated_state_bytes(), 2 * 6 * 4);
+        mo.set_precision(Precision::Bf16);
+        assert_eq!(mo.allocated_state_bytes(), 2 * 6 * 2, "existing moments not re-packed");
+        // Further steps keep working and round the params on store.
+        mo.step("a", &mut p, &[0.1; 6], &h);
+        for v in &p {
+            assert_eq!(Precision::Bf16.round(*v).to_bits(), v.to_bits());
+        }
+        // Widening back is exact and restores 4-byte accounting.
+        mo.set_precision(Precision::F32);
+        assert_eq!(mo.allocated_state_bytes(), 2 * 6 * 4);
+    }
+
+    #[test]
+    fn bf16_state_footprint_is_half_the_bytes() {
+        let cfg = ModelConfig::paper(2);
+        let f32_fp = StateFootprint::for_model(&cfg, OptimKind::Adam);
+        for prec in [Precision::Bf16, Precision::F16] {
+            let half = StateFootprint::for_model_prec(&cfg, OptimKind::Adam, prec);
+            assert_eq!(half.state_elems, f32_fp.state_elems);
+            assert_eq!(2 * half.state_bytes(), f32_fp.state_bytes());
+        }
+    }
+
+    #[test]
+    fn model_optim_rounds_params_on_store_under_half_precision() {
+        let mut mo = ModelOptim::new(OptimConfig {
+            kind: OptimKind::Adam,
+            precision: Precision::Bf16,
+            ..Default::default()
+        });
+        let h = mo.hyper(0.01);
+        let mut p = vec![0.123456789f32, -0.987654321, 3.14159265];
+        mo.step("probe", &mut p, &[0.1, -0.2, 0.3], &h);
+        for v in &p {
+            assert_eq!(Precision::Bf16.round(*v).to_bits(), v.to_bits());
+        }
+        // Bytes at rest: 2 moments x 3 elems x 2 bytes.
+        assert_eq!(mo.allocated_state_bytes(), 2 * 3 * 2);
+        assert_eq!(mo.allocated_state_elems(), 2 * 3);
     }
 }

@@ -196,7 +196,14 @@ impl Engine {
     /// instead of silently loading the wrong weights.
     pub fn load_checkpoint(&mut self, dir: impl AsRef<Path>) -> Result<()> {
         let dir = dir.as_ref();
-        let entries = npy::checkpoint_entries(dir)?;
+        // Native checkpoints may carry PU-stage optimizer state
+        // (`optim.kind` / `optim.state.*` entries); the compiled
+        // artifact bakes its own optimizer in, so those are skipped —
+        // parameters still interchange both ways.
+        let entries: Vec<_> = npy::checkpoint_entries(dir)?
+            .into_iter()
+            .filter(|(name, _)| !name.starts_with("optim."))
+            .collect();
         if entries.len() != self.params.len() {
             return Err(anyhow!(
                 "checkpoint has {} arrays, expected {}",

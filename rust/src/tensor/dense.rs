@@ -26,6 +26,17 @@
 //! [`Tensor::bmm_tn`]) contract stacks of matrices (batch-major 3-D
 //! tensors) and parallelize over the batch — the shape of per-head
 //! attention in both the forward and backward pass.
+//!
+//! ## Mixed precision
+//!
+//! These kernels are the **f32 accumulation** half of the
+//! mixed-precision contract ([`crate::tensor::precision`]): buffers
+//! stored at bf16/f16 are widened to f32 on load (exactly), every
+//! product accumulates in these f32 microkernels unchanged, and results
+//! are rounded to the storage width only when stored
+//! (round-to-nearest-even).  The bitwise-determinism guarantee above is
+//! therefore a *per-precision* guarantee — the kernels themselves never
+//! see a half-width operand.
 
 use anyhow::{anyhow, Result};
 use std::sync::{Condvar, Mutex, OnceLock};

@@ -9,12 +9,17 @@
 //! * [`tt`] — TT matrices (paper Eq. 7): TT-SVD (`from_dense`), both
 //!   contraction orders with instrumentation (validates Eqs. 18-21).
 //! * [`ttm`] — TTM embedding tables (paper Eq. 8/17).
+//! * [`precision`] — the mixed-precision storage substrate
+//!   (f32/bf16/f16 with deterministic round-to-nearest-even and packed
+//!   half-width buffers; compute always accumulates in f32).
 
 pub mod dense;
 pub mod ops;
+pub mod precision;
 pub mod tt;
 pub mod ttm;
 
 pub use dense::{svd, Tensor};
+pub use precision::{PackedTensor, PackedVec, Precision};
 pub use tt::{ContractionStats, TTMatrix};
 pub use ttm::TTMEmbedding;

@@ -146,9 +146,26 @@ pub fn unpack_heads(x: &Tensor) -> Result<Tensor> {
     Ok(out)
 }
 
+/// Contraction-lane width of the head packing: the per-head dimension
+/// is zero-padded up to a multiple of this, matching the `dot4`/`axpy4`
+/// quad width of the `bmm*` microkernels so the attention contractions
+/// never fall into the ragged-tail scalar path.  Padding lanes are
+/// exact zeros: `x + 0.0 * 0.0` is the identity, so padded and unpadded
+/// head dims produce the same attention up to accumulation grouping,
+/// and the B=1 view stays bitwise identical to the batched path (both
+/// run the same padded kernels).
+pub const HEAD_LANE: usize = 4;
+
+/// Per-head dimension after SIMD-lane padding.
+#[inline]
+fn padded_dh(dh: usize) -> usize {
+    dh.div_ceil(HEAD_LANE) * HEAD_LANE
+}
+
 /// Batched head split: `(B*S, H)` row-major activations to head-major
-/// `(B*heads, S, dh)`, slicing the K-stacked buffer directly by offset
-/// (no per-example sub-tensors are materialized).
+/// `(B*heads, S, dh_pad)` with the per-head dim zero-padded to a
+/// multiple of [`HEAD_LANE`], slicing the K-stacked buffer directly by
+/// offset (no per-example sub-tensors are materialized).
 pub fn pack_heads_batched(x: &Tensor, batch: usize, n_heads: usize) -> Result<Tensor> {
     if x.ndim() != 2 || batch == 0 || x.shape[0] % batch != 0 || x.shape[1] % n_heads != 0 {
         return Err(anyhow!(
@@ -158,12 +175,13 @@ pub fn pack_heads_batched(x: &Tensor, batch: usize, n_heads: usize) -> Result<Te
     }
     let (s, h) = (x.shape[0] / batch, x.shape[1]);
     let dh = h / n_heads;
-    let mut out = Tensor::zeros(&[batch * n_heads, s, dh]);
+    let dhp = padded_dh(dh);
+    let mut out = Tensor::zeros(&[batch * n_heads, s, dhp]);
     for e in 0..batch {
         for head in 0..n_heads {
             for i in 0..s {
                 let src = &x.data[(e * s + i) * h + head * dh..(e * s + i) * h + (head + 1) * dh];
-                let dst = ((e * n_heads + head) * s + i) * dh;
+                let dst = ((e * n_heads + head) * s + i) * dhp;
                 out.data[dst..dst + dh].copy_from_slice(src);
             }
         }
@@ -171,22 +189,28 @@ pub fn pack_heads_batched(x: &Tensor, batch: usize, n_heads: usize) -> Result<Te
     Ok(out)
 }
 
-/// Inverse of [`pack_heads_batched`]: `(B*heads, S, dh)` back to
-/// `(B*S, H)`.
-pub fn unpack_heads_batched(x: &Tensor, batch: usize) -> Result<Tensor> {
+/// Inverse of [`pack_heads_batched`]: `(B*heads, S, dh_pad)` back to
+/// `(B*S, H)` for the true hidden width `h`, dropping the zero padding
+/// lanes.
+pub fn unpack_heads_batched(x: &Tensor, batch: usize, h: usize) -> Result<Tensor> {
     if x.ndim() != 3 || batch == 0 || x.shape[0] % batch != 0 {
         return Err(anyhow!(
-            "unpack_heads_batched: need (B*heads, S, dh), got {:?} at batch {batch}",
+            "unpack_heads_batched: need (B*heads, S, dh_pad), got {:?} at batch {batch}",
             x.shape
         ));
     }
-    let (n_heads, s, dh) = (x.shape[0] / batch, x.shape[1], x.shape[2]);
-    let h = n_heads * dh;
+    let (n_heads, s, dhp) = (x.shape[0] / batch, x.shape[1], x.shape[2]);
+    if n_heads == 0 || h % n_heads != 0 || padded_dh(h / n_heads) != dhp {
+        return Err(anyhow!(
+            "unpack_heads_batched: hidden {h} over {n_heads} heads does not pad to {dhp} lanes"
+        ));
+    }
+    let dh = h / n_heads;
     let mut out = Tensor::zeros(&[batch * s, h]);
     for e in 0..batch {
         for head in 0..n_heads {
             for i in 0..s {
-                let src = ((e * n_heads + head) * s + i) * dh;
+                let src = ((e * n_heads + head) * s + i) * dhp;
                 let dst = (e * s + i) * h + head * dh;
                 out.data[dst..dst + dh].copy_from_slice(&x.data[src..src + dh]);
             }
@@ -262,7 +286,11 @@ pub fn multi_head_attention_batched(
     let qh = pack_heads_batched(q, batch, n_heads)?;
     let kh = pack_heads_batched(k, batch, n_heads)?;
     let vh = pack_heads_batched(v, batch, n_heads)?;
-    let (s, dh) = (qh.shape[1], qh.shape[2]);
+    let s = qh.shape[1];
+    // The softmax scale uses the *true* head dim; the packed buffers are
+    // zero-padded to the SIMD lane width and the padding contributes
+    // exact zeros to every contraction.
+    let dh = q.shape[1] / n_heads;
     let mut scores = qh.bmm_nt(&kh)?; // (B*heads, S, S)
     let scale = 1.0 / (dh as f32).sqrt();
     for (bh, mat) in scores.data.chunks_mut(s * s).enumerate() {
@@ -275,8 +303,8 @@ pub fn multi_head_attention_batched(
     }
     softmax_rows_biased(&mut scores, s);
     let probs = scores;
-    let ctx = probs.bmm(&vh)?; // (B*heads, S, dh)
-    Ok((unpack_heads_batched(&ctx, batch)?, probs))
+    let ctx = probs.bmm(&vh)?; // (B*heads, S, dh_pad)
+    Ok((unpack_heads_batched(&ctx, batch, q.shape[1])?, probs))
 }
 
 /// Masked multi-head self-attention on `(S, H)` activations (the
@@ -369,14 +397,79 @@ mod tests {
         let mut rng = SplitMix64::new(43);
         let x = Tensor::randn(&[2 * 5, 12], 1.0, &mut rng); // B=2, S=5, H=12
         let packed = pack_heads_batched(&x, 2, 3).unwrap();
-        assert_eq!(packed.shape, vec![6, 5, 4]);
-        assert_eq!(unpack_heads_batched(&packed, 2).unwrap(), x);
-        // batch = 1 degenerates to the single-example pack.
+        assert_eq!(packed.shape, vec![6, 5, 4]); // dh=4 is already lane-aligned
+        assert_eq!(unpack_heads_batched(&packed, 2, 12).unwrap(), x);
+        // batch = 1 degenerates to the single-example pack (aligned dh).
         let x1 = Tensor::randn(&[5, 12], 1.0, &mut rng);
         assert_eq!(
             pack_heads_batched(&x1, 1, 3).unwrap(),
             pack_heads(&x1, 3).unwrap()
         );
+    }
+
+    #[test]
+    fn ragged_head_dim_pads_to_lane_width_and_roundtrips() {
+        // dh = 5 pads to 8: zero lanes, exact roundtrip.
+        let mut rng = SplitMix64::new(46);
+        let x = Tensor::randn(&[2 * 3, 10], 1.0, &mut rng); // B=2, S=3, heads=2, dh=5
+        let packed = pack_heads_batched(&x, 2, 2).unwrap();
+        assert_eq!(packed.shape, vec![4, 3, 8]);
+        for row in packed.data.chunks(8) {
+            assert_eq!(&row[5..], &[0.0; 3], "padding lanes must be exact zeros");
+        }
+        assert_eq!(unpack_heads_batched(&packed, 2, 10).unwrap(), x);
+        // A hidden width whose padded head dim mismatches the packed
+        // lanes is a loud error, not a silent misread.
+        assert!(unpack_heads_batched(&packed, 2, 20).is_err());
+        assert!(unpack_heads_batched(&packed, 2, 11).is_err());
+    }
+
+    #[test]
+    fn padded_attention_matches_explicit_per_head_reference() {
+        // dh = 5 (not a multiple of the lane width): the padded batched
+        // attention must match an explicit per-head dense reference.
+        let mut rng = SplitMix64::new(47);
+        let (s, h, heads) = (4usize, 10usize, 2usize);
+        let q = Tensor::randn(&[s, h], 0.8, &mut rng);
+        let k = Tensor::randn(&[s, h], 0.8, &mut rng);
+        let v = Tensor::randn(&[s, h], 0.8, &mut rng);
+        let mask = [1.0, 1.0, 1.0, 0.0];
+        let (ctx, probs) = multi_head_attention(&q, &k, &v, &mask, heads).unwrap();
+        let dh = h / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        for head in 0..heads {
+            for i in 0..s {
+                // Reference probabilities from unpadded dot products.
+                let mut scores = vec![f32::NEG_INFINITY; s];
+                for j in 0..s {
+                    if mask[j] == 0.0 {
+                        continue;
+                    }
+                    let mut dot = 0.0f32;
+                    for l in 0..dh {
+                        dot += q.at2(i, head * dh + l) * k.at2(j, head * dh + l);
+                    }
+                    scores[j] = dot * scale;
+                }
+                let maxv = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> =
+                    scores.iter().map(|&x| if x.is_finite() { (x - maxv).exp() } else { 0.0 }).collect();
+                let sum: f32 = exps.iter().sum();
+                for j in 0..s {
+                    let want = exps[j] / sum;
+                    let got = probs.data[(head * s + i) * s + j];
+                    assert!((got - want).abs() < 1e-5, "prob[{head},{i},{j}]: {got} vs {want}");
+                }
+                for l in 0..dh {
+                    let mut want = 0.0f32;
+                    for j in 0..s {
+                        want += exps[j] / sum * v.at2(j, head * dh + l);
+                    }
+                    let got = ctx.at2(i, head * dh + l);
+                    assert!((got - want).abs() < 1e-5, "ctx[{head},{i},{l}]: {got} vs {want}");
+                }
+            }
+        }
     }
 
     #[test]

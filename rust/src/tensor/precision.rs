@@ -1,0 +1,579 @@
+//! Mixed-precision storage substrate: `f32` / `bf16` / `f16` element
+//! formats with **deterministic round-to-nearest-even** conversion and
+//! packed half-width buffers.
+//!
+//! The contract of the whole mixed-precision path lives here:
+//!
+//! * **Storage** happens at [`Precision`] width — TT/TTM cores, the
+//!   Eq. 21 activation caches ([`PackedTensor`], genuinely `u16`-packed
+//!   for the half formats) and the optimizer moments.
+//! * **Compute** always accumulates in `f32`: packed buffers are
+//!   widened on load (`bf16 -> f32` is exact; `f16 -> f32` is exact),
+//!   the [`crate::tensor::dense`] microkernels run unchanged, and the
+//!   result is rounded **once, on store**, with round-to-nearest-even.
+//! * **Determinism**: the conversions are pure integer bit
+//!   manipulation, so the kernels' bitwise-deterministic band-split
+//!   guarantee becomes a *per-precision* guarantee — same inputs, same
+//!   precision, same bits, regardless of thread count.
+//!
+//! On the U50 this is the next 2x of on-chip memory and bandwidth: the
+//! Adam moment pair, the Eq. 21 caches and the core arrays all halve
+//! (see `crate::fpga::resources::report_with_optim_prec` and the
+//! width-parameterized BRAM allocator in `crate::fpga::bram`).
+
+use super::dense::Tensor;
+use anyhow::{anyhow, Result};
+use std::borrow::Cow;
+
+/// Element storage format of the mixed-precision path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// IEEE-754 binary32 — the default full-precision path.
+    F32,
+    /// bfloat16: f32's 8-bit exponent, 7-bit mantissa.  Same dynamic
+    /// range as f32, ~2-3 significant decimal digits.
+    Bf16,
+    /// IEEE-754 binary16: 5-bit exponent, 10-bit mantissa.  More
+    /// mantissa than bf16 but overflows beyond 65504.
+    F16,
+}
+
+impl Precision {
+    pub fn all() -> [Precision; 3] {
+        [Precision::F32, Precision::Bf16, Precision::F16]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "f16",
+        }
+    }
+
+    /// Parse a CLI / manifest spelling.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(Precision::F32),
+            "bf16" | "bfloat16" => Ok(Precision::Bf16),
+            "f16" | "fp16" | "half" | "float16" => Ok(Precision::F16),
+            other => Err(anyhow!("unknown precision '{other}' (f32|bf16|f16)")),
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    /// Bits per stored element (the BRAM word width of this format).
+    pub fn bits(&self) -> usize {
+        match self {
+            Precision::F32 => 32,
+            Precision::Bf16 | Precision::F16 => 16,
+        }
+    }
+
+    pub fn is_half(&self) -> bool {
+        !matches!(self, Precision::F32)
+    }
+
+    /// Storage round-trip of one value: round to this precision
+    /// (round-to-nearest-even) and widen back to f32.  Identity for
+    /// [`Precision::F32`]; idempotent for every format.
+    #[inline]
+    pub fn round(&self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+            Precision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+        }
+    }
+
+    /// Round a whole buffer in place (no-op for f32) — the
+    /// "round-on-store" half of the compute contract.
+    pub fn round_slice_in_place(&self, xs: &mut [f32]) {
+        if self.is_half() {
+            for x in xs.iter_mut() {
+                *x = self.round(*x);
+            }
+        }
+    }
+
+    /// Rounded copy of a tensor (clones for f32).
+    pub fn round_tensor(&self, t: &Tensor) -> Tensor {
+        self.round_tensor_owned(t.clone())
+    }
+
+    /// Round an owned tensor on store — zero-cost move for f32.
+    pub fn round_tensor_owned(&self, mut t: Tensor) -> Tensor {
+        self.round_slice_in_place(&mut t.data);
+        t
+    }
+
+    /// Quantize one value to this format's 16 stored bits.  Only
+    /// meaningful for the half formats (shared by [`PackedTensor`] and
+    /// the optimizer's packed state buffers).
+    #[inline]
+    pub(crate) fn quantize_bits(&self, x: f32) -> u16 {
+        match self {
+            Precision::Bf16 => f32_to_bf16_bits(x),
+            Precision::F16 => f32_to_f16_bits(x),
+            Precision::F32 => unreachable!("f32 is not packed to 16 bits"),
+        }
+    }
+
+    /// Widen one stored 16-bit element back to f32 (exact).
+    #[inline]
+    pub(crate) fn widen_bits(&self, bits: u16) -> f32 {
+        match self {
+            Precision::Bf16 => bf16_bits_to_f32(bits),
+            Precision::F16 => f16_bits_to_f32(bits),
+            Precision::F32 => unreachable!("f32 is not packed to 16 bits"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bf16 conversion — round-to-nearest-even on the dropped 16 bits.
+// ---------------------------------------------------------------------------
+
+/// f32 -> bf16 bits, round-to-nearest-even.  Overflow past the largest
+/// finite bf16 carries into the exponent and yields the correct signed
+/// infinity; NaN stays NaN (quieted, sign preserved).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep the sign, force a quiet-NaN payload bit so truncation
+        // cannot silently produce infinity.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lower = bits & 0x0000_FFFF;
+    let upper = (bits >> 16) as u16;
+    let halfway = 0x0000_8000;
+    if lower > halfway || (lower == halfway && (upper & 1) == 1) {
+        upper.wrapping_add(1)
+    } else {
+        upper
+    }
+}
+
+/// bf16 bits -> f32 (exact: bf16 is a prefix of f32).
+#[inline]
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// f16 conversion — round-to-nearest-even with subnormal and
+// overflow-to-infinity handling.
+// ---------------------------------------------------------------------------
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mut man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: preserve infiniteness; quiet NaNs keep their top
+        // payload bits.
+        return if man != 0 {
+            sign | 0x7E00 | ((man >> 13) as u16 & 0x01FF)
+        } else {
+            sign | 0x7C00
+        };
+    }
+    if exp == 0 {
+        // f32 subnormals (< 2^-126) are far below the f16 subnormal
+        // floor (2^-24): they all round to signed zero.
+        return sign;
+    }
+    man |= 0x0080_0000; // implicit leading 1
+    let e = exp - 127; // unbiased exponent
+    if e > 15 {
+        return sign | 0x7C00; // |x| >= 2^16: infinity
+    }
+    if e < -24 {
+        // Below half the smallest subnormal — except the exact halfway
+        // point 2^-25, which ties to even (zero).
+        if e == -25 && man > 0x0080_0000 {
+            return sign | 0x0001; // rounds up to the smallest subnormal
+        }
+        return sign;
+    }
+    // Normal f16 (e >= -14) drops 13 mantissa bits; subnormals drop
+    // more as the exponent sinks below -14.
+    let shift = (if e >= -14 { 13 } else { 13 + (-14 - e) }) as u32;
+    let half_exp: u16 = if e >= -14 { ((e + 15) as u16) << 10 } else { 0 };
+    let kept = (man >> shift) as u16 & 0x03FF;
+    let rem = man & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    let h = sign | half_exp | kept;
+    if rem > halfway || (rem == halfway && (h & 1) == 1) {
+        // The carry propagates mantissa -> exponent; 65504 + ulp/2
+        // correctly becomes the infinity encoding.
+        h.wrapping_add(1)
+    } else {
+        h
+    }
+}
+
+/// IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // Subnormal: man * 2^-24, exact in f32 (man <= 1023).
+        let v = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+        return if sign != 0 { -v } else { v };
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+// ---------------------------------------------------------------------------
+// Packed storage
+// ---------------------------------------------------------------------------
+
+/// Shape-less packed f32 buffer — the shared storage primitive of the
+/// mixed-precision path (the optimizer's moment buffers and any other
+/// flat storage build on this, so the per-element rounding contract
+/// has a single source of truth: [`Precision::quantize_bits`] /
+/// [`Precision::widen_bits`]).
+#[derive(Debug, Clone)]
+pub enum PackedVec {
+    F32(Vec<f32>),
+    Half(Precision, Vec<u16>),
+}
+
+impl PackedVec {
+    pub fn zeros(prec: Precision, n: usize) -> PackedVec {
+        match prec {
+            Precision::F32 => PackedVec::F32(vec![0.0; n]),
+            p => PackedVec::Half(p, vec![p.quantize_bits(0.0); n]),
+        }
+    }
+
+    pub fn empty(prec: Precision) -> PackedVec {
+        PackedVec::zeros(prec, 0)
+    }
+
+    /// Round-on-store construction from f32 values.
+    pub fn from_f32(prec: Precision, vals: &[f32]) -> PackedVec {
+        match prec {
+            Precision::F32 => PackedVec::F32(vals.to_vec()),
+            p => PackedVec::Half(p, vals.iter().map(|&x| p.quantize_bits(x)).collect()),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PackedVec::F32(v) => v.len(),
+            PackedVec::Half(_, v) => v.len(),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            PackedVec::F32(_) => Precision::F32,
+            PackedVec::Half(p, _) => *p,
+        }
+    }
+
+    /// Bytes at rest — what the on-chip accounting charges.
+    pub fn bytes(&self) -> u64 {
+        self.len() as u64 * self.precision().bytes()
+    }
+
+    /// Widen-on-load copy (exact for every format).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            PackedVec::F32(v) => v.clone(),
+            PackedVec::Half(p, bits) => bits.iter().map(|&b| p.widen_bits(b)).collect(),
+        }
+    }
+
+    /// Run one update over the buffer as f32 values: **in place** for
+    /// the f32 variant (the hot default path — no allocation, no
+    /// copy), widen/compute/round-on-store for the half variants.
+    pub fn update_in_place(&mut self, f: impl FnOnce(&mut [f32])) {
+        match self {
+            PackedVec::F32(v) => f(v),
+            PackedVec::Half(p, bits) => {
+                let mut vals: Vec<f32> = bits.iter().map(|&b| p.widen_bits(b)).collect();
+                f(&mut vals);
+                for (b, &x) in bits.iter_mut().zip(&vals) {
+                    *b = p.quantize_bits(x);
+                }
+            }
+        }
+    }
+}
+
+/// A tensor at rest in storage precision: f32 tensors keep their
+/// buffer — borrowable at **zero cost** via [`PackedTensor::view`], so
+/// the default full-precision hot path never copies a cache — while
+/// half-precision tensors are genuinely packed to `u16` (the realized
+/// half-width Eq. 21 cache) and widen exactly on load.
+#[derive(Debug, Clone)]
+pub struct PackedTensor {
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    F32(Tensor),
+    Half {
+        prec: Precision,
+        shape: Vec<usize>,
+        bits: Vec<u16>,
+    },
+}
+
+impl PackedTensor {
+    /// Pack a tensor, consuming it (move — no copy — for f32).
+    pub fn pack_owned(t: Tensor, precision: Precision) -> PackedTensor {
+        let repr = match precision {
+            Precision::F32 => Repr::F32(t),
+            p => Repr::Half {
+                prec: p,
+                bits: t.data.iter().map(|&x| p.quantize_bits(x)).collect(),
+                shape: t.shape,
+            },
+        };
+        PackedTensor { repr }
+    }
+
+    /// Pack by reference (clones the f32 buffer).
+    pub fn pack(t: &Tensor, precision: Precision) -> PackedTensor {
+        PackedTensor::pack_owned(t.clone(), precision)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match &self.repr {
+            Repr::F32(t) => &t.shape,
+            Repr::Half { shape, .. } => shape,
+        }
+    }
+
+    /// The stored tensor as f32: a zero-copy borrow for f32 storage,
+    /// an exact widening for the half formats — the widen-on-load side
+    /// of the compute contract.
+    pub fn view(&self) -> Cow<'_, Tensor> {
+        match &self.repr {
+            Repr::F32(t) => Cow::Borrowed(t),
+            Repr::Half { prec, shape, bits } => Cow::Owned(Tensor {
+                shape: shape.clone(),
+                data: bits.iter().map(|&b| prec.widen_bits(b)).collect(),
+            }),
+        }
+    }
+
+    /// Owned widened copy (prefer [`PackedTensor::view`] where a
+    /// borrow suffices).
+    pub fn unpack(&self) -> Tensor {
+        self.view().into_owned()
+    }
+
+    pub fn numel(&self) -> usize {
+        match &self.repr {
+            Repr::F32(t) => t.data.len(),
+            Repr::Half { bits, .. } => bits.len(),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match &self.repr {
+            Repr::F32(_) => Precision::F32,
+            Repr::Half { prec, .. } => *prec,
+        }
+    }
+
+    /// Bytes this tensor occupies at rest — the quantity the on-chip
+    /// accounting charges.
+    pub fn bytes(&self) -> u64 {
+        self.numel() as u64 * self.precision().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn f32_round_is_identity() {
+        for x in [0.0f32, -1.5, 3.25e7, f32::INFINITY] {
+            assert_eq!(Precision::F32.round(x), x);
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_ties_to_even() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3F80);
+        assert_eq!(bf16_bits_to_f32(0x3F80), 1.0);
+        assert_eq!(f32_to_bf16_bits(-2.0), 0xC000);
+        // Exactly halfway between 0x3F80 and 0x3F81: even stays.
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // Halfway above an odd mantissa rounds up to even.
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // Just above halfway always rounds up.
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // Relative error bound: 2^-8.
+        let p = std::f32::consts::PI;
+        assert!((Precision::Bf16.round(p) - p).abs() <= p * 2.0f32.powi(-8));
+    }
+
+    #[test]
+    fn bf16_specials() {
+        assert_eq!(Precision::Bf16.round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(Precision::Bf16.round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(Precision::Bf16.round(f32::NAN).is_nan());
+        assert_eq!(Precision::Bf16.round(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(Precision::Bf16.round(-0.0).to_bits(), (-0.0f32).to_bits());
+        // Overflow past the largest finite bf16 carries into infinity.
+        assert_eq!(Precision::Bf16.round(3.4e38), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_known_values_and_ties_to_even() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(Precision::F16.round(65504.0), 65504.0); // max finite
+        // 2049 is halfway between 2048 and 2050: even mantissa wins.
+        assert_eq!(Precision::F16.round(2049.0), 2048.0);
+        // 2051 is halfway between 2050 (odd mantissa) and 2052: up.
+        assert_eq!(Precision::F16.round(2051.0), 2052.0);
+        // Relative error bound: 2^-11.
+        let p = std::f32::consts::PI;
+        assert!((Precision::F16.round(p) - p).abs() <= p * 2.0f32.powi(-11));
+    }
+
+    #[test]
+    fn f16_overflow_subnormals_and_specials() {
+        assert_eq!(Precision::F16.round(65520.0), f32::INFINITY); // RNE boundary
+        assert_eq!(Precision::F16.round(65519.0), 65504.0); // just under it
+        assert_eq!(Precision::F16.round(1e6), f32::INFINITY);
+        assert_eq!(Precision::F16.round(-1e6), f32::NEG_INFINITY);
+        assert!(Precision::F16.round(f32::NAN).is_nan());
+        assert_eq!(Precision::F16.round(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(Precision::F16.round(-0.0).to_bits(), (-0.0f32).to_bits());
+        // Smallest subnormal is 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(Precision::F16.round(tiny), tiny);
+        assert_eq!(Precision::F16.round(6.0e-8), tiny); // nearest
+        assert_eq!(Precision::F16.round(2.9e-8), 0.0); // below half of it
+        assert_eq!(Precision::F16.round(1e-10), 0.0);
+        // The exact halfway point 2^-25 ties to even (zero).
+        assert_eq!(Precision::F16.round(2.0f32.powi(-25)), 0.0);
+    }
+
+    #[test]
+    fn rounding_is_idempotent_and_deterministic() {
+        prop::check(61, 40, |rng| {
+            for prec in [Precision::Bf16, Precision::F16] {
+                for _ in 0..64 {
+                    // Spread across magnitudes, incl. the f16 subnormal range.
+                    let x = (rng.normal() as f32) * 10f32.powi(rng.below(16) as i32 - 8);
+                    let once = prec.round(x);
+                    assert_eq!(
+                        prec.round(once).to_bits(),
+                        once.to_bits(),
+                        "{prec:?}: rounding not idempotent at {x}"
+                    );
+                    // Deterministic: repeated conversion is bitwise equal.
+                    assert_eq!(prec.round(x).to_bits(), once.to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rne_never_moves_more_than_one_ulp_gap() {
+        // |round(x) - x| is at most half the gap to the next
+        // representable value: bounded by |x| * 2^-8 (bf16) / 2^-11
+        // (f16) for normals.
+        prop::check(62, 30, |rng| {
+            for _ in 0..64 {
+                let x = rng.normal() as f32;
+                let b = Precision::Bf16.round(x);
+                assert!((b - x).abs() <= x.abs() * 2.0f32.powi(-8) + 1e-45);
+                let h = Precision::F16.round(x);
+                assert!((h - x).abs() <= x.abs() * 2.0f32.powi(-11) + 2.0f32.powi(-25));
+            }
+        });
+    }
+
+    #[test]
+    fn packed_tensor_roundtrip_and_bytes() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(63);
+        let t = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        // f32: lossless, 4 bytes/elem, and view() borrows (no copy).
+        let p32 = PackedTensor::pack(&t, Precision::F32);
+        assert_eq!(p32.unpack(), t);
+        assert_eq!(p32.bytes(), 15 * 4);
+        assert!(matches!(p32.view(), Cow::Borrowed(_)), "f32 view must be zero-copy");
+        for prec in [Precision::Bf16, Precision::F16] {
+            let p = PackedTensor::pack(&t, prec);
+            assert_eq!(p.bytes(), 15 * 2, "{prec:?}: not half-width");
+            assert_eq!(p.shape(), &[3, 5]);
+            assert!(matches!(p.view(), Cow::Owned(_)));
+            let back = p.unpack();
+            // unpack(pack(x)) == round(x), and repacking is lossless.
+            for (a, &b) in back.data.iter().zip(&t.data) {
+                assert_eq!(a.to_bits(), prec.round(b).to_bits());
+            }
+            assert_eq!(PackedTensor::pack(&back, prec).unpack(), back);
+        }
+    }
+
+    #[test]
+    fn packed_vec_update_in_place_and_roundtrip() {
+        let vals = [0.123456789f32, -2.5, 7.0];
+        for prec in Precision::all() {
+            let mut pv = PackedVec::from_f32(prec, &vals);
+            assert_eq!(pv.len(), 3);
+            assert_eq!(pv.bytes(), 3 * prec.bytes());
+            for (got, &want) in pv.to_f32().iter().zip(&vals) {
+                assert_eq!(got.to_bits(), prec.round(want).to_bits());
+            }
+            pv.update_in_place(|v| {
+                for x in v.iter_mut() {
+                    *x *= 2.0;
+                }
+            });
+            // Every stored value is a fixed point of the rounding.
+            for got in pv.to_f32() {
+                assert_eq!(got.to_bits(), prec.round(got).to_bits());
+            }
+        }
+        assert!(PackedVec::empty(Precision::Bf16).is_empty());
+    }
+
+    #[test]
+    fn parse_roundtrips_and_aliases() {
+        for prec in Precision::all() {
+            assert_eq!(Precision::parse(prec.name()).unwrap(), prec);
+        }
+        assert_eq!(Precision::parse("fp16").unwrap(), Precision::F16);
+        assert_eq!(Precision::parse("bfloat16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
+        assert!(Precision::parse("int8").is_err());
+    }
+}

@@ -7,6 +7,7 @@
 //! counts instead of being trusted on paper.
 
 use super::dense::{svd, Tensor};
+use super::precision::Precision;
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Result};
 
@@ -222,8 +223,19 @@ impl TTMatrix {
     /// (M, r_d).  The backward pass consumes the full chain — state
     /// `L_{k-1}` is the left operand of the step that produced `L_k`.
     pub fn merge_left_chain(&self) -> Result<Vec<Tensor>> {
+        self.merge_left_chain_prec(Precision::F32)
+    }
+
+    /// [`TTMatrix::merge_left_chain`] with mixed-precision storage:
+    /// every chain state is **rounded on store** (round-to-nearest-even
+    /// to `prec`) and the next fold consumes the rounded value, so the
+    /// chain the backward pass reads is exactly the chain the forward
+    /// computed through.  `Precision::F32` is bitwise the full-precision
+    /// chain.  (Products themselves accumulate in f32 — widen-on-load.)
+    pub fn merge_left_chain_prec(&self, prec: Precision) -> Result<Vec<Tensor>> {
         let d = self.d();
-        let mut states = vec![self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?];
+        let first = self.cores[0].reshape(&[self.m_modes[0], self.ranks[1]])?;
+        let mut states = vec![prec.round_tensor_owned(first)];
         for k in 1..d {
             let g = &self.cores[k];
             let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
@@ -232,7 +244,7 @@ impl TTMatrix {
                 prev.matmul(&g.reshape(&[rp, mk * rk])?)?
                     .reshape(&[prev.shape[0] * mk, rk])?
             };
-            states.push(next);
+            states.push(prec.round_tensor_owned(next));
         }
         Ok(states)
     }
@@ -241,10 +253,17 @@ impl TTMatrix {
     /// to (r_{2d-1}, n_d); `R_j` folds core `2d-1-j` in; the last state
     /// is Z1 (r_d, N).
     pub fn merge_right_chain(&self) -> Result<Vec<Tensor>> {
+        self.merge_right_chain_prec(Precision::F32)
+    }
+
+    /// [`TTMatrix::merge_right_chain`] with round-on-store storage
+    /// precision (see [`TTMatrix::merge_left_chain_prec`]).
+    pub fn merge_right_chain_prec(&self, prec: Precision) -> Result<Vec<Tensor>> {
         let d = self.d();
         let d2 = 2 * d;
         let last = &self.cores[d2 - 1];
-        let mut states = vec![last.reshape(&[last.shape[0], last.shape[1]])?];
+        let first = last.reshape(&[last.shape[0], last.shape[1]])?;
+        let mut states = vec![prec.round_tensor_owned(first)];
         for k in (d..d2 - 1).rev() {
             let g = &self.cores[k];
             let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
@@ -254,7 +273,7 @@ impl TTMatrix {
                     .matmul(prev)?
                     .reshape(&[rp, nk * prev.shape[1]])?
             };
-            states.push(next);
+            states.push(prec.round_tensor_owned(next));
         }
         Ok(states)
     }

@@ -2,6 +2,7 @@
 //! (paper Sec. III-C, Eqs. 8/17).
 
 use super::dense::Tensor;
+use super::precision::Precision;
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Result};
 
@@ -95,11 +96,26 @@ impl TTMEmbedding {
     /// `A_0..A_{d-1}` (`A_{d-1}` reshapes to the returned row) — the
     /// activations the backward pass reuses.
     pub fn lookup_cached(&self, token: usize) -> Result<(Tensor, Vec<Tensor>)> {
+        self.lookup_cached_prec(token, Precision::F32)
+    }
+
+    /// [`TTMEmbedding::lookup_cached`] with mixed-precision storage:
+    /// every chain state is **rounded on store** (round-to-nearest-even
+    /// to `prec`) and the next fold consumes the rounded value — the
+    /// same contract as `TTMatrix::merge_left_chain_prec`, so the chain
+    /// the backward pass reads is exactly the chain the forward
+    /// computed through.  `Precision::F32` is bitwise the
+    /// full-precision lookup.
+    pub fn lookup_cached_prec(
+        &self,
+        token: usize,
+        prec: Precision,
+    ) -> Result<(Tensor, Vec<Tensor>)> {
         if token >= self.vocab() {
             return Err(anyhow!("token {token} out of vocab {}", self.vocab()));
         }
         let digits = self.token_digits(token);
-        let mut states = vec![self.slice(0, digits[0])?];
+        let mut states = vec![prec.round_tensor_owned(self.slice(0, digits[0])?)];
         let mut m_acc = self.hid_modes[0];
         for k in 1..self.cores.len() {
             let sl = self.slice(k, digits[k])?;
@@ -109,7 +125,7 @@ impl TTMEmbedding {
                 let prev = states.last().expect("nonempty");
                 prev.matmul(&sl)?.reshape(&[m_acc * mk, rk])?
             };
-            states.push(next);
+            states.push(prec.round_tensor_owned(next));
             m_acc *= mk;
         }
         let row = states.last().expect("nonempty").reshape(&[self.hidden()])?;

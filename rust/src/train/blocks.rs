@@ -147,7 +147,7 @@ pub fn multi_head_attention_vjp_batched(
     let qh = ops::pack_heads_batched(q, batch, n_heads)?;
     let kh = ops::pack_heads_batched(k, batch, n_heads)?;
     let vh = ops::pack_heads_batched(v, batch, n_heads)?;
-    let dctx_h = ops::pack_heads_batched(d_ctx, batch, n_heads)?; // (B*heads, S, dh)
+    let dctx_h = ops::pack_heads_batched(d_ctx, batch, n_heads)?; // (B*heads, S, dh_pad)
 
     // ctx = P V  =>  dV = P^T dctx, dP = dctx V^T.
     let dv_h = probs.bmm_tn(&dctx_h)?; // (B*heads, S, dh)
@@ -158,12 +158,12 @@ pub fn multi_head_attention_vjp_batched(
         *x *= scale;
     }
     // scores = Q K^T  =>  dQ = dS K, dK = dS^T Q.
-    let dq_h = ds.bmm(&kh)?; // (B*heads, S, dh)
-    let dk_h = ds.bmm_tn(&qh)?; // (B*heads, S, dh)
+    let dq_h = ds.bmm(&kh)?; // (B*heads, S, dh_pad)
+    let dk_h = ds.bmm_tn(&qh)?; // (B*heads, S, dh_pad)
     Ok((
-        ops::unpack_heads_batched(&dq_h, batch)?,
-        ops::unpack_heads_batched(&dk_h, batch)?,
-        ops::unpack_heads_batched(&dv_h, batch)?,
+        ops::unpack_heads_batched(&dq_h, batch, h)?,
+        ops::unpack_heads_batched(&dk_h, batch, h)?,
+        ops::unpack_heads_batched(&dv_h, batch, h)?,
     ))
 }
 

@@ -17,8 +17,9 @@
 //! [`ContractionStats`] in the tests.
 
 use crate::optim::{Hyper, ModelOptim};
-use crate::tensor::{ops, ContractionStats, Tensor, TTMatrix};
+use crate::tensor::{ops, ContractionStats, PackedTensor, Precision, Tensor, TTMatrix};
 use anyhow::{anyhow, Result};
+use std::borrow::Cow;
 
 /// A trainable TT-format linear layer (cores + dense bias).
 #[derive(Debug, Clone)]
@@ -27,16 +28,19 @@ pub struct TTLinear {
     pub bias: Vec<f32>,
 }
 
-/// Forward activations cached for the BP stage.
+/// Forward activations cached for the BP stage, stored at the layer's
+/// storage [`Precision`] — genuinely `u16`-packed for the half formats
+/// ([`PackedTensor`]), so the Eq. 21 cache really occupies half the
+/// bytes.  The backward pass widens on load and accumulates in f32.
 pub struct TTLinearCache {
     /// Layer input (K, N).
-    pub x: Tensor,
+    pub x: PackedTensor,
     /// Left-merge chain states; last is Z3 (M, r_d).
-    left_chain: Vec<Tensor>,
+    left_chain: Vec<PackedTensor>,
     /// Right-merge chain states; last is Z1 (r_d, N).
-    right_chain: Vec<Tensor>,
+    right_chain: Vec<PackedTensor>,
     /// Z2 = X Z1^T (K, r_d).
-    z2: Tensor,
+    z2: PackedTensor,
 }
 
 impl TTLinearCache {
@@ -50,9 +54,15 @@ impl TTLinearCache {
             .iter()
             .skip(1)
             .chain(self.right_chain.iter().skip(1))
-            .map(Tensor::numel)
+            .map(PackedTensor::numel)
             .sum();
         (chain + self.z2.numel()) as u64
+    }
+
+    /// Bytes the Eq. 21 cache occupies at rest: `stored_elems` times
+    /// the storage width — exactly half the f32 figure for bf16/f16.
+    pub fn stored_bytes(&self) -> u64 {
+        self.stored_elems() * self.z2.precision().bytes()
     }
 }
 
@@ -85,12 +95,30 @@ impl TTLinear {
         TTLinear { tt, bias }
     }
 
-    /// Forward pass `Y = X W^T + b` on row-major `x (K, N)`, caching the
-    /// BTT intermediates for backward.  Instrumented identically to
-    /// [`TTMatrix::matmul_btt`] (the executed counts equal Eqs. 20/21).
+    /// Forward pass `Y = X W^T + b` on row-major `x (K, N)` at full
+    /// precision, caching the BTT intermediates for backward.
+    /// Instrumented identically to [`TTMatrix::matmul_btt`] (the
+    /// executed counts equal Eqs. 20/21).
     pub fn forward(
         &self,
         x: &Tensor,
+        stats: &mut ContractionStats,
+    ) -> Result<(Tensor, TTLinearCache)> {
+        self.forward_prec(x, Precision::F32, stats)
+    }
+
+    /// [`TTLinear::forward`] under the mixed-precision storage path:
+    /// every stored value — the cached input, each merge-chain state
+    /// and Z2 — is rounded to `prec` on store (round-to-nearest-even)
+    /// and the *rounded* value feeds the next product, so the cache the
+    /// BP stage reads is exactly what the forward computed through.
+    /// All products accumulate in f32 (widen-on-load); the cache itself
+    /// is packed to half width.  `Precision::F32` is bitwise the
+    /// full-precision forward.
+    pub fn forward_prec(
+        &self,
+        x: &Tensor,
+        prec: Precision,
         stats: &mut ContractionStats,
     ) -> Result<(Tensor, TTLinearCache)> {
         let d = self.tt.d();
@@ -101,26 +129,28 @@ impl TTLinear {
         let k_dim = x.shape[0];
         let r_d = self.tt.ranks[d];
 
-        let left_chain = self.tt.merge_left_chain()?;
-        let right_chain = self.tt.merge_right_chain()?;
+        let xq = prec.round_tensor(x);
+        let left_chain = self.tt.merge_left_chain_prec(prec)?;
+        let right_chain = self.tt.merge_right_chain_prec(prec)?;
         // Merge costs via the shared accounting helper (same source of
         // truth as matmul_btt).
         self.tt.record_merge_stats(stats);
 
         let z3 = left_chain.last().expect("d >= 1");
         let z1 = right_chain.last().expect("d >= 1");
-        let z2 = x.matmul(&z1.t()?)?; // (K, r_d)
+        let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
         stats.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, true);
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
         let y = ops::add_row(&y, &self.bias);
+        let pack = |t: Tensor| PackedTensor::pack_owned(t, prec);
         Ok((
             y,
             TTLinearCache {
-                x: x.clone(),
-                left_chain,
-                right_chain,
-                z2,
+                x: pack(xq),
+                left_chain: left_chain.into_iter().map(pack).collect(),
+                right_chain: right_chain.into_iter().map(pack).collect(),
+                z2: pack(z2),
             },
         ))
     }
@@ -137,7 +167,7 @@ impl TTLinear {
         let d = self.tt.d();
         let (m, n) = (self.tt.m(), self.tt.n());
         let r_d = self.tt.ranks[d];
-        if dy.ndim() != 2 || dy.shape[1] != m || dy.shape[0] != cache.x.shape[0] {
+        if dy.ndim() != 2 || dy.shape[1] != m || dy.shape[0] != cache.x.shape()[0] {
             return Err(anyhow!("dy must be (K, {m}), got {:?}", dy.shape));
         }
         let k_dim = dy.shape[0];
@@ -150,20 +180,29 @@ impl TTLinear {
             }
         }
 
-        let z3 = cache.left_chain.last().expect("d >= 1");
-        let z1 = cache.right_chain.last().expect("d >= 1");
+        // Widen-on-load: view the cache as f32 once — zero-copy
+        // borrows on the f32 path, exact widenings for the packed half
+        // formats.  Every product below accumulates in f32.
+        let x = cache.x.view();
+        let z2 = cache.z2.view();
+        let left_chain: Vec<Cow<'_, Tensor>> =
+            cache.left_chain.iter().map(PackedTensor::view).collect();
+        let right_chain: Vec<Cow<'_, Tensor>> =
+            cache.right_chain.iter().map(PackedTensor::view).collect();
+        let z3 = left_chain.last().expect("d >= 1").as_ref();
+        let z1 = right_chain.last().expect("d >= 1").as_ref();
         // The four K-wide products (2 K r_d (M + N) multiplies).
-        let dz3 = dy.t()?.matmul(&cache.z2)?; // (M, r_d)
+        let dz3 = dy.t()?.matmul(z2.as_ref())?; // (M, r_d)
         stats.record_step((m * k_dim * r_d) as u64, (m * r_d) as u64, false);
         let dz2 = dy.matmul(z3)?; // (K, r_d)
         stats.record_step((k_dim * m * r_d) as u64, (k_dim * r_d) as u64, false);
-        let dz1 = dz2.t()?.matmul(&cache.x)?; // (r_d, N)
+        let dz1 = dz2.t()?.matmul(x.as_ref())?; // (r_d, N)
         stats.record_step((r_d * k_dim * n) as u64, (r_d * n) as u64, false);
         let dx = dz2.matmul(z1)?; // (K, N)
         stats.record_step((k_dim * r_d * n) as u64, (k_dim * n) as u64, false);
 
-        let mut core_grads = unroll_left_chain(&self.tt, &cache.left_chain, dz3, stats)?;
-        core_grads.extend(unroll_right_chain(&self.tt, &cache.right_chain, dz1, stats)?);
+        let mut core_grads = unroll_left_chain(&self.tt, &left_chain, dz3, stats)?;
+        core_grads.extend(unroll_right_chain(&self.tt, &right_chain, dz1, stats)?);
 
         Ok((dx, TTLinearGrads { cores: core_grads, bias: dbias }))
     }
@@ -189,10 +228,11 @@ impl TTLinear {
 
 /// Unroll one left (output-side) merge chain: `dL_k -> (dG_k, dL_{k-1})`.
 /// Returns the `d` output-mode core gradients (index `k` matches core
-/// `k`).  Shared by [`TTLinear::backward`] and [`backward_qkv_fused`].
+/// `k`).  Shared by [`TTLinear::backward`] and [`backward_qkv_fused`];
+/// takes the chain as [`Cow`] views so the f32 path stays zero-copy.
 fn unroll_left_chain(
     tt: &TTMatrix,
-    chain: &[Tensor],
+    chain: &[Cow<'_, Tensor>],
     dz3: Tensor,
     stats: &mut ContractionStats,
 ) -> Result<Vec<Tensor>> {
@@ -202,7 +242,7 @@ fn unroll_left_chain(
     for k in (1..d).rev() {
         let g = &tt.cores[k];
         let (rp, mk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
-        let prev = &chain[k - 1]; // (m_prev, rp)
+        let prev = chain[k - 1].as_ref(); // (m_prev, rp)
         let m_prev = prev.shape[0];
         let dflat = d_state.reshape(&[m_prev, mk * rk])?;
         let dg = prev.t()?.matmul(&dflat)?; // (rp, mk*rk)
@@ -220,7 +260,7 @@ fn unroll_left_chain(
 /// matches core `d + j`).
 fn unroll_right_chain(
     tt: &TTMatrix,
-    chain: &[Tensor],
+    chain: &[Cow<'_, Tensor>],
     dz1: Tensor,
     stats: &mut ContractionStats,
 ) -> Result<Vec<Tensor>> {
@@ -232,7 +272,7 @@ fn unroll_right_chain(
         let c = d2 - 1 - j;
         let g = &tt.cores[c];
         let (rp, nk, rk) = (g.shape[0], g.shape[1], g.shape[2]);
-        let prev = &chain[j - 1]; // (rk, n_prev)
+        let prev = chain[j - 1].as_ref(); // (rk, n_prev)
         let n_prev = prev.shape[1];
         let dflat = d_state.reshape(&[rp * nk, n_prev])?;
         let dg = dflat.matmul(&prev.t()?)?; // (rp*nk, rk)
@@ -276,16 +316,17 @@ pub fn qkv_input_cores_shared(wq: &TTLinear, wk: &TTLinear, wv: &TTLinear) -> bo
 
 /// Forward activations of the fused QKV pass.  The layer input and the
 /// shared right chain / Z2 are stored **once** (vs three copies across
-/// separate [`TTLinearCache`]s).
+/// separate [`TTLinearCache`]s), at the layer's storage [`Precision`]
+/// (packed to half width for bf16/f16).
 pub struct QkvFusedCache {
     /// Layer input (K, N), stored once for all three projections.
-    pub x: Tensor,
+    pub x: PackedTensor,
     /// Per-projection left-merge chains (q, k, v); last state is Z3.
-    left_chains: [Vec<Tensor>; 3],
+    left_chains: [Vec<PackedTensor>; 3],
     /// Shared right-merge chain; last state is Z1 (r_d, N).
-    right_chain: Vec<Tensor>,
+    right_chain: Vec<PackedTensor>,
     /// Shared Z2 = X Z1^T (K, r_d).
-    z2: Tensor,
+    z2: PackedTensor,
 }
 
 impl QkvFusedCache {
@@ -298,9 +339,15 @@ impl QkvFusedCache {
             .iter()
             .flat_map(|c| c.iter().skip(1))
             .chain(self.right_chain.iter().skip(1))
-            .map(Tensor::numel)
+            .map(PackedTensor::numel)
             .sum();
         (chains + self.z2.numel()) as u64
+    }
+
+    /// Bytes at rest of the fused Eq. 21 cache (see
+    /// [`TTLinearCache::stored_bytes`]).
+    pub fn stored_bytes(&self) -> u64 {
+        self.stored_elems() * self.z2.precision().bytes()
     }
 }
 
@@ -326,6 +373,20 @@ pub fn forward_qkv_fused(
     x: &Tensor,
     stats: &mut ContractionStats,
 ) -> Result<([Tensor; 3], QkvFusedCache)> {
+    forward_qkv_fused_prec(wq, wk, wv, x, Precision::F32, stats)
+}
+
+/// [`forward_qkv_fused`] under the mixed-precision storage path (see
+/// [`TTLinear::forward_prec`]): the shared Z2, the shared right chain
+/// and the three left chains are rounded on store and packed to `prec`.
+pub fn forward_qkv_fused_prec(
+    wq: &TTLinear,
+    wk: &TTLinear,
+    wv: &TTLinear,
+    x: &Tensor,
+    prec: Precision,
+    stats: &mut ContractionStats,
+) -> Result<([Tensor; 3], QkvFusedCache)> {
     // Hard precondition, checked in release builds too: running the
     // shared right merge over untied wk/wv would silently produce
     // wrong K/V projections, and the check is a few-KB compare vs
@@ -341,30 +402,39 @@ pub fn forward_qkv_fused(
     let k_dim = x.shape[0];
     let r_d = wq.tt.ranks[d];
 
-    // Shared input side: one right merge, one Z2.
-    let right_chain = wq.tt.merge_right_chain()?;
+    // Shared input side: one right merge, one Z2 (rounded on store).
+    let xq = prec.round_tensor(x);
+    let right_chain = wq.tt.merge_right_chain_prec(prec)?;
     wq.tt.record_merge_right_stats(stats);
     let z1 = right_chain.last().expect("d >= 1");
-    let z2 = x.matmul(&z1.t()?)?; // (K, r_d)
+    let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
     stats.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, true);
 
     // Per-projection output side: three left merges, three applies.
     let mut ys = Vec::with_capacity(3);
     let mut left_chains = Vec::with_capacity(3);
     for w in [wq, wk, wv] {
-        let chain = w.tt.merge_left_chain()?;
+        let chain = w.tt.merge_left_chain_prec(prec)?;
         w.tt.record_merge_left_stats(stats);
         let z3 = chain.last().expect("d >= 1");
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
         ys.push(ops::add_row(&y, &w.bias));
-        left_chains.push(chain);
+        left_chains.push(chain.into_iter().map(|t| PackedTensor::pack_owned(t, prec)).collect());
     }
     let ys: [Tensor; 3] = ys.try_into().expect("three projections");
-    let left_chains: [Vec<Tensor>; 3] = left_chains.try_into().expect("three projections");
+    let left_chains: [Vec<PackedTensor>; 3] = left_chains.try_into().expect("three projections");
     Ok((
         ys,
-        QkvFusedCache { x: x.clone(), left_chains, right_chain, z2 },
+        QkvFusedCache {
+            x: PackedTensor::pack_owned(xq, prec),
+            left_chains,
+            right_chain: right_chain
+                .into_iter()
+                .map(|t| PackedTensor::pack_owned(t, prec))
+                .collect(),
+            z2: PackedTensor::pack_owned(z2, prec),
+        },
     ))
 }
 
@@ -386,13 +456,19 @@ pub fn backward_qkv_fused(
     let d = wq.tt.d();
     let (m, n) = (wq.tt.m(), wq.tt.n());
     let r_d = wq.tt.ranks[d];
-    let k_dim = cache.x.shape[0];
+    let k_dim = cache.x.shape()[0];
     for dy in [dq, dk, dv] {
         if dy.ndim() != 2 || dy.shape[1] != m || dy.shape[0] != k_dim {
             return Err(anyhow!("dy must be ({k_dim}, {m}), got {:?}", dy.shape));
         }
     }
 
+    // Widen-on-load: view the shared cache once (zero-copy borrows on
+    // the f32 path; f32 accumulation throughout).
+    let x = cache.x.view();
+    let z2 = cache.z2.view();
+    let right_chain: Vec<Cow<'_, Tensor>> =
+        cache.right_chain.iter().map(PackedTensor::view).collect();
     let mut dz2 = Tensor::zeros(&[k_dim, r_d]);
     let mut m_grads = Vec::with_capacity(3);
     let mut biases = Vec::with_capacity(3);
@@ -404,22 +480,24 @@ pub fn backward_qkv_fused(
             }
         }
         biases.push(dbias);
-        let z3 = cache.left_chains[p].last().expect("d >= 1");
-        let dz3 = dy.t()?.matmul(&cache.z2)?; // (M, r_d)
+        let left_chain: Vec<Cow<'_, Tensor>> =
+            cache.left_chains[p].iter().map(PackedTensor::view).collect();
+        let z3 = left_chain.last().expect("d >= 1").as_ref();
+        let dz3 = dy.t()?.matmul(z2.as_ref())?; // (M, r_d)
         stats.record_step((m * k_dim * r_d) as u64, (m * r_d) as u64, false);
         let part = dy.matmul(z3)?; // (K, r_d) contribution to dZ2
         stats.record_step((k_dim * m * r_d) as u64, (k_dim * r_d) as u64, false);
         dz2 = ops::add(&dz2, &part);
-        m_grads.push(unroll_left_chain(&w.tt, &cache.left_chains[p], dz3, stats)?);
+        m_grads.push(unroll_left_chain(&w.tt, &left_chain, dz3, stats)?);
     }
 
     // Shared input side, charged once.
-    let z1 = cache.right_chain.last().expect("d >= 1");
-    let dz1 = dz2.t()?.matmul(&cache.x)?; // (r_d, N)
+    let z1 = right_chain.last().expect("d >= 1").as_ref();
+    let dz1 = dz2.t()?.matmul(x.as_ref())?; // (r_d, N)
     stats.record_step((r_d * k_dim * n) as u64, (r_d * n) as u64, false);
     let dx = dz2.matmul(z1)?; // (K, N)
     stats.record_step((k_dim * r_d * n) as u64, (k_dim * n) as u64, false);
-    let n_cores = unroll_right_chain(&wq.tt, &cache.right_chain, dz1, stats)?;
+    let n_cores = unroll_right_chain(&wq.tt, &right_chain, dz1, stats)?;
 
     let m_cores: [Vec<Tensor>; 3] = m_grads.try_into().expect("three projections");
     let bias: [Vec<f32>; 3] = biases.try_into().expect("three projections");
@@ -590,6 +668,65 @@ mod tests {
                 opt.allocated_state_elems(),
                 kind.state_multiplier() as u64 * elems
             );
+        }
+    }
+
+    #[test]
+    fn f32_forward_prec_is_bitwise_the_plain_forward() {
+        let mut rng = SplitMix64::new(55);
+        let l = layer(&mut rng);
+        let x = Tensor::randn(&[6, 12], 1.0, &mut rng);
+        let mut s1 = ContractionStats::default();
+        let (y1, c1) = l.forward(&x, &mut s1).unwrap();
+        let mut s2 = ContractionStats::default();
+        let (y2, c2) = l.forward_prec(&x, Precision::F32, &mut s2).unwrap();
+        assert_eq!(y1.data, y2.data);
+        assert_eq!(s1.muls, s2.muls);
+        assert_eq!(c1.stored_elems(), c2.stored_elems());
+        assert_eq!(c1.stored_bytes(), 4 * c1.stored_elems());
+    }
+
+    #[test]
+    fn half_width_cache_halves_bytes_and_backward_stays_close() {
+        // The bf16 cache stores the same element count at half the
+        // bytes; the backward through the packed (rounded) cache stays
+        // within half-precision tolerance of the f32 gradients; the
+        // instrumented counts are precision-independent.
+        let mut rng = SplitMix64::new(56);
+        let l = layer(&mut rng);
+        let x = Tensor::randn(&[6, 12], 1.0, &mut rng);
+        let dy = Tensor::randn(&[6, 12], 1.0, &mut rng);
+        let mut s32 = ContractionStats::default();
+        let (y32, c32) = l.forward(&x, &mut s32).unwrap();
+        let mut g32stats = ContractionStats::default();
+        let (dx32, g32) = l.backward(&dy, &c32, &mut g32stats).unwrap();
+        for prec in [Precision::Bf16, Precision::F16] {
+            let mut s = ContractionStats::default();
+            let (y, c) = l.forward_prec(&x, prec, &mut s).unwrap();
+            assert_eq!(s.muls, s32.muls, "{prec:?}: muls must be precision-independent");
+            assert_eq!(c.stored_elems(), c32.stored_elems());
+            assert_eq!(2 * c.stored_bytes(), c32.stored_bytes(), "{prec:?}: not half-width");
+            // Output within the storage format's relative error budget.
+            let scale = y32.norm() / (y32.numel() as f32).sqrt();
+            assert!(
+                y.max_abs_diff(&y32) < 0.05 * (1.0 + scale),
+                "{prec:?}: forward drifted {}",
+                y.max_abs_diff(&y32)
+            );
+            // Backward through the rounded cache tracks the f32 grads.
+            let mut bs = ContractionStats::default();
+            let (dx, g) = l.backward(&dy, &c, &mut bs).unwrap();
+            assert_eq!(bs.muls, g32stats.muls);
+            let dscale = dx32.norm() / (dx32.numel() as f32).sqrt();
+            assert!(dx.max_abs_diff(&dx32) < 0.05 * (1.0 + dscale), "{prec:?}: dX drifted");
+            for (k, (a, b)) in g.cores.iter().zip(&g32.cores).enumerate() {
+                let gs = b.norm() / (b.numel() as f32).sqrt();
+                assert!(
+                    a.max_abs_diff(b) < 0.05 * (1.0 + gs),
+                    "{prec:?}: core {k} grad drifted {}",
+                    a.max_abs_diff(b)
+                );
+            }
         }
     }
 

@@ -42,8 +42,8 @@ pub mod model;
 pub mod native;
 
 pub use layers::{
-    backward_qkv_fused, forward_qkv_fused, qkv_input_cores_shared, QkvFusedCache, QkvFusedGrads,
-    TTLinear, TTLinearGrads,
+    backward_qkv_fused, forward_qkv_fused, forward_qkv_fused_prec, qkv_input_cores_shared,
+    QkvFusedCache, QkvFusedGrads, TTLinear, TTLinearGrads,
 };
 pub use model::{ComputePath, NativeTrainModel};
 pub use native::NativeTrainer;

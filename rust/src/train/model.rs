@@ -35,7 +35,7 @@
 use crate::config::ModelConfig;
 use crate::inference::ParamMap;
 use crate::optim::{ModelOptim, OptimConfig};
-use crate::tensor::{ops, ContractionStats, Tensor, TTMEmbedding, TTMatrix};
+use crate::tensor::{ops, ContractionStats, Precision, Tensor, TTMEmbedding, TTMatrix};
 use crate::train::blocks::{self, LayerNormCache};
 use crate::train::layers::{self, QkvFusedCache, TTLinear, TTLinearCache};
 use crate::util::rng::SplitMix64;
@@ -106,6 +106,11 @@ pub struct NativeTrainModel {
     pub optim: ModelOptim,
     /// Compute-schedule selection (fused/batched by default).
     pub compute_path: ComputePath,
+    /// Storage precision of the mixed-precision path (f32 default):
+    /// Eq. 21 caches, TTM chain states, optimizer moments and updated
+    /// parameters are rounded/packed to this width; compute always
+    /// accumulates in f32.  Set via [`NativeTrainModel::set_precision`].
+    pub precision: Precision,
 }
 
 /// The three separate per-projection caches of the reference schedule.
@@ -277,6 +282,7 @@ impl NativeTrainModel {
             slot_b: vec![0.0; cfg.n_slots],
             optim: ModelOptim::new(OptimConfig::default()),
             compute_path: ComputePath::default(),
+            precision: Precision::F32,
         })
     }
 
@@ -356,13 +362,78 @@ impl NativeTrainModel {
             // Fused by default; layers whose loaded Q/K/V input cores
             // are not tied fall back to separate forwards per layer.
             compute_path: ComputePath::default(),
+            precision: Precision::F32,
         })
     }
 
     /// Swap the PU-stage update rule.  Existing optimizer state is
-    /// dropped (it belongs to the previous rule).
+    /// dropped (it belongs to the previous rule).  The config's storage
+    /// precision is applied to the whole model ([`
+    /// NativeTrainModel::set_precision`]), so model and PU-stage
+    /// precision can never desync regardless of builder order — the
+    /// last precision written (here or via `set_precision`) wins for
+    /// both.
     pub fn set_optim(&mut self, cfg: OptimConfig) {
+        let prec = cfg.precision;
         self.optim = ModelOptim::new(cfg);
+        self.set_precision(prec);
+    }
+
+    /// Visit every trainable parameter buffer exactly once — the same
+    /// parameter set [`NativeTrainModel::to_params`] exports and the PU
+    /// stage updates.  Keeping the walk in one place makes whole-model
+    /// invariants (like the storage-precision rounding below)
+    /// structural: a new parameter added here is covered everywhere.
+    fn for_each_param_mut(&mut self, mut f: impl FnMut(&mut Vec<f32>)) {
+        for core in &mut self.embedding.cores {
+            f(&mut core.data);
+        }
+        f(&mut self.pos.data);
+        for layer in &mut self.layers {
+            for lin in [
+                &mut layer.wq,
+                &mut layer.wk,
+                &mut layer.wv,
+                &mut layer.wo,
+                &mut layer.w1,
+                &mut layer.w2,
+            ] {
+                for core in &mut lin.tt.cores {
+                    f(&mut core.data);
+                }
+                f(&mut lin.bias);
+            }
+            f(&mut layer.ln1_g);
+            f(&mut layer.ln1_b);
+            f(&mut layer.ln2_g);
+            f(&mut layer.ln2_b);
+        }
+        for core in &mut self.pool.tt.cores {
+            f(&mut core.data);
+        }
+        f(&mut self.pool.bias);
+        f(&mut self.intent_w.data);
+        f(&mut self.intent_b);
+        f(&mut self.slot_w.data);
+        f(&mut self.slot_b);
+    }
+
+    /// Select the storage precision of the whole mixed-precision path:
+    /// Eq. 21 caches and TTM chain states are packed at this width, the
+    /// PU stage keeps its moments at this width and rounds every
+    /// updated parameter on store — and, entering a half format, every
+    /// current parameter is rounded once so the weights at rest are
+    /// exactly representable from the first step.  Compute accumulates
+    /// in f32 throughout; `Precision::F32` restores the bitwise
+    /// full-precision path (already-stored parameters are not altered).
+    pub fn set_precision(&mut self, p: Precision) {
+        self.precision = p;
+        // Re-packs any already-allocated moment buffers too, so the
+        // PU-stage state width tracks the model mid-lifecycle.
+        self.optim.set_precision(p);
+        if p.is_half() {
+            self.for_each_param_mut(|data| p.round_slice_in_place(data));
+        }
     }
 
     /// Export all parameters as a flat name -> array map (the inverse of
@@ -435,7 +506,11 @@ impl NativeTrainModel {
         // Embedding: TTM lookup memoized per **unique** token id in the
         // block (pad tokens dominate ATIS rows, so most of the B*S
         // positions reuse a chain that was already contracted) +
-        // positional table per slot.
+        // positional table per slot.  Under a half-precision storage
+        // path each chain state is rounded on store *before* the next
+        // fold consumes it (lookup_cached_prec), so the stored chain is
+        // exactly the chain the forward computed through.
+        let prec = self.precision;
         let mut x = Tensor::zeros(&[k_rows, h]);
         let mut emb_unique: Vec<(i32, Vec<Tensor>)> = Vec::new();
         let mut emb_index = Vec::with_capacity(k_rows);
@@ -444,7 +519,7 @@ impl NativeTrainModel {
             let ui = match index_of.get(&t) {
                 Some(&ui) => ui,
                 None => {
-                    let (_, states) = self.embedding.lookup_cached(t as usize)?;
+                    let (_, states) = self.embedding.lookup_cached_prec(t as usize, prec)?;
                     emb_unique.push((t, states));
                     index_of.insert(t, emb_unique.len() - 1);
                     emb_unique.len() - 1
@@ -469,13 +544,14 @@ impl NativeTrainModel {
             let (q, k, v, qkv) = if self.compute_path.fused_qkv
                 && layers::qkv_input_cores_shared(&layer.wq, &layer.wk, &layer.wv)
             {
-                let ([q, k, v], c) =
-                    layers::forward_qkv_fused(&layer.wq, &layer.wk, &layer.wv, &x, stats)?;
+                let ([q, k, v], c) = layers::forward_qkv_fused_prec(
+                    &layer.wq, &layer.wk, &layer.wv, &x, prec, stats,
+                )?;
                 (q, k, v, QkvFwd::Fused(c))
             } else {
-                let (q, wq_c) = layer.wq.forward(&x, stats)?;
-                let (k, wk_c) = layer.wk.forward(&x, stats)?;
-                let (v, wv_c) = layer.wv.forward(&x, stats)?;
+                let (q, wq_c) = layer.wq.forward_prec(&x, prec, stats)?;
+                let (k, wk_c) = layer.wk.forward_prec(&x, prec, stats)?;
+                let (v, wv_c) = layer.wv.forward_prec(&x, prec, stats)?;
                 let caches = Box::new(SeparateQkvCaches { wq_c, wk_c, wv_c });
                 (q, k, v, QkvFwd::Separate(caches))
             };
@@ -505,12 +581,12 @@ impl NativeTrainModel {
                 }
                 (ctx, AttnFwd::PerExample(probs))
             };
-            let (o, wo_c) = layer.wo.forward(&ctx, stats)?;
+            let (o, wo_c) = layer.wo.forward_prec(&ctx, prec, stats)?;
             let res1 = ops::add(&x, &o);
             let (x1, ln1_c) = blocks::layer_norm_fwd(&res1, &layer.ln1_g, &layer.ln1_b, 1e-5);
-            let (h1, w1_c) = layer.w1.forward(&x1, stats)?;
+            let (h1, w1_c) = layer.w1.forward_prec(&x1, prec, stats)?;
             let g1 = ops::gelu(&h1);
-            let (ffn, w2_c) = layer.w2.forward(&g1, stats)?;
+            let (ffn, w2_c) = layer.w2.forward_prec(&g1, prec, stats)?;
             let res2 = ops::add(&x1, &ffn);
             let (x2, ln2_c) = blocks::layer_norm_fwd(&res2, &layer.ln2_g, &layer.ln2_b, 1e-5);
             layer_fwd.push(LayerFwd {
@@ -530,7 +606,7 @@ impl NativeTrainModel {
             x = x2;
         }
 
-        let (pool_pre, pool_c) = self.pool.forward(&x, stats)?;
+        let (pool_pre, pool_c) = self.pool.forward_prec(&x, prec, stats)?;
         let pooled = ops::tanh(&pool_pre);
         // Per-example CLS rows drive the intent head.
         let mut cls = Tensor::zeros(&[b, h]);
@@ -973,6 +1049,26 @@ pub(crate) mod tests {
             model.optim.allocated_state_elems(),
             2 * (cfg.tensor_params() - cfg.n_layers * 2 * n_side) as u64
         );
+    }
+
+    #[test]
+    fn param_visitor_covers_exactly_the_exported_set() {
+        // The rounding walk and the checkpoint walk must never drift: a
+        // parameter exported by to_params has to be visited (and vice
+        // versa), or the weights-at-rest representability invariant of
+        // the mixed-precision path would silently break.
+        let cfg = tiny_cfg();
+        let mut model = NativeTrainModel::random_init(&cfg, 20).unwrap();
+        // Compare buffer-length multisets (not just summed elements),
+        // so an added parameter cannot mask a dropped one of any other
+        // size.
+        let mut exported: Vec<usize> =
+            model.to_params().values().map(|(_, d)| d.len()).collect();
+        let mut visited: Vec<usize> = Vec::new();
+        model.for_each_param_mut(|d| visited.push(d.len()));
+        exported.sort_unstable();
+        visited.sort_unstable();
+        assert_eq!(visited, exported, "visitor and to_params walk different sets");
     }
 
     #[test]

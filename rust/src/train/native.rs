@@ -5,8 +5,8 @@ use super::model::NativeTrainModel;
 use crate::config::ModelConfig;
 use crate::coordinator::backend::{StepOutput, TrainBackend};
 use crate::inference::{NativeModel, ParamMap};
-use crate::optim::OptimConfig;
-use crate::tensor::ContractionStats;
+use crate::optim::{OptimConfig, OptimKind};
+use crate::tensor::{ContractionStats, Precision};
 use crate::util::npy;
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
@@ -47,9 +47,12 @@ impl NativeTrainer {
     }
 
     /// Swap the PU-stage update rule (builder style); existing optimizer
-    /// state is dropped.
+    /// state is dropped.  `set_optim` applies the config's storage
+    /// precision model-wide (possibly rounding parameters), so the
+    /// cached eval engine is invalidated.
     pub fn with_optim(mut self, cfg: OptimConfig) -> NativeTrainer {
         self.model.set_optim(cfg);
+        *self.eval_model.borrow_mut() = None;
         self
     }
 
@@ -60,7 +63,28 @@ impl NativeTrainer {
         self.model.compute_path = path;
         self
     }
+
+    /// Select the storage precision of the mixed-precision path
+    /// (builder style): caches, moments and stored parameters at
+    /// `prec`, f32 accumulation throughout.  Model and PU-stage
+    /// precision always move together (`with_optim` applies its
+    /// config's precision the same way), so builder order cannot
+    /// desync them — the last precision written wins for both.
+    /// Entering a half format rounds the current parameters once, so
+    /// the cached eval engine is invalidated.
+    pub fn with_precision(mut self, prec: Precision) -> NativeTrainer {
+        self.model.set_precision(prec);
+        *self.eval_model.borrow_mut() = None;
+        self
+    }
 }
+
+/// Checkpoint-name prefix of optimizer-state entries
+/// (`optim.state.<param-name>.<slot>`); parameters never collide with
+/// it (the manifest naming scheme has no `optim.` namespace).
+const OPTIM_STATE_PREFIX: &str = "optim.state.";
+/// Checkpoint entry recording which update rule the state belongs to.
+const OPTIM_KIND_ENTRY: &str = "optim.kind";
 
 impl TrainBackend for NativeTrainer {
     fn backend_name(&self) -> &'static str {
@@ -120,32 +144,114 @@ impl TrainBackend for NativeTrainer {
 
     /// One `.npy` per parameter, named `%04d.<name>.npy` in canonical
     /// (sorted-name) order — interchangeable with the PJRT engine's
-    /// checkpoints, which are matched by name, not position.
+    /// checkpoints, which are matched by name, not position.  When the
+    /// PU stage holds state (momentum / Adam moments), it is appended
+    /// as `optim.state.<param>.<slot>` entries plus an `optim.kind`
+    /// marker, so `--optimizer adam` training resumes exactly; plain
+    /// SGD checkpoints stay byte-identical to the historical format.
     fn save_checkpoint(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
-        for (i, (name, (shape, data))) in self.model.to_params().iter().enumerate() {
+        let mut next = 0usize;
+        let mut write = |name: &str, shape: &[usize], data: &[f32]| -> Result<()> {
             let safe = npy::safe_param_name(name);
-            npy::write_npy_f32(&dir.join(format!("{i:04}.{safe}.npy")), data, shape)?;
+            npy::write_npy_f32(&dir.join(format!("{next:04}.{safe}.npy")), data, shape)?;
+            next += 1;
+            Ok(())
+        };
+        for (name, (shape, data)) in self.model.to_params().iter() {
+            write(name, shape, data)?;
+        }
+        let state = self.model.optim.export_state();
+        if !state.is_empty() {
+            let kind_code = self.model.optim.cfg.kind.code() as f32;
+            write(OPTIM_KIND_ENTRY, &[1], &[kind_code])?;
+            for (key, vals) in &state {
+                write(&format!("{OPTIM_STATE_PREFIX}{key}"), &[vals.len()], vals)?;
+            }
         }
         Ok(())
     }
 
     /// Rebuild the model from a checkpoint directory, keyed by each
     /// file's embedded parameter name (a renamed file is an error, not a
-    /// silent mix-up).  The PU-stage update rule is kept; its state is
-    /// reset (checkpoints carry parameters only — optimizer-state
-    /// persistence is a ROADMAP follow-up).
+    /// silent mix-up).  Optimizer-state entries are restored into the
+    /// PU stage when their `optim.kind` matches the configured rule
+    /// (exact training resume); state from a *different* rule — or a
+    /// parameter-only checkpoint, e.g. a PJRT export — starts the
+    /// configured rule fresh.
     fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
         let mut params = ParamMap::new();
+        let mut optim_entries: Vec<(String, Vec<f32>)> = Vec::new();
+        let mut optim_kind: Option<u32> = None;
         for (name, path) in npy::checkpoint_entries(dir)? {
             let (shape, data) = npy::read_npy_f32(&path)?;
+            if name == OPTIM_KIND_ENTRY {
+                optim_kind = data.first().map(|&c| c as u32);
+                continue;
+            }
+            if let Some(key) = name.strip_prefix(OPTIM_STATE_PREFIX) {
+                optim_entries.push((key.to_string(), data));
+                continue;
+            }
             if params.insert(name.clone(), (shape, data)).is_some() {
                 return Err(anyhow!("duplicate parameter '{name}' in checkpoint {dir:?}"));
             }
         }
         let optim_cfg = self.model.optim.cfg.clone();
+        let compute_path = self.model.compute_path;
         self.model = NativeTrainModel::from_params(&self.model.cfg, &params)?;
-        self.model.set_optim(optim_cfg);
+        // from_params builds with default schedule/precision: restore
+        // the trainer's configured compute path, and re-apply the
+        // storage path via set_optim (which syncs the precision and
+        // rounds the loaded parameters — idempotent for checkpoints
+        // trained at this precision).
+        self.model.compute_path = compute_path;
+        self.model.set_optim(optim_cfg.clone());
+        if optim_kind.and_then(OptimKind::from_code) == Some(optim_cfg.kind)
+            && !optim_entries.is_empty()
+        {
+            // Name + length + completeness verification before touching
+            // the PU stage: every state entry must key a real
+            // parameter, moment buffers must match that parameter's
+            // element count, and each restored parameter must carry the
+            // rule's *full* slot set — a truncated, mis-keyed or
+            // partially-deleted state is a load-time error, never a
+            // half-restored slot that aborts mid-training.
+            let mut slots_by_param: std::collections::BTreeMap<&str, Vec<&str>> =
+                std::collections::BTreeMap::new();
+            for (key, vals) in &optim_entries {
+                let (pname, slot) = key.rsplit_once('.').ok_or_else(|| {
+                    anyhow!("malformed optimizer-state entry 'optim.state.{key}'")
+                })?;
+                let (_, data) = params.get(pname).ok_or_else(|| {
+                    anyhow!("optimizer state for unknown parameter '{pname}' in {dir:?}")
+                })?;
+                if slot != "t" && vals.len() != data.len() {
+                    return Err(anyhow!(
+                        "optimizer state '{key}' has {} elements, parameter has {}",
+                        vals.len(),
+                        data.len()
+                    ));
+                }
+                slots_by_param.entry(pname).or_default().push(slot);
+            }
+            let expected: &[&str] = match optim_cfg.kind {
+                OptimKind::Sgd => &[],
+                OptimKind::Momentum => &["v"],
+                OptimKind::Adam | OptimKind::AdamW => &["m", "t", "v"],
+            };
+            for (pname, mut slots) in slots_by_param {
+                slots.sort_unstable();
+                if slots != expected {
+                    return Err(anyhow!(
+                        "optimizer state for '{pname}' has slots {slots:?}, \
+                         expected {expected:?} for {}",
+                        optim_cfg.kind.name()
+                    ));
+                }
+            }
+            self.model.optim.import_state(&optim_entries)?;
+        }
         *self.eval_model.borrow_mut() = None; // parameters replaced
         Ok(())
     }
@@ -172,6 +278,50 @@ mod tests {
         assert_ne!(t.eval(&tokens).unwrap(), before);
         t.load_checkpoint(&dir).unwrap();
         assert_eq!(t.eval(&tokens).unwrap(), before);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn optimizer_state_checkpoint_resumes_adam_exactly() {
+        // Train A for 3 Adam steps, checkpoint (params + moments + step
+        // count), restore into a fresh trainer B: the next steps of A
+        // and B must stay bitwise identical — exact training resume.
+        use crate::optim::OptimKind;
+        let cfg = tiny_cfg();
+        let tokens = vec![1, 5, 9, 13, 4, 0, 0, 0];
+        let slots = vec![0, 1, 2, 3, 1, 0, 0, 0];
+        let adam = OptimConfig { kind: OptimKind::Adam, ..Default::default() };
+        let mut a = NativeTrainer::random_init(&cfg, 33).unwrap().with_optim(adam.clone());
+        for _ in 0..3 {
+            a.train_step(&tokens, &[2], &slots, 1e-2).unwrap();
+        }
+        let dir = std::env::temp_dir().join(format!("native_ckpt_opt_{}", std::process::id()));
+        a.save_checkpoint(&dir).unwrap();
+        // Different seed on purpose: everything must come from the ckpt.
+        let mut b = NativeTrainer::random_init(&cfg, 99).unwrap().with_optim(adam);
+        b.load_checkpoint(&dir).unwrap();
+        assert_eq!(a.model.to_params(), b.model.to_params(), "params differ after load");
+        assert_eq!(
+            a.model.optim.allocated_state_elems(),
+            b.model.optim.allocated_state_elems(),
+            "moments not restored"
+        );
+        for _ in 0..2 {
+            a.train_step(&tokens, &[2], &slots, 1e-2).unwrap();
+            b.train_step(&tokens, &[2], &slots, 1e-2).unwrap();
+            assert_eq!(
+                a.model.to_params(),
+                b.model.to_params(),
+                "resumed Adam trajectory diverged"
+            );
+        }
+        // A different update rule ignores the foreign state instead of
+        // resuming with mismatched buffers.
+        let mut c = NativeTrainer::random_init(&cfg, 7)
+            .unwrap()
+            .with_optim(OptimConfig { kind: OptimKind::Momentum, ..Default::default() });
+        c.load_checkpoint(&dir).unwrap();
+        assert_eq!(c.model.optim.allocated_state_elems(), 0, "foreign state imported");
         std::fs::remove_dir_all(&dir).ok();
     }
 
