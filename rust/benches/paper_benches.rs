@@ -31,7 +31,7 @@ use tt_trainer::optim::{OptimConfig, OptimKind};
 #[cfg(feature = "pjrt")]
 use tt_trainer::runtime::{Engine, Manifest};
 use tt_trainer::tensor::{Precision, Tensor, TTMatrix};
-use tt_trainer::train::{ComputePath, NativeTrainer};
+use tt_trainer::train::{CheckpointPolicy, ComputePath, NativeTrainer};
 use tt_trainer::util::rng::SplitMix64;
 use tt_trainer::util::timer::bench;
 
@@ -87,37 +87,51 @@ fn main() {
 }
 
 /// Measured rust-native training throughput (FP + BP + PU) across
-/// optimizer x batch x compute schedule x storage precision — the
-/// artifact-free counterpart of the `pjrt` section.  Also emits
-/// `BENCH_native_train.json` so the perf trajectory of the native
-/// trainer is recorded across PRs; the fused/batched rows, the looped
-/// baseline and the bf16 storage-path rows come from the same run, so
-/// the JSON itself documents both the schedule speedup and the
-/// mixed-precision throughput/bytes trade.
+/// optimizer x batch x compute schedule x storage precision x
+/// checkpoint policy — the artifact-free counterpart of the `pjrt`
+/// section.  Also emits `BENCH_native_train.json` so the perf
+/// trajectory of the native trainer is recorded across PRs; the
+/// fused/batched rows, the looped baseline, the bf16 storage-path rows
+/// and the cached-vs-recompute rows come from the same run, so the
+/// JSON itself documents the schedule speedup, the mixed-precision
+/// trade and the gradient-checkpointing memory/throughput trade
+/// (`recompute_mem_reduction_b8` = at-rest Eq. 21 bytes eliminated by
+/// `--checkpoint recompute` at adam/batch 8/f32; per-row
+/// `eq21_cache_bytes` is the measured sum of the live caches'
+/// `stored_bytes()`, the same source of truth the resource model is
+/// tested against).
 fn native_train() {
     hdr("native-train", "measured native training throughput (no artifacts)");
     let cfg = ModelConfig::paper(2);
     let data = Dataset::synth(&cfg, 42, 64);
-    // (optimizer, batch, schedule, precision): the default fused/batched
-    // f32 hot path across the optimizer grid, the two batch-8 baselines
-    // that isolate the fused-QKV and batched-attention wins, and the
-    // bf16 storage-path rows (halved Eq. 21 cache + optimizer state).
+    // (optimizer, batch, schedule, precision, checkpoint): the default
+    // fused/batched f32 hot path across the optimizer grid, the two
+    // batch-8 baselines that isolate the fused-QKV and batched-
+    // attention wins, the bf16 storage-path rows (halved Eq. 21 cache +
+    // optimizer state), and the recompute rows (dropped Eq. 21 cache;
+    // bf16 x recompute is the paper's full memory story).
     let unfused_batched = ComputePath { fused_qkv: false, batched_attention: true };
+    let cache = CheckpointPolicy::CacheAll;
+    let recompute = CheckpointPolicy::Recompute;
     let grid = [
-        (OptimKind::Sgd, 1usize, ComputePath::fused(), Precision::F32),
-        (OptimKind::Sgd, 8, ComputePath::fused(), Precision::F32),
-        (OptimKind::Adam, 1, ComputePath::fused(), Precision::F32),
-        (OptimKind::Adam, 8, ComputePath::fused(), Precision::F32),
-        (OptimKind::Adam, 8, unfused_batched, Precision::F32),
-        (OptimKind::Adam, 8, ComputePath::looped(), Precision::F32),
-        (OptimKind::Adam, 1, ComputePath::fused(), Precision::Bf16),
-        (OptimKind::Adam, 8, ComputePath::fused(), Precision::Bf16),
+        (OptimKind::Sgd, 1usize, ComputePath::fused(), Precision::F32, cache.clone()),
+        (OptimKind::Sgd, 8, ComputePath::fused(), Precision::F32, cache.clone()),
+        (OptimKind::Adam, 1, ComputePath::fused(), Precision::F32, cache.clone()),
+        (OptimKind::Adam, 8, ComputePath::fused(), Precision::F32, cache.clone()),
+        (OptimKind::Adam, 8, unfused_batched, Precision::F32, cache.clone()),
+        (OptimKind::Adam, 8, ComputePath::looped(), Precision::F32, cache.clone()),
+        (OptimKind::Adam, 1, ComputePath::fused(), Precision::Bf16, cache.clone()),
+        (OptimKind::Adam, 8, ComputePath::fused(), Precision::Bf16, cache),
+        (OptimKind::Adam, 8, ComputePath::fused(), Precision::F32, recompute.clone()),
+        (OptimKind::Adam, 8, ComputePath::fused(), Precision::Bf16, recompute),
     ];
     let mut rows = Vec::new();
     let mut fused_b8 = None;
     let mut looped_b8 = None;
     let mut bf16_b8 = None;
-    for (kind, batch, path, precision) in grid {
+    let mut cached_bytes_b8 = None;
+    let mut recompute_bytes_b8 = None;
+    for (kind, batch, path, precision, checkpoint) in grid {
         let optim = OptimConfig { kind, batch_size: batch, precision, ..Default::default() };
         // Fail loudly: a silent early return would leave
         // BENCH_native_train.json unwritten and surface only as a
@@ -126,7 +140,8 @@ fn native_train() {
         let backend = NativeTrainer::random_init(&cfg, 42)
             .expect("paper config init")
             .with_optim(optim)
-            .with_compute_path(path);
+            .with_compute_path(path)
+            .with_checkpoint(checkpoint.clone());
         let mut trainer = Trainer::with_batch(backend, kind.default_lr(), batch);
         let stats = bench(
             || {
@@ -138,28 +153,42 @@ fn native_train() {
         let steps_per_sec = 1.0 / stats.p50;
         let tokens_per_sec = (batch * cfg.seq_len) as f64 / stats.p50;
         let mean_loss = trainer.metrics.recent_loss(4);
-        // On-chip bytes of this configuration: the step's Eq. 21 cache
-        // at the storage width plus the moments actually allocated.
-        let eq21_cache_bytes =
-            trainer.backend.last_stats.stored_intermediate_elems * precision.bytes();
+        // On-chip bytes of this configuration: the measured at-rest
+        // Eq. 21 cache (sum of the live caches' stored_bytes over one
+        // batch-shaped forward) plus the moments actually allocated.
+        let tokens: Vec<i32> = data.examples[..batch]
+            .iter()
+            .flat_map(|e| e.tokens.clone())
+            .collect();
+        let eq21_cache_bytes = trainer
+            .backend
+            .model
+            .measure_eq21_cache_bytes(&tokens)
+            .expect("cache measurement");
         let optim_state_bytes = trainer.backend.model.optim.allocated_state_bytes();
         let qkv = if path.fused_qkv { "fused" } else { "separate" };
         let attn = if path.batched_attention { "batched" } else { "looped" };
+        let is_cached = checkpoint == CheckpointPolicy::CacheAll;
         if kind == OptimKind::Adam && batch == 8 && path == ComputePath::fused() {
             match precision {
-                Precision::F32 => fused_b8 = Some(steps_per_sec),
-                Precision::Bf16 => bf16_b8 = Some(steps_per_sec),
-                Precision::F16 => {}
+                Precision::F32 if is_cached => {
+                    fused_b8 = Some(steps_per_sec);
+                    cached_bytes_b8 = Some(eq21_cache_bytes);
+                }
+                Precision::F32 => recompute_bytes_b8 = Some(eq21_cache_bytes),
+                Precision::Bf16 if is_cached => bf16_b8 = Some(steps_per_sec),
+                _ => {}
             }
         }
         if kind == OptimKind::Adam && batch == 8 && path == ComputePath::looped() {
             looped_b8 = Some(steps_per_sec);
         }
         println!(
-            "{:<8} batch {batch} qkv {qkv:<8} attn {attn:<7} prec {:<4}: step {} | \
+            "{:<8} batch {batch} qkv {qkv:<8} attn {attn:<7} prec {:<4} ckpt {:<9}: step {} | \
              {:.2} steps/s | {:.0} tokens/s | cache {} B | state {} B | loss {mean_loss:.4}",
             kind.name(),
             precision.name(),
+            checkpoint.name(),
             stats.fmt_ms(),
             steps_per_sec,
             tokens_per_sec,
@@ -168,12 +197,14 @@ fn native_train() {
         );
         rows.push(format!(
             "    {{\"optimizer\": \"{}\", \"batch\": {batch}, \"qkv\": \"{qkv}\", \
-             \"attention\": \"{attn}\", \"precision\": \"{}\", \"p50_step_secs\": {:.6}, \
+             \"attention\": \"{attn}\", \"precision\": \"{}\", \"checkpoint\": \"{}\", \
+             \"p50_step_secs\": {:.6}, \
              \"steps_per_sec\": {steps_per_sec:.3}, \"tokens_per_sec\": {tokens_per_sec:.1}, \
              \"eq21_cache_bytes\": {eq21_cache_bytes}, \
              \"optim_state_bytes\": {optim_state_bytes}, \"mean_loss\": {mean_loss:.5}}}",
             kind.name(),
             precision.name(),
+            checkpoint.name(),
             stats.p50
         ));
     }
@@ -185,8 +216,19 @@ fn native_train() {
         (Some(b), Some(f)) if f > 0.0 => b / f,
         _ => 0.0,
     };
+    // At-rest Eq. 21 bytes the recompute policy eliminates at the
+    // adam/batch-8/f32 configuration (measured, not modeled).
+    let mem_reduction = match (cached_bytes_b8, recompute_bytes_b8) {
+        (Some(c), Some(r)) => c.saturating_sub(r),
+        _ => 0,
+    };
     println!("fused/batched vs looped baseline (adam, batch 8): {speedup:.2}x steps/s");
     println!("bf16 vs f32 storage path (adam, batch 8, fused): {bf16_speedup:.2}x steps/s");
+    println!(
+        "recompute vs cached Eq. 21 bytes (adam, batch 8, f32): {} B -> {} B ({mem_reduction} B saved)",
+        cached_bytes_b8.unwrap_or(0),
+        recompute_bytes_b8.unwrap_or(0)
+    );
     // Eval latency through the merged-factor engine (batch 1).
     let backend = NativeTrainer::random_init(&cfg, 42).expect("init");
     let ex = data.examples[0].clone();
@@ -201,7 +243,8 @@ fn native_train() {
     let json = format!(
         "{{\n  \"bench\": \"native_train\",\n  \"model\": \"tt_L2\",\n  \"seq_len\": {},\n  \
          \"eval_p50_secs\": {:.6},\n  \"fused_vs_looped_speedup_b8\": {speedup:.3},\n  \
-         \"bf16_vs_f32_speedup_b8\": {bf16_speedup:.3},\n  \"rows\": [\n{}\n  ]\n}}\n",
+         \"bf16_vs_f32_speedup_b8\": {bf16_speedup:.3},\n  \
+         \"recompute_mem_reduction_b8\": {mem_reduction},\n  \"rows\": [\n{}\n  ]\n}}\n",
         cfg.seq_len,
         eval_stats.p50,
         rows.join(",\n")

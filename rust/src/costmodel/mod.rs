@@ -329,6 +329,40 @@ impl LinearShape {
         state_multiplier * (self.tt_params() + self.m())
     }
 
+    // -- Gradient checkpointing (recompute the Eq. 21 cache in the BP stage) -
+
+    /// FLOP delta of the `Recompute` checkpoint policy for one BTT
+    /// layer — the compute side of the Eq. 20/21 memory/FLOP trade.
+    /// Before unrolling the chains, the BP stage re-runs both merges
+    /// and `Z2 = X Z1^T` from the stored layer input, but **never** the
+    /// output apply `Y = Z2 Z3^T` (only the intermediates feed the
+    /// gradient contractions):
+    ///
+    /// ```text
+    /// C_re = C_left + C_right + K r_d N   <   C_fwd (Eq. 20)
+    /// ```
+    ///
+    /// so a fully recomputed layer trains at `(3 + C_re/C_fwd) < 4`
+    /// times the forward multiplies instead of the cached-path 3x
+    /// ([`LinearShape::training_factor`]).
+    pub fn btt_recompute_muls(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        self.btt_left_merge_muls() + self.btt_right_merge_muls() + k_dim * r_d * self.n()
+    }
+
+    /// Recompute-FLOP delta of the fused QKV pass (companion of
+    /// [`LinearShape::btt_fwd_qkv_muls`]): the shared right merge and
+    /// `Z2` are rebuilt once, the three left merges per projection, and
+    /// none of the three output applies —
+    ///
+    /// ```text
+    /// C_qkv_re = 3 C_left + C_right + K r_d N
+    /// ```
+    pub fn btt_qkv_recompute_muls(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        3 * self.btt_left_merge_muls() + self.btt_right_merge_muls() + k_dim * r_d * self.n()
+    }
+
     // -- Per-precision byte accounting (mixed-precision storage path) --------
 
     /// Eq. 21 intermediate memory in **bytes** at a storage precision —
@@ -341,6 +375,43 @@ impl LinearShape {
     /// Fused-QKV Eq. 21 cache in bytes at a storage precision.
     pub fn btt_qkv_memory_bytes(&self, k_dim: u64, precision: crate::tensor::Precision) -> u64 {
         self.btt_qkv_memory(k_dim) * precision.bytes()
+    }
+
+    /// Eq. 21 bytes one BTT layer holds **at rest** between FP and BP
+    /// under a checkpointing mode: the cached path stores the full
+    /// chain + Z2 ([`LinearShape::btt_memory_bytes`]); the recompute
+    /// path stores nothing beyond the layer input (itself accounted to
+    /// the producing layer), trading the bytes for
+    /// [`LinearShape::btt_recompute_muls`].  The BP stage transiently
+    /// rebuilds one layer's chain + Z2 at a time, so the *peak* live
+    /// intra-layer set under recompute is a single `btt_memory_bytes`,
+    /// never the sum over layers.
+    pub fn btt_memory_bytes_checkpointed(
+        &self,
+        k_dim: u64,
+        precision: crate::tensor::Precision,
+        recompute: bool,
+    ) -> u64 {
+        if recompute {
+            0
+        } else {
+            self.btt_memory_bytes(k_dim, precision)
+        }
+    }
+
+    /// Fused-QKV counterpart of
+    /// [`LinearShape::btt_memory_bytes_checkpointed`].
+    pub fn btt_qkv_memory_bytes_checkpointed(
+        &self,
+        k_dim: u64,
+        precision: crate::tensor::Precision,
+        recompute: bool,
+    ) -> u64 {
+        if recompute {
+            0
+        } else {
+            self.btt_qkv_memory_bytes(k_dim, precision)
+        }
     }
 
     /// PU-stage optimizer-state bytes at a storage precision.
@@ -602,6 +673,57 @@ mod tests {
         // Dense-equivalent Adam state would be 2 M N; compressed state
         // keeps the full compression ratio.
         assert!(shape.optimizer_state_elems(2) < 2 * shape.mm_weight() / 20);
+    }
+
+    #[test]
+    fn recompute_flop_delta_is_strictly_below_one_forward() {
+        // The recompute pass skips the output apply, so C_re < C_fwd
+        // for every shape and K, and a fully recomputed layer trains
+        // strictly under 4x forward multiplies.
+        prop::check(36, 30, |rng| {
+            let d = 1 + rng.below(3) as usize;
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(6) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(6) as usize).collect();
+            let rank = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(64) as u64;
+            let shape = LinearShape::uniform(&m_modes, &n_modes, rank);
+            let r_d = shape.ranks[shape.d()] as u64;
+            // Exactly the forward minus the K-wide output apply.
+            assert_eq!(
+                shape.btt_recompute_muls(k),
+                shape.btt_muls(k) - k * r_d * shape.m()
+            );
+            assert!(shape.btt_recompute_muls(k) < shape.btt_muls(k));
+            assert!(
+                shape.btt_muls(k) + shape.btt_bwd_muls(k) + shape.btt_recompute_muls(k)
+                    < 4 * shape.btt_muls(k)
+            );
+            // Fused QKV: forward minus the three output applies.
+            assert_eq!(
+                shape.btt_qkv_recompute_muls(k),
+                shape.btt_fwd_qkv_muls(k) - 3 * k * r_d * shape.m()
+            );
+        });
+    }
+
+    #[test]
+    fn checkpointed_bytes_drop_to_zero_at_rest() {
+        use crate::tensor::Precision;
+        let shape = LinearShape::paper();
+        for k in [1u64, 8, 32] {
+            for prec in Precision::all() {
+                assert_eq!(
+                    shape.btt_memory_bytes_checkpointed(k, prec, false),
+                    shape.btt_memory_bytes(k, prec)
+                );
+                assert_eq!(shape.btt_memory_bytes_checkpointed(k, prec, true), 0);
+                assert_eq!(
+                    shape.btt_qkv_memory_bytes_checkpointed(k, prec, false),
+                    shape.btt_qkv_memory_bytes(k, prec)
+                );
+                assert_eq!(shape.btt_qkv_memory_bytes_checkpointed(k, prec, true), 0);
+            }
+        }
     }
 
     #[test]

@@ -134,6 +134,56 @@
 //! `BENCH_native_train.json` records fp32-vs-bf16 steps/sec, tokens/sec
 //! and on-chip bytes (`bf16_vs_f32_speedup_b8` summary).
 //!
+//! ## Memory vs recompute (gradient checkpointing)
+//!
+//! The Eq. 21 activation caches carry a second memory axis besides
+//! precision: a gradient-checkpointing policy
+//! ([`train::CheckpointPolicy`]: `CacheAll` / `Recompute` /
+//! `PerLayer(..)`; CLI `--checkpoint cache|recompute`).
+//!
+//! * **Policy semantics** — under `Recompute`, every TT linear (and
+//!   the TTM embedding chain) stores only its *input*; the merge-chain
+//!   states and `Z2` are dropped after the forward and rebuilt by the
+//!   BP stage immediately before the gradient unroll
+//!   ([`train::TTLinear::forward_ckpt`] /
+//!   [`train::forward_qkv_fused_ckpt`]).  The at-rest Eq. 21 cache of
+//!   a recomputed layer is **zero bytes**; the rebuild costs
+//!   [`costmodel::LinearShape::btt_recompute_muls`] extra multiplies
+//!   (one forward minus the output apply — a fully recomputed layer
+//!   trains at under 4x forward multiplies instead of the cached 3x).
+//!   `PerLayer` picks the mode per encoder block for intermediate
+//!   points on the memory/FLOP curve.
+//! * **Determinism contract** — the rebuilt states go through the
+//!   *identical* deterministic fold order
+//!   (`TTMatrix::merge_{left,right}_chain_prec`) and the identical
+//!   round-on-store precision as the cached ones, from the same stored
+//!   input and the same (not-yet-updated) cores, so recompute-vs-cached
+//!   gradients are **bitwise identical at f32** and reproduce the
+//!   rounded cached states exactly at bf16/f16.  Whole Adam
+//!   trajectories are bitwise policy-independent at f32
+//!   (`rust/tests/checkpointing.rs`).
+//! * **Accounting** — `TTLinearCache::stored_bytes` /
+//!   `QkvFusedCache::stored_bytes` are the single source of truth: the
+//!   U50 report's [`fpga::resources::ResourceReport::eq21_cache_bytes`]
+//!   is property-tested equal to the summed live caches
+//!   ([`train::NativeTrainModel::measure_eq21_cache_bytes`]) on the
+//!   default fused-QKV schedule, the one the report models (an
+//!   untied/looped model stores three separate QKV caches per layer
+//!   and measures higher).  The report charges the at-rest cache into
+//!   the URAM BP stash per policy, so recompute's saving is real
+//!   block-level demand, not a side annotation.  At the
+//!   paper shape the report's at-rest Eq. 21 cache is ~0.93 MB (2-ENC)
+//!   to ~2.6 MB (6-ENC) at f32 — halved by bf16, and eliminated by
+//!   `Recompute`, which frees ~70 URAM blocks of BP-stash demand at
+//!   6-ENC/f32 in the U50 model (asserted in `fpga::resources` tests).
+//!   bf16 storage x recompute composes freely — the paper's full
+//!   memory story.
+//! * **Resume** — the policy is a trainer setting, not checkpoint
+//!   state: it is applied before `--init-ckpt` loads, survives
+//!   `load_checkpoint`, and composes with `--optimizer adam` resume; a
+//!   checkpoint written under either policy resumes bitwise under the
+//!   other at f32.
+//!
 //! After `make artifacts` the binary is self-contained with either
 //! backend; with the native backend it is self-contained from a bare
 //! `cargo build` — the paper's end-to-end on-device training claim is

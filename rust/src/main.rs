@@ -28,7 +28,7 @@ use tt_trainer::fpga::{bram, energy, resources, schedule};
 use tt_trainer::optim::{OptimConfig, OptimKind};
 use tt_trainer::runtime::Manifest;
 use tt_trainer::tensor::Precision;
-use tt_trainer::train::NativeTrainer;
+use tt_trainer::train::{CheckpointPolicy, NativeTrainer};
 use tt_trainer::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -66,6 +66,10 @@ COMMANDS:
                            --precision f32|bf16|f16 (storage path:
                              Eq. 21 caches, optimizer moments and stored
                              params at 16 bits; compute stays f32)
+                           --checkpoint cache|recompute (gradient
+                             checkpointing: recompute drops the Eq. 21
+                             caches and rebuilds them in the BP stage;
+                             f32 gradients stay bitwise identical)
                   pjrt:    --variant tt_L2 --artifacts DIR
   eval          evaluate on the test split
                   --backend native|pjrt [--limit N]
@@ -118,11 +122,13 @@ fn cmd_info(args: &Args) -> Result<()> {
 /// `load_keys` are the options that may name a checkpoint to load —
 /// `--init-ckpt` everywhere, plus `--ckpt` for eval (where it cannot
 /// mean anything else).  The PU-stage configuration (including its
-/// storage precision, which `with_optim` applies model-wide) goes in
-/// **before** any checkpoint load: restoring optimizer state requires
-/// the configured rule to be in place when the checkpoint's
-/// `optim.kind` is matched (and `set_optim` would discard
-/// already-imported moments).
+/// storage precision, which `with_optim` applies model-wide) and the
+/// `--checkpoint` policy go in **before** any checkpoint load:
+/// restoring optimizer state requires the configured rule to be in
+/// place when the checkpoint's `optim.kind` is matched (and
+/// `set_optim` would discard already-imported moments), and
+/// `load_checkpoint` preserves the configured policy the same way it
+/// preserves the compute path.
 fn native_backend(
     args: &Args,
     seed: u64,
@@ -130,15 +136,20 @@ fn native_backend(
     optim: OptimConfig,
 ) -> Result<NativeTrainer> {
     let layers = args.get_usize("layers", 2);
+    let checkpoint = CheckpointPolicy::parse(args.get_or("checkpoint", "cache"))?;
     let cfg = ModelConfig::paper(layers);
-    let mut backend = NativeTrainer::random_init(&cfg, seed)?.with_optim(optim);
+    let mut backend = NativeTrainer::random_init(&cfg, seed)?
+        .with_optim(optim)
+        .with_checkpoint(checkpoint.clone());
     if let Some(dir) = load_keys.iter().find_map(|k| args.get(k)) {
         backend.load_checkpoint(Path::new(dir))?;
         println!("loaded checkpoint from {dir}");
     }
     println!(
-        "native backend: {layers} encoder blocks, {} tensor-compressed scalars",
-        cfg.tensor_params()
+        "native backend: {layers} encoder blocks, {} tensor-compressed scalars, \
+         checkpoint policy {}",
+        cfg.tensor_params(),
+        checkpoint.name()
     );
     Ok(backend)
 }
@@ -361,6 +372,15 @@ fn cmd_cost_model() -> Result<()> {
         shape.btt_qkv_bwd_muls(32),
         shape.btt_qkv_memory(32)
     );
+    println!("\n=== Gradient checkpointing (Eq. 21 cache vs recompute) ===");
+    println!(
+        "per TT linear at K=32: cache {} B at rest -> {} B (recompute) | \
+         extra BP muls {} = {:.1}% of one forward",
+        shape.btt_memory_bytes(32, Precision::F32),
+        shape.btt_memory_bytes_checkpointed(32, Precision::F32, true),
+        shape.btt_recompute_muls(32),
+        100.0 * shape.btt_recompute_muls(32) as f64 / shape.btt_muls(32) as f64
+    );
     println!("\n=== PU stage: optimizer state in compressed TT space (2-ENC) ===");
     print!("{}", sweeps::optimizer_state_table(&ModelConfig::paper(2)));
     println!(
@@ -502,6 +522,35 @@ fn cmd_fpga_report() -> Result<()> {
             b.eq21_cache_bytes as f64 / 1e3,
             f.optim_state_bytes as f64 / 1e3,
             b.optim_state_bytes as f64 / 1e3
+        );
+    }
+
+    println!("\n=== Gradient checkpointing (Adam, f32): cached vs recompute ===");
+    println!(
+        "{:<7} {:>15} {:>15} {:>11} {:>11}",
+        "model", "eq21 (KB)", "eq21 ckpt (KB)", "URAM req", "URAM ckpt"
+    );
+    for layers in [2usize, 4, 6] {
+        let cfg = ModelConfig::paper(layers);
+        let ca = resources::report_for_policy(
+            &cfg,
+            OptimKind::Adam,
+            Precision::F32,
+            &CheckpointPolicy::CacheAll,
+        );
+        let re = resources::report_for_policy(
+            &cfg,
+            OptimKind::Adam,
+            Precision::F32,
+            &CheckpointPolicy::Recompute,
+        );
+        println!(
+            "{:<7} {:>15.1} {:>15.1} {:>11} {:>11}",
+            format!("{layers}-ENC"),
+            ca.eq21_cache_bytes as f64 / 1e3,
+            re.eq21_cache_bytes as f64 / 1e3,
+            ca.uram_required,
+            re.uram_required
         );
     }
 

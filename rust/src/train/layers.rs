@@ -28,13 +28,27 @@ pub struct TTLinear {
     pub bias: Vec<f32>,
 }
 
-/// Forward activations cached for the BP stage, stored at the layer's
-/// storage [`Precision`] — genuinely `u16`-packed for the half formats
-/// ([`PackedTensor`]), so the Eq. 21 cache really occupies half the
-/// bytes.  The backward pass widens on load and accumulates in f32.
-pub struct TTLinearCache {
-    /// Layer input (K, N).
-    pub x: PackedTensor,
+/// Per-layer gradient-checkpointing mode: what the forward pass retains
+/// of the Eq. 21 intermediates for the BP stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointMode {
+    /// Store the full merge chains and Z2 (the paper's schedule; the
+    /// cache holds exactly the Eq. 21 elements).
+    CacheAll,
+    /// Store only the layer input; the BP stage re-runs the forward
+    /// contraction (same deterministic fold order, same round-on-store
+    /// precision) to rebuild the chains and Z2 before computing grads.
+    /// Trades the Eq. 21 bytes for
+    /// [`crate::costmodel::LinearShape::btt_recompute_muls`] extra
+    /// multiplies.  Valid only while the layer's weights are unchanged
+    /// between its forward and its backward — the training loop's
+    /// backward-before-update order per layer guarantees this.
+    Recompute,
+}
+
+/// The dropped-under-`Recompute` part of a [`TTLinearCache`]: the merge
+/// chains and Z2, stored at the layer's storage [`Precision`].
+struct TTLinearStates {
     /// Left-merge chain states; last is Z3 (M, r_d).
     left_chain: Vec<PackedTensor>,
     /// Right-merge chain states; last is Z1 (r_d, N).
@@ -43,27 +57,103 @@ pub struct TTLinearCache {
     z2: PackedTensor,
 }
 
+/// Forward activations cached for the BP stage, stored at the layer's
+/// storage [`Precision`] — genuinely `u16`-packed for the half formats
+/// ([`PackedTensor`]), so the Eq. 21 cache really occupies half the
+/// bytes.  The backward pass widens on load and accumulates in f32.
+/// Under [`CheckpointMode::Recompute`] only the layer input survives
+/// the forward pass; the backward rebuilds the chain states through
+/// the same fold order before unrolling them.
+pub struct TTLinearCache {
+    /// Layer input (K, N).
+    pub x: PackedTensor,
+    /// Merge chains + Z2 under [`CheckpointMode::CacheAll`]; `None`
+    /// under [`CheckpointMode::Recompute`].  The storage precision of
+    /// every retained (and recomputed) state is `x`'s precision.
+    states: Option<TTLinearStates>,
+}
+
 impl TTLinearCache {
     /// Elements this cache stores beyond weights and the layer input —
-    /// must equal Eq. 21 (`LinearShape::btt_training_cache_elems`).
-    /// The first chain state on each side is a reshaped core (weight
-    /// memory, not an activation) and is excluded.
+    /// equals Eq. 21 (`LinearShape::btt_training_cache_elems`) under
+    /// `CacheAll` and **0** under `Recompute` (the chains and Z2 are
+    /// rebuilt transiently by the BP stage).  The first chain state on
+    /// each side is a reshaped core (weight memory, not an activation)
+    /// and is excluded.
     pub fn stored_elems(&self) -> u64 {
-        let chain: usize = self
-            .left_chain
-            .iter()
-            .skip(1)
-            .chain(self.right_chain.iter().skip(1))
-            .map(PackedTensor::numel)
-            .sum();
-        (chain + self.z2.numel()) as u64
+        match &self.states {
+            None => 0,
+            Some(s) => {
+                let chain: usize = s
+                    .left_chain
+                    .iter()
+                    .skip(1)
+                    .chain(s.right_chain.iter().skip(1))
+                    .map(PackedTensor::numel)
+                    .sum();
+                (chain + s.z2.numel()) as u64
+            }
+        }
     }
 
     /// Bytes the Eq. 21 cache occupies at rest: `stored_elems` times
-    /// the storage width — exactly half the f32 figure for bf16/f16.
+    /// the storage width — exactly half the f32 figure for bf16/f16,
+    /// and 0 under `Recompute`.
     pub fn stored_bytes(&self) -> u64 {
-        self.stored_elems() * self.z2.precision().bytes()
+        self.stored_elems() * self.x.precision().bytes()
     }
+
+    /// The checkpointing mode this cache was built under.
+    pub fn mode(&self) -> CheckpointMode {
+        if self.states.is_some() {
+            CheckpointMode::CacheAll
+        } else {
+            CheckpointMode::Recompute
+        }
+    }
+}
+
+/// Fold a state-rebuild scratch into `stats`.  The forward (`stored`)
+/// keeps the full Eq. 21 stored-element accounting; the BP-stage
+/// `Recompute` rebuild charges multiplies and steps only — the rebuilt
+/// states are transient (dropped as soon as the layer's gradients are
+/// out), so they never join the stored-element count.
+fn record_rebuild(stats: &mut ContractionStats, scratch: ContractionStats, stored: bool) {
+    stats.muls += scratch.muls;
+    stats.steps += scratch.steps;
+    if stored {
+        stats.stored_intermediate_elems += scratch.stored_intermediate_elems;
+        stats.peak_intermediate_elems =
+            stats.peak_intermediate_elems.max(scratch.peak_intermediate_elems);
+    }
+}
+
+/// Compute the merge chains and `Z2 = X Z1^T` of one BTT layer from
+/// its cores and the (already rounded) input — the **single
+/// definition of the fold order** that both [`TTLinear::forward_ckpt`]
+/// and the `Recompute` arm of [`TTLinear::backward`] go through, so
+/// the recomputed states are bitwise the cached ones by construction.
+/// `stored` selects Eq. 21 stored-element accounting (forward) vs the
+/// transient BP rebuild (multiplies only — the cost model's
+/// `btt_recompute_muls`).
+fn build_btt_states(
+    tt: &TTMatrix,
+    xq: &Tensor,
+    prec: Precision,
+    stored: bool,
+    stats: &mut ContractionStats,
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Tensor)> {
+    let (k_dim, n) = (xq.shape[0], tt.n());
+    let r_d = tt.ranks[tt.d()];
+    let mut scratch = ContractionStats::default();
+    let left = tt.merge_left_chain_prec(prec)?;
+    let right = tt.merge_right_chain_prec(prec)?;
+    tt.record_merge_stats(&mut scratch);
+    let z1 = right.last().expect("d >= 1");
+    let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
+    scratch.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, stored);
+    record_rebuild(stats, scratch, stored);
+    Ok((left, right, z2))
 }
 
 /// Parameter gradients of one layer.
@@ -121,6 +211,23 @@ impl TTLinear {
         prec: Precision,
         stats: &mut ContractionStats,
     ) -> Result<(Tensor, TTLinearCache)> {
+        self.forward_ckpt(x, prec, CheckpointMode::CacheAll, stats)
+    }
+
+    /// [`TTLinear::forward_prec`] under a gradient-checkpointing mode.
+    /// `Recompute` runs the identical contraction (same multiplies,
+    /// same output bits) but retains only the rounded layer input; the
+    /// chains and Z2 are dropped and rebuilt by [`TTLinear::backward`].
+    /// `stats` records the *computed* Eq. 21 intermediates either way —
+    /// what is actually retained is the cache's
+    /// [`TTLinearCache::stored_bytes`].
+    pub fn forward_ckpt(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        mode: CheckpointMode,
+        stats: &mut ContractionStats,
+    ) -> Result<(Tensor, TTLinearCache)> {
         let d = self.tt.d();
         let (m, n) = (self.tt.m(), self.tt.n());
         if x.ndim() != 2 || x.shape[1] != n {
@@ -130,29 +237,24 @@ impl TTLinear {
         let r_d = self.tt.ranks[d];
 
         let xq = prec.round_tensor(x);
-        let left_chain = self.tt.merge_left_chain_prec(prec)?;
-        let right_chain = self.tt.merge_right_chain_prec(prec)?;
-        // Merge costs via the shared accounting helper (same source of
-        // truth as matmul_btt).
-        self.tt.record_merge_stats(stats);
-
+        // Chains + Z2 through the shared builder (the same fold order
+        // the `Recompute` backward re-runs; merge costs go through the
+        // same accounting helper as matmul_btt).
+        let (left_chain, right_chain, z2) = build_btt_states(&self.tt, &xq, prec, true, stats)?;
         let z3 = left_chain.last().expect("d >= 1");
-        let z1 = right_chain.last().expect("d >= 1");
-        let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
-        stats.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, true);
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
         let y = ops::add_row(&y, &self.bias);
         let pack = |t: Tensor| PackedTensor::pack_owned(t, prec);
-        Ok((
-            y,
-            TTLinearCache {
-                x: pack(xq),
+        let states = match mode {
+            CheckpointMode::Recompute => None,
+            CheckpointMode::CacheAll => Some(TTLinearStates {
                 left_chain: left_chain.into_iter().map(pack).collect(),
                 right_chain: right_chain.into_iter().map(pack).collect(),
                 z2: pack(z2),
-            },
-        ))
+            }),
+        };
+        Ok((y, TTLinearCache { x: pack(xq), states }))
     }
 
     /// Backward pass: given `dY (K, M)` and the forward cache, return
@@ -182,13 +284,35 @@ impl TTLinear {
 
         // Widen-on-load: view the cache as f32 once — zero-copy
         // borrows on the f32 path, exact widenings for the packed half
-        // formats.  Every product below accumulates in f32.
+        // formats.  Every product below accumulates in f32.  Under
+        // `Recompute` the chains and Z2 are rebuilt here from the
+        // stored input and the cores (unchanged since the forward, by
+        // the backward-before-update contract), through the exact same
+        // fold order and round-on-store precision as the forward — so
+        // the recomputed states are bitwise the cached ones at every
+        // precision.  The rebuild is charged as transient multiplies
+        // (`btt_recompute_muls`), never as stored intermediates.
         let x = cache.x.view();
-        let z2 = cache.z2.view();
-        let left_chain: Vec<Cow<'_, Tensor>> =
-            cache.left_chain.iter().map(PackedTensor::view).collect();
-        let right_chain: Vec<Cow<'_, Tensor>> =
-            cache.right_chain.iter().map(PackedTensor::view).collect();
+        let (left_chain, right_chain, z2): (
+            Vec<Cow<'_, Tensor>>,
+            Vec<Cow<'_, Tensor>>,
+            Cow<'_, Tensor>,
+        ) = match &cache.states {
+            Some(s) => (
+                s.left_chain.iter().map(PackedTensor::view).collect(),
+                s.right_chain.iter().map(PackedTensor::view).collect(),
+                s.z2.view(),
+            ),
+            None => {
+                let prec = cache.x.precision();
+                let (left, right, z2) = build_btt_states(&self.tt, x.as_ref(), prec, false, stats)?;
+                (
+                    left.into_iter().map(Cow::Owned).collect(),
+                    right.into_iter().map(Cow::Owned).collect(),
+                    Cow::Owned(z2),
+                )
+            }
+        };
         let z3 = left_chain.last().expect("d >= 1").as_ref();
         let z1 = right_chain.last().expect("d >= 1").as_ref();
         // The four K-wide products (2 K r_d (M + N) multiplies).
@@ -314,13 +438,8 @@ pub fn qkv_input_cores_shared(wq: &TTLinear, wk: &TTLinear, wv: &TTLinear) -> bo
     })
 }
 
-/// Forward activations of the fused QKV pass.  The layer input and the
-/// shared right chain / Z2 are stored **once** (vs three copies across
-/// separate [`TTLinearCache`]s), at the layer's storage [`Precision`]
-/// (packed to half width for bf16/f16).
-pub struct QkvFusedCache {
-    /// Layer input (K, N), stored once for all three projections.
-    pub x: PackedTensor,
+/// The dropped-under-`Recompute` part of a [`QkvFusedCache`].
+struct QkvFusedStates {
     /// Per-projection left-merge chains (q, k, v); last state is Z3.
     left_chains: [Vec<PackedTensor>; 3],
     /// Shared right-merge chain; last state is Z1 (r_d, N).
@@ -329,25 +448,56 @@ pub struct QkvFusedCache {
     z2: PackedTensor,
 }
 
+/// Forward activations of the fused QKV pass.  The layer input and the
+/// shared right chain / Z2 are stored **once** (vs three copies across
+/// separate [`TTLinearCache`]s), at the layer's storage [`Precision`]
+/// (packed to half width for bf16/f16).  Under
+/// [`CheckpointMode::Recompute`] only the layer input survives; the
+/// backward rebuilds the shared right chain, Z2 and the three left
+/// chains through the same fold order.
+pub struct QkvFusedCache {
+    /// Layer input (K, N), stored once for all three projections.
+    pub x: PackedTensor,
+    /// Chains + Z2 under [`CheckpointMode::CacheAll`]; `None` under
+    /// [`CheckpointMode::Recompute`].  The storage precision of every
+    /// retained (and recomputed) state is `x`'s precision.
+    states: Option<QkvFusedStates>,
+}
+
 impl QkvFusedCache {
     /// Activation elements stored beyond weights and the layer input —
-    /// equals [`crate::costmodel::LinearShape::btt_qkv_memory`].  The
-    /// first chain state on each side is a reshaped core and excluded.
+    /// equals [`crate::costmodel::LinearShape::btt_qkv_memory`] under
+    /// `CacheAll` and **0** under `Recompute`.  The first chain state
+    /// on each side is a reshaped core and excluded.
     pub fn stored_elems(&self) -> u64 {
-        let chains: usize = self
-            .left_chains
-            .iter()
-            .flat_map(|c| c.iter().skip(1))
-            .chain(self.right_chain.iter().skip(1))
-            .map(PackedTensor::numel)
-            .sum();
-        (chains + self.z2.numel()) as u64
+        match &self.states {
+            None => 0,
+            Some(s) => {
+                let chains: usize = s
+                    .left_chains
+                    .iter()
+                    .flat_map(|c| c.iter().skip(1))
+                    .chain(s.right_chain.iter().skip(1))
+                    .map(PackedTensor::numel)
+                    .sum();
+                (chains + s.z2.numel()) as u64
+            }
+        }
     }
 
     /// Bytes at rest of the fused Eq. 21 cache (see
     /// [`TTLinearCache::stored_bytes`]).
     pub fn stored_bytes(&self) -> u64 {
-        self.stored_elems() * self.z2.precision().bytes()
+        self.stored_elems() * self.x.precision().bytes()
+    }
+
+    /// The checkpointing mode this cache was built under.
+    pub fn mode(&self) -> CheckpointMode {
+        if self.states.is_some() {
+            CheckpointMode::CacheAll
+        } else {
+            CheckpointMode::Recompute
+        }
     }
 }
 
@@ -360,6 +510,41 @@ pub struct QkvFusedGrads {
     pub n_cores: Vec<Tensor>,
     /// Bias gradients per projection.
     pub bias: [Vec<f32>; 3],
+}
+
+/// Compute the shared right chain, the shared `Z2 = X Z1^T` and the
+/// three per-projection left chains of the fused QKV pass — the
+/// **single definition of the fused fold order** that both
+/// [`forward_qkv_fused_ckpt`] and the `Recompute` arm of
+/// [`backward_qkv_fused`] go through.  The right merge and Z2 are
+/// charged once, the left merges per projection; `stored` selects
+/// Eq. 21 stored-element accounting (forward) vs the transient BP
+/// rebuild (multiplies only — `btt_qkv_recompute_muls`).
+fn build_qkv_states(
+    wq: &TTLinear,
+    wk: &TTLinear,
+    wv: &TTLinear,
+    xq: &Tensor,
+    prec: Precision,
+    stored: bool,
+    stats: &mut ContractionStats,
+) -> Result<([Vec<Tensor>; 3], Vec<Tensor>, Tensor)> {
+    let d = wq.tt.d();
+    let (k_dim, n) = (xq.shape[0], wq.tt.n());
+    let r_d = wq.tt.ranks[d];
+    let mut scratch = ContractionStats::default();
+    let right = wq.tt.merge_right_chain_prec(prec)?;
+    wq.tt.record_merge_right_stats(&mut scratch);
+    let z1 = right.last().expect("d >= 1");
+    let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
+    scratch.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, stored);
+    let mut lefts = Vec::with_capacity(3);
+    for w in [wq, wk, wv] {
+        lefts.push(w.tt.merge_left_chain_prec(prec)?);
+        w.tt.record_merge_left_stats(&mut scratch);
+    }
+    record_rebuild(stats, scratch, stored);
+    Ok((lefts.try_into().expect("three projections"), right, z2))
 }
 
 /// Fused QKV forward on row-major `x (K, N)`: returns `[q, k, v]`
@@ -387,6 +572,22 @@ pub fn forward_qkv_fused_prec(
     prec: Precision,
     stats: &mut ContractionStats,
 ) -> Result<([Tensor; 3], QkvFusedCache)> {
+    forward_qkv_fused_ckpt(wq, wk, wv, x, prec, CheckpointMode::CacheAll, stats)
+}
+
+/// [`forward_qkv_fused_prec`] under a gradient-checkpointing mode (see
+/// [`TTLinear::forward_ckpt`]): `Recompute` retains only the rounded
+/// layer input and lets [`backward_qkv_fused`] rebuild the shared
+/// chains and Z2.
+pub fn forward_qkv_fused_ckpt(
+    wq: &TTLinear,
+    wk: &TTLinear,
+    wv: &TTLinear,
+    x: &Tensor,
+    prec: Precision,
+    mode: CheckpointMode,
+    stats: &mut ContractionStats,
+) -> Result<([Tensor; 3], QkvFusedCache)> {
     // Hard precondition, checked in release builds too: running the
     // shared right merge over untied wk/wv would silently produce
     // wrong K/V projections, and the check is a few-KB compare vs
@@ -402,40 +603,34 @@ pub fn forward_qkv_fused_prec(
     let k_dim = x.shape[0];
     let r_d = wq.tt.ranks[d];
 
-    // Shared input side: one right merge, one Z2 (rounded on store).
+    // Shared input side (one right merge, one rounded Z2) and the
+    // three left chains, through the shared builder — the same fused
+    // fold order the `Recompute` backward re-runs.
     let xq = prec.round_tensor(x);
-    let right_chain = wq.tt.merge_right_chain_prec(prec)?;
-    wq.tt.record_merge_right_stats(stats);
-    let z1 = right_chain.last().expect("d >= 1");
-    let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
-    stats.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, true);
+    let (left_chains, right_chain, z2) = build_qkv_states(wq, wk, wv, &xq, prec, true, stats)?;
 
-    // Per-projection output side: three left merges, three applies.
+    // Per-projection output applies.
     let mut ys = Vec::with_capacity(3);
-    let mut left_chains = Vec::with_capacity(3);
-    for w in [wq, wk, wv] {
-        let chain = w.tt.merge_left_chain_prec(prec)?;
-        w.tt.record_merge_left_stats(stats);
+    for (w, chain) in [wq, wk, wv].into_iter().zip(&left_chains) {
         let z3 = chain.last().expect("d >= 1");
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
         ys.push(ops::add_row(&y, &w.bias));
-        left_chains.push(chain.into_iter().map(|t| PackedTensor::pack_owned(t, prec)).collect());
     }
     let ys: [Tensor; 3] = ys.try_into().expect("three projections");
-    let left_chains: [Vec<PackedTensor>; 3] = left_chains.try_into().expect("three projections");
-    Ok((
-        ys,
-        QkvFusedCache {
-            x: PackedTensor::pack_owned(xq, prec),
-            left_chains,
+    let states = match mode {
+        CheckpointMode::Recompute => None,
+        CheckpointMode::CacheAll => Some(QkvFusedStates {
+            left_chains: left_chains
+                .map(|c| c.into_iter().map(|t| PackedTensor::pack_owned(t, prec)).collect()),
             right_chain: right_chain
                 .into_iter()
                 .map(|t| PackedTensor::pack_owned(t, prec))
                 .collect(),
             z2: PackedTensor::pack_owned(z2, prec),
-        },
-    ))
+        }),
+    };
+    Ok((ys, QkvFusedCache { x: PackedTensor::pack_owned(xq, prec), states }))
 }
 
 /// Fused QKV backward: given the three output gradients, return `dX`
@@ -464,11 +659,33 @@ pub fn backward_qkv_fused(
     }
 
     // Widen-on-load: view the shared cache once (zero-copy borrows on
-    // the f32 path; f32 accumulation throughout).
+    // the f32 path; f32 accumulation throughout).  Under `Recompute`
+    // the shared right chain, Z2 and the three left chains are rebuilt
+    // from the stored input and the (still-unchanged) cores through the
+    // forward's exact fold order and round-on-store precision —
+    // bitwise the cached states per precision — and charged as
+    // transient multiplies (`btt_qkv_recompute_muls`).
     let x = cache.x.view();
-    let z2 = cache.z2.view();
-    let right_chain: Vec<Cow<'_, Tensor>> =
-        cache.right_chain.iter().map(PackedTensor::view).collect();
+    let (left_chains, right_chain, z2): (
+        [Vec<Cow<'_, Tensor>>; 3],
+        Vec<Cow<'_, Tensor>>,
+        Cow<'_, Tensor>,
+    ) = match &cache.states {
+        Some(s) => (
+            [0usize, 1, 2].map(|p| s.left_chains[p].iter().map(PackedTensor::view).collect()),
+            s.right_chain.iter().map(PackedTensor::view).collect(),
+            s.z2.view(),
+        ),
+        None => {
+            let prec = cache.x.precision();
+            let (lefts, right, z2) = build_qkv_states(wq, wk, wv, x.as_ref(), prec, false, stats)?;
+            (
+                lefts.map(|c| c.into_iter().map(Cow::Owned).collect()),
+                right.into_iter().map(Cow::Owned).collect(),
+                Cow::Owned(z2),
+            )
+        }
+    };
     let mut dz2 = Tensor::zeros(&[k_dim, r_d]);
     let mut m_grads = Vec::with_capacity(3);
     let mut biases = Vec::with_capacity(3);
@@ -480,15 +697,14 @@ pub fn backward_qkv_fused(
             }
         }
         biases.push(dbias);
-        let left_chain: Vec<Cow<'_, Tensor>> =
-            cache.left_chains[p].iter().map(PackedTensor::view).collect();
+        let left_chain = &left_chains[p];
         let z3 = left_chain.last().expect("d >= 1").as_ref();
         let dz3 = dy.t()?.matmul(z2.as_ref())?; // (M, r_d)
         stats.record_step((m * k_dim * r_d) as u64, (m * r_d) as u64, false);
         let part = dy.matmul(z3)?; // (K, r_d) contribution to dZ2
         stats.record_step((k_dim * m * r_d) as u64, (k_dim * r_d) as u64, false);
         dz2 = ops::add(&dz2, &part);
-        m_grads.push(unroll_left_chain(&w.tt, &left_chain, dz3, stats)?);
+        m_grads.push(unroll_left_chain(&w.tt, left_chain, dz3, stats)?);
     }
 
     // Shared input side, charged once.
@@ -728,6 +944,44 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn recompute_backward_is_bitwise_the_cached_backward() {
+        let mut rng = SplitMix64::new(57);
+        let l = layer(&mut rng);
+        let k_dim = 6usize;
+        let x = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
+        let dy = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
+        let mut s_c = ContractionStats::default();
+        let (y_c, cache) =
+            l.forward_ckpt(&x, Precision::F32, CheckpointMode::CacheAll, &mut s_c).unwrap();
+        let mut s_r = ContractionStats::default();
+        let (y_r, ckpt) =
+            l.forward_ckpt(&x, Precision::F32, CheckpointMode::Recompute, &mut s_r).unwrap();
+        assert_eq!(y_c.data, y_r.data, "forward must not depend on the checkpoint mode");
+        assert_eq!(s_c.muls, s_r.muls);
+        assert_eq!(ckpt.mode(), CheckpointMode::Recompute);
+        assert_eq!(ckpt.stored_elems(), 0, "recompute cache must retain nothing");
+        assert!(cache.stored_bytes() > 0);
+        let mut b_c = ContractionStats::default();
+        let (dx_c, g_c) = l.backward(&dy, &cache, &mut b_c).unwrap();
+        let mut b_r = ContractionStats::default();
+        let (dx_r, g_r) = l.backward(&dy, &ckpt, &mut b_r).unwrap();
+        assert_eq!(dx_c.data, dx_r.data, "dX diverged under recompute");
+        for (a, b) in g_c.cores.iter().zip(&g_r.cores) {
+            assert_eq!(a.data, b.data, "core grad diverged under recompute");
+        }
+        assert_eq!(g_c.bias, g_r.bias);
+        // The rebuild is charged exactly as the cost model's FLOP delta
+        // and never as stored intermediates.
+        let shape = LinearShape {
+            m_modes: l.tt.m_modes.clone(),
+            n_modes: l.tt.n_modes.clone(),
+            ranks: l.tt.ranks.clone(),
+        };
+        assert_eq!(b_r.muls, b_c.muls + shape.btt_recompute_muls(k_dim as u64));
+        assert_eq!(b_r.stored_intermediate_elems, b_c.stored_intermediate_elems);
     }
 
     /// Random Q/K/V triplet with tied input-side cores (the fused-QKV

@@ -31,6 +31,14 @@
 //!   name-verified `.npy` checkpoints interchangeable with the PJRT
 //!   engine's.
 //!
+//! The Eq. 21 caches carry a **gradient-checkpointing** axis
+//! ([`CheckpointPolicy`] on the model, [`CheckpointMode`] per layer):
+//! under `Recompute` the forward retains only each layer's input and
+//! the BP stage rebuilds the chain states through the identical
+//! deterministic fold order — f32 gradients are bitwise the cached
+//! ones, at `btt_recompute_muls` extra multiplies per layer
+//! (`rust/tests/checkpointing.rs` pins both claims).
+//!
 //! Gradient correctness is pinned two ways: finite-difference checks
 //! (unit tests here and `rust/tests/native_training.rs`) and — when HLO
 //! artifacts are present — a loss-trajectory parity test against the
@@ -42,8 +50,8 @@ pub mod model;
 pub mod native;
 
 pub use layers::{
-    backward_qkv_fused, forward_qkv_fused, forward_qkv_fused_prec, qkv_input_cores_shared,
-    QkvFusedCache, QkvFusedGrads, TTLinear, TTLinearGrads,
+    backward_qkv_fused, forward_qkv_fused, forward_qkv_fused_ckpt, forward_qkv_fused_prec,
+    qkv_input_cores_shared, CheckpointMode, QkvFusedCache, QkvFusedGrads, TTLinear, TTLinearGrads,
 };
-pub use model::{ComputePath, NativeTrainModel};
+pub use model::{CheckpointPolicy, ComputePath, NativeTrainModel};
 pub use native::NativeTrainer;

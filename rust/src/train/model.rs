@@ -37,7 +37,7 @@ use crate::inference::ParamMap;
 use crate::optim::{ModelOptim, OptimConfig};
 use crate::tensor::{ops, ContractionStats, Precision, Tensor, TTMEmbedding, TTMatrix};
 use crate::train::blocks::{self, LayerNormCache};
-use crate::train::layers::{self, QkvFusedCache, TTLinear, TTLinearCache};
+use crate::train::layers::{self, CheckpointMode, QkvFusedCache, TTLinear, TTLinearCache};
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -90,6 +90,67 @@ impl ComputePath {
     }
 }
 
+/// Gradient-checkpointing policy for the Eq. 21 activation caches —
+/// the model-level companion of [`CheckpointMode`].  `Recompute`
+/// trades the at-rest cache bytes for one extra (output-apply-free)
+/// forward contraction per layer in the BP stage
+/// ([`crate::costmodel::LinearShape::btt_recompute_muls`]); because the
+/// rebuilt states take the exact same deterministic fold order and
+/// round-on-store precision as the cached ones, f32 gradients are
+/// **bitwise identical** between the two policies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointPolicy {
+    /// Every layer stores its full Eq. 21 cache (the default; the
+    /// paper's schedule).
+    CacheAll,
+    /// Every TT linear — and the TTM embedding chains — stores only
+    /// its input; the BP stage recomputes the chain states.
+    Recompute,
+    /// Per-encoder-block selection (index = block).  Blocks beyond the
+    /// vector, and the embedding/pooler caches, stay cached.
+    PerLayer(Vec<CheckpointMode>),
+}
+
+impl CheckpointPolicy {
+    /// Checkpointing mode of encoder block `li`.
+    pub fn layer_mode(&self, li: usize) -> CheckpointMode {
+        match self {
+            CheckpointPolicy::CacheAll => CheckpointMode::CacheAll,
+            CheckpointPolicy::Recompute => CheckpointMode::Recompute,
+            CheckpointPolicy::PerLayer(modes) => {
+                modes.get(li).copied().unwrap_or(CheckpointMode::CacheAll)
+            }
+        }
+    }
+
+    /// Mode of the auxiliary caches outside the encoder stack (the TTM
+    /// embedding chains and the pooler): they follow the global stance;
+    /// `PerLayer` keeps them cached.
+    pub fn aux_mode(&self) -> CheckpointMode {
+        match self {
+            CheckpointPolicy::Recompute => CheckpointMode::Recompute,
+            CheckpointPolicy::CacheAll | CheckpointPolicy::PerLayer(_) => CheckpointMode::CacheAll,
+        }
+    }
+
+    /// CLI spelling: `cache` (alias `cache-all`) or `recompute`.
+    pub fn parse(s: &str) -> Result<CheckpointPolicy> {
+        match s {
+            "cache" | "cache-all" => Ok(CheckpointPolicy::CacheAll),
+            "recompute" => Ok(CheckpointPolicy::Recompute),
+            other => Err(anyhow!("unknown --checkpoint '{other}' (cache|recompute)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CheckpointPolicy::CacheAll => "cache",
+            CheckpointPolicy::Recompute => "recompute",
+            CheckpointPolicy::PerLayer(_) => "per-layer",
+        }
+    }
+}
+
 /// The full trainable model (any runtime batch size; the paper's
 /// on-device setting is B = 1).
 pub struct NativeTrainModel {
@@ -111,6 +172,11 @@ pub struct NativeTrainModel {
     /// parameters are rounded/packed to this width; compute always
     /// accumulates in f32.  Set via [`NativeTrainModel::set_precision`].
     pub precision: Precision,
+    /// Gradient-checkpointing policy for the Eq. 21 caches
+    /// (`CacheAll` default).  Composes orthogonally with
+    /// [`NativeTrainModel::precision`]: bf16 storage x `Recompute` is
+    /// the full memory story.
+    pub checkpoint: CheckpointPolicy,
 }
 
 /// The three separate per-projection caches of the reference schedule.
@@ -283,6 +349,7 @@ impl NativeTrainModel {
             optim: ModelOptim::new(OptimConfig::default()),
             compute_path: ComputePath::default(),
             precision: Precision::F32,
+            checkpoint: CheckpointPolicy::CacheAll,
         })
     }
 
@@ -363,6 +430,7 @@ impl NativeTrainModel {
             // are not tied fall back to separate forwards per layer.
             compute_path: ComputePath::default(),
             precision: Precision::F32,
+            checkpoint: CheckpointPolicy::CacheAll,
         })
     }
 
@@ -511,6 +579,7 @@ impl NativeTrainModel {
         // fold consumes it (lookup_cached_prec), so the stored chain is
         // exactly the chain the forward computed through.
         let prec = self.precision;
+        let aux_recompute = self.checkpoint.aux_mode() == CheckpointMode::Recompute;
         let mut x = Tensor::zeros(&[k_rows, h]);
         let mut emb_unique: Vec<(i32, Vec<Tensor>)> = Vec::new();
         let mut emb_index = Vec::with_capacity(k_rows);
@@ -519,7 +588,13 @@ impl NativeTrainModel {
             let ui = match index_of.get(&t) {
                 Some(&ui) => ui,
                 None => {
-                    let (_, states) = self.embedding.lookup_cached_prec(t as usize, prec)?;
+                    let (_, mut states) = self.embedding.lookup_cached_prec(t as usize, prec)?;
+                    // Recompute policy: keep only the final chain state
+                    // (the embedding row consumed below); the VJP
+                    // re-runs the lookup chain per unique token.
+                    if aux_recompute && states.len() > 1 {
+                        states.drain(..states.len() - 1);
+                    }
                     emb_unique.push((t, states));
                     index_of.insert(t, emb_unique.len() - 1);
                     emb_unique.len() - 1
@@ -536,7 +611,10 @@ impl NativeTrainModel {
 
         let bias = ops::attention_bias_from_mask(&mask);
         let mut layer_fwd = Vec::with_capacity(self.layers.len());
-        for layer in &self.layers {
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Per-block checkpointing mode: what this block's TT caches
+            // retain for the BP stage.
+            let mode = self.checkpoint.layer_mode(li);
             // QKV projections: the fused schedule shares the input-side
             // merge and Z2 across Q/K/V whenever the input cores are
             // tied; otherwise (or when the looped reference schedule is
@@ -544,14 +622,14 @@ impl NativeTrainModel {
             let (q, k, v, qkv) = if self.compute_path.fused_qkv
                 && layers::qkv_input_cores_shared(&layer.wq, &layer.wk, &layer.wv)
             {
-                let ([q, k, v], c) = layers::forward_qkv_fused_prec(
-                    &layer.wq, &layer.wk, &layer.wv, &x, prec, stats,
+                let ([q, k, v], c) = layers::forward_qkv_fused_ckpt(
+                    &layer.wq, &layer.wk, &layer.wv, &x, prec, mode, stats,
                 )?;
                 (q, k, v, QkvFwd::Fused(c))
             } else {
-                let (q, wq_c) = layer.wq.forward_prec(&x, prec, stats)?;
-                let (k, wk_c) = layer.wk.forward_prec(&x, prec, stats)?;
-                let (v, wv_c) = layer.wv.forward_prec(&x, prec, stats)?;
+                let (q, wq_c) = layer.wq.forward_ckpt(&x, prec, mode, stats)?;
+                let (k, wk_c) = layer.wk.forward_ckpt(&x, prec, mode, stats)?;
+                let (v, wv_c) = layer.wv.forward_ckpt(&x, prec, mode, stats)?;
                 let caches = Box::new(SeparateQkvCaches { wq_c, wk_c, wv_c });
                 (q, k, v, QkvFwd::Separate(caches))
             };
@@ -581,12 +659,12 @@ impl NativeTrainModel {
                 }
                 (ctx, AttnFwd::PerExample(probs))
             };
-            let (o, wo_c) = layer.wo.forward_prec(&ctx, prec, stats)?;
+            let (o, wo_c) = layer.wo.forward_ckpt(&ctx, prec, mode, stats)?;
             let res1 = ops::add(&x, &o);
             let (x1, ln1_c) = blocks::layer_norm_fwd(&res1, &layer.ln1_g, &layer.ln1_b, 1e-5);
-            let (h1, w1_c) = layer.w1.forward_prec(&x1, prec, stats)?;
+            let (h1, w1_c) = layer.w1.forward_ckpt(&x1, prec, mode, stats)?;
             let g1 = ops::gelu(&h1);
-            let (ffn, w2_c) = layer.w2.forward_prec(&g1, prec, stats)?;
+            let (ffn, w2_c) = layer.w2.forward_ckpt(&g1, prec, mode, stats)?;
             let res2 = ops::add(&x1, &ffn);
             let (x2, ln2_c) = blocks::layer_norm_fwd(&res2, &layer.ln2_g, &layer.ln2_b, 1e-5);
             layer_fwd.push(LayerFwd {
@@ -606,7 +684,8 @@ impl NativeTrainModel {
             x = x2;
         }
 
-        let (pool_pre, pool_c) = self.pool.forward_prec(&x, prec, stats)?;
+        let (pool_pre, pool_c) =
+            self.pool.forward_ckpt(&x, prec, self.checkpoint.aux_mode(), stats)?;
         let pooled = ops::tanh(&pool_pre);
         // Per-example CLS rows drive the intent head.
         let mut cls = Tensor::zeros(&[b, h]);
@@ -627,6 +706,35 @@ impl NativeTrainModel {
             intent_logits: intent,
             slot_logits: slots,
         })
+    }
+
+    /// Run a cached forward over a `(B, S)` token block and return the
+    /// summed [`TTLinearCache::stored_bytes`] /
+    /// [`QkvFusedCache::stored_bytes`] of every live Eq. 21 cache
+    /// (QKV + wo/w1/w2 per encoder block, plus the pooler) — the
+    /// **executed** counterpart of
+    /// [`crate::fpga::resources::ResourceReport::eq21_cache_bytes`].
+    /// The caches are the single source of truth: for the default
+    /// fused-QKV schedule (which the resource report models) the
+    /// analytic formula is property-tested equal to this sum; an
+    /// untied/looped model stores three separate per-projection caches
+    /// per layer and measures higher than the fused-schedule report.
+    /// (The TTM embedding chain states are not Eq. 21 memory and are
+    /// excluded, as in the resource model.)
+    pub fn measure_eq21_cache_bytes(&self, tokens: &[i32]) -> Result<u64> {
+        let mut stats = ContractionStats::default();
+        let fwd = self.forward_train(tokens, &mut stats)?;
+        let mut total = fwd.pool_c.stored_bytes();
+        for f in &fwd.layer_fwd {
+            total += match &f.qkv {
+                QkvFwd::Fused(c) => c.stored_bytes(),
+                QkvFwd::Separate(c) => {
+                    c.wq_c.stored_bytes() + c.wk_c.stored_bytes() + c.wv_c.stored_bytes()
+                }
+            };
+            total += f.wo_c.stored_bytes() + f.w1_c.stored_bytes() + f.w2_c.stored_bytes();
+        }
+        Ok(total)
     }
 
     /// Inference (same contract as the PJRT engine's eval): returns
@@ -839,8 +947,20 @@ impl NativeTrainModel {
             }
         }
         for ((t, states), d_row) in fwd.emb_unique.iter().zip(&d_rows) {
-            self.embedding
-                .lookup_vjp(*t as usize, states, d_row, &mut emb_grads)?;
+            if states.len() == self.embedding.cores.len() {
+                self.embedding
+                    .lookup_vjp(*t as usize, states, d_row, &mut emb_grads)?;
+            } else {
+                // Recompute policy: the forward kept only the final
+                // chain state.  Rebuild the chain (same fold order and
+                // round-on-store precision; the cores are unchanged
+                // until the update below) before unrolling it.
+                let (_, full) = self
+                    .embedding
+                    .lookup_cached_prec(*t as usize, self.precision)?;
+                self.embedding
+                    .lookup_vjp(*t as usize, &full, d_row, &mut emb_grads)?;
+            }
         }
         for (k, (core, g)) in self.embedding.cores.iter_mut().zip(&emb_grads).enumerate() {
             self.optim.step(&format!("embed.ttm.{k}"), &mut core.data, &g.data, &hyper);

@@ -77,6 +77,18 @@ impl NativeTrainer {
         *self.eval_model.borrow_mut() = None;
         self
     }
+
+    /// Select the gradient-checkpointing policy for the Eq. 21 caches
+    /// (builder style).  Policy only affects what the forward retains
+    /// for the BP stage — parameters and gradients are untouched (f32
+    /// gradients are bitwise identical across policies), so the cached
+    /// eval engine stays valid.  Like `--precision`, the policy is
+    /// applied **before** any `--init-ckpt` load and survives
+    /// [`NativeTrainer::load_checkpoint`].
+    pub fn with_checkpoint(mut self, policy: crate::train::CheckpointPolicy) -> NativeTrainer {
+        self.model.checkpoint = policy;
+        self
+    }
 }
 
 /// Checkpoint-name prefix of optimizer-state entries
@@ -199,13 +211,17 @@ impl TrainBackend for NativeTrainer {
         }
         let optim_cfg = self.model.optim.cfg.clone();
         let compute_path = self.model.compute_path;
+        let checkpoint = self.model.checkpoint.clone();
         self.model = NativeTrainModel::from_params(&self.model.cfg, &params)?;
-        // from_params builds with default schedule/precision: restore
-        // the trainer's configured compute path, and re-apply the
-        // storage path via set_optim (which syncs the precision and
-        // rounds the loaded parameters — idempotent for checkpoints
-        // trained at this precision).
+        // from_params builds with default schedule/precision/policy:
+        // restore the trainer's configured compute path and
+        // checkpointing policy (so `--checkpoint recompute` composes
+        // with `--init-ckpt`, like the `--precision` ordering), and
+        // re-apply the storage path via set_optim (which syncs the
+        // precision and rounds the loaded parameters — idempotent for
+        // checkpoints trained at this precision).
         self.model.compute_path = compute_path;
+        self.model.checkpoint = checkpoint;
         self.model.set_optim(optim_cfg.clone());
         if optim_kind.and_then(OptimKind::from_code) == Some(optim_cfg.kind)
             && !optim_entries.is_empty()
