@@ -1,46 +1,131 @@
 //! Deployment example: serve predictions with the **rust-native**
-//! inference engine — no XLA/PJRT at run time, just the TT/TTM tensor
-//! algebra (the paper's edge-deployment story).
+//! engine through the continuous-batching scheduler — no XLA/PJRT at
+//! run time, just the TT/TTM tensor algebra (the paper's
+//! edge-deployment story).
 //!
-//! Loads the trained-or-initial parameters through the PJRT engine once
-//! (acting as the checkpoint reader), optionally fine-tunes a few steps,
-//! exports to the native engine, and serves the synthetic ATIS test
-//! split, reporting accuracy and per-request latency.
+//! The default build is fully native: load a checkpoint written by
+//! `tt-trainer train --ckpt DIR` (or `cargo run --example train_native`),
+//! stand up a [`tt_trainer::serve::Server`] over the shared engine, and
+//! push the synthetic ATIS test split through it, reporting intent/slot
+//! accuracy, per-request latency percentiles and batching statistics.
 //!
 //! ```bash
-//! cargo run --release --offline --example serve_native -- --train-steps 200 --serve-n 100
+//! cargo run --release --offline -- train --steps 200 --ckpt ckpt_dir
+//! cargo run --release --offline --example serve_native -- --ckpt ckpt_dir --serve-n 100
 //! ```
+//!
+//! With no `--ckpt` the example serves the random init — the serving
+//! path (batching, latency, determinism) is weight-value-independent.
+//!
+//! `--pjrt` (needs `--features pjrt` and `make artifacts`) instead
+//! sources the parameters from the PJRT engine, fine-tuning
+//! `--train-steps` first — the original offline/edge hand-off demo.
 
-#[cfg(feature = "pjrt")]
-use std::time::Instant;
-#[cfg(feature = "pjrt")]
+use std::sync::Arc;
+use tt_trainer::config::ModelConfig;
+use tt_trainer::coordinator::metrics::percentile;
 use tt_trainer::data::{Dataset, INTENTS};
-#[cfg(feature = "pjrt")]
-use tt_trainer::inference::{params_from_engine, NativeModel};
-#[cfg(feature = "pjrt")]
-use tt_trainer::runtime::{Engine, Manifest};
-#[cfg(feature = "pjrt")]
+use tt_trainer::engine::NativeEngine;
+use tt_trainer::serve::{ServeConfig, Server};
 use tt_trainer::util::cli::Args;
 
-#[cfg(not(feature = "pjrt"))]
-fn main() {
-    eprintln!("serve_native's offline phase needs the PJRT runtime: rebuild with --features pjrt");
-    eprintln!("(or train natively first: cargo run --example train_native)");
-    std::process::exit(2);
-}
-
-#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let train_steps = args.get_usize("train-steps", 200);
     let serve_n = args.get_usize("serve-n", 100);
+    let engine = Arc::new(if args.has_flag("pjrt") {
+        pjrt_engine(&args)?
+    } else {
+        native_engine(&args)?
+    });
+    let (_, test) = Dataset::paper_splits(&engine.cfg, args.get_usize("seed", 42) as u64);
 
+    println!("[serve] scheduler up (continuous batching); serving {serve_n} requests");
+    let server = Server::start(Arc::clone(&engine), ServeConfig::default())?;
+    let handle = server.handle();
+    let mut intent_hits = 0usize;
+    let mut slot_hits = 0usize;
+    let mut slot_total = 0usize;
+    let mut lat_ms = Vec::with_capacity(serve_n);
+    let mut max_batch = 0usize;
+    let examples: Vec<_> = test.examples.iter().cycle().take(serve_n).collect();
+    // Submit in windows so the scheduler sees genuine concurrency (and
+    // coalesces), while staying under the admission bound.
+    for window in examples.chunks(64) {
+        let pending: Vec<_> = window
+            .iter()
+            .map(|ex| handle.submit(&ex.tokens).map_err(anyhow::Error::from))
+            .collect::<anyhow::Result<_>>()?;
+        for (ex, p) in window.iter().zip(pending) {
+            let resp = p.wait()?;
+            lat_ms.push(resp.latency.as_secs_f64() * 1e3);
+            max_batch = max_batch.max(resp.batch_size);
+            if resp.intent == ex.intent as usize {
+                intent_hits += 1;
+            }
+            // Score the effective (untrimmed) positions the response covers.
+            for (pred, &gold) in resp.slots.iter().zip(&ex.slots) {
+                slot_hits += usize::from(*pred == gold as usize);
+                slot_total += 1;
+            }
+        }
+    }
+    let stats = server.shutdown();
+    println!(
+        "[serve] intent acc {:.3} | slot acc {:.3} | latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
+        intent_hits as f64 / serve_n as f64,
+        slot_hits as f64 / slot_total.max(1) as f64,
+        percentile(&lat_ms, 50.0),
+        percentile(&lat_ms, 95.0),
+        percentile(&lat_ms, 99.0),
+    );
+    println!(
+        "[serve] {} batches | mean batch {:.2} | max batch {} | rejected {}",
+        stats.batches, stats.mean_batch, max_batch, stats.rejected
+    );
+
+    // Show a few predictions with their decoded intents.
+    for ex in test.examples.iter().take(3) {
+        let (intent, _) = engine.predict(&ex.tokens)?;
+        println!(
+            "[serve] predicted intent: {:<28} (gold: {})",
+            INTENTS[intent], INTENTS[ex.intent as usize]
+        );
+    }
+    Ok(())
+}
+
+/// Default source: a native checkpoint (`--ckpt` / `--init-ckpt`), or
+/// the random init when neither is given.
+fn native_engine(args: &Args) -> anyhow::Result<NativeEngine> {
+    use tt_trainer::coordinator::TrainBackend;
+    use tt_trainer::train::NativeTrainer;
+    let layers = args.get_usize("layers", 2);
+    let seed = args.get_usize("seed", 42) as u64;
+    let cfg = ModelConfig::paper(layers);
+    let mut trainer = NativeTrainer::random_init(&cfg, seed)?;
+    if let Some(dir) = args.get("ckpt").or_else(|| args.get("init-ckpt")) {
+        trainer.load_checkpoint(std::path::Path::new(dir))?;
+        println!("[load] native checkpoint from {dir}");
+    } else {
+        println!(
+            "[load] no --ckpt given: serving the random init \
+             (train first: cargo run --release -- train --ckpt DIR)"
+        );
+    }
+    trainer.model.engine()
+}
+
+/// `--pjrt`: source the parameters from the PJRT engine (the original
+/// offline-train / edge-serve hand-off), fine-tuning a few steps first.
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(args: &Args) -> anyhow::Result<NativeEngine> {
+    use tt_trainer::inference::params_from_engine;
+    use tt_trainer::runtime::{Engine, Manifest};
+    let train_steps = args.get_usize("train-steps", 200);
     let manifest = Manifest::load(args.get_or("artifacts", "artifacts"))?;
     let spec = manifest.variant(args.get_or("variant", "tt_L2"))?;
     let cfg = spec.config.clone();
-    let (train, test) = Dataset::paper_splits(&cfg, 42);
-
-    // Phase 1 (offline): obtain trained parameters via the PJRT engine.
+    let (train, _) = Dataset::paper_splits(&cfg, 42);
     println!("[offline] loading + training {train_steps} steps via PJRT ...");
     let mut engine = Engine::load(spec)?;
     for (i, ex) in train.examples.iter().cycle().take(train_steps).enumerate() {
@@ -49,40 +134,14 @@ fn main() -> anyhow::Result<()> {
             println!("[offline] step {:>4}: loss {:.4}", i + 1, out.loss);
         }
     }
+    // The PJRT runtime is dropped here; only rust-native code serves.
+    NativeEngine::from_params(&cfg, &params_from_engine(&engine)?)
+}
 
-    // Phase 2 (edge): export to the native engine and serve.
-    let model = NativeModel::from_params(&cfg, &params_from_engine(&engine)?)?;
-    drop(engine); // the PJRT runtime is gone; only rust-native code below.
-
-    println!(
-        "[serve] native engine up ({} params arrays); serving {serve_n} requests",
-        spec.params.len()
-    );
-    let mut intent_hits = 0usize;
-    let mut lat = Vec::with_capacity(serve_n);
-    for ex in test.examples.iter().take(serve_n) {
-        let t0 = Instant::now();
-        let (intent, _slots) = model.predict(&ex.tokens)?;
-        lat.push(t0.elapsed().as_secs_f64());
-        if intent == ex.intent as usize {
-            intent_hits += 1;
-        }
-    }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    println!(
-        "[serve] intent acc {:.3} | latency p50 {:.2} ms | p95 {:.2} ms",
-        intent_hits as f64 / serve_n as f64,
-        lat[serve_n / 2] * 1e3,
-        lat[(serve_n * 95 / 100).min(serve_n - 1)] * 1e3,
-    );
-
-    // Show a few predictions with their decoded intents.
-    for ex in test.examples.iter().take(3) {
-        let (intent, _) = model.predict(&ex.tokens)?;
-        println!(
-            "[serve] predicted intent: {:<28} (gold: {})",
-            INTENTS[intent], INTENTS[ex.intent as usize]
-        );
-    }
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine(_args: &Args) -> anyhow::Result<NativeEngine> {
+    Err(anyhow::anyhow!(
+        "--pjrt needs the `pjrt` feature (rebuild with --features pjrt); \
+         the default native path needs no flag"
+    ))
 }

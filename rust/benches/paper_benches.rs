@@ -17,6 +17,9 @@
 //!   wallclock — measured rust-side contraction timings (BTT vs RL vs MM)
 //!   native-train — measured rust-native train/eval step latency
 //!             (no artifacts needed; FP + BP + fused SGD)
+//!   serve   — continuous-batching serving scheduler load test
+//!             (no-batching baseline vs continuous, concurrency 1/8;
+//!             writes BENCH_serve.json)
 //!   pjrt    — measured train/eval step latency through the real stack
 //!             (`pjrt` feature; skipped unless artifacts/ exists)
 //!
@@ -81,8 +84,56 @@ fn main() {
     if run("native-train") {
         native_train();
     }
+    if run("serve") {
+        serve();
+    }
     if run("pjrt") {
         pjrt();
+    }
+}
+
+/// Measured serving latency and saturation throughput through the
+/// continuous-batching scheduler (`tt_trainer::serve`) over the shared
+/// inference engine — the no-batching baseline vs continuous batching
+/// at closed-loop concurrency 1 and 8.  Emits `BENCH_serve.json`
+/// (p50/p95/p99 latency, throughput, batching stats per scenario), the
+/// serving counterpart of `BENCH_native_train.json`.
+fn serve() {
+    use std::sync::Arc;
+    use tt_trainer::serve::loadgen;
+    hdr("serve", "continuous-batching scheduler load test (no artifacts)");
+    let cfg = ModelConfig::paper(2);
+    let backend = NativeTrainer::random_init(&cfg, 42).expect("paper config init");
+    let engine = Arc::new(backend.model.engine().expect("merged-factor engine"));
+    let data = Dataset::synth(&cfg, 42, 64);
+    let corpus: Vec<Vec<i32>> = data.examples.iter().map(|e| e.tokens.clone()).collect();
+    let mut reports = Vec::new();
+    for spec in loadgen::default_scenarios(128) {
+        // Fail loudly (see native_train): a silent skip would surface
+        // only as a missing BENCH_serve.json artifact in CI.
+        let r = loadgen::run_load(&engine, &corpus, &spec).expect("load scenario");
+        println!(
+            "{:<16} conc {:>2}: p50 {:>8.3} ms | p99 {:>8.3} ms | {:>7.1} req/s | \
+             mean batch {:>5.2} | rejected {}",
+            r.name, r.concurrency, r.p50_ms, r.p99_ms, r.throughput_rps, r.mean_batch, r.rejected
+        );
+        reports.push(r);
+    }
+    let find = |name: &str| reports.iter().find(|r| r.name == name);
+    if let (Some(base), Some(cont)) = (find("no-batching-c8"), find("continuous-c8")) {
+        if base.throughput_rps > 0.0 {
+            println!(
+                "continuous vs no-batching at concurrency 8: {:.2}x throughput \
+                 (p99 {:.3} ms vs {:.3} ms)",
+                cont.throughput_rps / base.throughput_rps,
+                cont.p99_ms,
+                base.p99_ms
+            );
+        }
+    }
+    match std::fs::write("BENCH_serve.json", loadgen::bench_json(&reports)) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => println!("could not write BENCH_serve.json: {e}"),
     }
 }
 

@@ -116,6 +116,23 @@ pub fn argmax(row: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
+/// Nearest-rank percentile of a sample set (`p` in `0..=100`): the
+/// smallest sample such that at least `p%` of the samples are `<=` it
+/// — p50 of `[1, 2, 3, 4]` is `2`, p100 is the maximum, p0 the
+/// minimum.  The single shared definition for the serve bench, the
+/// load generator and `serve_native` (replacing their ad-hoc
+/// sorted-index arithmetic).  Returns NaN on an empty set.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,6 +152,34 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
         assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        // n = 1: every percentile is that sample.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = [4.0, 1.0, 3.0, 2.0]; // unsorted on purpose
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 25.0), 1.0);
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert_eq!(percentile(&s, 75.0), 3.0);
+        assert_eq!(percentile(&s, 99.0), 4.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_ties_and_empty() {
+        let ties = [2.0, 2.0, 2.0, 9.0];
+        assert_eq!(percentile(&ties, 50.0), 2.0);
+        assert_eq!(percentile(&ties, 75.0), 2.0);
+        assert_eq!(percentile(&ties, 100.0), 9.0);
+        assert!(percentile(&[], 50.0).is_nan());
     }
 
     #[test]

@@ -422,6 +422,65 @@ impl LinearShape {
     ) -> u64 {
         self.optimizer_state_elems(state_multiplier) * precision.bytes()
     }
+
+    // -- Batched serving (shared engine, merged factors at rest) -------------
+
+    /// Forward multiplies of one BTT linear in the **serving** engine
+    /// at contraction width `k = B * S`: only the two K-wide applies
+    /// `Z2 = X Z1^T`, `Y = Z2 Z3^T`.  The merge chains are folded
+    /// *once* at engine construction (`crate::engine::MergedLinear`)
+    /// and amortize over every request, so unlike training (Eq. 20)
+    /// they are not charged per batch:
+    ///
+    /// ```text
+    /// C_serve = K r_d (M + N)  =  C_fwd - C_left - C_right
+    /// ```
+    pub fn btt_serve_muls(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        k_dim * r_d * (self.m() + self.n())
+    }
+
+    /// Serving multiplies of the fused QKV projections (tied input
+    /// cores): one shared `Z2`, three output applies —
+    ///
+    /// ```text
+    /// C_serve_qkv = K r_d (N + 3 M)
+    /// ```
+    pub fn btt_serve_qkv_muls(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        k_dim * r_d * (self.n() + 3 * self.m())
+    }
+
+    /// At-rest weight memory of the serving engine's merged factors for
+    /// one linear: `Z3 (M, r_d)` + `Z1 (r_d, N)` elements.  This is the
+    /// inference analog of the weight column — the raw cores are not
+    /// kept after merging.
+    pub fn merged_factor_elems(&self) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        r_d * (self.m() + self.n())
+    }
+
+    /// Transient per-batch memory of one serving forward: only the
+    /// K-carrying `Z2 (K, r_d)` — the Eq. 21 chain-state charge
+    /// training pays for the BP stage does **not** apply to inference:
+    ///
+    /// ```text
+    /// M_serve = K r_d  =  M_fwd (Eq. 21) - M_left - M_right
+    /// ```
+    pub fn btt_serve_transient_elems(&self, k_dim: u64) -> u64 {
+        let r_d = self.ranks[self.d()] as u64;
+        k_dim * r_d
+    }
+
+    /// Serving transient bytes at a storage precision (the engine
+    /// rounds `Z2` on store at half precisions, mirroring training).
+    pub fn btt_serve_transient_bytes(
+        &self,
+        k_dim: u64,
+        precision: crate::tensor::Precision,
+    ) -> u64 {
+        self.btt_serve_transient_elems(k_dim) * precision.bytes()
+    }
 }
 
 /// One row of a Fig. 6-style comparison.
@@ -750,6 +809,63 @@ mod tests {
             shape.btt_memory_bytes(32, Precision::F32),
             4 * shape.btt_memory(32)
         );
+    }
+
+    #[test]
+    fn serving_entries_are_the_forward_minus_the_amortized_merges() {
+        // The serving engine folds the merge chains once at load, so
+        // per-batch compute is exactly Eq. 20 minus both merges, and
+        // the per-batch transient is exactly Eq. 21 minus both chains.
+        prop::check(37, 30, |rng| {
+            let d = 1 + rng.below(3) as usize;
+            let m_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(6) as usize).collect();
+            let n_modes: Vec<usize> = (0..d).map(|_| 2 + rng.below(6) as usize).collect();
+            let rank = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(64) as u64;
+            let shape = LinearShape::uniform(&m_modes, &n_modes, rank);
+            let r_d = shape.ranks[shape.d()] as u64;
+            assert_eq!(
+                shape.btt_serve_muls(k),
+                shape.btt_muls(k) - shape.btt_left_merge_muls() - shape.btt_right_merge_muls()
+            );
+            assert_eq!(
+                shape.btt_serve_qkv_muls(k),
+                shape.btt_fwd_qkv_muls(k)
+                    - 3 * shape.btt_left_merge_muls()
+                    - shape.btt_right_merge_muls()
+            );
+            assert_eq!(
+                shape.btt_serve_transient_elems(k),
+                shape.btt_memory(k)
+                    - shape.btt_left_chain_elems()
+                    - shape.btt_right_chain_elems()
+            );
+            // Fused QKV serving shares Z2: saves exactly 2 K r_d N vs
+            // three separate applies.
+            assert_eq!(
+                3 * shape.btt_serve_muls(k) - shape.btt_serve_qkv_muls(k),
+                2 * k * r_d * shape.n()
+            );
+            assert_eq!(shape.merged_factor_elems(), r_d * (shape.m() + shape.n()));
+        });
+    }
+
+    #[test]
+    fn serving_bytes_follow_precision() {
+        use crate::tensor::Precision;
+        let shape = LinearShape::paper();
+        for k in [1u64, 8, 32] {
+            for prec in [Precision::Bf16, Precision::F16] {
+                assert_eq!(
+                    2 * shape.btt_serve_transient_bytes(k, prec),
+                    shape.btt_serve_transient_bytes(k, Precision::F32)
+                );
+            }
+            assert_eq!(
+                shape.btt_serve_transient_bytes(k, Precision::F32),
+                4 * shape.btt_serve_transient_elems(k)
+            );
+        }
     }
 
     #[test]

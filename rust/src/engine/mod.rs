@@ -1,0 +1,645 @@
+//! The shared batched forward engine — single source of truth for the
+//! `(B, S)` inference pass (TTM embedding → fused-QKV encoder stack →
+//! pooler → intent/slot heads).
+//!
+//! Three consumers run this exact computation:
+//!
+//! * **training** ([`crate::train::NativeTrainModel`]) layers activation
+//!   caching and the hand-derived backward on top of the same blocks
+//!   ([`crate::train::layers`], [`crate::tensor::ops`]); its `eval` is
+//!   pinned bitwise-equal to [`NativeEngine::forward`] by parity tests;
+//! * **single-example predict** (the deployment path of
+//!   `examples/serve_native.rs` and the paper's on-device setting);
+//! * **the serving scheduler** ([`crate::serve`]), which coalesces
+//!   concurrent requests into dynamic micro-batches and needs one dense
+//!   `(B, S')` forward per bucket.
+//!
+//! The engine honors the same two knobs as training:
+//!
+//! * [`ComputePath`] — fused QKV (one shared input-side merge and one
+//!   `Z2 = X Z1ᵀ` across Q/K/V when the input cores are tied) and
+//!   batched attention vs the looped reference schedule;
+//! * [`Precision`] — weights at rest and every intermediate that
+//!   training would *store* are rounded at the same program points
+//!   (round-to-nearest-even to bf16/f16), so half-precision serving
+//!   reproduces the training forward bit-for-bit.
+//!
+//! **Bitwise parity by construction.**  Training's
+//! [`crate::train::layers::TTLinear::forward_ckpt`] computes
+//! `xq = round(x)`, merges the chains with round-on-store
+//! (`merge_{left,right}_chain_prec`), rounds `Z2 = xq Z1ᵀ`, and emits
+//! `Y = Z2 Z3ᵀ + b` unrounded.  [`MergedLinear`] keeps only the *final*
+//! chain states (Z3, Z1) — which are exactly the values training folds
+//! through — and mirrors the same rounding points, so its outputs are
+//! bitwise identical at every [`Precision`] and both [`ComputePath`]s.
+//! Merging happens once at load (the accelerator's on-chip core
+//! buffers); per-request work is the two K-wide applies of Eq. 20
+//! without the Eq. 21 cache charge
+//! ([`crate::costmodel::LinearShape::btt_serve_muls`]).
+//!
+//! **Variable sequence length.**  [`NativeEngine::forward_len`] runs the
+//! stack at any `S' ≤ S`: every op is per-row except attention, where
+//! pad keys receive an exact-zero probability (additive `-inf` bias), so
+//! trimming trailing pads is value-preserving — the serving layer
+//! buckets requests by padded length to keep the `bmm*` kernels dense
+//! without changing any prediction.
+
+use crate::config::ModelConfig;
+use crate::coordinator::metrics::argmax;
+use crate::tensor::{ops, Precision, Tensor, TTMEmbedding, TTMatrix};
+use crate::train::{blocks, layers};
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashMap};
+
+/// Flat parameter map: manifest name -> (shape, data).  The naming
+/// scheme is shared by the AOT manifest (`python/compile/model.py`),
+/// native checkpoints and [`crate::train::NativeTrainModel::to_params`].
+pub type ParamMap = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
+
+/// Compute-schedule selection for the batched forward (training and
+/// serving).  Both knobs default to the fast path; the looped settings
+/// reproduce the pre-fusion schedule for parity tests and benchmark
+/// baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ComputePath {
+    /// Share the input-side merge chain and `Z2` across Q/K/V
+    /// ([`crate::train::layers::forward_qkv_fused`]).  Applies per
+    /// layer, only where the input cores are tied — untied checkpoints
+    /// fall back to three separate forwards automatically.
+    pub fused_qkv: bool,
+    /// Run attention as one batched `(B, heads, S, S)` block instead of
+    /// `B` per-example calls.
+    pub batched_attention: bool,
+}
+
+impl Default for ComputePath {
+    fn default() -> Self {
+        ComputePath { fused_qkv: true, batched_attention: true }
+    }
+}
+
+impl ComputePath {
+    /// The fast path (default): fused QKV + batched attention.
+    pub fn fused() -> ComputePath {
+        ComputePath::default()
+    }
+
+    /// The pre-fusion reference schedule: three separate TT forwards
+    /// and a per-example attention loop.
+    pub fn looped() -> ComputePath {
+        ComputePath { fused_qkv: false, batched_attention: false }
+    }
+}
+
+/// Key mask (1.0 = keep, 0.0 = pad) for a token block — the single
+/// definition shared by training and the engine.
+pub fn pad_mask(tokens: &[i32], pad_id: i32) -> Vec<f32> {
+    tokens
+        .iter()
+        .map(|&t| if t == pad_id { 0.0 } else { 1.0 })
+        .collect()
+}
+
+/// A TT linear layer with pre-merged BTT factors — the final states of
+/// the round-on-store merge chains training folds through, cached once
+/// at load like the accelerator's on-chip core buffers.
+pub struct MergedLinear {
+    /// Z3 (M, r_d) — merged output-mode cores (left chain tail).
+    z3: Tensor,
+    /// Z1 (r_d, N) — merged input-mode cores (right chain tail).
+    z1: Tensor,
+    bias: Vec<f32>,
+}
+
+impl MergedLinear {
+    /// Merge a TT matrix at storage precision `prec`: the chains are
+    /// folded with round-on-store (`merge_*_chain_prec`), exactly as
+    /// the training forward builds them, and only the final states are
+    /// retained.
+    pub fn from_tt_prec(tt: &TTMatrix, bias: Vec<f32>, prec: Precision) -> Result<MergedLinear> {
+        let z3 = tt.merge_left_chain_prec(prec)?.pop().expect("d >= 1");
+        let z1 = tt.merge_right_chain_prec(prec)?.pop().expect("d >= 1");
+        Ok(MergedLinear { z3, z1, bias })
+    }
+
+    /// Shared intermediate `Z2 = Xq Z1ᵀ (K, r_d)`, rounded on store —
+    /// the same program point as training's `build_btt_states`.
+    /// `xq` must already be rounded to `prec` (rounding is idempotent).
+    fn z2_from(&self, xq: &Tensor, prec: Precision) -> Result<Tensor> {
+        Ok(prec.round_tensor_owned(xq.matmul(&self.z1.t()?)?))
+    }
+
+    /// Output apply `Y = Z2 Z3ᵀ + b (K, M)` — unrounded, as in
+    /// training.
+    fn apply_z2(&self, z2: &Tensor) -> Result<Tensor> {
+        Ok(ops::add_row(&z2.matmul(&self.z3.t()?)?, &self.bias))
+    }
+
+    /// `y = W x + b` with x as rows: (K, N) -> (K, M), through the
+    /// rounded Z2 — bitwise the training forward's output.
+    pub fn apply(&self, x: &Tensor, prec: Precision) -> Result<Tensor> {
+        let xq = prec.round_tensor(x);
+        self.apply_z2(&self.z2_from(&xq, prec)?)
+    }
+}
+
+/// One encoder block with pre-merged projections.
+struct EngineLayer {
+    wq: MergedLinear,
+    wk: MergedLinear,
+    wv: MergedLinear,
+    wo: MergedLinear,
+    w1: MergedLinear,
+    w2: MergedLinear,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// Input-side cores bitwise tied across Q/K/V at load time — the
+    /// precondition of the fused schedule, checked once here instead of
+    /// per forward.
+    qkv_tied: bool,
+}
+
+/// The shared batched inference engine: parameters assembled from a
+/// flat name->array map, merged once, then served read-only (the
+/// struct is `Send + Sync`; the scheduler shares it across threads via
+/// `Arc`).
+pub struct NativeEngine {
+    pub cfg: ModelConfig,
+    /// Compute-schedule selection (fused/batched by default).
+    pub compute_path: ComputePath,
+    /// Storage precision the merges and intermediates are rounded to
+    /// (f32 default = bitwise full precision).
+    pub precision: Precision,
+    embedding: TTMEmbedding,
+    pos: Tensor, // (S, H)
+    layers: Vec<EngineLayer>,
+    pool: MergedLinear,
+    intent_w: Tensor, // (n_intents, H)
+    intent_b: Vec<f32>,
+    slot_w: Tensor, // (n_slots, H)
+    slot_b: Vec<f32>,
+}
+
+impl NativeEngine {
+    /// Assemble from named parameters at full precision with the
+    /// default (fused) compute path — the drop-in replacement for the
+    /// retired single-example `inference::NativeModel`.
+    pub fn from_params(cfg: &ModelConfig, params: &ParamMap) -> Result<NativeEngine> {
+        NativeEngine::from_params_with(cfg, params, ComputePath::default(), Precision::F32)
+    }
+
+    /// Assemble from named parameters under an explicit compute path
+    /// and storage precision.  Under a half precision the raw
+    /// parameters are rounded at rest first (idempotent for
+    /// checkpoints trained at that precision — training's
+    /// `set_precision` stores rounded weights, so `to_params` round
+    /// trips bitwise), then the merge chains fold with round-on-store.
+    pub fn from_params_with(
+        cfg: &ModelConfig,
+        params: &ParamMap,
+        compute_path: ComputePath,
+        precision: Precision,
+    ) -> Result<NativeEngine> {
+        let get = |name: &str| -> Result<(&Vec<usize>, &Vec<f32>)> {
+            params
+                .get(name)
+                .map(|(s, d)| (s, d))
+                .ok_or_else(|| anyhow!("missing parameter '{name}'"))
+        };
+        let quant = |mut v: Vec<f32>| -> Vec<f32> {
+            if precision.is_half() {
+                precision.round_slice_in_place(&mut v);
+            }
+            v
+        };
+        let tensor = |name: &str| -> Result<Tensor> {
+            let (shape, data) = get(name)?;
+            Tensor::from_vec(quant(data.clone()), shape)
+        };
+        let vec1 = |name: &str| -> Result<Vec<f32>> { Ok(quant(get(name)?.1.clone())) };
+
+        // TTM embedding cores.
+        let d = cfg.ttm_vocab_modes.len();
+        let mut ttm_cores = Vec::with_capacity(d);
+        for k in 0..d {
+            ttm_cores.push(tensor(&format!("embed.ttm.{k}"))?);
+        }
+        let mut ranks = vec![cfg.ttm_rank; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        let embedding = TTMEmbedding {
+            cores: ttm_cores,
+            hid_modes: cfg.ttm_hid_modes.clone(),
+            vocab_modes: cfg.ttm_vocab_modes.clone(),
+            ranks,
+        };
+
+        // Raw TT matrices first (the fused-schedule tie check compares
+        // cores, which the merges destroy), then merge.
+        let tt_matrix = |prefix: &str| -> Result<TTMatrix> {
+            let d2 = cfg.tt_m.len() + cfg.tt_n.len();
+            let mut cores = Vec::with_capacity(d2);
+            for k in 0..d2 {
+                cores.push(tensor(&format!("{prefix}.cores.{k}"))?);
+            }
+            Ok(TTMatrix {
+                cores,
+                m_modes: cfg.tt_m.clone(),
+                n_modes: cfg.tt_n.clone(),
+                ranks: cfg.tt_ranks(),
+            })
+        };
+        let merged = |prefix: &str, tt: &TTMatrix| -> Result<MergedLinear> {
+            MergedLinear::from_tt_prec(tt, vec1(&format!("{prefix}.bias"))?, precision)
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |name: &str| format!("layers.{i}.{name}");
+            let q_tt = tt_matrix(&p("wq"))?;
+            let k_tt = tt_matrix(&p("wk"))?;
+            let v_tt = tt_matrix(&p("wv"))?;
+            let qkv_tied = layers::tt_input_cores_tied(&q_tt, &k_tt, &v_tt);
+            layers.push(EngineLayer {
+                wq: merged(&p("wq"), &q_tt)?,
+                wk: merged(&p("wk"), &k_tt)?,
+                wv: merged(&p("wv"), &v_tt)?,
+                wo: merged(&p("wo"), &tt_matrix(&p("wo"))?)?,
+                w1: merged(&p("w1"), &tt_matrix(&p("w1"))?)?,
+                w2: merged(&p("w2"), &tt_matrix(&p("w2"))?)?,
+                ln1_g: vec1(&p("ln1.g"))?,
+                ln1_b: vec1(&p("ln1.b"))?,
+                ln2_g: vec1(&p("ln2.g"))?,
+                ln2_b: vec1(&p("ln2.b"))?,
+                qkv_tied,
+            });
+        }
+
+        Ok(NativeEngine {
+            cfg: cfg.clone(),
+            compute_path,
+            precision,
+            embedding,
+            pos: tensor("embed.pos")?,
+            layers,
+            pool: merged("cls.pool", &tt_matrix("cls.pool")?)?,
+            intent_w: tensor("cls.intent_w")?,
+            intent_b: vec1("cls.intent_b")?,
+            slot_w: tensor("cls.slot_w")?,
+            slot_b: vec1("cls.slot_b")?,
+        })
+    }
+
+    /// Batched forward over a `(B, S)` token block (row-major, full
+    /// configured sequence length).  Returns `(intent_logits
+    /// (B*n_intents), slot_logits (B*S*n_slots))` row-major — the same
+    /// contract as [`crate::train::NativeTrainModel::eval`], to which
+    /// it is bitwise identical.
+    pub fn forward(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.forward_len(tokens, self.cfg.seq_len)
+    }
+
+    /// Batched forward over a `(B, S')` token block at an explicit
+    /// padded length `1 <= S' <= S`.  Positional rows `0..S'` are a
+    /// prefix of the fixed table and pad keys carry exact-zero
+    /// attention probability, so a request padded to a shorter bucket
+    /// produces the same logits for its valid positions as the full-S
+    /// padding — this is what lets the serving scheduler bucket by
+    /// length and keep the `bmm*` kernels dense.
+    pub fn forward_len(&self, tokens: &[i32], seq: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let cfg = &self.cfg;
+        let h = cfg.d_hid;
+        if seq == 0 || seq > cfg.seq_len {
+            return Err(anyhow!(
+                "padded length {seq} out of range 1..={}",
+                cfg.seq_len
+            ));
+        }
+        if tokens.is_empty() || tokens.len() % seq != 0 {
+            return Err(anyhow!(
+                "tokens must be (B, {seq}) row-major, got {} ids",
+                tokens.len()
+            ));
+        }
+        let b = tokens.len() / seq;
+        let k_rows = b * seq;
+        let prec = self.precision;
+        let mask = pad_mask(tokens, cfg.pad_id);
+
+        // Embedding: TTM lookup memoized per unique token id (the
+        // round-on-store chain's final state is the embedding row) +
+        // positional table per slot.
+        let mut x = Tensor::zeros(&[k_rows, h]);
+        let mut rows: HashMap<i32, Vec<f32>> = HashMap::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            if !rows.contains_key(&t) {
+                let (_, states) = self.embedding.lookup_cached_prec(t as usize, prec)?;
+                rows.insert(t, states.into_iter().last().expect("nonempty").data);
+            }
+            let row = &rows[&t];
+            let p = i % seq;
+            for j in 0..h {
+                x.data[i * h + j] = row[j] + self.pos.at2(p, j);
+            }
+        }
+
+        let bias = ops::attention_bias_from_mask(&mask);
+        for layer in &self.layers {
+            // QKV projections: fused schedule (one rounded Z2 shared by
+            // the three output applies) when selected and tied, else
+            // three separate applies — both bitwise the training paths.
+            let (q, k, v) = if self.compute_path.fused_qkv && layer.qkv_tied {
+                let xq = prec.round_tensor(&x);
+                let z2 = layer.wq.z2_from(&xq, prec)?;
+                (
+                    layer.wq.apply_z2(&z2)?,
+                    layer.wk.apply_z2(&z2)?,
+                    layer.wv.apply_z2(&z2)?,
+                )
+            } else {
+                (
+                    layer.wq.apply(&x, prec)?,
+                    layer.wk.apply(&x, prec)?,
+                    layer.wv.apply(&x, prec)?,
+                )
+            };
+            // Attention never mixes examples: one batched
+            // (B, heads, S', S') block or the looped per-example
+            // reference, per the selected path.
+            let ctx = if self.compute_path.batched_attention {
+                ops::multi_head_attention_batched(&q, &k, &v, &bias, cfg.n_heads, b)?.0
+            } else {
+                let mut ctx = Tensor::zeros(&[k_rows, h]);
+                for e in 0..b {
+                    let slice = |t: &Tensor| -> Result<Tensor> {
+                        Tensor::from_vec(t.data[e * seq * h..(e + 1) * seq * h].to_vec(), &[seq, h])
+                    };
+                    let (ctx_e, _) = ops::multi_head_attention(
+                        &slice(&q)?,
+                        &slice(&k)?,
+                        &slice(&v)?,
+                        &mask[e * seq..(e + 1) * seq],
+                        cfg.n_heads,
+                    )?;
+                    ctx.data[e * seq * h..(e + 1) * seq * h].copy_from_slice(&ctx_e.data);
+                }
+                ctx
+            };
+            let o = layer.wo.apply(&ctx, prec)?;
+            // Same LN entry point as training (cache dropped) — ensures
+            // identical bits rather than a re-derived formula.
+            let (x1, _) = blocks::layer_norm_fwd(&ops::add(&x, &o), &layer.ln1_g, &layer.ln1_b, 1e-5);
+            let h1 = layer.w1.apply(&x1, prec)?;
+            let ffn = layer.w2.apply(&ops::gelu(&h1), prec)?;
+            let (x2, _) =
+                blocks::layer_norm_fwd(&ops::add(&x1, &ffn), &layer.ln2_g, &layer.ln2_b, 1e-5);
+            x = x2;
+        }
+
+        // Classifier: shared TT pooler + heads; per-example CLS rows
+        // drive the intent head.
+        let pooled = ops::tanh(&self.pool.apply(&x, prec)?);
+        let cls = ops::cls_rows(&pooled, b, seq)?;
+        let intent = ops::add_row(&cls.matmul(&self.intent_w.t()?)?, &self.intent_b);
+        let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
+        Ok((intent.data, slots.data))
+    }
+
+    /// Greedy predictions `(intent_id, slot_ids)` for one sequence of
+    /// `1..=S` token ids (trailing pads may be trimmed — the logits for
+    /// the remaining positions are unchanged).
+    pub fn predict(&self, tokens: &[i32]) -> Result<(usize, Vec<usize>)> {
+        let (il, sl) = self.forward_len(tokens, tokens.len())?;
+        let ns = self.cfg.n_slots;
+        Ok((argmax(&il), sl.chunks(ns).map(argmax).collect()))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    pub(crate) fn put(
+        map: &mut ParamMap,
+        rng: &mut SplitMix64,
+        name: &str,
+        shape: Vec<usize>,
+        std: f32,
+    ) {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32 * std).collect();
+        map.insert(name.to_string(), (shape, data));
+    }
+
+    fn put_const(map: &mut ParamMap, name: &str, shape: Vec<usize>, value: f32) {
+        let n: usize = shape.iter().product();
+        map.insert(name.to_string(), (shape, vec![value; n]));
+    }
+
+    fn put_linear(map: &mut ParamMap, rng: &mut SplitMix64, cfg: &ModelConfig, prefix: &str) {
+        let modes: Vec<usize> = cfg.tt_m.iter().chain(&cfg.tt_n).copied().collect();
+        let ranks = cfg.tt_ranks();
+        for k in 0..modes.len() {
+            put(
+                map,
+                rng,
+                &format!("{prefix}.cores.{k}"),
+                vec![ranks[k], modes[k], ranks[k + 1]],
+                0.3,
+            );
+        }
+        put(map, rng, &format!("{prefix}.bias"), vec![cfg.d_hid], 0.01);
+    }
+
+    /// Build a random ParamMap at a small config for unit tests.
+    pub(crate) fn tiny_params(cfg: &ModelConfig, seed: u64) -> ParamMap {
+        let mut rng = SplitMix64::new(seed);
+        let mut map = ParamMap::new();
+        let d = cfg.ttm_vocab_modes.len();
+        let mut rr = vec![cfg.ttm_rank; d + 1];
+        rr[0] = 1;
+        rr[d] = 1;
+        for k in 0..d {
+            put(
+                &mut map,
+                &mut rng,
+                &format!("embed.ttm.{k}"),
+                vec![rr[k], cfg.ttm_hid_modes[k], cfg.ttm_vocab_modes[k], rr[k + 1]],
+                0.25,
+            );
+        }
+        put(&mut map, &mut rng, "embed.pos", vec![cfg.seq_len, cfg.d_hid], 0.02);
+        for i in 0..cfg.n_layers {
+            for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                put_linear(&mut map, &mut rng, cfg, &format!("layers.{i}.{w}"));
+            }
+            put_const(&mut map, &format!("layers.{i}.ln1.g"), vec![cfg.d_hid], 1.0);
+            put_const(&mut map, &format!("layers.{i}.ln1.b"), vec![cfg.d_hid], 0.0);
+            put_const(&mut map, &format!("layers.{i}.ln2.g"), vec![cfg.d_hid], 1.0);
+            put_const(&mut map, &format!("layers.{i}.ln2.b"), vec![cfg.d_hid], 0.0);
+        }
+        put_linear(&mut map, &mut rng, cfg, "cls.pool");
+        put(&mut map, &mut rng, "cls.intent_w", vec![cfg.n_intents, cfg.d_hid], 0.05);
+        put_const(&mut map, "cls.intent_b", vec![cfg.n_intents], 0.0);
+        put(&mut map, &mut rng, "cls.slot_w", vec![cfg.n_slots, cfg.d_hid], 0.05);
+        put_const(&mut map, "cls.slot_b", vec![cfg.n_slots], 0.0);
+        map
+    }
+
+    pub(crate) fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            n_layers: 1,
+            d_hid: 48,
+            n_heads: 4,
+            seq_len: 8,
+            batch: 1,
+            vocab: 27,
+            n_intents: 5,
+            n_slots: 7,
+            tt_m: vec![4, 4, 3],
+            tt_n: vec![3, 4, 4],
+            tt_rank: 3,
+            ttm_vocab_modes: vec![3, 3, 3],
+            ttm_hid_modes: vec![4, 4, 3],
+            ttm_rank: 4,
+            pad_id: 0,
+            cls_id: 1,
+            unk_id: 2,
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 1)).unwrap();
+        let tokens = vec![1, 5, 9, 13, 0, 0, 0, 0];
+        let (il, sl) = engine.forward(&tokens).unwrap();
+        assert_eq!(il.len(), cfg.n_intents);
+        assert_eq!(sl.len(), cfg.seq_len * cfg.n_slots);
+        assert!(il.iter().all(|v| v.is_finite()));
+        assert!(sl.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 2)).unwrap();
+        let tokens = vec![1, 3, 4, 5, 6, 0, 0, 0];
+        assert_eq!(engine.forward(&tokens).unwrap(), engine.forward(&tokens).unwrap());
+    }
+
+    #[test]
+    fn padding_is_inert() {
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 3)).unwrap();
+        let tokens = vec![1, 0, 0, 0, 0, 0, 0, 0];
+        let (il, _) = engine.forward(&tokens).unwrap();
+        assert!(il.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn predict_ranges() {
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 4)).unwrap();
+        let tokens = vec![1, 7, 8, 2, 11, 0, 0, 0];
+        let (intent, slots) = engine.predict(&tokens).unwrap();
+        assert!(intent < cfg.n_intents);
+        assert_eq!(slots.len(), cfg.seq_len);
+        assert!(slots.iter().all(|&s| s < cfg.n_slots));
+    }
+
+    #[test]
+    fn missing_param_is_reported() {
+        let cfg = tiny_cfg();
+        let mut p = tiny_params(&cfg, 5);
+        p.remove("cls.intent_w");
+        let err = match NativeEngine::from_params(&cfg, &p) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-parameter error"),
+        };
+        assert!(err.to_string().contains("cls.intent_w"));
+    }
+
+    #[test]
+    fn batched_forward_matches_singles() {
+        // A (2, S) block is the per-example forwards concatenated —
+        // exactly (the blocked kernels accumulate per output row).
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 6)).unwrap();
+        let a = vec![1, 5, 9, 13, 0, 0, 0, 0];
+        let b = vec![1, 3, 2, 7, 11, 26, 4, 0];
+        let both: Vec<i32> = a.iter().chain(&b).copied().collect();
+        let (il, sl) = engine.forward(&both).unwrap();
+        let (il_a, sl_a) = engine.forward(&a).unwrap();
+        let (il_b, sl_b) = engine.forward(&b).unwrap();
+        assert_eq!(il[..cfg.n_intents], il_a[..]);
+        assert_eq!(il[cfg.n_intents..], il_b[..]);
+        assert_eq!(sl[..cfg.seq_len * cfg.n_slots], sl_a[..]);
+        assert_eq!(sl[cfg.seq_len * cfg.n_slots..], sl_b[..]);
+    }
+
+    #[test]
+    fn trimmed_padding_is_value_preserving() {
+        // forward_len at a shorter padded length reproduces the full-S
+        // logits for the surviving positions: pad keys carry an exact
+        // zero probability, every other op is per-row.
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 7)).unwrap();
+        let full = vec![1, 7, 8, 2, 0, 0, 0, 0]; // eff = 4
+        let (il_full, sl_full) = engine.forward(&full).unwrap();
+        for seq in 4..cfg.seq_len {
+            let (il, sl) = engine.forward_len(&full[..seq], seq).unwrap();
+            assert_eq!(il, il_full, "intent logits diverge at S'={seq}");
+            assert_eq!(
+                sl[..],
+                sl_full[..seq * cfg.n_slots],
+                "slot logits diverge at S'={seq}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_len_rejects_bad_lengths() {
+        let cfg = tiny_cfg();
+        let engine = NativeEngine::from_params(&cfg, &tiny_params(&cfg, 8)).unwrap();
+        assert!(engine.forward_len(&[1, 2, 3], 0).is_err());
+        assert!(engine.forward_len(&[1; 9], 9).is_err()); // > seq_len
+        assert!(engine.forward_len(&[1, 2, 3], 2).is_err()); // not a multiple
+        assert!(engine.forward(&[1; 12]).is_err()); // not a multiple of S
+    }
+
+    #[test]
+    fn compute_paths_agree_on_untied_params() {
+        // Random (untied) parameters: the fused knob falls back to
+        // separate applies, and batched vs looped attention is pinned
+        // bitwise equal — so every path selection yields identical
+        // logits here.
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 9);
+        let tokens = vec![1, 5, 9, 13, 2, 0, 0, 0, 1, 3, 4, 0, 0, 0, 0, 0];
+        let fused =
+            NativeEngine::from_params_with(&cfg, &params, ComputePath::fused(), Precision::F32)
+                .unwrap();
+        let looped =
+            NativeEngine::from_params_with(&cfg, &params, ComputePath::looped(), Precision::F32)
+                .unwrap();
+        assert_eq!(fused.forward(&tokens).unwrap(), looped.forward(&tokens).unwrap());
+    }
+
+    #[test]
+    fn half_precision_forward_is_finite_and_deterministic() {
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 10);
+        let tokens = vec![1, 5, 9, 13, 0, 0, 0, 0];
+        for prec in [Precision::Bf16, Precision::F16] {
+            let engine =
+                NativeEngine::from_params_with(&cfg, &params, ComputePath::fused(), prec).unwrap();
+            let (il, sl) = engine.forward(&tokens).unwrap();
+            assert!(il.iter().chain(&sl).all(|v| v.is_finite()));
+            assert_eq!((il, sl), engine.forward(&tokens).unwrap());
+        }
+    }
+}

@@ -1,388 +1,39 @@
-//! Rust-native tensorized-transformer inference engine.
+//! Native inference — now a thin façade over the shared batched
+//! engine.
 //!
-//! Runs the complete forward pass (TTM embedding, BTT linears, masked
-//! attention, LayerNorm/GELU, intent + slot heads) directly on the
-//! [`crate::tensor`] substrate — no XLA, no Python, no artifacts beyond
-//! the trained parameters.  Two purposes:
+//! This module used to carry its own single-example encoder forward.
+//! That duplicate (and lagging: no fused QKV, no batched attention, no
+//! precision awareness) implementation is gone: **the forward lives in
+//! [`crate::engine`]** and is the single source of truth shared by
+//! training ([`crate::train::NativeTrainModel::eval`] is pinned bitwise
+//! equal to it), single-example `predict`, and the serving scheduler
+//! ([`crate::serve`]).
 //!
-//! * **deployment path**: a trained checkpoint can serve predictions on
-//!   targets where a PJRT runtime is unavailable (the embedded-device
-//!   story the paper motivates);
-//! * **cross-validation**: `rust/tests/native_parity.rs` asserts this
-//!   engine's logits match the PJRT/HLO path on the same parameters —
-//!   an end-to-end oracle spanning the whole stack.
+//! What remains here:
 //!
-//! Computation follows the paper exactly: every linear layer is applied
-//! via the **BTT contraction** (merge once per layer, K-wide applies),
-//! and the merged `Z1`/`Z3` factors are cached like the accelerator's
-//! on-chip core buffers.
-//!
-//! The forward blocks (BTT apply, [`ops::multi_head_attention`],
-//! LayerNorm/GELU) are shared with the native *training* path
-//! ([`crate::train`]), which runs the same math plus activation caching
-//! and the hand-derived backward — the two paths cannot drift.
+//! * the historical `NativeModel` name as an alias of
+//!   [`crate::engine::NativeEngine`] (same constructor and `forward` /
+//!   `predict` contracts, now batch-capable), so existing deployment
+//!   code and the parity tests keep compiling;
+//! * [`params_from_engine`] — the PJRT-runtime bridge that pulls a
+//!   [`ParamMap`] out of a live [`crate::runtime::Engine`] (behind the
+//!   `pjrt` feature).
 
-use crate::config::ModelConfig;
-use crate::tensor::ops;
-use crate::tensor::{Tensor, TTMEmbedding, TTMatrix};
-use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+pub use crate::engine::{NativeEngine, ParamMap};
 
-/// A TT linear layer with pre-merged BTT factors.
-struct BttLinear {
-    /// Z3 (M, r) — merged output-mode cores.
-    z3: Tensor,
-    /// Z1 (r, N) — merged input-mode cores.
-    z1: Tensor,
-    bias: Vec<f32>,
-}
-
-impl BttLinear {
-    fn from_tt(tt: &TTMatrix, bias: Vec<f32>) -> Result<BttLinear> {
-        Ok(BttLinear { z3: tt.merge_left()?, z1: tt.merge_right()?, bias })
-    }
-
-    /// `y = W x + b` with x as rows: (K, N) -> (K, M).
-    fn apply(&self, x_rows: &Tensor) -> Result<Tensor> {
-        // Row-major apply: Y^T = X Z1^T Z3^T.
-        let z2 = x_rows.matmul(&self.z1.t()?)?; // (K, r)
-        let y = z2.matmul(&self.z3.t()?)?; // (K, M)
-        Ok(ops::add_row(&y, &self.bias))
-    }
-}
-
-struct LayerNormParams {
-    g: Vec<f32>,
-    b: Vec<f32>,
-}
-
-struct EncoderLayer {
-    wq: BttLinear,
-    wk: BttLinear,
-    wv: BttLinear,
-    wo: BttLinear,
-    w1: BttLinear,
-    w2: BttLinear,
-    ln1: LayerNormParams,
-    ln2: LayerNormParams,
-}
-
-/// The native model: parameters assembled from a flat name->array map
-/// (the manifest naming scheme of `python/compile/model.py`).
-pub struct NativeModel {
-    pub cfg: ModelConfig,
-    embedding: TTMEmbedding,
-    pos: Tensor, // (S, H)
-    layers: Vec<EncoderLayer>,
-    pool: BttLinear,
-    intent_w: Tensor, // (n_intents, H)
-    intent_b: Vec<f32>,
-    slot_w: Tensor, // (n_slots, H)
-    slot_b: Vec<f32>,
-}
-
-/// Flat parameter map: manifest name -> (shape, data).
-pub type ParamMap = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
-
-impl NativeModel {
-    /// Assemble from named parameters (e.g. pulled from a live
-    /// [`crate::runtime::Engine`] or a checkpoint directory).
-    pub fn from_params(cfg: &ModelConfig, params: &ParamMap) -> Result<NativeModel> {
-        let get = |name: &str| -> Result<(&Vec<usize>, &Vec<f32>)> {
-            params
-                .get(name)
-                .map(|(s, d)| (s, d))
-                .ok_or_else(|| anyhow!("missing parameter '{name}'"))
-        };
-        let tensor = |name: &str| -> Result<Tensor> {
-            let (shape, data) = get(name)?;
-            Tensor::from_vec(data.clone(), shape)
-        };
-        let vec1 = |name: &str| -> Result<Vec<f32>> { Ok(get(name)?.1.clone()) };
-
-        // TTM embedding cores.
-        let d = cfg.ttm_vocab_modes.len();
-        let mut ttm_cores = Vec::with_capacity(d);
-        for k in 0..d {
-            ttm_cores.push(tensor(&format!("embed.ttm.{k}"))?);
-        }
-        let mut ranks = vec![cfg.ttm_rank; d + 1];
-        ranks[0] = 1;
-        ranks[d] = 1;
-        let embedding = TTMEmbedding {
-            cores: ttm_cores,
-            hid_modes: cfg.ttm_hid_modes.clone(),
-            vocab_modes: cfg.ttm_vocab_modes.clone(),
-            ranks,
-        };
-
-        let tt_linear = |prefix: &str| -> Result<BttLinear> {
-            let d2 = cfg.tt_m.len() + cfg.tt_n.len();
-            let mut cores = Vec::with_capacity(d2);
-            for k in 0..d2 {
-                cores.push(tensor(&format!("{prefix}.cores.{k}"))?);
-            }
-            let tt = TTMatrix {
-                cores,
-                m_modes: cfg.tt_m.clone(),
-                n_modes: cfg.tt_n.clone(),
-                ranks: cfg.tt_ranks(),
-            };
-            BttLinear::from_tt(&tt, vec1(&format!("{prefix}.bias"))?)
-        };
-
-        let mut layers = Vec::with_capacity(cfg.n_layers);
-        for i in 0..cfg.n_layers {
-            let p = |name: &str| format!("layers.{i}.{name}");
-            layers.push(EncoderLayer {
-                wq: tt_linear(&p("wq"))?,
-                wk: tt_linear(&p("wk"))?,
-                wv: tt_linear(&p("wv"))?,
-                wo: tt_linear(&p("wo"))?,
-                w1: tt_linear(&p("w1"))?,
-                w2: tt_linear(&p("w2"))?,
-                ln1: LayerNormParams { g: vec1(&p("ln1.g"))?, b: vec1(&p("ln1.b"))? },
-                ln2: LayerNormParams { g: vec1(&p("ln2.g"))?, b: vec1(&p("ln2.b"))? },
-            });
-        }
-
-        Ok(NativeModel {
-            cfg: cfg.clone(),
-            embedding,
-            pos: tensor("embed.pos")?,
-            layers,
-            pool: tt_linear("cls.pool")?,
-            intent_w: tensor("cls.intent_w")?,
-            intent_b: vec1("cls.intent_b")?,
-            slot_w: tensor("cls.slot_w")?,
-            slot_b: vec1("cls.slot_b")?,
-        })
-    }
-
-    /// Forward pass for one sequence of token ids (batch 1, the paper's
-    /// deployment setting).  Returns `(intent_logits, slot_logits)` with
-    /// slot logits row-major (S, n_slots).
-    pub fn forward(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let cfg = &self.cfg;
-        let s = cfg.seq_len;
-        let h = cfg.d_hid;
-        if tokens.len() != s {
-            return Err(anyhow!("expected {s} tokens, got {}", tokens.len()));
-        }
-        let mask: Vec<f32> = tokens
-            .iter()
-            .map(|&t| if t == cfg.pad_id { 0.0 } else { 1.0 })
-            .collect();
-
-        // Embedding: TTM lookup + positional table.
-        let mut x = Tensor::zeros(&[s, h]);
-        for (i, &t) in tokens.iter().enumerate() {
-            let row = self.embedding.lookup(t as usize)?;
-            for j in 0..h {
-                x.data[i * h + j] = row.data[j] + self.pos.at2(i, j);
-            }
-        }
-
-        for layer in &self.layers {
-            x = self.encoder_block(&x, &mask, layer)?;
-        }
-
-        // Classifier: shared TT pooler + heads.
-        let pooled = ops::tanh(&self.pool.apply(&x)?); // (S, H)
-        let cls_row = Tensor::from_vec(pooled.data[..h].to_vec(), &[1, h])?;
-        let intent = ops::add_row(&cls_row.matmul(&self.intent_w.t()?)?, &self.intent_b);
-        let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
-        Ok((intent.data, slots.data))
-    }
-
-    /// Greedy predictions: `(intent_id, slot_ids)`.
-    pub fn predict(&self, tokens: &[i32]) -> Result<(usize, Vec<usize>)> {
-        let (il, sl) = self.forward(tokens)?;
-        let intent = argmax(&il);
-        let ns = self.cfg.n_slots;
-        let slots = (0..self.cfg.seq_len)
-            .map(|i| argmax(&sl[i * ns..(i + 1) * ns]))
-            .collect();
-        Ok((intent, slots))
-    }
-
-    fn encoder_block(&self, x: &Tensor, mask: &[f32], layer: &EncoderLayer) -> Result<Tensor> {
-        let cfg = &self.cfg;
-
-        let q = layer.wq.apply(x)?;
-        let k = layer.wk.apply(x)?;
-        let v = layer.wv.apply(x)?;
-
-        // Masked attention via the shared block (the accelerator's MM +
-        // softmax path); inference discards the probabilities that the
-        // training path ([`crate::train`]) keeps for backward.
-        let (attn, _probs) = ops::multi_head_attention(&q, &k, &v, mask, cfg.n_heads)?;
-
-        let o = layer.wo.apply(&attn)?;
-        let x = ops::layer_norm(&ops::add(x, &o), &layer.ln1.g, &layer.ln1.b, 1e-5);
-        let ffn = layer.w2.apply(&ops::gelu(&layer.w1.apply(&x)?))?;
-        Ok(ops::layer_norm(&ops::add(&x, &ffn), &layer.ln2.g, &layer.ln2.b, 1e-5))
-    }
-}
-
-fn argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
+/// Back-compat alias for the shared engine: the historical name of the
+/// native deployment path.  Construct with
+/// [`NativeEngine::from_params`]; `forward` accepts whole `(B, S)`
+/// blocks (a single example is the `B = 1` case of the old contract).
+pub type NativeModel = NativeEngine;
 
 /// Pull a [`ParamMap`] out of a live PJRT engine (for parity tests and
 /// for exporting trained weights to the native path).
 #[cfg(feature = "pjrt")]
-pub fn params_from_engine(engine: &crate::runtime::Engine) -> Result<ParamMap> {
+pub fn params_from_engine(engine: &crate::runtime::Engine) -> anyhow::Result<ParamMap> {
     let mut map = ParamMap::new();
     for (spec, lit) in engine.spec.params.iter().zip(engine.params()) {
         map.insert(spec.name.clone(), (spec.shape.clone(), lit.to_vec::<f32>()?));
     }
     Ok(map)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::rng::SplitMix64;
-
-    fn put(map: &mut ParamMap, rng: &mut SplitMix64, name: &str, shape: Vec<usize>, std: f32) {
-        let n: usize = shape.iter().product();
-        let data = (0..n).map(|_| rng.normal() as f32 * std).collect();
-        map.insert(name.to_string(), (shape, data));
-    }
-
-    fn put_const(map: &mut ParamMap, name: &str, shape: Vec<usize>, value: f32) {
-        let n: usize = shape.iter().product();
-        map.insert(name.to_string(), (shape, vec![value; n]));
-    }
-
-    fn put_linear(map: &mut ParamMap, rng: &mut SplitMix64, cfg: &ModelConfig, prefix: &str) {
-        let modes: Vec<usize> = cfg.tt_m.iter().chain(&cfg.tt_n).copied().collect();
-        let ranks = cfg.tt_ranks();
-        for k in 0..modes.len() {
-            put(
-                map,
-                rng,
-                &format!("{prefix}.cores.{k}"),
-                vec![ranks[k], modes[k], ranks[k + 1]],
-                0.3,
-            );
-        }
-        put(map, rng, &format!("{prefix}.bias"), vec![cfg.d_hid], 0.01);
-    }
-
-    /// Build a random ParamMap at a small config for unit tests.
-    fn tiny_params(cfg: &ModelConfig, seed: u64) -> ParamMap {
-        let mut rng = SplitMix64::new(seed);
-        let mut map = ParamMap::new();
-        let d = cfg.ttm_vocab_modes.len();
-        let mut rr = vec![cfg.ttm_rank; d + 1];
-        rr[0] = 1;
-        rr[d] = 1;
-        for k in 0..d {
-            put(
-                &mut map,
-                &mut rng,
-                &format!("embed.ttm.{k}"),
-                vec![rr[k], cfg.ttm_hid_modes[k], cfg.ttm_vocab_modes[k], rr[k + 1]],
-                0.25,
-            );
-        }
-        put(&mut map, &mut rng, "embed.pos", vec![cfg.seq_len, cfg.d_hid], 0.02);
-        for i in 0..cfg.n_layers {
-            for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
-                put_linear(&mut map, &mut rng, cfg, &format!("layers.{i}.{w}"));
-            }
-            put_const(&mut map, &format!("layers.{i}.ln1.g"), vec![cfg.d_hid], 1.0);
-            put_const(&mut map, &format!("layers.{i}.ln1.b"), vec![cfg.d_hid], 0.0);
-            put_const(&mut map, &format!("layers.{i}.ln2.g"), vec![cfg.d_hid], 1.0);
-            put_const(&mut map, &format!("layers.{i}.ln2.b"), vec![cfg.d_hid], 0.0);
-        }
-        put_linear(&mut map, &mut rng, cfg, "cls.pool");
-        put(&mut map, &mut rng, "cls.intent_w", vec![cfg.n_intents, cfg.d_hid], 0.05);
-        put_const(&mut map, "cls.intent_b", vec![cfg.n_intents], 0.0);
-        put(&mut map, &mut rng, "cls.slot_w", vec![cfg.n_slots, cfg.d_hid], 0.05);
-        put_const(&mut map, "cls.slot_b", vec![cfg.n_slots], 0.0);
-        map
-    }
-
-    fn tiny_cfg() -> ModelConfig {
-        ModelConfig {
-            n_layers: 1,
-            d_hid: 48,
-            n_heads: 4,
-            seq_len: 8,
-            batch: 1,
-            vocab: 27,
-            n_intents: 5,
-            n_slots: 7,
-            tt_m: vec![4, 4, 3],
-            tt_n: vec![3, 4, 4],
-            tt_rank: 3,
-            ttm_vocab_modes: vec![3, 3, 3],
-            ttm_hid_modes: vec![4, 4, 3],
-            ttm_rank: 4,
-            pad_id: 0,
-            cls_id: 1,
-            unk_id: 2,
-        }
-    }
-
-    #[test]
-    fn forward_shapes_and_finiteness() {
-        let cfg = tiny_cfg();
-        let model = NativeModel::from_params(&cfg, &tiny_params(&cfg, 1)).unwrap();
-        let tokens = vec![1, 5, 9, 13, 0, 0, 0, 0];
-        let (il, sl) = model.forward(&tokens).unwrap();
-        assert_eq!(il.len(), cfg.n_intents);
-        assert_eq!(sl.len(), cfg.seq_len * cfg.n_slots);
-        assert!(il.iter().all(|v| v.is_finite()));
-        assert!(sl.iter().all(|v| v.is_finite()));
-    }
-
-    #[test]
-    fn forward_deterministic() {
-        let cfg = tiny_cfg();
-        let model = NativeModel::from_params(&cfg, &tiny_params(&cfg, 2)).unwrap();
-        let tokens = vec![1, 3, 4, 5, 6, 0, 0, 0];
-        assert_eq!(model.forward(&tokens).unwrap(), model.forward(&tokens).unwrap());
-    }
-
-    #[test]
-    fn padding_is_inert() {
-        // Changing nothing (same PAD ids) must not change logits, and
-        // logits must not be NaN for an all-PAD-after-CLS input.
-        let cfg = tiny_cfg();
-        let model = NativeModel::from_params(&cfg, &tiny_params(&cfg, 3)).unwrap();
-        let tokens = vec![1, 0, 0, 0, 0, 0, 0, 0];
-        let (il, _) = model.forward(&tokens).unwrap();
-        assert!(il.iter().all(|v| v.is_finite()));
-    }
-
-    #[test]
-    fn predict_ranges() {
-        let cfg = tiny_cfg();
-        let model = NativeModel::from_params(&cfg, &tiny_params(&cfg, 4)).unwrap();
-        let tokens = vec![1, 7, 8, 2, 11, 0, 0, 0];
-        let (intent, slots) = model.predict(&tokens).unwrap();
-        assert!(intent < cfg.n_intents);
-        assert_eq!(slots.len(), cfg.seq_len);
-        assert!(slots.iter().all(|&s| s < cfg.n_slots));
-    }
-
-    #[test]
-    fn missing_param_is_reported() {
-        let cfg = tiny_cfg();
-        let mut p = tiny_params(&cfg, 5);
-        p.remove("cls.intent_w");
-        let err = match NativeModel::from_params(&cfg, &p) {
-            Err(e) => e,
-            Ok(_) => panic!("expected missing-parameter error"),
-        };
-        assert!(err.to_string().contains("cls.intent_w"));
-    }
 }

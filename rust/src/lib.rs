@@ -184,6 +184,50 @@
 //!   checkpoint written under either policy resumes bitwise under the
 //!   other at f32.
 //!
+//! ## Serving
+//!
+//! The batched `(B, S)` forward is deduplicated into a shared
+//! inference-capable engine ([`engine::NativeEngine`]) consumed by
+//! training evaluation ([`train::NativeTrainModel::eval`], pinned
+//! bitwise equal), the historical deployment name
+//! ([`inference::NativeModel`], now an alias) and a
+//! continuous-batching serving layer ([`serve`]):
+//!
+//! * **Scheduler semantics** — one executor thread over per-bucket
+//!   FIFO queues; a bucket fires when it reaches
+//!   [`serve::ServeConfig::max_batch`] requests or its oldest request
+//!   has waited [`serve::ServeConfig::max_wait`]; among ready buckets
+//!   the oldest head wins, and shutdown drains everything queued.
+//! * **Bucketing policy** — trailing pads are trimmed and the
+//!   effective length rounds up to the next multiple of
+//!   [`serve::ServeConfig::bucket`] (capped at `seq_len`); a bucket's
+//!   requests pad to that length and run as one dense `(B, S')` block,
+//!   so the `bmm*` kernels never see ragged shapes.  Trimming is
+//!   value-preserving: pad keys carry exact-zero attention probability
+//!   and every other op is per-row.
+//! * **Backpressure contract** — admission is bounded by
+//!   [`serve::ServeConfig::queue_cap`]; a submit beyond it is rejected
+//!   immediately with [`serve::SubmitError::QueueFull`] (explicit
+//!   reject, not OOM), while every *accepted* request is answered —
+//!   served, failed with its batch's error, or drained at shutdown.
+//! * **Determinism guarantee** — a request's bucket length is a pure
+//!   function of its effective length and the blocked kernels
+//!   accumulate per output row, so predictions are **bitwise
+//!   identical** whether a request is served alone, in a full bucket,
+//!   or interleaved with other lengths — across `Precision`
+//!   f32/bf16/f16 and both `ComputePath`s (`rust/tests/serving.rs`).
+//!
+//! `cargo run --release -- serve-bench` (and `cargo bench --offline --
+//! serve`) drives a multi-threaded closed-loop load generator
+//! ([`serve::loadgen`]) over {no-batching, continuous batching} x
+//! concurrency {1, 8} and records p50/p99 latency and saturation
+//! throughput per scenario into `BENCH_serve.json` (a CI artifact next
+//! to `BENCH_native_train.json`).  [`costmodel`] carries the matching
+//! analytic entry: batched inference at `(B, S)` is the Eq. 20 forward
+//! *without* the Eq. 21 cache charge
+//! ([`costmodel::LinearShape::btt_serve_muls`], surfaced by the CLI
+//! `cost-model` command).
+//!
 //! After `make artifacts` the binary is self-contained with either
 //! backend; with the native backend it is self-contained from a bare
 //! `cargo build` — the paper's end-to-end on-device training claim is
@@ -201,10 +245,12 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod engine;
 pub mod fpga;
 pub mod inference;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -7,6 +7,7 @@
 //! tt-trainer train --backend pjrt --steps 200  # train via PJRT HLO artifacts
 //! tt-trainer eval  --ckpt DIR                  # accuracy on the test split
 //! tt-trainer cost-model                        # Fig. 6 + Fig. 7 sweeps
+//! tt-trainer serve-bench --ckpt DIR            # continuous-batching load test
 //! tt-trainer bram                              # Figs. 11/12/14
 //! tt-trainer schedule                          # Figs. 9/10
 //! tt-trainer fpga-report                       # Tables IV/V, Figs. 1/15
@@ -39,6 +40,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "cost-model" => cmd_cost_model(),
+        "serve-bench" => cmd_serve_bench(&args),
         "bram" => cmd_bram(),
         "schedule" => cmd_schedule(),
         "fpga-report" => cmd_fpga_report(),
@@ -78,6 +80,12 @@ COMMANDS:
                              params first: weights-at-rest preview)
                   pjrt:    --variant tt_L2 --artifacts DIR
   cost-model    Fig. 6 comparison + Fig. 7 sweeps
+  serve-bench   load-test the continuous-batching serving scheduler
+                  --ckpt DIR | --init-ckpt DIR (else random init)
+                  --layers 2 --requests 256 --seed 42
+                  --precision f32|bf16|f16
+                  --out BENCH_serve.json
+                  grid: {no-batching, continuous} x concurrency {1, 8}
   bram          BRAM allocator study (Figs. 11/12/14)
   schedule      kernel scheduling study (Figs. 9/10)
   fpga-report   hardware simulator report (Tables IV/V, Figs. 1/15)
@@ -338,6 +346,49 @@ fn run_eval<B: TrainBackend>(trainer: Trainer<B>, args: &Args, seed: u64) -> Res
     Ok(())
 }
 
+/// Load-test the serving scheduler over the shared engine: the
+/// no-batching baseline vs continuous batching at concurrency {1, 8},
+/// writing per-scenario p50/p99 latency and saturation throughput into
+/// `BENCH_serve.json` (the CI artifact next to `BENCH_native_train.json`).
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    use tt_trainer::serve::loadgen;
+    let seed = args.get_usize("seed", 42) as u64;
+    let requests = args.get_usize("requests", 256);
+    let out = args.get_or("out", "BENCH_serve.json");
+    let precision = Precision::parse(args.get_or("precision", "f32"))?;
+    let optim = OptimConfig { precision, ..OptimConfig::default() };
+    // Same checkpoint semantics as eval: --ckpt / --init-ckpt load a
+    // native checkpoint, otherwise the engine serves the random init
+    // (latency is weight-value-independent, so the bench stands alone).
+    let backend = native_backend(args, seed, &["init-ckpt", "ckpt"], optim)?;
+    let engine = Arc::new(backend.model.engine()?);
+    let (_, test) = Dataset::paper_splits(backend.config(), seed);
+    let corpus: Vec<Vec<i32>> = test.examples.iter().map(|ex| ex.tokens.clone()).collect();
+    println!(
+        "serve-bench: {} corpus rows | {requests} requests/scenario | precision {}",
+        corpus.len(),
+        precision.name()
+    );
+    let mut reports = Vec::new();
+    println!(
+        "{:<16} {:>5} {:>9} {:>9} {:>9} {:>11} {:>10} {:>9}",
+        "scenario", "conc", "p50(ms)", "p99(ms)", "mean(ms)", "thru(req/s)", "mean-batch", "rejected"
+    );
+    for spec in loadgen::default_scenarios(requests) {
+        let r = loadgen::run_load(&engine, &corpus, &spec)?;
+        println!(
+            "{:<16} {:>5} {:>9.3} {:>9.3} {:>9.3} {:>11.1} {:>10.2} {:>9}",
+            r.name, r.concurrency, r.p50_ms, r.p99_ms, r.mean_ms, r.throughput_rps,
+            r.mean_batch, r.rejected
+        );
+        reports.push(r);
+    }
+    std::fs::write(out, loadgen::bench_json(&reports))?;
+    println!("scenario reports written to {out}");
+    Ok(())
+}
+
 fn cmd_cost_model() -> Result<()> {
     println!("=== Fig. 6: costs at the Table II shape, seq len 32 ===");
     let shape = LinearShape::uniform(&[8, 8, 12], &[12, 8, 8], 12);
@@ -397,6 +448,32 @@ fn cmd_cost_model() -> Result<()> {
         "Eq. 21 cache per TT linear at K=32: {} B (f32) -> {} B (bf16)",
         shape.btt_memory_bytes(32, Precision::F32),
         shape.btt_memory_bytes(32, Precision::Bf16)
+    );
+    println!("\n=== Serving: batched inference on merged factors (no Eq. 21 charge) ===");
+    println!(
+        "merged factors at rest: {} elements per linear (vs {} TT-core elements)",
+        shape.merged_factor_elems(),
+        shape.tt_params()
+    );
+    println!(
+        "{:<6} {:>14} {:>18} {:>16}",
+        "B", "serve muls", "fused-QKV muls", "transient elems"
+    );
+    for b in [1u64, 4, 16] {
+        let k = b * 32; // K = B * S at the paper's seq len
+        println!(
+            "{:<6} {:>14} {:>18} {:>16}",
+            b,
+            shape.btt_serve_muls(k),
+            shape.btt_serve_qkv_muls(k),
+            shape.btt_serve_transient_elems(k)
+        );
+    }
+    println!(
+        "(training forward at K=32 is {} muls: serving amortizes the {} merge muls \
+         across all requests)",
+        shape.btt_muls(32),
+        shape.btt_left_merge_muls() + shape.btt_right_merge_muls()
     );
     println!("\n=== Fig. 7 (top): sequence-length sweep at rank 12 ===");
     print!(

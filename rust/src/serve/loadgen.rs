@@ -1,0 +1,298 @@
+//! Multi-threaded closed-loop load generator for the serving
+//! scheduler — the measurement half of `BENCH_serve.json`.
+//!
+//! Each scenario spawns `concurrency` client threads against one
+//! [`Server`]; every client keeps exactly one request in flight
+//! (closed loop), striding the shared corpus so concurrent clients
+//! carry different inputs.  Per-request latency comes from the server's
+//! own accounting ([`super::Response::latency`]: submit -> response),
+//! aggregated into nearest-rank percentiles via
+//! [`crate::coordinator::metrics::percentile`].  Saturation throughput
+//! is served requests over the scenario wall-clock.
+//!
+//! [`default_scenarios`] spans the grid the ISSUE asks the bench to
+//! record: {no-batching baseline, continuous batching} x concurrency
+//! {1, 8}.
+
+use super::{Server, ServeConfig, SubmitError};
+use crate::coordinator::metrics::percentile;
+use crate::engine::NativeEngine;
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One load scenario: a scheduler policy driven at a fixed closed-loop
+/// concurrency for a fixed number of requests.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub name: String,
+    pub serve: ServeConfig,
+    /// Closed-loop client threads (each holds one request in flight).
+    pub concurrency: usize,
+    /// Total requests across all clients.
+    pub requests: usize,
+}
+
+/// Measured outcome of one [`LoadSpec`] — one row of
+/// `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub name: String,
+    pub policy: &'static str,
+    pub concurrency: usize,
+    pub max_batch: usize,
+    pub requests: usize,
+    pub served: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub wall_secs: f64,
+    /// Served requests per second of scenario wall-clock.
+    pub throughput_rps: f64,
+    /// Mean requests per executed micro-batch.
+    pub mean_batch: f64,
+    pub max_batch_seen: u64,
+}
+
+impl LoadReport {
+    /// One scenario as a JSON object (manual formatting — the crate
+    /// stays dependency-free, same idiom as `BENCH_native_train.json`).
+    pub fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"name\": \"{}\", \"policy\": \"{}\", \"concurrency\": {}, ",
+                "\"max_batch\": {}, \"requests\": {}, \"served\": {}, ",
+                "\"failed\": {}, \"rejected\": {}, \"p50_ms\": {:.4}, ",
+                "\"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \"mean_ms\": {:.4}, ",
+                "\"wall_secs\": {:.4}, \"throughput_rps\": {:.2}, ",
+                "\"mean_batch\": {:.2}, \"max_batch_seen\": {}}}"
+            ),
+            self.name,
+            self.policy,
+            self.concurrency,
+            self.max_batch,
+            self.requests,
+            self.served,
+            self.failed,
+            self.rejected,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.wall_secs,
+            self.throughput_rps,
+            self.mean_batch,
+            self.max_batch_seen,
+        )
+    }
+}
+
+/// Assemble scenario rows into the `BENCH_serve.json` document.
+pub fn bench_json(reports: &[LoadReport]) -> String {
+    let rows: Vec<String> = reports.iter().map(|r| r.json()).collect();
+    format!(
+        "{{\n  \"bench\": \"serve\",\n  \"scenarios\": [\n    {}\n  ]\n}}\n",
+        rows.join(",\n    ")
+    )
+}
+
+/// The bench grid: {no-batching baseline, continuous batching} x
+/// concurrency {1, 8}, `requests` per scenario.
+pub fn default_scenarios(requests: usize) -> Vec<LoadSpec> {
+    let mut specs = Vec::new();
+    for &concurrency in &[1usize, 8] {
+        for serve in [ServeConfig::no_batching(), ServeConfig::default()] {
+            specs.push(LoadSpec {
+                name: format!("{}-c{concurrency}", serve.policy_name()),
+                serve,
+                concurrency,
+                requests,
+            });
+        }
+    }
+    specs
+}
+
+/// Run one scenario to completion and measure it.  Corpus rows must fit
+/// the engine's `seq_len`; client `c` takes rows `c, c+concurrency,
+/// c+2*concurrency, ...` so concurrent requests differ.
+pub fn run_load(
+    engine: &Arc<NativeEngine>,
+    corpus: &[Vec<i32>],
+    spec: &LoadSpec,
+) -> Result<LoadReport> {
+    if corpus.is_empty() {
+        return Err(anyhow!("load generator needs a non-empty corpus"));
+    }
+    if spec.concurrency == 0 || spec.requests == 0 {
+        return Err(anyhow!(
+            "load spec '{}' needs concurrency and requests >= 1",
+            spec.name
+        ));
+    }
+    let server = Server::start(Arc::clone(engine), spec.serve.clone())?;
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(spec.requests));
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..spec.concurrency {
+            let handle = server.handle();
+            let latencies = &latencies;
+            let share = spec.requests / spec.concurrency
+                + usize::from(c < spec.requests % spec.concurrency);
+            scope.spawn(move || {
+                let mut local = Vec::with_capacity(share);
+                for i in 0..share {
+                    let tokens = &corpus[(c + i * spec.concurrency) % corpus.len()];
+                    match handle.submit(tokens) {
+                        Ok(pending) => {
+                            if let Ok(resp) = pending.wait() {
+                                local.push(resp.latency.as_secs_f64() * 1e3);
+                            }
+                        }
+                        // Backpressure: the request is dropped (the
+                        // server counted the reject); a closed loop
+                        // only hits this when concurrency > queue_cap.
+                        Err(SubmitError::QueueFull { .. }) => std::thread::yield_now(),
+                        Err(_) => break,
+                    }
+                }
+                latencies.lock().expect("latency sink poisoned").extend(local);
+            });
+        }
+    });
+    let wall_secs = started.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    let lat = latencies.into_inner().expect("latency sink poisoned");
+    let (p50_ms, p95_ms, p99_ms, mean_ms) = if lat.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        (
+            percentile(&lat, 50.0),
+            percentile(&lat, 95.0),
+            percentile(&lat, 99.0),
+            lat.iter().sum::<f64>() / lat.len() as f64,
+        )
+    };
+    Ok(LoadReport {
+        name: spec.name.clone(),
+        policy: spec.serve.policy_name(),
+        concurrency: spec.concurrency,
+        max_batch: spec.serve.max_batch,
+        requests: spec.requests,
+        served: stats.served,
+        failed: stats.failed,
+        rejected: stats.rejected,
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        mean_ms,
+        wall_secs,
+        throughput_rps: if wall_secs > 0.0 { stats.served as f64 / wall_secs } else { 0.0 },
+        mean_batch: stats.mean_batch,
+        max_batch_seen: stats.max_batch,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::tests::{tiny_cfg, tiny_params};
+
+    fn tiny_corpus() -> Vec<Vec<i32>> {
+        // Mixed lengths so bucketing is exercised (tiny seq_len is 8).
+        vec![
+            vec![1, 5, 9, 13],
+            vec![1, 7, 3],
+            vec![1, 11, 9, 13, 2, 4, 6, 8],
+            vec![1, 2],
+            vec![1, 5, 9, 13, 2, 4],
+        ]
+    }
+
+    #[test]
+    fn grid_covers_both_policies_and_concurrencies() {
+        let specs = default_scenarios(16);
+        assert_eq!(specs.len(), 4);
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        for expect in ["no-batching-c1", "continuous-c1", "no-batching-c8", "continuous-c8"] {
+            assert!(names.contains(&expect), "missing scenario {expect}");
+        }
+    }
+
+    #[test]
+    fn closed_loop_serves_every_request() {
+        let cfg = tiny_cfg();
+        let engine =
+            Arc::new(NativeEngine::from_params(&cfg, &tiny_params(&cfg, 31)).unwrap());
+        let corpus = tiny_corpus();
+        for spec in [
+            LoadSpec {
+                name: "no-batching-c2".into(),
+                serve: ServeConfig::no_batching(),
+                concurrency: 2,
+                requests: 9,
+            },
+            LoadSpec {
+                name: "continuous-c3".into(),
+                serve: ServeConfig { bucket: 4, ..ServeConfig::default() },
+                concurrency: 3,
+                requests: 9,
+            },
+        ] {
+            let report = run_load(&engine, &corpus, &spec).unwrap();
+            assert_eq!(report.served, 9, "{}: lost requests", spec.name);
+            assert_eq!(report.failed, 0);
+            assert_eq!(report.rejected, 0);
+            assert!(report.p50_ms >= 0.0 && report.p99_ms >= report.p50_ms);
+            assert!(report.throughput_rps > 0.0);
+            assert!(report.mean_batch >= 1.0);
+        }
+    }
+
+    #[test]
+    fn report_json_is_self_describing() {
+        let report = LoadReport {
+            name: "continuous-c8".into(),
+            policy: "continuous",
+            concurrency: 8,
+            max_batch: 16,
+            requests: 64,
+            served: 64,
+            failed: 0,
+            rejected: 0,
+            p50_ms: 1.25,
+            p95_ms: 2.5,
+            p99_ms: 3.75,
+            mean_ms: 1.5,
+            wall_secs: 0.5,
+            throughput_rps: 128.0,
+            mean_batch: 4.0,
+            max_batch_seen: 8,
+        };
+        let json = bench_json(std::slice::from_ref(&report));
+        for key in ["\"bench\": \"serve\"", "\"p50_ms\": 1.2500", "\"p99_ms\": 3.7500",
+            "\"throughput_rps\": 128.00", "\"policy\": \"continuous\""]
+        {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+
+    #[test]
+    fn run_load_validates_inputs() {
+        let cfg = tiny_cfg();
+        let engine =
+            Arc::new(NativeEngine::from_params(&cfg, &tiny_params(&cfg, 32)).unwrap());
+        let spec = LoadSpec {
+            name: "empty".into(),
+            serve: ServeConfig::default(),
+            concurrency: 1,
+            requests: 1,
+        };
+        assert!(run_load(&engine, &[], &spec).is_err());
+        let zero = LoadSpec { concurrency: 0, ..spec };
+        assert!(run_load(&engine, &tiny_corpus(), &zero).is_err());
+    }
+}

@@ -1,0 +1,631 @@
+//! Continuous-batching serving layer over the shared inference engine.
+//!
+//! The ROADMAP's production-scale story: concurrent intent/slot
+//! requests are coalesced into dynamic micro-batches that ride the
+//! contraction K dimension of the fused-QKV + batched-attention
+//! kernels — the same `(B, S)` forward training uses
+//! ([`crate::engine::NativeEngine::forward_len`]), pointed at traffic.
+//!
+//! **Scheduler semantics.**  One executor thread owns the engine (the
+//! dense kernels already parallelize each batch across the persistent
+//! worker pool, so request-level concurrency comes from batching, not
+//! from competing executors).  Requests enter per-bucket FIFO queues; a
+//! bucket fires as soon as it holds [`ServeConfig::max_batch`] requests
+//! or its oldest request has waited [`ServeConfig::max_wait`],
+//! whichever comes first; among ready buckets the oldest head wins
+//! (FIFO fairness across lengths).  Shutdown drains every queued
+//! request before the executor exits.
+//!
+//! **Bucketing policy.**  A request's trailing pads are trimmed and its
+//! effective length is rounded up to the next multiple of
+//! [`ServeConfig::bucket`] (capped at the model's `seq_len`); requests
+//! sharing a bucket are padded to that length and batched into one
+//! dense `(B, S')` block — the `bmm*` kernels never see ragged shapes.
+//! Trimming is value-preserving (pad keys carry an exact-zero attention
+//! probability; every other op is per-row), so bucketed serving
+//! reproduces the full-length logits for every valid position.
+//!
+//! **Backpressure contract.**  Admission control is explicit: at most
+//! [`ServeConfig::queue_cap`] requests may be queued; a submit beyond
+//! that is rejected *immediately* with [`SubmitError::QueueFull`]
+//! (counted in [`ServeStats::rejected`]) instead of growing the queue
+//! without bound.  Accepted requests are always answered — served,
+//! failed with the batch's error, or drained at shutdown.
+//!
+//! **Determinism guarantee.**  A request's bucket length is a pure
+//! function of its effective length, and the blocked kernels accumulate
+//! per output row, so its intent/slot predictions are **bitwise
+//! identical** whether it is served alone, in a full bucket, or
+//! interleaved with requests of other lengths — across `Precision`
+//! f32/bf16/f16 and both `ComputePath`s (pinned by
+//! `rust/tests/serving.rs`).
+
+pub mod loadgen;
+
+use crate::coordinator::metrics::argmax;
+use crate::engine::NativeEngine;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduler knobs; see the module docs for the policy they select.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Most requests coalesced into one micro-batch (>= 1).
+    pub max_batch: usize,
+    /// Longest a bucket's oldest request may wait before the bucket
+    /// fires below `max_batch`.
+    pub max_wait: Duration,
+    /// Admission-control bound: most requests queued at once before
+    /// submits are rejected with [`SubmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Padded-length bucket granularity (>= 1): an effective length is
+    /// rounded up to the next multiple, capped at the model `seq_len`.
+    pub bucket: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+            bucket: 8,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The baseline policy the serve bench compares against: every
+    /// request runs alone, immediately (`max_batch` 1, zero wait).
+    pub fn no_batching() -> ServeConfig {
+        ServeConfig { max_batch: 1, max_wait: Duration::ZERO, ..ServeConfig::default() }
+    }
+
+    /// `"continuous"` vs the `"no-batching"` baseline — the policy axis
+    /// of `BENCH_serve.json`.
+    pub fn policy_name(&self) -> &'static str {
+        if self.max_batch <= 1 {
+            "no-batching"
+        } else {
+            "continuous"
+        }
+    }
+
+    /// The padded length a request of effective length `eff` is served
+    /// at: `eff` rounded up to the bucket granularity, capped at
+    /// `seq_len`.  Pure in `eff` — the determinism guarantee rests on
+    /// this.
+    pub fn bucket_len(&self, eff: usize, seq_len: usize) -> usize {
+        let g = self.bucket.max(1);
+        (eff.max(1).div_ceil(g) * g).min(seq_len)
+    }
+}
+
+/// Effective length of a request: its tokens with trailing pads
+/// trimmed (an all-pad request keeps one position).
+pub fn effective_len(tokens: &[i32], pad_id: i32) -> usize {
+    tokens.iter().rposition(|&t| t != pad_id).map_or(1, |i| i + 1)
+}
+
+/// Why a submit was refused at the door (the backpressure contract —
+/// these are *admission* failures; an accepted request never surfaces
+/// one).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — explicit reject, not OOM.
+    QueueFull { capacity: usize },
+    /// The server is shutting down.
+    Closed,
+    /// Empty token slice.
+    Empty,
+    /// More tokens than the model's configured `seq_len`.
+    TooLong { len: usize, max: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity}); retry later")
+            }
+            SubmitError::Closed => write!(f, "server is shutting down"),
+            SubmitError::Empty => write!(f, "empty request"),
+            SubmitError::TooLong { len, max } => {
+                write!(f, "request has {len} tokens, model seq_len is {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One served request: greedy predictions, raw logits (for parity
+/// checks), and per-request latency accounting.  `slots` /
+/// `slot_logits` cover the request's **effective** positions (trailing
+/// pads trimmed at admission).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub intent: usize,
+    pub intent_logits: Vec<f32>,
+    pub slots: Vec<usize>,
+    pub slot_logits: Vec<f32>,
+    /// Submit -> response (queue wait + batch compute).
+    pub latency: Duration,
+    /// Submit -> batch launch.
+    pub queue_wait: Duration,
+    /// Requests in the micro-batch that served this one.
+    pub batch_size: usize,
+    /// Padded length the batch ran at.
+    pub bucket_len: usize,
+}
+
+/// A queued request awaiting its batch.
+struct Pending {
+    id: u64,
+    /// Tokens with trailing pads trimmed (`effective_len` positions).
+    tokens: Vec<i32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Response, String>>,
+}
+
+/// Ticket for a submitted request; [`PendingResponse::wait`] blocks
+/// until the scheduler answers.
+pub struct PendingResponse {
+    id: u64,
+    rx: mpsc::Receiver<Result<Response, String>>,
+}
+
+impl PendingResponse {
+    /// The request id the response will carry.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until served (or failed / dropped at executor death).
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(anyhow!("request failed: {msg}")),
+            Err(_) => Err(anyhow!("server terminated before answering")),
+        }
+    }
+}
+
+/// Mutable scheduler state behind the queue mutex.
+struct QueueState {
+    /// Per-bucket FIFO queues, keyed by padded length.  Emptied keys
+    /// are removed, so every present queue is non-empty.
+    buckets: BTreeMap<usize, VecDeque<Pending>>,
+    /// Total queued across buckets (the admission-control count).
+    queued: usize,
+    closed: bool,
+}
+
+/// State shared between handles and the executor thread.
+struct Shared {
+    engine: Arc<NativeEngine>,
+    cfg: ServeConfig,
+    state: Mutex<QueueState>,
+    work: Condvar,
+    next_id: AtomicU64,
+    rejected: AtomicU64,
+    served: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batch_rows: AtomicU64,
+    max_batch_seen: AtomicU64,
+}
+
+/// Lifetime counters of one server, snapshotted at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub served: u64,
+    pub failed: u64,
+    /// Submits refused by admission control ([`SubmitError::QueueFull`]).
+    pub rejected: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Mean requests per micro-batch (0 if none ran).
+    pub mean_batch: f64,
+    pub max_batch: u64,
+}
+
+/// The serving scheduler: request queue + one executor thread over a
+/// shared read-only engine.  See the module docs for the scheduling,
+/// bucketing, backpressure and determinism contracts.
+pub struct Server {
+    shared: Arc<Shared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable submit-side handle (one per client thread).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Submit one request (`1..=seq_len` token ids; trailing pads are
+    /// trimmed at admission).  Non-blocking: either the request is
+    /// queued and a [`PendingResponse`] is returned, or admission
+    /// refuses it with a [`SubmitError`].
+    pub fn submit(&self, tokens: &[i32]) -> Result<PendingResponse, SubmitError> {
+        let shared = &*self.shared;
+        let max = shared.engine.cfg.seq_len;
+        if tokens.is_empty() {
+            return Err(SubmitError::Empty);
+        }
+        if tokens.len() > max {
+            return Err(SubmitError::TooLong { len: tokens.len(), max });
+        }
+        let eff = effective_len(tokens, shared.engine.cfg.pad_id);
+        let bucket = shared.cfg.bucket_len(eff, max);
+        let (tx, rx) = mpsc::channel();
+        let mut st = shared.state.lock().expect("serve queue poisoned");
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if st.queued >= shared.cfg.queue_cap {
+            shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull { capacity: shared.cfg.queue_cap });
+        }
+        let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+        st.queued += 1;
+        st.buckets.entry(bucket).or_default().push_back(Pending {
+            id,
+            tokens: tokens[..eff].to_vec(),
+            enqueued: Instant::now(),
+            tx,
+        });
+        drop(st);
+        shared.work.notify_one();
+        Ok(PendingResponse { id, rx })
+    }
+}
+
+impl Server {
+    /// Spawn the executor thread over a shared engine.
+    pub fn start(engine: Arc<NativeEngine>, cfg: ServeConfig) -> Result<Server> {
+        if cfg.max_batch == 0 || cfg.queue_cap == 0 || cfg.bucket == 0 {
+            return Err(anyhow!(
+                "serve config must have max_batch, queue_cap and bucket >= 1 (got {cfg:?})"
+            ));
+        }
+        let shared = Arc::new(Shared {
+            engine,
+            cfg,
+            state: Mutex::new(QueueState {
+                buckets: BTreeMap::new(),
+                queued: 0,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            next_id: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_rows: AtomicU64::new(0),
+            max_batch_seen: AtomicU64::new(0),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("serve-executor".into())
+            .spawn(move || worker_loop(&worker_shared))?;
+        Ok(Server { shared, worker: Some(worker) })
+    }
+
+    /// A cloneable submit handle for client threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Close admission, drain every queued request, join the executor
+    /// and return the lifetime counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.close_and_join();
+        let s = &self.shared;
+        let batches = s.batches.load(Ordering::Relaxed);
+        let rows = s.batch_rows.load(Ordering::Relaxed);
+        ServeStats {
+            served: s.served.load(Ordering::Relaxed),
+            failed: s.failed.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+            max_batch: s.max_batch_seen.load(Ordering::Relaxed),
+        }
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("serve queue poisoned");
+            st.closed = true;
+        }
+        self.shared.work.notify_all();
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// The executor: wait for a ready bucket, drain up to `max_batch` of
+/// it, run one dense forward, fan the results out.  Exits when closed
+/// and fully drained.
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().expect("serve queue poisoned");
+            loop {
+                let now = Instant::now();
+                // Ready = full, aged out, or draining at shutdown; among
+                // ready buckets the oldest head wins (FIFO fairness).
+                let mut pick: Option<(usize, Instant)> = None;
+                let mut earliest_deadline: Option<Instant> = None;
+                for (&bucket, q) in st.buckets.iter() {
+                    let head = q.front().expect("empty bucket queues are removed");
+                    let deadline = head.enqueued + shared.cfg.max_wait;
+                    if st.closed || q.len() >= shared.cfg.max_batch || deadline <= now {
+                        if pick.map_or(true, |(_, t)| head.enqueued < t) {
+                            pick = Some((bucket, head.enqueued));
+                        }
+                    } else if earliest_deadline.map_or(true, |d| deadline < d) {
+                        earliest_deadline = Some(deadline);
+                    }
+                }
+                if let Some((bucket, _)) = pick {
+                    let q = st.buckets.get_mut(&bucket).expect("picked bucket exists");
+                    let take = q.len().min(shared.cfg.max_batch);
+                    let batch: Vec<Pending> = q.drain(..take).collect();
+                    if q.is_empty() {
+                        st.buckets.remove(&bucket);
+                    }
+                    st.queued -= batch.len();
+                    break Some((bucket, batch));
+                }
+                if st.closed {
+                    break None;
+                }
+                st = match earliest_deadline {
+                    Some(d) => {
+                        let timeout = d.saturating_duration_since(now);
+                        shared.work.wait_timeout(st, timeout).expect("serve queue poisoned").0
+                    }
+                    None => shared.work.wait(st).expect("serve queue poisoned"),
+                };
+            }
+        };
+        match job {
+            Some((bucket, batch)) => run_batch(shared, bucket, batch),
+            None => return,
+        }
+    }
+}
+
+/// Pad each request to the bucket length, run one dense `(B, S')`
+/// forward, split the logits back per request.  A batch-level error
+/// fans out to every member.
+fn run_batch(shared: &Shared, bucket_len: usize, batch: Vec<Pending>) {
+    let cfg = &shared.engine.cfg;
+    let (ni, ns, pad) = (cfg.n_intents, cfg.n_slots, cfg.pad_id);
+    let b = batch.len();
+    let started = Instant::now();
+    let mut tokens = vec![pad; b * bucket_len];
+    for (i, p) in batch.iter().enumerate() {
+        tokens[i * bucket_len..i * bucket_len + p.tokens.len()].copy_from_slice(&p.tokens);
+    }
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    shared.batch_rows.fetch_add(b as u64, Ordering::Relaxed);
+    shared.max_batch_seen.fetch_max(b as u64, Ordering::Relaxed);
+    match shared.engine.forward_len(&tokens, bucket_len) {
+        Ok((il, sl)) => {
+            let done = Instant::now();
+            for (i, p) in batch.into_iter().enumerate() {
+                let eff = p.tokens.len();
+                let intent_logits = il[i * ni..(i + 1) * ni].to_vec();
+                let slot_logits =
+                    sl[i * bucket_len * ns..i * bucket_len * ns + eff * ns].to_vec();
+                let resp = Response {
+                    id: p.id,
+                    intent: argmax(&intent_logits),
+                    slots: slot_logits.chunks(ns).map(argmax).collect(),
+                    intent_logits,
+                    slot_logits,
+                    latency: done.duration_since(p.enqueued),
+                    queue_wait: started.duration_since(p.enqueued),
+                    batch_size: b,
+                    bucket_len,
+                };
+                shared.served.fetch_add(1, Ordering::Relaxed);
+                // A dropped client is not an executor error.
+                let _ = p.tx.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for p in batch {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::tests::{tiny_cfg, tiny_params};
+    use crate::engine::NativeEngine;
+
+    fn tiny_engine(seed: u64) -> Arc<NativeEngine> {
+        let cfg = tiny_cfg();
+        Arc::new(NativeEngine::from_params(&cfg, &tiny_params(&cfg, seed)).unwrap())
+    }
+
+    /// A long max_wait + large max_batch keeps the executor from firing
+    /// until shutdown (or until a bucket fills) — the deterministic
+    /// fixture for queue-behavior tests.
+    fn holding_config(max_batch: usize, queue_cap: usize) -> ServeConfig {
+        ServeConfig {
+            max_batch,
+            max_wait: Duration::from_secs(3600),
+            queue_cap,
+            bucket: 4,
+        }
+    }
+
+    #[test]
+    fn bucket_len_policy() {
+        let cfg = ServeConfig { bucket: 4, ..ServeConfig::default() };
+        assert_eq!(cfg.bucket_len(1, 8), 4);
+        assert_eq!(cfg.bucket_len(4, 8), 4);
+        assert_eq!(cfg.bucket_len(5, 8), 8);
+        assert_eq!(cfg.bucket_len(8, 8), 8);
+        // Cap at seq_len even when the granularity overshoots.
+        let coarse = ServeConfig { bucket: 16, ..ServeConfig::default() };
+        assert_eq!(coarse.bucket_len(3, 8), 8);
+        // eff 0 is clamped (all-pad requests keep one position).
+        assert_eq!(cfg.bucket_len(0, 8), 4);
+    }
+
+    #[test]
+    fn effective_len_trims_trailing_pads_only() {
+        assert_eq!(effective_len(&[1, 5, 9, 0, 0], 0), 3);
+        assert_eq!(effective_len(&[1, 0, 9, 0, 0], 0), 3); // interior pad kept
+        assert_eq!(effective_len(&[1, 5, 9], 0), 3);
+        assert_eq!(effective_len(&[0, 0], 0), 1);
+    }
+
+    #[test]
+    fn serves_a_single_request() {
+        let engine = tiny_engine(21);
+        let reference = engine.predict(&[1, 5, 9, 13]).unwrap();
+        let server = Server::start(engine, ServeConfig::no_batching()).unwrap();
+        let resp = server.handle().submit(&[1, 5, 9, 13, 0, 0, 0, 0]).unwrap().wait().unwrap();
+        assert_eq!(resp.intent, reference.0);
+        assert_eq!(resp.slots, reference.1);
+        assert_eq!(resp.batch_size, 1);
+        assert_eq!(resp.bucket_len, 4); // trailing pads trimmed, bucket 4 (eff 4)
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_queue_cap() {
+        let engine = tiny_engine(22);
+        // Executor held back: queue_cap 2, batch threshold unreachable.
+        let server = Server::start(engine, holding_config(64, 2)).unwrap();
+        let h = server.handle();
+        let a = h.submit(&[1, 5, 0, 0]).unwrap();
+        let b = h.submit(&[1, 9, 0, 0]).unwrap();
+        match h.submit(&[1, 7, 0, 0]) {
+            Err(SubmitError::QueueFull { capacity: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // Shutdown drains the two accepted requests — the contract that
+        // accepted requests are always answered.
+        let (ra, rb) = (a, b);
+        let stats_handle = std::thread::spawn(move || server.shutdown());
+        assert!(ra.wait().is_ok());
+        assert!(rb.wait().is_ok());
+        let stats = stats_handle.join().unwrap();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn full_bucket_fires_as_one_batch() {
+        let engine = tiny_engine(23);
+        // max_wait is an hour: the only way a batch runs before
+        // shutdown is the bucket filling to max_batch.
+        let server = Server::start(engine, holding_config(3, 64)).unwrap();
+        let h = server.handle();
+        let pending: Vec<_> =
+            (0..3).map(|i| h.submit(&[1, 5 + i as i32, 9, 0]).unwrap()).collect();
+        let responses: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+        for r in &responses {
+            assert_eq!(r.batch_size, 3, "bucket did not coalesce");
+            assert_eq!(r.bucket_len, 4);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.max_batch, 3);
+        assert!((stats.mean_batch - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_batch_caps_a_flooded_bucket() {
+        let engine = tiny_engine(24);
+        let server = Server::start(engine, holding_config(2, 64)).unwrap();
+        let h = server.handle();
+        let pending: Vec<_> =
+            (0..4).map(|i| h.submit(&[1, 5 + i as i32, 0, 0]).unwrap()).collect();
+        for p in pending {
+            let r = p.wait().unwrap();
+            assert!(r.batch_size <= 2, "batch exceeded max_batch: {}", r.batch_size);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 4);
+        assert!(stats.max_batch <= 2);
+        assert!(stats.batches >= 2);
+    }
+
+    #[test]
+    fn responses_map_back_to_their_requests() {
+        // Distinct inputs through one coalesced batch: each response
+        // must carry its own request's predictions (id -> logits
+        // mapping survives the scatter/gather).
+        let engine = tiny_engine(25);
+        let inputs: Vec<Vec<i32>> =
+            (0..4).map(|i| vec![1, 3 + i, 7, (i % 2) * 5]).collect();
+        let references: Vec<_> = inputs
+            .iter()
+            .map(|t| {
+                let eff = effective_len(t, 0);
+                engine.forward_len(&t[..eff], eff).unwrap()
+            })
+            .collect();
+        let server = Server::start(Arc::clone(&engine), holding_config(4, 64)).unwrap();
+        let h = server.handle();
+        let pending: Vec<_> = inputs.iter().map(|t| h.submit(t).unwrap()).collect();
+        for (p, (il_ref, _)) in pending.into_iter().zip(&references) {
+            let r = p.wait().unwrap();
+            assert_eq!(&r.intent_logits, il_ref, "response crossed wires");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let engine = tiny_engine(26);
+        let server = Server::start(engine, ServeConfig::default()).unwrap();
+        let h = server.handle();
+        assert!(matches!(h.submit(&[]), Err(SubmitError::Empty)));
+        match h.submit(&[1; 9]) {
+            Err(SubmitError::TooLong { len: 9, max: 8 }) => {}
+            other => panic!("expected TooLong, got {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_closed() {
+        let engine = tiny_engine(27);
+        let server = Server::start(engine, ServeConfig::default()).unwrap();
+        let h = server.handle();
+        server.shutdown();
+        assert!(matches!(h.submit(&[1, 5]), Err(SubmitError::Closed)));
+    }
+}

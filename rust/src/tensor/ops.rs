@@ -219,6 +219,26 @@ pub fn unpack_heads_batched(x: &Tensor, batch: usize, h: usize) -> Result<Tensor
     Ok(out)
 }
 
+/// Gather the per-example CLS rows (position 0 of each example) out of
+/// a `(B*S, H)` K-stacked block into `(B, H)` — the intent head's
+/// input, shared by the training forward and the inference engine.
+pub fn cls_rows(x: &Tensor, batch: usize, seq: usize) -> Result<Tensor> {
+    if x.ndim() != 2 || x.shape[0] != batch * seq {
+        return Err(anyhow!(
+            "cls_rows: expected ({} * {}, H), got {:?}",
+            batch,
+            seq,
+            x.shape
+        ));
+    }
+    let h = x.shape[1];
+    let mut out = Tensor::zeros(&[batch, h]);
+    for e in 0..batch {
+        out.data[e * h..(e + 1) * h].copy_from_slice(&x.data[e * seq * h..e * seq * h + h]);
+    }
+    Ok(out)
+}
+
 /// Key mask (1.0 = keep, 0.0 = pad) to the additive score bias the
 /// batched attention consumes: `0.0` for valid keys, `-inf` for pads.
 /// Adding `-inf` drives the padded scores' `exp` to an exact `0.0`, so

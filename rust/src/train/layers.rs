@@ -429,12 +429,19 @@ fn unroll_right_chain(
 /// `G_{d+1}..G_{2d}`.  Checkpoints trained with independent projections
 /// report `false` and fall back to three separate forwards.
 pub fn qkv_input_cores_shared(wq: &TTLinear, wk: &TTLinear, wv: &TTLinear) -> bool {
-    let d = wq.tt.d();
-    [wk, wv].iter().all(|w| {
-        w.tt.m_modes == wq.tt.m_modes
-            && w.tt.n_modes == wq.tt.n_modes
-            && w.tt.ranks == wq.tt.ranks
-            && (d..2 * d).all(|c| w.tt.cores[c] == wq.tt.cores[c])
+    tt_input_cores_tied(&wq.tt, &wk.tt, &wv.tt)
+}
+
+/// Core of [`qkv_input_cores_shared`] on raw [`TTMatrix`] triples —
+/// also the load-time tie check of [`crate::engine::NativeEngine`],
+/// which sees the cores before they are merged away.
+pub fn tt_input_cores_tied(q: &TTMatrix, k: &TTMatrix, v: &TTMatrix) -> bool {
+    let d = q.d();
+    [k, v].iter().all(|w| {
+        w.m_modes == q.m_modes
+            && w.n_modes == q.n_modes
+            && w.ranks == q.ranks
+            && (d..2 * d).all(|c| w.cores[c] == q.cores[c])
     })
 }
 

@@ -51,7 +51,12 @@ pub mod native;
 
 pub use layers::{
     backward_qkv_fused, forward_qkv_fused, forward_qkv_fused_ckpt, forward_qkv_fused_prec,
-    qkv_input_cores_shared, CheckpointMode, QkvFusedCache, QkvFusedGrads, TTLinear, TTLinearGrads,
+    qkv_input_cores_shared, tt_input_cores_tied, CheckpointMode, QkvFusedCache, QkvFusedGrads,
+    TTLinear, TTLinearGrads,
 };
-pub use model::{CheckpointPolicy, ComputePath, NativeTrainModel};
+// `ComputePath` moved to the shared engine (it selects the *forward*
+// schedule, which training and serving now share); re-exported here so
+// `crate::train::ComputePath` keeps working.
+pub use crate::engine::ComputePath;
+pub use model::{CheckpointPolicy, NativeTrainModel};
 pub use native::NativeTrainer;

@@ -28,12 +28,12 @@
 //! compressed core layout as the weights.
 //!
 //! The parameter naming scheme is identical to the AOT manifest
-//! (`python/compile/model.py` / [`crate::inference::NativeModel`]), so a
+//! (`python/compile/model.py` / [`crate::engine::NativeEngine`]), so a
 //! trained native model exports straight into the inference engine and
 //! native checkpoints interchange with PJRT ones.
 
 use crate::config::ModelConfig;
-use crate::inference::ParamMap;
+use crate::engine::{pad_mask, ComputePath, NativeEngine, ParamMap};
 use crate::optim::{ModelOptim, OptimConfig};
 use crate::tensor::{ops, ContractionStats, Precision, Tensor, TTMEmbedding, TTMatrix};
 use crate::train::blocks::{self, LayerNormCache};
@@ -54,40 +54,6 @@ pub struct TrainEncoderLayer {
     pub ln1_b: Vec<f32>,
     pub ln2_g: Vec<f32>,
     pub ln2_b: Vec<f32>,
-}
-
-/// Compute-schedule selection for the training hot path.  Both knobs
-/// default to the fast path; the looped settings reproduce the
-/// pre-fusion schedule for parity tests and benchmark baselines.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ComputePath {
-    /// Share the input-side merge chain and `Z2` across Q/K/V
-    /// ([`crate::train::layers::forward_qkv_fused`]).  Applies per
-    /// layer, only where the input cores are tied — untied checkpoints
-    /// fall back to three separate forwards automatically.
-    pub fused_qkv: bool,
-    /// Run attention as one batched `(B, heads, S, S)` block instead of
-    /// `B` per-example calls.
-    pub batched_attention: bool,
-}
-
-impl Default for ComputePath {
-    fn default() -> Self {
-        ComputePath { fused_qkv: true, batched_attention: true }
-    }
-}
-
-impl ComputePath {
-    /// The fast path (default): fused QKV + batched attention.
-    pub fn fused() -> ComputePath {
-        ComputePath::default()
-    }
-
-    /// The pre-fusion reference schedule: three separate TT forwards
-    /// and a per-example attention loop.
-    pub fn looped() -> ComputePath {
-        ComputePath { fused_qkv: false, batched_attention: false }
-    }
 }
 
 /// Gradient-checkpointing policy for the Eq. 21 activation caches —
@@ -506,7 +472,7 @@ impl NativeTrainModel {
 
     /// Export all parameters as a flat name -> array map (the inverse of
     /// [`NativeTrainModel::from_params`]; feeds
-    /// [`crate::inference::NativeModel`] and checkpointing).
+    /// [`crate::engine::NativeEngine`] and checkpointing).
     pub fn to_params(&self) -> ParamMap {
         let mut map = ParamMap::new();
         let put_t = |map: &mut ParamMap, name: String, t: &Tensor| {
@@ -566,10 +532,7 @@ impl NativeTrainModel {
         }
         let b = tokens.len() / s;
         let k_rows = b * s;
-        let mask: Vec<f32> = tokens
-            .iter()
-            .map(|&t| if t == cfg.pad_id { 0.0 } else { 1.0 })
-            .collect();
+        let mask = pad_mask(tokens, cfg.pad_id);
 
         // Embedding: TTM lookup memoized per **unique** token id in the
         // block (pad tokens dominate ATIS rows, so most of the B*S
@@ -688,10 +651,7 @@ impl NativeTrainModel {
             self.pool.forward_ckpt(&x, prec, self.checkpoint.aux_mode(), stats)?;
         let pooled = ops::tanh(&pool_pre);
         // Per-example CLS rows drive the intent head.
-        let mut cls = Tensor::zeros(&[b, h]);
-        for e in 0..b {
-            cls.data[e * h..(e + 1) * h].copy_from_slice(&pooled.data[e * s * h..e * s * h + h]);
-        }
+        let cls = ops::cls_rows(&pooled, b, s)?;
         let intent = ops::add_row(&cls.matmul(&self.intent_w.t()?)?, &self.intent_b);
         let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
         Ok(ForwardCaches {
@@ -744,6 +704,21 @@ impl NativeTrainModel {
         let mut stats = ContractionStats::default();
         let fwd = self.forward_train(tokens, &mut stats)?;
         Ok((fwd.intent_logits.data, fwd.slot_logits.data))
+    }
+
+    /// Snapshot the current parameters into a serving
+    /// [`NativeEngine`] inheriting this model's [`ComputePath`] and
+    /// [`Precision`].  The engine's merged-factor forward is bitwise
+    /// identical to [`NativeTrainModel::eval`] (the merge chains and
+    /// rounding points coincide; pinned by parity tests), so training
+    /// and deployment cannot drift.
+    pub fn engine(&self) -> Result<NativeEngine> {
+        NativeEngine::from_params_with(
+            &self.cfg,
+            &self.to_params(),
+            self.compute_path,
+            self.precision,
+        )
     }
 
     /// One training step (FP -> BP -> PU) over a `(B, S)` mini-batch:
@@ -981,7 +956,6 @@ impl NativeTrainModel {
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::inference::NativeModel;
     use crate::optim::OptimKind;
 
     pub(crate) fn tiny_cfg() -> ModelConfig {
@@ -1018,26 +992,28 @@ pub(crate) mod tests {
 
     #[test]
     fn eval_matches_inference_engine() {
-        // The trainable model and the merged-factor inference engine run
-        // the same forward math on the same parameters.
+        // The trainable model and the merged-factor inference engine
+        // fold through the same chain states and round at the same
+        // program points, so their logits are **bitwise identical** on
+        // the same parameters — at every precision and compute path.
         let cfg = tiny_cfg();
-        let model = NativeTrainModel::random_init(&cfg, 8).unwrap();
-        let infer = NativeModel::from_params(&cfg, &model.to_params()).unwrap();
-        for tokens in [vec![1, 5, 9, 13, 0, 0, 0, 0], vec![1, 3, 2, 7, 11, 26, 0, 0]] {
-            let (il_t, sl_t) = model.eval(&tokens).unwrap();
-            let (il_i, sl_i) = infer.forward(&tokens).unwrap();
-            let d_i = il_t
-                .iter()
-                .zip(&il_i)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            let d_s = sl_t
-                .iter()
-                .zip(&sl_i)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            assert!(d_i < 1e-5, "intent logits diverge: {d_i}");
-            assert!(d_s < 1e-5, "slot logits diverge: {d_s}");
+        for path in [ComputePath::fused(), ComputePath::looped()] {
+            for prec in Precision::all() {
+                let mut model = NativeTrainModel::random_init(&cfg, 8).unwrap();
+                model.compute_path = path;
+                model.set_precision(prec);
+                let engine = model.engine().unwrap();
+                assert_eq!(engine.compute_path, path);
+                assert_eq!(engine.precision, prec);
+                for tokens in [vec![1, 5, 9, 13, 0, 0, 0, 0], vec![1, 3, 2, 7, 11, 26, 0, 0]] {
+                    assert_eq!(
+                        model.eval(&tokens).unwrap(),
+                        engine.forward(&tokens).unwrap(),
+                        "diverged at {path:?} / {}",
+                        prec.name()
+                    );
+                }
+            }
         }
     }
 
@@ -1241,18 +1217,17 @@ pub(crate) mod tests {
     }
 
     #[test]
-    fn memoized_embedding_matches_unmemoized_inference_reference() {
-        // Heavy token repetition (duplicates + pads): the memoized
-        // forward must match the inference engine, whose embedding path
-        // does an independent per-position `lookup` with no
-        // memoization — a wrong emb_index mapping cannot cancel out of
-        // this comparison.  (The memoized VJP is pinned by the
-        // finite-difference check on `embed.ttm.1` in
-        // rust/tests/native_training.rs, whose example repeats the pad
-        // token four times.)
+    fn memoized_embedding_matches_inference_reference() {
+        // Heavy token repetition (duplicates + pads): the training
+        // forward's emb_unique/emb_index bookkeeping must match the
+        // engine run per example, whose independent (HashMap-keyed)
+        // memoization cannot share a wrong index mapping with it.
+        // (The memoized VJP is pinned by the finite-difference check on
+        // `embed.ttm.1` in rust/tests/native_training.rs, whose example
+        // repeats the pad token four times.)
         let cfg = tiny_cfg();
         let model = NativeTrainModel::random_init(&cfg, 18).unwrap();
-        let infer = NativeModel::from_params(&cfg, &model.to_params()).unwrap();
+        let infer = model.engine().unwrap();
         let tokens = vec![1, 5, 5, 5, 9, 0, 0, 0, 1, 9, 9, 5, 5, 0, 0, 0];
         let (il, sl) = model.eval(&tokens).unwrap();
         let mut il_ref = Vec::new();
@@ -1262,11 +1237,8 @@ pub(crate) mod tests {
             il_ref.extend(il_e);
             sl_ref.extend(sl_e);
         }
-        let max_diff = |a: &[f32], b: &[f32]| {
-            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
-        };
-        assert!(max_diff(&il, &il_ref) < 1e-5, "intent logits diverge");
-        assert!(max_diff(&sl, &sl_ref) < 1e-5, "slot logits diverge");
+        assert_eq!(il, il_ref, "intent logits diverge");
+        assert_eq!(sl, sl_ref, "slot logits diverge");
     }
 
     #[test]

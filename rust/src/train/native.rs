@@ -4,7 +4,7 @@
 use super::model::NativeTrainModel;
 use crate::config::ModelConfig;
 use crate::coordinator::backend::{StepOutput, TrainBackend};
-use crate::inference::{NativeModel, ParamMap};
+use crate::engine::{NativeEngine, ParamMap};
 use crate::optim::{OptimConfig, OptimKind};
 use crate::tensor::{ContractionStats, Precision};
 use crate::util::npy;
@@ -19,10 +19,12 @@ pub struct NativeTrainer {
     /// Instrumentation of the most recent step (forward Eqs. 20/21 +
     /// backward 2x counts, summed over every TT layer).
     pub last_stats: ContractionStats,
-    /// Merged-factor inference engine for eval, built lazily and
-    /// invalidated whenever parameters change — evaluation loops reuse
-    /// the merged Z1/Z3 factors instead of re-merging per example.
-    eval_model: RefCell<Option<NativeModel>>,
+    /// Merged-factor inference engine for eval, built lazily (via
+    /// [`NativeTrainModel::engine`], inheriting the model's compute
+    /// path and precision) and invalidated whenever parameters — or
+    /// the captured schedule/precision — change; evaluation reuses the
+    /// merged Z1/Z3 factors instead of re-merging per call.
+    eval_model: RefCell<Option<NativeEngine>>,
 }
 
 impl NativeTrainer {
@@ -58,9 +60,12 @@ impl NativeTrainer {
 
     /// Select the compute schedule (builder style): the fused/batched
     /// hot path (default) or the pre-fusion looped reference — the
-    /// baseline the `native-train` bench compares against.
+    /// baseline the `native-train` bench compares against.  The cached
+    /// eval engine captures the schedule at build time, so it is
+    /// invalidated here.
     pub fn with_compute_path(mut self, path: crate::train::ComputePath) -> NativeTrainer {
         self.model.compute_path = path;
+        *self.eval_model.borrow_mut() = None;
         self
     }
 
@@ -131,27 +136,15 @@ impl TrainBackend for NativeTrainer {
         })
     }
 
-    /// Inference through the cached merged-factor engine.  Accepts a
-    /// `(B, S)` block: the engine runs per example and the logits are
-    /// concatenated row-major, matching the trait contract.
+    /// Inference through the cached merged-factor engine — one batched
+    /// `(B, S)` forward (the engine's native contract), bitwise the
+    /// training model's own `eval`.
     fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let s = self.model.cfg.seq_len;
-        if tokens.is_empty() || tokens.len() % s != 0 {
-            return Err(anyhow!("eval needs (B, {s}) tokens, got {}", tokens.len()));
-        }
         let mut cached = self.eval_model.borrow_mut();
         if cached.is_none() {
-            *cached = Some(NativeModel::from_params(&self.model.cfg, &self.model.to_params())?);
+            *cached = Some(self.model.engine()?);
         }
-        let engine = cached.as_ref().expect("just built");
-        let mut intents = Vec::new();
-        let mut slots = Vec::new();
-        for chunk in tokens.chunks(s) {
-            let (il, sl) = engine.forward(chunk)?;
-            intents.extend_from_slice(&il);
-            slots.extend_from_slice(&sl);
-        }
-        Ok((intents, slots))
+        cached.as_ref().expect("just built").forward(tokens)
     }
 
     /// One `.npy` per parameter, named `%04d.<name>.npy` in canonical

@@ -1,0 +1,253 @@
+//! Serving integration suite — the single-source-of-truth and
+//! determinism contracts of the shared engine + scheduler stack:
+//!
+//! * **Old-vs-new parity**: `inference::NativeModel` (now an alias of
+//!   the shared engine) reproduces the training model's `eval` logits
+//!   **bitwise** on the synthetic ATIS test split — `inference/` no
+//!   longer carries its own encoder forward, and nothing drifted in
+//!   the move.
+//! * **Batch-composition invariance**: a request's intent/slot logits
+//!   are bitwise identical whether it is served alone, in a full
+//!   bucket, or interleaved with requests of other lengths — directly
+//!   through `forward_len` and through a live `serve::Server`, across
+//!   `Precision` f32/bf16 and both `ComputePath`s.
+//! * **Admission control** through the public API: explicit
+//!   `QueueFull` rejects at capacity, accepted requests drained at
+//!   shutdown, rejected work servable by a fresh server.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tt_trainer::config::ModelConfig;
+use tt_trainer::coordinator::metrics::argmax;
+use tt_trainer::coordinator::TrainBackend;
+use tt_trainer::data::Dataset;
+use tt_trainer::engine::{ComputePath, NativeEngine};
+use tt_trainer::inference::NativeModel;
+use tt_trainer::serve::{ServeConfig, Server, SubmitError};
+use tt_trainer::tensor::Precision;
+use tt_trainer::train::NativeTrainer;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        n_layers: 1,
+        d_hid: 48,
+        n_heads: 4,
+        seq_len: 8,
+        batch: 1,
+        vocab: 27,
+        n_intents: 5,
+        n_slots: 7,
+        tt_m: vec![4, 4, 3],
+        tt_n: vec![3, 4, 4],
+        tt_rank: 3,
+        ttm_vocab_modes: vec![3, 3, 3],
+        ttm_hid_modes: vec![4, 4, 3],
+        ttm_rank: 4,
+        pad_id: 0,
+        cls_id: 1,
+        unk_id: 2,
+    }
+}
+
+/// Requests of deliberately mixed effective lengths: three land in the
+/// 4-bucket, two in the 8-bucket (tiny `seq_len` 8, bucket 4).
+fn mixed_requests() -> Vec<Vec<i32>> {
+    vec![
+        vec![1, 5],
+        vec![1, 9, 13],
+        vec![1, 7, 3, 21],
+        vec![1, 5, 9, 13, 17],
+        vec![1, 3, 5, 7, 9, 11, 13, 15],
+    ]
+}
+
+fn pad_to(tokens: &[i32], len: usize, pad: i32) -> Vec<i32> {
+    let mut v = tokens.to_vec();
+    v.resize(len, pad);
+    v
+}
+
+/// A request's served-alone logits at its bucket length.
+fn reference(
+    engine: &NativeEngine,
+    serve_cfg: &ServeConfig,
+    req: &[i32],
+) -> (Vec<f32>, Vec<f32>, usize) {
+    let cfg = &engine.cfg;
+    let bl = serve_cfg.bucket_len(req.len(), cfg.seq_len);
+    let (il, sl) = engine.forward_len(&pad_to(req, bl, cfg.pad_id), bl).unwrap();
+    (il, sl, bl)
+}
+
+/// The grid the determinism guarantee spans.
+fn engine_grid(cfg: &ModelConfig, seed: u64) -> Vec<(NativeEngine, &'static str)> {
+    let params = NativeTrainer::random_init(cfg, seed).unwrap().model.to_params();
+    let mut out = Vec::new();
+    for (path, pname) in [(ComputePath::fused(), "fused"), (ComputePath::looped(), "looped")] {
+        for prec in [Precision::F32, Precision::Bf16] {
+            let engine = NativeEngine::from_params_with(cfg, &params, path, prec).unwrap();
+            out.push((engine, pname));
+        }
+    }
+    out
+}
+
+#[test]
+fn inference_alias_matches_training_eval_on_atis_split() {
+    // The tentpole's parity pin: the deduplicated forward behind the
+    // historical `inference::NativeModel` name reproduces the training
+    // model's eval logits bitwise on the ATIS test split, away from
+    // the init point.
+    let mut cfg = ModelConfig::paper(1);
+    cfg.seq_len = 16; // shorter sequences: faster test, same paths
+    let mut trainer = NativeTrainer::random_init(&cfg, 11).unwrap();
+    let (train, test) = Dataset::paper_splits(&cfg, 11);
+    for ex in train.examples.iter().take(3) {
+        trainer.train_step(&ex.tokens, &[ex.intent], &ex.slots, 4e-3).unwrap();
+    }
+    let model = NativeModel::from_params(&cfg, &trainer.model.to_params()).unwrap();
+    for ex in test.examples.iter().take(16) {
+        let (il_train, sl_train) = trainer.model.eval(&ex.tokens).unwrap();
+        let (il, sl) = model.forward(&ex.tokens).unwrap();
+        assert_eq!(il, il_train, "intent logits drifted from the training forward");
+        assert_eq!(sl, sl_train, "slot logits drifted from the training forward");
+        let (intent, slots) = model.predict(&ex.tokens).unwrap();
+        assert_eq!(intent, argmax(&il_train));
+        assert_eq!(slots.len(), cfg.seq_len);
+    }
+}
+
+#[test]
+fn composition_invariance_direct_forward() {
+    // Same-bucket requests batched together must reproduce each
+    // request's served-alone logits bitwise — the row-independence the
+    // scheduler's determinism guarantee rests on.  Checked across both
+    // compute paths and f32/bf16.
+    let cfg = tiny_cfg();
+    let serve_cfg = ServeConfig { bucket: 4, ..ServeConfig::default() };
+    let (ni, ns, pad) = (cfg.n_intents, cfg.n_slots, cfg.pad_id);
+    for (engine, pname) in engine_grid(&cfg, 41) {
+        let prec = engine.precision.name();
+        let reqs = mixed_requests();
+        let refs: Vec<_> = reqs.iter().map(|r| reference(&engine, &serve_cfg, r)).collect();
+        // Full 4-bucket: requests 0..3 share bucket length 4.
+        let bl = refs[0].2;
+        assert!(refs[..3].iter().all(|r| r.2 == bl));
+        let batch: Vec<i32> =
+            reqs[..3].iter().flat_map(|r| pad_to(r, bl, pad)).collect();
+        let (il, sl) = engine.forward_len(&batch, bl).unwrap();
+        for (i, (il_ref, sl_ref, _)) in refs[..3].iter().enumerate() {
+            assert_eq!(
+                &il[i * ni..(i + 1) * ni],
+                &il_ref[..],
+                "[{pname}/{prec}] intent logits differ alone vs full bucket (req {i})"
+            );
+            assert_eq!(
+                &sl[i * bl * ns..(i + 1) * bl * ns],
+                &sl_ref[..],
+                "[{pname}/{prec}] slot logits differ alone vs full bucket (req {i})"
+            );
+        }
+        // 8-bucket pair, in both orders (batch position must not matter).
+        let bl8 = refs[3].2;
+        assert_eq!(bl8, refs[4].2);
+        for order in [[3usize, 4], [4, 3]] {
+            let batch: Vec<i32> =
+                order.iter().flat_map(|&i| pad_to(&reqs[i], bl8, pad)).collect();
+            let (il, sl) = engine.forward_len(&batch, bl8).unwrap();
+            for (row, &i) in order.iter().enumerate() {
+                assert_eq!(&il[row * ni..(row + 1) * ni], &refs[i].0[..]);
+                assert_eq!(&sl[row * bl8 * ns..(row + 1) * bl8 * ns], &refs[i].1[..]);
+            }
+        }
+    }
+}
+
+#[test]
+fn composition_invariance_through_live_server() {
+    // The same guarantee end to end: requests submitted interleaved by
+    // length to a live server, coalesced into full per-bucket batches
+    // at shutdown drain, answer with bitwise the served-alone logits.
+    let cfg = tiny_cfg();
+    for (engine, pname) in engine_grid(&cfg, 43) {
+        let prec = engine.precision.name();
+        let serve_cfg = ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600), // fire only at drain
+            queue_cap: 64,
+            bucket: 4,
+        };
+        let engine = Arc::new(engine);
+        let reqs = mixed_requests();
+        let refs: Vec<_> =
+            reqs.iter().map(|r| reference(&engine, &serve_cfg, r)).collect();
+        let server = Server::start(Arc::clone(&engine), serve_cfg).unwrap();
+        let handle = server.handle();
+        // Interleave the 8-bucket and 4-bucket requests on submission.
+        let order = [3usize, 0, 4, 1, 2];
+        let pending: Vec<_> =
+            order.iter().map(|&i| (i, handle.submit(&reqs[i]).unwrap())).collect();
+        let stats_thread = std::thread::spawn(move || server.shutdown());
+        let ns = cfg.n_slots;
+        for (i, p) in pending {
+            let resp = p.wait().unwrap();
+            let (il_ref, sl_ref, _) = &refs[i];
+            let eff = reqs[i].len();
+            assert_eq!(
+                resp.intent_logits, *il_ref,
+                "[{pname}/{prec}] served intent logits differ from alone (req {i})"
+            );
+            assert_eq!(
+                resp.slot_logits,
+                sl_ref[..eff * ns].to_vec(),
+                "[{pname}/{prec}] served slot logits differ from alone (req {i})"
+            );
+            // Drain coalesces whole buckets: 3 requests in the
+            // 4-bucket, 2 in the 8-bucket.
+            let expect = if i <= 2 { 3 } else { 2 };
+            assert_eq!(resp.batch_size, expect, "[{pname}/{prec}] bucket did not coalesce");
+        }
+        let stats = stats_thread.join().unwrap();
+        assert_eq!(stats.served, 5);
+        assert_eq!(stats.batches, 2);
+    }
+}
+
+#[test]
+fn admission_control_rejects_then_fresh_server_recovers() {
+    let cfg = tiny_cfg();
+    let engine = Arc::new(
+        NativeEngine::from_params(
+            &cfg,
+            &NativeTrainer::random_init(&cfg, 47).unwrap().model.to_params(),
+        )
+        .unwrap(),
+    );
+    let held = ServeConfig {
+        max_batch: 16,
+        max_wait: Duration::from_secs(3600),
+        queue_cap: 2,
+        bucket: 4,
+    };
+    let server = Server::start(Arc::clone(&engine), held).unwrap();
+    let handle = server.handle();
+    let a = handle.submit(&[1, 5, 9]).unwrap();
+    let b = handle.submit(&[1, 7, 3]).unwrap();
+    let rejected_tokens = vec![1, 11, 13];
+    match handle.submit(&rejected_tokens) {
+        Err(SubmitError::QueueFull { capacity: 2 }) => {}
+        other => panic!("expected explicit QueueFull reject, got {other:?}"),
+    }
+    let stats_thread = std::thread::spawn(move || server.shutdown());
+    assert!(a.wait().is_ok(), "accepted request dropped at drain");
+    assert!(b.wait().is_ok(), "accepted request dropped at drain");
+    let stats = stats_thread.join().unwrap();
+    assert_eq!((stats.served, stats.rejected), (2, 1));
+    // The rejected work is not poisoned: a fresh server serves it, and
+    // the answer matches the engine's direct prediction.
+    let server = Server::start(Arc::clone(&engine), ServeConfig::no_batching()).unwrap();
+    let resp = server.handle().submit(&rejected_tokens).unwrap().wait().unwrap();
+    let (intent, _) = engine.predict(&rejected_tokens).unwrap();
+    assert_eq!(resp.intent, intent);
+    server.shutdown();
+}
