@@ -20,6 +20,8 @@
 //!   serve   — continuous-batching serving scheduler load test
 //!             (no-batching baseline vs continuous, concurrency 1/8;
 //!             writes BENCH_serve.json)
+//!   trace   — instrumentation overhead (disabled-site ns/call) and the
+//!             FP/BP/PU stage breakdown of one traced train step
 //!   pjrt    — measured train/eval step latency through the real stack
 //!             (`pjrt` feature; skipped unless artifacts/ exists)
 //!
@@ -87,8 +89,45 @@ fn main() {
     if run("serve") {
         serve();
     }
+    if run("trace") {
+        trace_overhead();
+    }
     if run("pjrt") {
         pjrt();
+    }
+}
+
+/// The observability contract, measured: per-call cost of a disabled
+/// instrumentation site (one relaxed atomic load) and the per-stage
+/// FP/BP/PU split of one traced paper-config train step.
+fn trace_overhead() {
+    use tt_trainer::trace;
+    hdr("trace", "instrumentation overhead + stage breakdown (no artifacts)");
+    trace::set_enabled(false);
+    trace::disabled_overhead_ns(100_000); // warm the TLS + branch
+    let ns = trace::disabled_overhead_ns(2_000_000);
+    println!("disabled span site: {ns:.2} ns/call (contract: single relaxed atomic load)");
+
+    let cfg = ModelConfig::paper(2);
+    let mut backend = NativeTrainer::random_init(&cfg, 42).expect("paper config init");
+    let data = Dataset::synth(&cfg, 42, 8);
+    let ex = &data.examples[0];
+    // Warm once untraced, then trace a single step.
+    backend.train_step(&ex.tokens, &[ex.intent], &ex.slots, 1e-3).expect("warm step");
+    trace::reset();
+    trace::set_enabled(true);
+    backend.train_step(&ex.tokens, &[ex.intent], &ex.slots, 1e-3).expect("traced step");
+    trace::set_enabled(false);
+    let events = trace::drain();
+    println!("one traced train step: {} spans", events.len());
+    for r in trace::stage_breakdown(&events) {
+        println!(
+            "  {:<6} {:>10.2} ms  {:>5.1}%  ({} spans)",
+            r.stage,
+            r.total_us / 1e3,
+            100.0 * r.share,
+            r.spans
+        );
     }
 }
 

@@ -13,6 +13,10 @@ pub struct Metrics {
     /// Cumulative seconds inside backend execute (PJRT or native
     /// FP+BP+PU).
     pub execute_secs: f64,
+    /// Per-step execute seconds, in step order — kept alongside the
+    /// cumulative sum so tail latency (p50/p95 via [`percentile`]) is
+    /// reportable, not just the mean.
+    pub execute_samples: Vec<f64>,
     /// Cumulative seconds of host-side overhead (batch packing +
     /// backend host work).
     pub host_secs: f64,
@@ -27,9 +31,16 @@ impl Metrics {
     pub fn record_step(&mut self, loss: f32, execute_secs: f64, host_secs: f64, tokens: usize) {
         self.losses.push((self.steps, loss));
         self.execute_secs += execute_secs;
+        self.execute_samples.push(execute_secs);
         self.host_secs += host_secs;
         self.steps += 1;
         self.tokens += tokens;
+    }
+
+    /// Nearest-rank percentile of per-step execute seconds (NaN before
+    /// the first step).
+    pub fn execute_percentile_secs(&self, p: f64) -> f64 {
+        percentile(&self.execute_samples, p)
     }
 
     pub fn record_eval(&mut self, epoch: usize, intent_acc: f64, slot_acc: f64) {
@@ -180,6 +191,20 @@ mod tests {
         assert_eq!(percentile(&ties, 75.0), 2.0);
         assert_eq!(percentile(&ties, 100.0), 9.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn execute_percentiles_track_step_samples() {
+        let mut m = Metrics::default();
+        assert!(m.execute_percentile_secs(50.0).is_nan());
+        for secs in [0.04, 0.01, 0.03, 0.02] {
+            m.record_step(1.0, secs, 0.0, 32);
+        }
+        assert_eq!(m.execute_samples.len(), 4);
+        assert_eq!(m.execute_percentile_secs(50.0), 0.02);
+        assert_eq!(m.execute_percentile_secs(95.0), 0.04);
+        // The cumulative sum and the sample list agree.
+        assert!((m.execute_samples.iter().sum::<f64>() - m.execute_secs).abs() < 1e-12);
     }
 
     #[test]

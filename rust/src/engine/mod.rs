@@ -309,6 +309,7 @@ impl NativeEngine {
     /// padding — this is what lets the serving scheduler bucket by
     /// length and keep the `bmm*` kernels dense.
     pub fn forward_len(&self, tokens: &[i32], seq: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let _sp = crate::trace::span("engine", "forward");
         let cfg = &self.cfg;
         let h = cfg.d_hid;
         if seq == 0 || seq > cfg.seq_len {

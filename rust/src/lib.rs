@@ -228,6 +228,52 @@
 //! ([`costmodel::LinearShape::btt_serve_muls`], surfaced by the CLI
 //! `cost-model` command).
 //!
+//! ## Observability
+//!
+//! The paper's headline claims are *per-stage* numbers — FP/BP/PU
+//! latency breakdowns and a <6 MB BRAM / 22.5 MB URAM on-chip budget —
+//! so the crate carries a zero-dependency tracing + metrics subsystem
+//! ([`trace`]) that measures at runtime what [`costmodel`] and
+//! [`fpga::resources`] predict:
+//!
+//! * **Span taxonomy** — deterministic span trees named after the
+//!   paper's stages: `train`-category `fp.*`/`bp.*`/`pu.*` spans per
+//!   layer, `ttlinear`-category `merge_left`/`merge_right`/`apply`
+//!   contraction spans inside each projection, `pool`-category `job`
+//!   spans on the `tt-matmul-{i}` worker threads, an
+//!   `engine`-category `forward` span per shared-engine block, and
+//!   `serve`-category `admit` → `queue` → `batch_execute` → `respond`
+//!   spans through the scheduler.  Disabled cost is a single relaxed
+//!   atomic load per site (bound self-tested in
+//!   `rust/tests/tracing.rs`), and instrumentation never touches
+//!   computed values, so traced and untraced runs are bitwise
+//!   identical.
+//! * **Byte gauges → U50 budget** — at each stage boundary the trainer
+//!   publishes `eq21_cache_bytes` (the measured live-cache sum, the
+//!   quantity [`fpga::resources::ResourceReport::eq21_cache_bytes`]
+//!   charges into the URAM BP stash), `optim_state_bytes` (the PU
+//!   moments charged next to the cores) and `param_bytes` (packed
+//!   cores + dense biases at the storage width) — so the BRAM/URAM
+//!   budget tables become runtime-asserted invariants
+//!   (`rust/tests/tracing.rs` pins gauge == measured == analytic
+//!   across {f32, bf16} × {cache, recompute}).  The serving layer
+//!   publishes queue depth and a batch-size histogram.
+//! * **Exporters** — `--trace <path>` on `train`/`serve-bench` writes
+//!   Chrome trace-event JSON ([`trace::chrome`], Perfetto-loadable,
+//!   per-thread lanes showing pool fan-out and executor batching); the
+//!   `trace-report` CLI command prints the measured FP/BP/PU
+//!   percentage split next to the cost model's prediction
+//!   ([`trace::report`]); and
+//!   [`serve::ServerHandle::prometheus_snapshot`] renders the live
+//!   serving counters in Prometheus text format ([`trace::prom`]).
+//!
+//! Step-level latency statistics ride along:
+//! [`coordinator::Metrics`] keeps per-step execute-time samples and
+//! surfaces p50/p95 step time in the CLI summary, and
+//! [`serve::ServeStats`] carries per-bucket served/batch counts, the
+//! queue-depth high-watermark and p50/p95/p99 request latency — all
+//! through the one shared [`coordinator::metrics::percentile`] helper.
+//!
 //! After `make artifacts` the binary is self-contained with either
 //! backend; with the native backend it is self-contained from a bare
 //! `cargo build` — the paper's end-to-end on-device training claim is
@@ -252,5 +298,6 @@ pub mod optim;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;

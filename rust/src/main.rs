@@ -8,6 +8,7 @@
 //! tt-trainer eval  --ckpt DIR                  # accuracy on the test split
 //! tt-trainer cost-model                        # Fig. 6 + Fig. 7 sweeps
 //! tt-trainer serve-bench --ckpt DIR            # continuous-batching load test
+//! tt-trainer trace-report                      # FP/BP/PU wall-clock breakdown
 //! tt-trainer bram                              # Figs. 11/12/14
 //! tt-trainer schedule                          # Figs. 9/10
 //! tt-trainer fpga-report                       # Tables IV/V, Figs. 1/15
@@ -29,6 +30,7 @@ use tt_trainer::fpga::{bram, energy, resources, schedule};
 use tt_trainer::optim::{OptimConfig, OptimKind};
 use tt_trainer::runtime::Manifest;
 use tt_trainer::tensor::Precision;
+use tt_trainer::trace;
 use tt_trainer::train::{CheckpointPolicy, NativeTrainer};
 use tt_trainer::util::cli::Args;
 
@@ -41,6 +43,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "cost-model" => cmd_cost_model(),
         "serve-bench" => cmd_serve_bench(&args),
+        "trace-report" => cmd_trace_report(&args),
         "bram" => cmd_bram(),
         "schedule" => cmd_schedule(),
         "fpga-report" => cmd_fpga_report(),
@@ -72,6 +75,9 @@ COMMANDS:
                              checkpointing: recompute drops the Eq. 21
                              caches and rebuilds them in the BP stage;
                              f32 gradients stay bitwise identical)
+                           --trace FILE (Chrome trace-event JSON of the
+                             fp/bp/pu + contraction spans; load in
+                             ui.perfetto.dev or chrome://tracing)
                   pjrt:    --variant tt_L2 --artifacts DIR
   eval          evaluate on the test split
                   --backend native|pjrt [--limit N]
@@ -85,7 +91,13 @@ COMMANDS:
                   --layers 2 --requests 256 --seed 42
                   --precision f32|bf16|f16
                   --out BENCH_serve.json
+                  --trace FILE (Chrome trace of admit/queue/execute spans)
                   grid: {no-batching, continuous} x concurrency {1, 8}
+  trace-report  FP/BP/PU wall-clock breakdown from a short traced
+                native run, next to the Eq. 20 cost-model prediction
+                  --steps 4 --layers 2 --batch N --seed 42
+                  --precision f32|bf16|f16
+                  --trace FILE (also dump the Chrome trace)
   bram          BRAM allocator study (Figs. 11/12/14)
   schedule      kernel scheduling study (Figs. 9/10)
   fpga-report   hardware simulator report (Tables IV/V, Figs. 1/15)
@@ -175,9 +187,35 @@ fn optim_from_args(args: &Args) -> Result<OptimConfig> {
     })
 }
 
+/// `--trace FILE`: turn the span tracer on for the duration of the
+/// command.  The returned path goes to [`trace_finish`] once the
+/// traced work is done.
+fn trace_setup(args: &Args) -> Option<String> {
+    let path = args.get("trace").map(str::to_string);
+    if path.is_some() {
+        trace::set_enabled(true);
+    }
+    path
+}
+
+/// Export everything collected since [`trace_setup`] as Chrome
+/// trace-event JSON.  No-op when `--trace` was not given.
+fn trace_finish(path: Option<String>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    trace::set_enabled(false);
+    let events = trace::drain();
+    std::fs::write(&path, trace::to_chrome_json(&events))?;
+    println!(
+        "chrome trace ({} spans) written to {path} — load in ui.perfetto.dev",
+        events.len()
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42) as u64;
-    match args.get_or("backend", DEFAULT_BACKEND) {
+    let trace_path = trace_setup(args);
+    let result = match args.get_or("backend", DEFAULT_BACKEND) {
         "native" => {
             let precision = Precision::parse(args.get_or("precision", "f32"))?;
             let optim = OptimConfig { precision, ..optim_from_args(args)? };
@@ -195,7 +233,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         "pjrt" => cmd_train_pjrt(args, seed),
         other => Err(anyhow!("unknown --backend '{other}' (native|pjrt)")),
-    }
+    };
+    trace_finish(trace_path)?;
+    result
 }
 
 #[cfg(feature = "pjrt")]
@@ -280,6 +320,14 @@ fn run_training<B: TrainBackend>(mut trainer: Trainer<B>, args: &Args, seed: u64
         trainer.metrics.steps_per_sec(),
         trainer.metrics.tokens_per_sec()
     );
+    if trainer.metrics.steps > 0 {
+        println!(
+            "step time (execute): p50 {:.2} ms | p95 {:.2} ms over {} steps",
+            1e3 * trainer.metrics.execute_percentile_secs(50.0),
+            1e3 * trainer.metrics.execute_percentile_secs(95.0),
+            trainer.metrics.steps
+        );
+    }
     if let Some(dir) = args.get("ckpt") {
         trainer.backend.save_checkpoint(Path::new(dir))?;
         println!("checkpoint saved to {dir}");
@@ -353,6 +401,7 @@ fn run_eval<B: TrainBackend>(trainer: Trainer<B>, args: &Args, seed: u64) -> Res
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     use std::sync::Arc;
     use tt_trainer::serve::loadgen;
+    let trace_path = trace_setup(args);
     let seed = args.get_usize("seed", 42) as u64;
     let requests = args.get_usize("requests", 256);
     let out = args.get_or("out", "BENCH_serve.json");
@@ -386,6 +435,69 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     std::fs::write(out, loadgen::bench_json(&reports))?;
     println!("scenario reports written to {out}");
+    trace_finish(trace_path)?;
+    Ok(())
+}
+
+/// Run a short traced native training loop and print the measured
+/// FP/BP/PU wall-clock split next to the Eq. 20 cost-model prediction
+/// (BP ~= 2x FP multiplies; PU is contraction-free).
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 42) as u64;
+    let steps = args.get_usize("steps", 4).max(1);
+    let precision = Precision::parse(args.get_or("precision", "f32"))?;
+    let optim = OptimConfig { precision, ..optim_from_args(args)? };
+    let lr = args.get_f64("lr", optim.kind.default_lr() as f64) as f32;
+    let batch = optim.batch_size;
+    let backend = native_backend(args, seed, &["init-ckpt", "ckpt"], optim)?;
+    let cfg = backend.config().clone();
+    let (train, _) = Dataset::paper_splits(&cfg, seed);
+    let mut trainer = Trainer::with_batch(backend, lr, batch);
+    println!("tracing {steps} native steps (batch {batch}, precision {})...", precision.name());
+    trace::set_enabled(true);
+    trainer.train_steps(&train, steps)?;
+    trace::set_enabled(false);
+    let events = trace::drain();
+
+    // Eq. 20 prediction for the stage split: the backward pass costs
+    // 2x the forward multiplies of each contraction; the PU stage does
+    // no contractions at all.
+    let shape = LinearShape::paper();
+    let k = (batch * cfg.seq_len) as u64;
+    let (fwd, bwd) = (shape.btt_muls(k), shape.btt_bwd_muls(k));
+    let predicted = |stage: &str| match stage {
+        "fp" => format!("{:>5.1}%", 100.0 * fwd as f64 / (fwd + bwd) as f64),
+        "bp" => format!("{:>5.1}%", 100.0 * bwd as f64 / (fwd + bwd) as f64),
+        _ => "     -".to_string(),
+    };
+    println!("\n=== FP/BP/PU breakdown ({steps} steps, measured spans) ===");
+    println!(
+        "{:<8} {:>12} {:>8} {:>8} {:>10}",
+        "stage", "total(ms)", "share", "spans", "eq20-pred"
+    );
+    for r in trace::stage_breakdown(&events) {
+        println!(
+            "{:<8} {:>12.2} {:>7.1}% {:>8} {:>10}",
+            r.stage,
+            r.total_us / 1e3,
+            100.0 * r.share,
+            r.spans,
+            predicted(&r.stage)
+        );
+    }
+    println!("(eq20-pred splits contraction muls only: BP = 2x FP, PU has none)");
+
+    let gauges = trace::gauges();
+    if !gauges.is_empty() {
+        println!("\n=== byte gauges at the last sampled stage boundary ===");
+        for (name, v) in gauges {
+            println!("{name:<24} {v:>12} B");
+        }
+    }
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, trace::to_chrome_json(&events))?;
+        println!("\nchrome trace ({} spans) written to {path}", events.len());
+    }
     Ok(())
 }
 

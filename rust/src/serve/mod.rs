@@ -42,8 +42,9 @@
 
 pub mod loadgen;
 
-use crate::coordinator::metrics::argmax;
+use crate::coordinator::metrics::{argmax, percentile};
 use crate::engine::NativeEngine;
+use crate::trace;
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -202,7 +203,23 @@ struct QueueState {
     buckets: BTreeMap<usize, VecDeque<Pending>>,
     /// Total queued across buckets (the admission-control count).
     queued: usize,
+    /// Most requests ever queued at once (the backpressure headroom
+    /// actually used; reported as [`ServeStats::queue_depth_hwm`]).
+    queued_hwm: usize,
     closed: bool,
+}
+
+/// Distribution accounting updated by the executor per batch (its own
+/// mutex so the hot admission path never contends on it).
+#[derive(Default)]
+struct TailState {
+    /// `bucket_len -> (served, batches)`.
+    per_bucket: BTreeMap<usize, (u64, u64)>,
+    /// `batch size -> count` (sparse histogram).
+    batch_hist: BTreeMap<u64, u64>,
+    /// Per-request submit -> response latency in seconds, completion
+    /// order; percentiles computed once at shutdown.
+    latency_secs: Vec<f64>,
 }
 
 /// State shared between handles and the executor thread.
@@ -210,6 +227,7 @@ struct Shared {
     engine: Arc<NativeEngine>,
     cfg: ServeConfig,
     state: Mutex<QueueState>,
+    tail: Mutex<TailState>,
     work: Condvar,
     next_id: AtomicU64,
     rejected: AtomicU64,
@@ -218,6 +236,18 @@ struct Shared {
     batches: AtomicU64,
     batch_rows: AtomicU64,
     max_batch_seen: AtomicU64,
+}
+
+/// Per-bucket serving counters (one row per padded length that ever
+/// executed a batch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketStats {
+    /// Padded length of the bucket.
+    pub bucket_len: usize,
+    /// Requests served at this length.
+    pub served: u64,
+    /// Micro-batches executed at this length.
+    pub batches: u64,
 }
 
 /// Lifetime counters of one server, snapshotted at shutdown.
@@ -232,6 +262,16 @@ pub struct ServeStats {
     /// Mean requests per micro-batch (0 if none ran).
     pub mean_batch: f64,
     pub max_batch: u64,
+    /// Per-bucket served/batch counts, ascending by bucket length.
+    pub per_bucket: Vec<BucketStats>,
+    /// Most requests ever queued at once.
+    pub queue_depth_hwm: u64,
+    /// Request latency percentiles (submit -> response, milliseconds)
+    /// over every *served* request, computed at shutdown via the shared
+    /// [`percentile`] helper (NaN when nothing was served).
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
 }
 
 /// The serving scheduler: request queue + one executor thread over a
@@ -254,6 +294,7 @@ impl ServerHandle {
     /// queued and a [`PendingResponse`] is returned, or admission
     /// refuses it with a [`SubmitError`].
     pub fn submit(&self, tokens: &[i32]) -> Result<PendingResponse, SubmitError> {
+        let _sp = trace::span("serve", "admit");
         let shared = &*self.shared;
         let max = shared.engine.cfg.seq_len;
         if tokens.is_empty() {
@@ -275,6 +316,10 @@ impl ServerHandle {
         }
         let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
         st.queued += 1;
+        st.queued_hwm = st.queued_hwm.max(st.queued);
+        if trace::enabled() {
+            trace::gauge_set("serve_queue_depth", st.queued as u64);
+        }
         st.buckets.entry(bucket).or_default().push_back(Pending {
             id,
             tokens: tokens[..eff].to_vec(),
@@ -284,6 +329,99 @@ impl ServerHandle {
         drop(st);
         shared.work.notify_one();
         Ok(PendingResponse { id, rx })
+    }
+
+    /// Prometheus text-exposition (0.0.4) snapshot of the live serving
+    /// counters — readable at any point in the server's life, not only
+    /// at shutdown.  Rendered from the scheduler's own state (the same
+    /// sources [`Server::shutdown`] snapshots), so it needs no tracing
+    /// enablement.
+    pub fn prometheus_snapshot(&self) -> String {
+        use trace::prom::{render, MetricFamily, Sample};
+        let s = &*self.shared;
+        let (queued, hwm) = {
+            let st = s.state.lock().expect("serve queue poisoned");
+            (st.queued as f64, st.queued_hwm as f64)
+        };
+        let (bucket_rows, hist_rows) = {
+            let tail = s.tail.lock().expect("serve tail poisoned");
+            let buckets: Vec<(usize, u64, u64)> = tail
+                .per_bucket
+                .iter()
+                .map(|(&len, &(served, batches))| (len, served, batches))
+                .collect();
+            let hist: Vec<(u64, u64)> =
+                tail.batch_hist.iter().map(|(&sz, &n)| (sz, n)).collect();
+            (buckets, hist)
+        };
+        let counter = |name: &str, help: &str, v: u64| MetricFamily {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: "counter",
+            samples: vec![Sample::plain(v as f64)],
+        };
+        let families = vec![
+            counter(
+                "serve_requests_served_total",
+                "Requests answered with predictions.",
+                s.served.load(Ordering::Relaxed),
+            ),
+            counter(
+                "serve_requests_failed_total",
+                "Requests answered with a batch-level error.",
+                s.failed.load(Ordering::Relaxed),
+            ),
+            counter(
+                "serve_requests_rejected_total",
+                "Submits refused by admission control.",
+                s.rejected.load(Ordering::Relaxed),
+            ),
+            counter(
+                "serve_batches_total",
+                "Micro-batches executed.",
+                s.batches.load(Ordering::Relaxed),
+            ),
+            MetricFamily {
+                name: "serve_queue_depth".to_string(),
+                help: "Requests currently queued.".to_string(),
+                kind: "gauge",
+                samples: vec![Sample::plain(queued)],
+            },
+            MetricFamily {
+                name: "serve_queue_depth_high_watermark".to_string(),
+                help: "Most requests ever queued at once.".to_string(),
+                kind: "gauge",
+                samples: vec![Sample::plain(hwm)],
+            },
+            MetricFamily {
+                name: "serve_batch_size_count".to_string(),
+                help: "Micro-batches executed, by batch size.".to_string(),
+                kind: "counter",
+                samples: hist_rows
+                    .iter()
+                    .map(|&(sz, n)| Sample::labeled("batch_size", sz, n as f64))
+                    .collect(),
+            },
+            MetricFamily {
+                name: "serve_bucket_served_total".to_string(),
+                help: "Requests served, by padded bucket length.".to_string(),
+                kind: "counter",
+                samples: bucket_rows
+                    .iter()
+                    .map(|&(len, served, _)| Sample::labeled("bucket_len", len, served as f64))
+                    .collect(),
+            },
+            MetricFamily {
+                name: "serve_bucket_batches_total".to_string(),
+                help: "Micro-batches executed, by padded bucket length.".to_string(),
+                kind: "counter",
+                samples: bucket_rows
+                    .iter()
+                    .map(|&(len, _, batches)| Sample::labeled("bucket_len", len, batches as f64))
+                    .collect(),
+            },
+        ];
+        render(&families)
     }
 }
 
@@ -301,8 +439,10 @@ impl Server {
             state: Mutex::new(QueueState {
                 buckets: BTreeMap::new(),
                 queued: 0,
+                queued_hwm: 0,
                 closed: false,
             }),
+            tail: Mutex::new(TailState::default()),
             work: Condvar::new(),
             next_id: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -331,6 +471,22 @@ impl Server {
         let s = &self.shared;
         let batches = s.batches.load(Ordering::Relaxed);
         let rows = s.batch_rows.load(Ordering::Relaxed);
+        let queue_depth_hwm =
+            s.state.lock().expect("serve queue poisoned").queued_hwm as u64;
+        let (per_bucket, lat_ms) = {
+            let tail = s.tail.lock().expect("serve tail poisoned");
+            let per_bucket = tail
+                .per_bucket
+                .iter()
+                .map(|(&bucket_len, &(served, batches))| BucketStats {
+                    bucket_len,
+                    served,
+                    batches,
+                })
+                .collect();
+            let lat_ms: Vec<f64> = tail.latency_secs.iter().map(|&s| s * 1e3).collect();
+            (per_bucket, lat_ms)
+        };
         ServeStats {
             served: s.served.load(Ordering::Relaxed),
             failed: s.failed.load(Ordering::Relaxed),
@@ -338,6 +494,11 @@ impl Server {
             batches,
             mean_batch: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
             max_batch: s.max_batch_seen.load(Ordering::Relaxed),
+            per_bucket,
+            queue_depth_hwm,
+            latency_p50_ms: percentile(&lat_ms, 50.0),
+            latency_p95_ms: percentile(&lat_ms, 95.0),
+            latency_p99_ms: percentile(&lat_ms, 99.0),
         }
     }
 
@@ -391,6 +552,9 @@ fn worker_loop(shared: &Shared) {
                         st.buckets.remove(&bucket);
                     }
                     st.queued -= batch.len();
+                    if trace::enabled() {
+                        trace::gauge_set("serve_queue_depth", st.queued as u64);
+                    }
                     break Some((bucket, batch));
                 }
                 if st.closed {
@@ -420,6 +584,13 @@ fn run_batch(shared: &Shared, bucket_len: usize, batch: Vec<Pending>) {
     let (ni, ns, pad) = (cfg.n_intents, cfg.n_slots, cfg.pad_id);
     let b = batch.len();
     let started = Instant::now();
+    if trace::enabled() {
+        // One retrospective queue span per batch: the oldest member's
+        // enqueue to batch launch (the wait the scheduler imposed).
+        if let Some(earliest) = batch.iter().map(|p| p.enqueued).min() {
+            trace::record_span_at("serve", "queue", earliest, started);
+        }
+    }
     let mut tokens = vec![pad; b * bucket_len];
     for (i, p) in batch.iter().enumerate() {
         tokens[i * bucket_len..i * bucket_len + p.tokens.len()].copy_from_slice(&p.tokens);
@@ -427,21 +598,40 @@ fn run_batch(shared: &Shared, bucket_len: usize, batch: Vec<Pending>) {
     shared.batches.fetch_add(1, Ordering::Relaxed);
     shared.batch_rows.fetch_add(b as u64, Ordering::Relaxed);
     shared.max_batch_seen.fetch_max(b as u64, Ordering::Relaxed);
-    match shared.engine.forward_len(&tokens, bucket_len) {
+    let sp_exec = trace::span("serve", "batch_execute");
+    let result = shared.engine.forward_len(&tokens, bucket_len);
+    drop(sp_exec);
+    {
+        let mut tail = shared.tail.lock().expect("serve tail poisoned");
+        let row = tail.per_bucket.entry(bucket_len).or_insert((0, 0));
+        row.1 += 1;
+        if result.is_ok() {
+            row.0 += b as u64;
+        }
+        *tail.batch_hist.entry(b as u64).or_insert(0) += 1;
+    }
+    if trace::enabled() {
+        trace::hist_observe("serve_batch_size", b as u64);
+    }
+    match result {
         Ok((il, sl)) => {
+            let _sp = trace::span("serve", "respond");
             let done = Instant::now();
+            let mut latencies = Vec::with_capacity(b);
             for (i, p) in batch.into_iter().enumerate() {
                 let eff = p.tokens.len();
                 let intent_logits = il[i * ni..(i + 1) * ni].to_vec();
                 let slot_logits =
                     sl[i * bucket_len * ns..i * bucket_len * ns + eff * ns].to_vec();
+                let latency = done.duration_since(p.enqueued);
+                latencies.push(latency.as_secs_f64());
                 let resp = Response {
                     id: p.id,
                     intent: argmax(&intent_logits),
                     slots: slot_logits.chunks(ns).map(argmax).collect(),
                     intent_logits,
                     slot_logits,
-                    latency: done.duration_since(p.enqueued),
+                    latency,
                     queue_wait: started.duration_since(p.enqueued),
                     batch_size: b,
                     bucket_len,
@@ -450,6 +640,12 @@ fn run_batch(shared: &Shared, bucket_len: usize, batch: Vec<Pending>) {
                 // A dropped client is not an executor error.
                 let _ = p.tx.send(Ok(resp));
             }
+            shared
+                .tail
+                .lock()
+                .expect("serve tail poisoned")
+                .latency_secs
+                .extend(latencies);
         }
         Err(e) => {
             let msg = e.to_string();
@@ -618,6 +814,53 @@ mod tests {
             other => panic!("expected TooLong, got {other:?}"),
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn distribution_stats_and_prometheus_snapshot() {
+        let engine = tiny_engine(28);
+        // Bucket fires only when it holds exactly max_batch = 3, so the
+        // queue-depth high-watermark and the per-bucket/batch-size
+        // distributions are fully deterministic.
+        let server = Server::start(engine, holding_config(3, 64)).unwrap();
+        let h = server.handle();
+        let pending: Vec<_> =
+            (0..3).map(|i| h.submit(&[1, 5 + i as i32, 9, 0]).unwrap()).collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let snap = h.prometheus_snapshot();
+        assert!(snap.contains("# TYPE serve_requests_served_total counter"));
+        assert!(snap.contains("serve_requests_served_total 3\n"));
+        assert!(snap.contains("serve_batches_total 1\n"));
+        assert!(snap.contains("serve_queue_depth 0\n"));
+        assert!(snap.contains("serve_queue_depth_high_watermark 3\n"));
+        assert!(snap.contains("serve_batch_size_count{batch_size=\"3\"} 1\n"));
+        assert!(snap.contains("serve_bucket_served_total{bucket_len=\"4\"} 3\n"));
+        assert!(snap.contains("serve_bucket_batches_total{bucket_len=\"4\"} 1\n"));
+        let stats = server.shutdown();
+        assert_eq!(
+            stats.per_bucket,
+            vec![BucketStats { bucket_len: 4, served: 3, batches: 1 }]
+        );
+        assert_eq!(stats.queue_depth_hwm, 3);
+        // Nearest-rank percentiles over 3 served latencies: finite,
+        // positive, monotone.
+        assert!(stats.latency_p50_ms > 0.0);
+        assert!(stats.latency_p50_ms <= stats.latency_p95_ms);
+        assert!(stats.latency_p95_ms <= stats.latency_p99_ms);
+    }
+
+    #[test]
+    fn empty_server_latency_percentiles_are_nan() {
+        let engine = tiny_engine(29);
+        let server = Server::start(engine, ServeConfig::default()).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 0);
+        assert!(stats.per_bucket.is_empty());
+        assert_eq!(stats.queue_depth_hwm, 0);
+        assert!(stats.latency_p50_ms.is_nan());
+        assert!(stats.latency_p99_ms.is_nan());
     }
 
     #[test]

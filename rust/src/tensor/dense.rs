@@ -278,6 +278,9 @@ where
             let f_ref = &f;
             let latch_ref = &latch;
             let job = move || {
+                // One span per pool job on the tt-matmul-{i} lane
+                // (inert single atomic load when tracing is off).
+                let _sp = crate::trace::span("pool", "job");
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     for (j, chunk) in band.chunks_mut(stride).enumerate() {
                         f_ref(w * per_worker + j, chunk);

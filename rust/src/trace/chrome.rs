@@ -1,0 +1,118 @@
+//! Chrome trace-event JSON exporter (Perfetto / `chrome://tracing`).
+//!
+//! Emits the JSON-object form `{"traceEvents": [...]}` with one `"M"`
+//! (metadata) `thread_name` event per thread lane followed by one `"X"`
+//! (complete) event per span.  Perfetto reconstructs nesting from time
+//! containment within a `(pid, tid)` lane, so the per-thread lanes show
+//! the worker-pool fan-out and the serving executor's batching directly.
+//! Timestamps (`ts`) and durations (`dur`) are microseconds, the format's
+//! native unit — exactly what [`super::SpanEvent`] carries.
+//!
+//! The writer is hand-rolled (the crate is `anyhow`-only by policy);
+//! the escaping + parse round-trip is pinned against the in-repo JSON
+//! parser (`util::json`) in `rust/tests/tracing.rs`.
+
+use super::span::SpanEvent;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render spans as a Chrome trace-event JSON document.
+pub fn to_chrome_json(events: &[SpanEvent]) -> String {
+    // One thread_name metadata event per lane; first span on a lane
+    // names it (thread names are stable per thread, so any span works).
+    let mut lanes: BTreeMap<u64, &str> = BTreeMap::new();
+    for e in events {
+        lanes.entry(e.tid).or_insert(e.thread.as_str());
+    }
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for (tid, name) in &lanes {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(name)
+        );
+    }
+    for e in events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\
+             \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"depth\":{},\"seq\":{}}}}}",
+            e.tid,
+            escape(&e.name),
+            escape(e.cat),
+            e.start_us,
+            e.dur_us,
+            e.depth,
+            e.seq
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, tid: u64) -> SpanEvent {
+        SpanEvent {
+            name: name.to_string(),
+            cat: "t",
+            thread: format!("lane-{tid}"),
+            tid,
+            depth: 0,
+            seq: 0,
+            start_us: 1.0,
+            dur_us: 2.0,
+        }
+    }
+
+    #[test]
+    fn escapes_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn emits_metadata_and_complete_events() {
+        let json = to_chrome_json(&[ev("fp.layer0", 1), ev("job", 2)]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"name\":\"lane-2\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"fp.layer0\""));
+        // Two lanes -> two metadata + two complete events.
+        assert_eq!(json.matches("\"ph\":\"M\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 2);
+    }
+}

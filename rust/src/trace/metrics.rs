@@ -1,0 +1,117 @@
+//! Counter/gauge/histogram registry sampled at stage boundaries.
+//!
+//! This is the live-observability counterpart of the static accounting
+//! in `fpga::resources`: the trainer publishes the *measured* on-chip
+//! byte figures (Eq. 21 cache, optimizer state, packed params) here at
+//! each stage boundary, and `rust/tests/tracing.rs` pins them against
+//! `ResourceReport` so the paper's U50 budget claims hold at runtime,
+//! not just on paper.  Histograms are sparse (`BTreeMap<u64, u64>`
+//! value -> count), which fits the small-integer distributions we track
+//! (serving batch sizes).
+//!
+//! All operations take one global mutex; callers on hot paths gate on
+//! [`crate::trace::enabled`] so the disabled cost stays a single
+//! relaxed atomic load.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+#[derive(Default)]
+struct Registry {
+    gauges: BTreeMap<String, u64>,
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, BTreeMap<u64, u64>>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    f(&mut registry().lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+/// Set a gauge to an absolute value (last write wins).
+pub fn gauge_set(name: &str, value: u64) {
+    with_registry(|r| {
+        r.gauges.insert(name.to_string(), value);
+    });
+}
+
+/// Current value of a gauge, if it has ever been set.
+pub fn gauge(name: &str) -> Option<u64> {
+    with_registry(|r| r.gauges.get(name).copied())
+}
+
+/// Add to a monotonic counter (created at 0 on first touch).
+pub fn counter_add(name: &str, delta: u64) {
+    with_registry(|r| {
+        *r.counters.entry(name.to_string()).or_insert(0) += delta;
+    });
+}
+
+/// Current value of a counter (0 if never touched).
+pub fn counter(name: &str) -> u64 {
+    with_registry(|r| r.counters.get(name).copied().unwrap_or(0))
+}
+
+/// Record one observation of `value` in a sparse histogram.
+pub fn hist_observe(name: &str, value: u64) {
+    with_registry(|r| {
+        *r.hists.entry(name.to_string()).or_default().entry(value).or_insert(0) += 1;
+    });
+}
+
+/// Sorted `(value, count)` pairs of a histogram (empty if untouched).
+pub fn hist(name: &str) -> Vec<(u64, u64)> {
+    with_registry(|r| {
+        r.hists
+            .get(name)
+            .map(|h| h.iter().map(|(k, v)| (*k, *v)).collect())
+            .unwrap_or_default()
+    })
+}
+
+/// All gauges, sorted by name.
+pub fn gauges() -> Vec<(String, u64)> {
+    with_registry(|r| r.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect())
+}
+
+/// All counters, sorted by name.
+pub fn counters() -> Vec<(String, u64)> {
+    with_registry(|r| r.counters.iter().map(|(k, v)| (k.clone(), *v)).collect())
+}
+
+/// Clear every gauge/counter/histogram.
+pub fn reset() {
+    with_registry(|r| *r = Registry::default());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::TestSession;
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        let _s = TestSession::begin();
+        assert_eq!(gauge("bytes"), None);
+        gauge_set("bytes", 7);
+        gauge_set("bytes", 42);
+        assert_eq!(gauge("bytes"), Some(42));
+        assert_eq!(counter("steps"), 0);
+        counter_add("steps", 2);
+        counter_add("steps", 3);
+        assert_eq!(counter("steps"), 5);
+        hist_observe("batch", 4);
+        hist_observe("batch", 4);
+        hist_observe("batch", 8);
+        assert_eq!(hist("batch"), vec![(4, 2), (8, 1)]);
+        assert_eq!(gauges(), vec![("bytes".to_string(), 42)]);
+        assert_eq!(counters(), vec![("steps".to_string(), 5)]);
+        reset();
+        assert_eq!(gauge("bytes"), None);
+        assert!(hist("batch").is_empty());
+    }
+}

@@ -1,0 +1,51 @@
+//! Structured tracing + metrics: the runtime measurement substrate.
+//!
+//! Zero-dependency (std-only) observability for the whole stack, in
+//! four pieces:
+//!
+//! - [`span`]: a span tracer with thread-local stacks and a
+//!   mutex-buffered global sink.  Disabled cost is one relaxed atomic
+//!   load per site (self-tested); enabled spans carry deterministic
+//!   per-thread `(tid, seq, depth)` so span *trees* — not just
+//!   durations — are reproducible across runs.
+//! - [`metrics`]: a counter/gauge/histogram registry the trainer and
+//!   server sample at stage boundaries (Eq. 21 cache bytes, optimizer
+//!   state bytes, packed param bytes, queue depth, batch sizes),
+//!   cross-checked against `fpga::resources::ResourceReport` in tests.
+//! - [`chrome`]: Chrome trace-event JSON export (Perfetto-loadable,
+//!   per-thread lanes) behind `--trace <path>` on `train` /
+//!   `serve-bench`.
+//! - [`prom`] + [`report`]: a Prometheus text snapshot for the serving
+//!   counters and the FP/BP/PU aggregation behind the `trace-report`
+//!   CLI command.
+//!
+//! Span taxonomy (category → names):
+//!
+//! - `train`: `fp.embed` / `fp.layer{i}` / `fp.heads`, `bp.*` and
+//!   `pu.*` over the same units plus `bp.pool`/`pu.pool` — the paper's
+//!   three stages, per layer.  Never nested within the same stage
+//!   prefix, so prefix sums are double-count-free.
+//! - `ttlinear`: `merge_left` / `merge_right` / `apply` — the BTT
+//!   contraction steps (Z3, Z1→Z2, Y) inside each projection.
+//! - `pool`: `job` — one span per worker-pool job execution, on the
+//!   `tt-matmul-{i}` threads.
+//! - `engine`: `forward` — one shared-engine `(B, S)` forward.
+//! - `serve`: `admit` → `queue` → `batch_execute` → `respond` — the
+//!   life of a request through the continuous-batching scheduler.
+//! - `step`: `train_step` — the whole backend step, for totals.
+
+pub mod chrome;
+pub mod metrics;
+pub mod prom;
+pub mod report;
+pub mod span;
+
+pub use chrome::to_chrome_json;
+pub use metrics::{
+    counter, counter_add, counters, gauge, gauge_set, gauges, hist, hist_observe,
+};
+pub use report::{stage_breakdown, StageRow, STAGES};
+pub use span::{
+    disabled_overhead_ns, drain, enabled, record_span_at, reset, set_enabled, snapshot, span,
+    span_fmt, SpanEvent, SpanGuard, TestSession,
+};

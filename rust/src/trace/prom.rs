@@ -1,0 +1,93 @@
+//! Prometheus text-exposition renderer (version 0.0.4 format).
+//!
+//! Small hand-rolled writer for `# HELP` / `# TYPE` headers plus
+//! `name{label="value"} sample` lines — enough for the serving
+//! snapshot (`ServerHandle::prometheus_snapshot`) to be scraped or
+//! eyeballed without any dependency.
+
+use std::fmt::Write as _;
+
+/// One sample line of a family: optional labels plus a value.
+pub struct Sample {
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn plain(value: f64) -> Sample {
+        Sample { labels: Vec::new(), value }
+    }
+
+    pub fn labeled(label: &str, label_value: impl ToString, value: f64) -> Sample {
+        Sample {
+            labels: vec![(label.to_string(), label_value.to_string())],
+            value,
+        }
+    }
+}
+
+/// A metric family: one `# HELP`/`# TYPE` header and its samples.
+pub struct MetricFamily {
+    pub name: String,
+    pub help: String,
+    /// `"counter"` or `"gauge"`.
+    pub kind: &'static str,
+    pub samples: Vec<Sample>,
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render families in Prometheus text exposition format.
+pub fn render(families: &[MetricFamily]) -> String {
+    let mut out = String::new();
+    for f in families {
+        let _ = writeln!(out, "# HELP {} {}", f.name, f.help);
+        let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind);
+        for s in &f.samples {
+            if s.labels.is_empty() {
+                let _ = writeln!(out, "{} {}", f.name, s.value);
+            } else {
+                let labels: Vec<String> = s
+                    .labels
+                    .iter()
+                    .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+                    .collect();
+                let _ = writeln!(out, "{}{{{}}} {}", f.name, labels.join(","), s.value);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_families_and_labels() {
+        let text = render(&[
+            MetricFamily {
+                name: "serve_requests_served_total".into(),
+                help: "Requests completed successfully.".into(),
+                kind: "counter",
+                samples: vec![Sample::plain(5.0)],
+            },
+            MetricFamily {
+                name: "serve_batch_size_count".into(),
+                help: "Executed batches by batch size.".into(),
+                kind: "gauge",
+                samples: vec![
+                    Sample::labeled("batch_size", 4, 2.0),
+                    Sample::labeled("batch_size", 8, 1.0),
+                ],
+            },
+        ]);
+        assert!(text.contains("# HELP serve_requests_served_total Requests completed successfully."));
+        assert!(text.contains("# TYPE serve_requests_served_total counter"));
+        assert!(text.contains("serve_requests_served_total 5\n"));
+        assert!(text.contains("serve_batch_size_count{batch_size=\"4\"} 2\n"));
+        assert!(text.contains("serve_batch_size_count{batch_size=\"8\"} 1\n"));
+    }
+}

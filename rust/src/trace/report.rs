@@ -1,0 +1,110 @@
+//! FP/BP/PU stage aggregation over recorded spans.
+//!
+//! Groups `cat == "train"` spans by their stage prefix (the text before
+//! the first `.` — the taxonomy emits `fp.layer{i}`, `bp.embed`,
+//! `pu.heads`, ...) and computes each stage's share of the total
+//! FP + BP + PU time.  The `trace-report` CLI command prints these rows
+//! next to the cost model's analytic prediction; double counting is
+//! avoided by construction because the trainer never nests two
+//! `train`-category spans with the same stage prefix.
+
+use super::span::SpanEvent;
+
+/// Aggregated wall-clock for one stage prefix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRow {
+    pub stage: String,
+    pub total_us: f64,
+    /// Fraction of the FP + BP + PU total (0.0 when that total is 0).
+    pub share: f64,
+    pub spans: usize,
+}
+
+/// The paper's three training stages, in pipeline order.
+pub const STAGES: [&str; 3] = ["fp", "bp", "pu"];
+
+fn stage_of(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+/// Aggregate `train`-category spans into per-stage totals and shares.
+/// FP/BP/PU come first in pipeline order; any other prefix follows
+/// alphabetically (shares still relative to the FP + BP + PU total).
+pub fn stage_breakdown(events: &[SpanEvent]) -> Vec<StageRow> {
+    let mut totals: Vec<(String, f64, usize)> = Vec::new();
+    for e in events.iter().filter(|e| e.cat == "train") {
+        let stage = stage_of(&e.name);
+        match totals.iter_mut().find(|(s, _, _)| s == stage) {
+            Some((_, us, n)) => {
+                *us += e.dur_us;
+                *n += 1;
+            }
+            None => totals.push((stage.to_string(), e.dur_us, 1)),
+        }
+    }
+    let core: f64 = totals
+        .iter()
+        .filter(|(s, _, _)| STAGES.contains(&s.as_str()))
+        .map(|(_, us, _)| *us)
+        .sum();
+    let mut rows: Vec<StageRow> = totals
+        .into_iter()
+        .map(|(stage, total_us, spans)| StageRow {
+            share: if core > 0.0 { total_us / core } else { 0.0 },
+            stage,
+            total_us,
+            spans,
+        })
+        .collect();
+    rows.sort_by_key(|r| {
+        (
+            STAGES
+                .iter()
+                .position(|s| *s == r.stage)
+                .unwrap_or(STAGES.len()),
+            r.stage.clone(),
+        )
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, cat: &'static str, dur_us: f64) -> SpanEvent {
+        SpanEvent {
+            name: name.to_string(),
+            cat,
+            thread: "t".into(),
+            tid: 1,
+            depth: 0,
+            seq: 0,
+            start_us: 0.0,
+            dur_us,
+        }
+    }
+
+    #[test]
+    fn groups_by_prefix_and_orders_stages() {
+        let rows = stage_breakdown(&[
+            ev("pu.layer0", "train", 10.0),
+            ev("bp.layer0", "train", 60.0),
+            ev("fp.layer0", "train", 20.0),
+            ev("fp.embed", "train", 10.0),
+            ev("merge_left", "ttlinear", 999.0), // other cat: ignored
+        ]);
+        let stages: Vec<&str> = rows.iter().map(|r| r.stage.as_str()).collect();
+        assert_eq!(stages, ["fp", "bp", "pu"]);
+        assert_eq!(rows[0].total_us, 30.0);
+        assert_eq!(rows[0].spans, 2);
+        assert!((rows[0].share - 0.3).abs() < 1e-12);
+        assert!((rows[1].share - 0.6).abs() < 1e-12);
+        assert!((rows[2].share - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_events_no_rows() {
+        assert!(stage_breakdown(&[]).is_empty());
+    }
+}

@@ -1,0 +1,315 @@
+//! Span tracer core: thread-local span stacks feeding a mutex-buffered
+//! global sink.
+//!
+//! Cost model: when tracing is disabled every instrumentation site is a
+//! single `Relaxed` atomic load returning an inert guard — no
+//! allocation, no lock, no clock read (bound asserted by
+//! [`disabled_overhead_ns`] in `rust/tests/tracing.rs`).  When enabled,
+//! opening a span touches only thread-local state plus one `Instant`
+//! read; the global mutex is taken once per span, at close, to push the
+//! completed [`SpanEvent`].  Completed events go straight to the global
+//! sink rather than a thread-local buffer because the worker-pool
+//! threads (`tt-matmul-*`) are persistent and never run TLS destructors
+//! — a flush-on-thread-exit design would silently drop their spans.
+//!
+//! Determinism: each thread stamps spans with a monotonically
+//! increasing per-thread `seq` at open; [`snapshot`]/[`drain`] sort by
+//! `(tid, seq)`, so the per-thread span order (names, depths, nesting)
+//! is identical across runs even though wall-clock durations differ.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// One completed span, as delivered by [`snapshot`]/[`drain`].
+///
+/// `start_us`/`dur_us` are microseconds relative to the trace epoch
+/// (pinned by the first [`set_enabled`]`(true)`), matching the Chrome
+/// trace-event `ts`/`dur` convention.  `depth` is the thread-local
+/// nesting level at open (0 = top level); `seq` orders spans within a
+/// thread by open time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub thread: String,
+    pub tid: u64,
+    pub depth: u32,
+    pub seq: u64,
+    pub start_us: f64,
+    pub dur_us: f64,
+}
+
+struct ThreadState {
+    tid: u64,
+    name: String,
+    depth: u32,
+    seq: u64,
+}
+
+thread_local! {
+    static THREAD: RefCell<ThreadState> = RefCell::new({
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        ThreadState { tid, name, depth: 0, seq: 0 }
+    });
+}
+
+fn sink() -> &'static Mutex<Vec<SpanEvent>> {
+    static SINK: OnceLock<Mutex<Vec<SpanEvent>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// The trace epoch: all timestamps are relative to this instant.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Is tracing on?  One `Relaxed` atomic load — this is the entire
+/// disabled-mode cost of every instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off.  Enabling pins the trace epoch (idempotently)
+/// so span timestamps are comparable across the whole run.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Open a span with a static name.  Returns a guard that records the
+/// span when dropped; inert (and allocation-free) when disabled.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { inner: None };
+    }
+    open(cat, name.to_string())
+}
+
+/// Open a span with a lazily formatted name: the closure only runs when
+/// tracing is enabled, so `format!` cost never leaks into the disabled
+/// fast path.
+#[inline]
+pub fn span_fmt(cat: &'static str, name: impl FnOnce() -> String) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { inner: None };
+    }
+    open(cat, name())
+}
+
+fn open(cat: &'static str, name: String) -> SpanGuard {
+    let (tid, depth, seq) = THREAD.with(|t| {
+        let mut t = t.borrow_mut();
+        let depth = t.depth;
+        t.depth += 1;
+        let seq = t.seq;
+        t.seq += 1;
+        (t.tid, depth, seq)
+    });
+    SpanGuard {
+        inner: Some(OpenSpan { name, cat, tid, depth, seq, start: Instant::now() }),
+    }
+}
+
+/// Record a span from explicit endpoints (attributed to the calling
+/// thread at its current depth).  Used where the interval is only known
+/// after the fact — e.g. the serving `queue` span, which starts at the
+/// earliest enqueue of a batch and ends when the batch launches.
+pub fn record_span_at(cat: &'static str, name: &str, start: Instant, end: Instant) {
+    if !enabled() {
+        return;
+    }
+    let (tid, depth, seq, thread) = THREAD.with(|t| {
+        let mut t = t.borrow_mut();
+        let seq = t.seq;
+        t.seq += 1;
+        (t.tid, t.depth, seq, t.name.clone())
+    });
+    let e0 = epoch();
+    let ev = SpanEvent {
+        name: name.to_string(),
+        cat,
+        thread,
+        tid,
+        depth,
+        seq,
+        start_us: start.saturating_duration_since(e0).as_secs_f64() * 1e6,
+        dur_us: end.saturating_duration_since(start).as_secs_f64() * 1e6,
+    };
+    sink().lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+}
+
+struct OpenSpan {
+    name: String,
+    cat: &'static str,
+    tid: u64,
+    depth: u32,
+    seq: u64,
+    start: Instant,
+}
+
+/// RAII guard returned by [`span`]/[`span_fmt`]; the span closes (and
+/// is pushed to the sink) when the guard drops.
+pub struct SpanGuard {
+    inner: Option<OpenSpan>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(s) = self.inner.take() else { return };
+        let end = Instant::now();
+        let thread = THREAD.with(|t| {
+            let mut t = t.borrow_mut();
+            t.depth = t.depth.saturating_sub(1);
+            t.name.clone()
+        });
+        let e0 = epoch();
+        let ev = SpanEvent {
+            name: s.name,
+            cat: s.cat,
+            thread,
+            tid: s.tid,
+            depth: s.depth,
+            seq: s.seq,
+            start_us: s.start.saturating_duration_since(e0).as_secs_f64() * 1e6,
+            dur_us: end.saturating_duration_since(s.start).as_secs_f64() * 1e6,
+        };
+        sink().lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+    }
+}
+
+fn sorted(mut events: Vec<SpanEvent>) -> Vec<SpanEvent> {
+    events.sort_by(|a, b| (a.tid, a.seq).cmp(&(b.tid, b.seq)));
+    events
+}
+
+/// Copy of all buffered events, sorted by `(tid, seq)` (deterministic
+/// per-thread open order).
+pub fn snapshot() -> Vec<SpanEvent> {
+    sorted(sink().lock().unwrap_or_else(|e| e.into_inner()).clone())
+}
+
+/// Take (and clear) all buffered events, sorted like [`snapshot`].
+pub fn drain() -> Vec<SpanEvent> {
+    sorted(std::mem::take(
+        &mut *sink().lock().unwrap_or_else(|e| e.into_inner()),
+    ))
+}
+
+/// Clear the span buffer without touching the enabled flag.
+pub fn reset() {
+    sink().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Measured per-call cost of a disabled instrumentation site, in
+/// nanoseconds.  Self-test hook for the "near-zero cost when disabled"
+/// contract; callers must ensure tracing is disabled first.
+pub fn disabled_overhead_ns(iters: u32) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters.max(1) {
+        let g = span("trace", "overhead-probe");
+        std::hint::black_box(&g);
+    }
+    t0.elapsed().as_nanos() as f64 / f64::from(iters.max(1))
+}
+
+/// Serializes tests that flip the global enabled flag or read the
+/// global sink/registry (shared across `cargo test` threads).  Restores
+/// a clean disabled state on drop.
+pub struct TestSession {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl TestSession {
+    pub fn begin() -> TestSession {
+        static LOCK: Mutex<()> = Mutex::new(());
+        let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        reset();
+        super::metrics::reset();
+        TestSession { _guard: guard }
+    }
+}
+
+impl Drop for TestSession {
+    fn drop(&mut self) {
+        set_enabled(false);
+        reset();
+        super::metrics::reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _s = TestSession::begin();
+        {
+            let _g = span("t", "nothing");
+            let _h = span_fmt("t", || unreachable!("closure must not run when disabled"));
+        }
+        record_span_at("t", "also-nothing", Instant::now(), Instant::now());
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn nesting_depth_and_order() {
+        let _s = TestSession::begin();
+        set_enabled(true);
+        {
+            let _a = span("t", "outer");
+            {
+                let _b = span_fmt("t", || "inner".to_string());
+            }
+            let _c = span("t", "sibling");
+        }
+        set_enabled(false);
+        let ev = drain();
+        let names: Vec<&str> = ev.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, ["outer", "inner", "sibling"]);
+        assert_eq!(ev[0].depth, 0);
+        assert_eq!(ev[1].depth, 1);
+        assert_eq!(ev[2].depth, 1);
+        // Nesting by time containment (what Perfetto renders).
+        assert!(ev[0].start_us <= ev[1].start_us);
+        assert!(ev[1].start_us + ev[1].dur_us <= ev[0].start_us + ev[0].dur_us + 1e-3);
+    }
+
+    #[test]
+    fn cross_thread_spans_get_own_lanes() {
+        let _s = TestSession::begin();
+        set_enabled(true);
+        let _main = span("t", "main-side");
+        std::thread::Builder::new()
+            .name("span-worker".into())
+            .spawn(|| {
+                let _g = span("t", "worker-side");
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        drop(_main);
+        set_enabled(false);
+        let ev = drain();
+        let worker = ev.iter().find(|e| e.name == "worker-side").unwrap();
+        let main = ev.iter().find(|e| e.name == "main-side").unwrap();
+        assert_ne!(worker.tid, main.tid);
+        assert_eq!(worker.thread, "span-worker");
+        assert_eq!(worker.depth, 0, "depth is per-thread, not inherited");
+    }
+}

@@ -18,6 +18,7 @@
 
 use crate::optim::{Hyper, ModelOptim};
 use crate::tensor::{ops, ContractionStats, PackedTensor, Precision, Tensor, TTMatrix};
+use crate::trace;
 use anyhow::{anyhow, Result};
 use std::borrow::Cow;
 
@@ -146,11 +147,17 @@ fn build_btt_states(
     let (k_dim, n) = (xq.shape[0], tt.n());
     let r_d = tt.ranks[tt.d()];
     let mut scratch = ContractionStats::default();
+    let sp = trace::span("ttlinear", "merge_left");
     let left = tt.merge_left_chain_prec(prec)?;
+    drop(sp);
+    let sp = trace::span("ttlinear", "merge_right");
     let right = tt.merge_right_chain_prec(prec)?;
+    drop(sp);
     tt.record_merge_stats(&mut scratch);
     let z1 = right.last().expect("d >= 1");
+    let sp = trace::span("ttlinear", "apply");
     let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
+    drop(sp);
     scratch.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, stored);
     record_rebuild(stats, scratch, stored);
     Ok((left, right, z2))
@@ -242,7 +249,9 @@ impl TTLinear {
         // same accounting helper as matmul_btt).
         let (left_chain, right_chain, z2) = build_btt_states(&self.tt, &xq, prec, true, stats)?;
         let z3 = left_chain.last().expect("d >= 1");
+        let sp = trace::span("ttlinear", "apply");
         let y = z2.matmul(&z3.t()?)?; // (K, M)
+        drop(sp);
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
         let y = ops::add_row(&y, &self.bias);
         let pack = |t: Tensor| PackedTensor::pack_owned(t, prec);
@@ -540,13 +549,18 @@ fn build_qkv_states(
     let (k_dim, n) = (xq.shape[0], wq.tt.n());
     let r_d = wq.tt.ranks[d];
     let mut scratch = ContractionStats::default();
+    let sp = trace::span("ttlinear", "merge_right");
     let right = wq.tt.merge_right_chain_prec(prec)?;
+    drop(sp);
     wq.tt.record_merge_right_stats(&mut scratch);
     let z1 = right.last().expect("d >= 1");
+    let sp = trace::span("ttlinear", "apply");
     let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
+    drop(sp);
     scratch.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, stored);
     let mut lefts = Vec::with_capacity(3);
     for w in [wq, wk, wv] {
+        let _sp = trace::span("ttlinear", "merge_left");
         lefts.push(w.tt.merge_left_chain_prec(prec)?);
         w.tt.record_merge_left_stats(&mut scratch);
     }
@@ -619,6 +633,7 @@ pub fn forward_qkv_fused_ckpt(
     // Per-projection output applies.
     let mut ys = Vec::with_capacity(3);
     for (w, chain) in [wq, wk, wv].into_iter().zip(&left_chains) {
+        let _sp = trace::span("ttlinear", "apply");
         let z3 = chain.last().expect("d >= 1");
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);

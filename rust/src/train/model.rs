@@ -36,6 +36,7 @@ use crate::config::ModelConfig;
 use crate::engine::{pad_mask, ComputePath, NativeEngine, ParamMap};
 use crate::optim::{ModelOptim, OptimConfig};
 use crate::tensor::{ops, ContractionStats, Precision, Tensor, TTMEmbedding, TTMatrix};
+use crate::trace;
 use crate::train::blocks::{self, LayerNormCache};
 use crate::train::layers::{self, CheckpointMode, QkvFusedCache, TTLinear, TTLinearCache};
 use crate::util::rng::SplitMix64;
@@ -543,6 +544,7 @@ impl NativeTrainModel {
         // exactly the chain the forward computed through.
         let prec = self.precision;
         let aux_recompute = self.checkpoint.aux_mode() == CheckpointMode::Recompute;
+        let sp_embed = trace::span("train", "fp.embed");
         let mut x = Tensor::zeros(&[k_rows, h]);
         let mut emb_unique: Vec<(i32, Vec<Tensor>)> = Vec::new();
         let mut emb_index = Vec::with_capacity(k_rows);
@@ -571,10 +573,12 @@ impl NativeTrainModel {
             }
             emb_index.push(ui);
         }
+        drop(sp_embed);
 
         let bias = ops::attention_bias_from_mask(&mask);
         let mut layer_fwd = Vec::with_capacity(self.layers.len());
         for (li, layer) in self.layers.iter().enumerate() {
+            let _sp_layer = trace::span_fmt("train", || format!("fp.layer{li}"));
             // Per-block checkpointing mode: what this block's TT caches
             // retain for the BP stage.
             let mode = self.checkpoint.layer_mode(li);
@@ -647,6 +651,7 @@ impl NativeTrainModel {
             x = x2;
         }
 
+        let _sp_heads = trace::span("train", "fp.heads");
         let (pool_pre, pool_c) =
             self.pool.forward_ckpt(&x, prec, self.checkpoint.aux_mode(), stats)?;
         let pooled = ops::tanh(&pool_pre);
@@ -684,6 +689,15 @@ impl NativeTrainModel {
     pub fn measure_eq21_cache_bytes(&self, tokens: &[i32]) -> Result<u64> {
         let mut stats = ContractionStats::default();
         let fwd = self.forward_train(tokens, &mut stats)?;
+        Ok(Self::eq21_bytes_of(&fwd))
+    }
+
+    /// Summed at-rest bytes of a forward's live Eq. 21 caches — shared
+    /// by [`NativeTrainModel::measure_eq21_cache_bytes`] and the
+    /// `eq21_cache_bytes` gauge [`NativeTrainModel::train_step`] samples
+    /// at the FP -> BP boundary (so the gauge observes the step's own
+    /// caches instead of paying a second forward).
+    fn eq21_bytes_of(fwd: &ForwardCaches) -> u64 {
         let mut total = fwd.pool_c.stored_bytes();
         for f in &fwd.layer_fwd {
             total += match &f.qkv {
@@ -694,7 +708,18 @@ impl NativeTrainModel {
             };
             total += f.wo_c.stored_bytes() + f.w1_c.stored_bytes() + f.w2_c.stored_bytes();
         }
-        Ok(total)
+        total
+    }
+
+    /// At-rest parameter bytes at the current storage width: every
+    /// trainable buffer [`NativeTrainModel::to_params`] exports (TT/TTM
+    /// cores, biases, LN/positional/classifier tables), charged at
+    /// [`Precision::bytes`] per element — the accounting convention the
+    /// width-parameterized U50 report uses for cores.  Feeds the
+    /// `param_bytes` gauge.
+    pub fn param_bytes(&self) -> u64 {
+        let elems: u64 = self.to_params().values().map(|(_, v)| v.len() as u64).sum();
+        elems * self.precision.bytes()
     }
 
     /// Inference (same contract as the PJRT engine's eval): returns
@@ -753,9 +778,17 @@ impl NativeTrainModel {
         let mut stats = ContractionStats::default();
         let fwd = self.forward_train(tokens, &mut stats)?;
         debug_assert_eq!(fwd.batch, b);
+        // FP -> BP stage boundary: publish the measured on-chip bytes
+        // (observation only — gauges never feed back into compute, so
+        // traced and untraced steps are bitwise identical).
+        if trace::enabled() {
+            trace::gauge_set("eq21_cache_bytes", Self::eq21_bytes_of(&fwd));
+            trace::gauge_set("param_bytes", self.param_bytes());
+        }
         let inv_b = 1.0 / b as f32;
 
         // ---- Joint loss and logit gradients (paper loss_fn, batch mean)
+        let sp_bp_heads = trace::span("train", "bp.heads");
         let mut loss = 0.0f32;
         let mut d_il = Tensor::zeros(&[b, ni]);
         let mut d_slot = Tensor::zeros(&[b * s, ns]);
@@ -811,15 +844,24 @@ impl NativeTrainModel {
                 *bb += v;
             }
         }
-        self.optim.step("cls.intent_w", &mut self.intent_w.data, &d_intent_w.data, &hyper);
-        self.optim.step("cls.intent_b", &mut self.intent_b, &d_intent_b, &hyper);
-        self.optim.step("cls.slot_w", &mut self.slot_w.data, &d_slot_w.data, &hyper);
-        self.optim.step("cls.slot_b", &mut self.slot_b, &d_slot_b, &hyper);
+        drop(sp_bp_heads);
+        {
+            let _sp = trace::span("train", "pu.heads");
+            self.optim.step("cls.intent_w", &mut self.intent_w.data, &d_intent_w.data, &hyper);
+            self.optim.step("cls.intent_b", &mut self.intent_b, &d_intent_b, &hyper);
+            self.optim.step("cls.slot_w", &mut self.slot_w.data, &d_slot_w.data, &hyper);
+            self.optim.step("cls.slot_b", &mut self.slot_b, &d_slot_b, &hyper);
+        }
 
         // ---- Pooler --------------------------------------------------
+        let sp_bp_pool = trace::span("train", "bp.pool");
         let d_pool_pre = blocks::tanh_vjp(&fwd.pooled, &d_pooled);
         let (mut dx, pool_grads) = self.pool.backward(&d_pool_pre, &fwd.pool_c, &mut stats)?;
-        self.pool.apply_update(&pool_grads, &mut self.optim, "cls.pool", &hyper);
+        drop(sp_bp_pool);
+        {
+            let _sp = trace::span("train", "pu.pool");
+            self.pool.apply_update(&pool_grads, &mut self.optim, "cls.pool", &hyper);
+        }
 
         // ---- Encoder blocks, reversed --------------------------------
         for (li, (layer, f)) in self
@@ -830,21 +872,53 @@ impl NativeTrainModel {
             .rev()
         {
             let p = |name: &str| format!("layers.{li}.{name}");
+            // BP and PU interleave within a block (each gradient is
+            // consumed by its update as soon as it exists), so the
+            // stage spans wrap the individual sub-sections; same-name
+            // siblings sum in the stage report.
+            let bp = || trace::span_fmt("train", || format!("bp.layer{li}"));
+            let pu = || trace::span_fmt("train", || format!("pu.layer{li}"));
+            let sp = bp();
             let (d_res2, dg2, db2) = blocks::layer_norm_vjp(&f.ln2_c, &layer.ln2_g, &dx);
-            self.optim.step(&p("ln2.g"), &mut layer.ln2_g, &dg2, &hyper);
-            self.optim.step(&p("ln2.b"), &mut layer.ln2_b, &db2, &hyper);
+            drop(sp);
+            {
+                let _sp = pu();
+                self.optim.step(&p("ln2.g"), &mut layer.ln2_g, &dg2, &hyper);
+                self.optim.step(&p("ln2.b"), &mut layer.ln2_b, &db2, &hyper);
+            }
+            let sp = bp();
             let (d_g1, w2_grads) = layer.w2.backward(&d_res2, &f.w2_c, &mut stats)?;
-            layer.w2.apply_update(&w2_grads, &mut self.optim, &p("w2"), &hyper);
+            drop(sp);
+            {
+                let _sp = pu();
+                layer.w2.apply_update(&w2_grads, &mut self.optim, &p("w2"), &hyper);
+            }
+            let sp = bp();
             let d_h1 = blocks::gelu_vjp(&f.h1, &d_g1);
             let (d_x1_ffn, w1_grads) = layer.w1.backward(&d_h1, &f.w1_c, &mut stats)?;
-            layer.w1.apply_update(&w1_grads, &mut self.optim, &p("w1"), &hyper);
+            drop(sp);
+            {
+                let _sp = pu();
+                layer.w1.apply_update(&w1_grads, &mut self.optim, &p("w1"), &hyper);
+            }
+            let sp = bp();
             let d_x1 = ops::add(&d_res2, &d_x1_ffn);
             let (d_res1, dg1, db1) = blocks::layer_norm_vjp(&f.ln1_c, &layer.ln1_g, &d_x1);
-            self.optim.step(&p("ln1.g"), &mut layer.ln1_g, &dg1, &hyper);
-            self.optim.step(&p("ln1.b"), &mut layer.ln1_b, &db1, &hyper);
+            drop(sp);
+            {
+                let _sp = pu();
+                self.optim.step(&p("ln1.g"), &mut layer.ln1_g, &dg1, &hyper);
+                self.optim.step(&p("ln1.b"), &mut layer.ln1_b, &db1, &hyper);
+            }
+            let sp = bp();
             let (d_ctx, wo_grads) = layer.wo.backward(&d_res1, &f.wo_c, &mut stats)?;
-            layer.wo.apply_update(&wo_grads, &mut self.optim, &p("wo"), &hyper);
+            drop(sp);
+            {
+                let _sp = pu();
+                layer.wo.apply_update(&wo_grads, &mut self.optim, &p("wo"), &hyper);
+            }
             // Attention backward, mirroring the forward's schedule.
+            let sp = bp();
             let (dq, dk, dv) = match &f.attn {
                 AttnFwd::Batched(probs) => blocks::multi_head_attention_vjp_batched(
                     &f.q, &f.k, &f.v, probs, &d_ctx, cfg_nh, b,
@@ -873,12 +947,16 @@ impl NativeTrainModel {
                     (dq, dk, dv)
                 }
             };
+            drop(sp);
             // QKV backward + PU, fused or separate to match the forward.
             let dx_qkv = match &f.qkv {
                 QkvFwd::Fused(cache) => {
+                    let sp = bp();
                     let (dx_qkv, grads) = layers::backward_qkv_fused(
                         &layer.wq, &layer.wk, &layer.wv, &dq, &dk, &dv, cache, &mut stats,
                     )?;
+                    drop(sp);
+                    let _sp = pu();
                     layers::apply_update_qkv_fused(
                         &mut layer.wq,
                         &mut layer.wk,
@@ -891,12 +969,28 @@ impl NativeTrainModel {
                     dx_qkv
                 }
                 QkvFwd::Separate(c) => {
+                    let sp = bp();
                     let (dx_q, wq_grads) = layer.wq.backward(&dq, &c.wq_c, &mut stats)?;
-                    layer.wq.apply_update(&wq_grads, &mut self.optim, &p("wq"), &hyper);
+                    drop(sp);
+                    {
+                        let _sp = pu();
+                        layer.wq.apply_update(&wq_grads, &mut self.optim, &p("wq"), &hyper);
+                    }
+                    let sp = bp();
                     let (dx_k, wk_grads) = layer.wk.backward(&dk, &c.wk_c, &mut stats)?;
-                    layer.wk.apply_update(&wk_grads, &mut self.optim, &p("wk"), &hyper);
+                    drop(sp);
+                    {
+                        let _sp = pu();
+                        layer.wk.apply_update(&wk_grads, &mut self.optim, &p("wk"), &hyper);
+                    }
+                    let sp = bp();
                     let (dx_v, wv_grads) = layer.wv.backward(&dv, &c.wv_c, &mut stats)?;
-                    layer.wv.apply_update(&wv_grads, &mut self.optim, &p("wv"), &hyper);
+                    drop(sp);
+                    {
+                        let _sp = pu();
+                        layer.wv.apply_update(&wv_grads, &mut self.optim, &p("wv"), &hyper);
+                    }
+                    let _sp = bp();
                     ops::add(&ops::add(&dx_q, &dx_k), &dx_v)
                 }
             };
@@ -909,6 +1003,7 @@ impl NativeTrainModel {
         // unrolled once — `lookup_vjp` is linear in the row gradient,
         // so this matches the per-position walk at a fraction of the
         // contractions.
+        let sp_bp_embed = trace::span("train", "bp.embed");
         let mut emb_grads: Vec<Tensor> = self
             .embedding
             .cores
@@ -937,17 +1032,32 @@ impl NativeTrainModel {
                     .lookup_vjp(*t as usize, &full, d_row, &mut emb_grads)?;
             }
         }
-        for (k, (core, g)) in self.embedding.cores.iter_mut().zip(&emb_grads).enumerate() {
-            self.optim.step(&format!("embed.ttm.{k}"), &mut core.data, &g.data, &hyper);
+        drop(sp_bp_embed);
+        {
+            let _sp = trace::span("train", "pu.embed");
+            for (k, (core, g)) in self.embedding.cores.iter_mut().zip(&emb_grads).enumerate() {
+                self.optim.step(&format!("embed.ttm.{k}"), &mut core.data, &g.data, &hyper);
+            }
         }
         // Positional-table gradient: sum over examples (ascending order).
+        let sp_bp_pos = trace::span("train", "bp.embed");
         let mut d_pos = vec![0.0f32; s * h];
         for e in 0..b {
             for (dp, &dv) in d_pos.iter_mut().zip(&dx.data[e * s * h..(e + 1) * s * h]) {
                 *dp += dv;
             }
         }
-        self.optim.step("embed.pos", &mut self.pos.data, &d_pos, &hyper);
+        drop(sp_bp_pos);
+        {
+            let _sp = trace::span("train", "pu.embed");
+            self.optim.step("embed.pos", &mut self.pos.data, &d_pos, &hyper);
+        }
+
+        // PU -> next-FP stage boundary: moments now reflect this step.
+        if trace::enabled() {
+            trace::gauge_set("optim_state_bytes", self.optim.allocated_state_bytes());
+            trace::counter_add("train_steps_total", 1);
+        }
 
         Ok((loss, stats))
     }

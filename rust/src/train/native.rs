@@ -126,6 +126,7 @@ impl TrainBackend for NativeTrainer {
         lr: f32,
     ) -> Result<StepOutput> {
         let t0 = Instant::now();
+        let _sp = crate::trace::span("step", "train_step");
         let (loss, stats) = self.model.train_step(tokens, intent, slots, lr)?;
         self.last_stats = stats;
         *self.eval_model.borrow_mut() = None; // parameters moved

@@ -1,6 +1,7 @@
 //! Wall-clock measurement helpers used by the bench harness and the
 //! coordinator's metrics.
 
+use crate::coordinator::metrics::percentile;
 use std::time::Instant;
 
 /// Run `f` repeatedly and return (best, mean, total_iters).
@@ -36,11 +37,13 @@ impl BenchStats {
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
+        // Percentiles go through the one shared nearest-rank definition
+        // (`coordinator::metrics::percentile`), not ad-hoc indexing.
         BenchStats {
             best: samples[0],
             mean,
-            p50: samples[n / 2],
-            p95: samples[(n * 95 / 100).min(n - 1)],
+            p50: percentile(&samples, 50.0),
+            p95: percentile(&samples, 95.0),
             n,
         }
     }
@@ -66,6 +69,18 @@ mod tests {
         assert_eq!(s.best, 1.0);
         assert_eq!(s.p50, 2.0);
         assert!(s.mean > 1.9 && s.mean < 2.1);
+    }
+
+    #[test]
+    fn percentiles_match_shared_definition() {
+        // BenchStats must agree with the single shared nearest-rank
+        // helper — pins the dedup so the two can't drift apart again.
+        let raw = vec![0.4, 0.1, 0.3, 0.2, 0.5];
+        let s = BenchStats::from_samples(raw.clone());
+        assert_eq!(s.p50, percentile(&raw, 50.0));
+        assert_eq!(s.p95, percentile(&raw, 95.0));
+        assert_eq!(s.p50, 0.3);
+        assert_eq!(s.p95, 0.5);
     }
 
     #[test]

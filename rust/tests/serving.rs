@@ -23,7 +23,7 @@ use tt_trainer::coordinator::TrainBackend;
 use tt_trainer::data::Dataset;
 use tt_trainer::engine::{ComputePath, NativeEngine};
 use tt_trainer::inference::NativeModel;
-use tt_trainer::serve::{ServeConfig, Server, SubmitError};
+use tt_trainer::serve::{BucketStats, ServeConfig, Server, SubmitError};
 use tt_trainer::tensor::Precision;
 use tt_trainer::train::NativeTrainer;
 
@@ -210,6 +210,23 @@ fn composition_invariance_through_live_server() {
         let stats = stats_thread.join().unwrap();
         assert_eq!(stats.served, 5);
         assert_eq!(stats.batches, 2);
+        // Distribution accounting: all 5 requests queue before the
+        // drain (hour-long max_wait, max_batch 8), so the high
+        // watermark and the per-bucket split are deterministic.
+        assert_eq!(stats.queue_depth_hwm, 5, "[{pname}/{prec}]");
+        assert_eq!(
+            stats.per_bucket,
+            vec![
+                BucketStats { bucket_len: 4, served: 3, batches: 1 },
+                BucketStats { bucket_len: 8, served: 2, batches: 1 },
+            ],
+            "[{pname}/{prec}] per-bucket served/batch counts"
+        );
+        // Latency percentiles over the 5 served requests: finite,
+        // positive, monotone p50 <= p95 <= p99.
+        assert!(stats.latency_p50_ms.is_finite() && stats.latency_p50_ms > 0.0);
+        assert!(stats.latency_p50_ms <= stats.latency_p95_ms);
+        assert!(stats.latency_p95_ms <= stats.latency_p99_ms);
     }
 }
 

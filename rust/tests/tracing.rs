@@ -1,0 +1,301 @@
+//! Tracing + metrics integration suite — the observability contracts:
+//!
+//! * **Deterministic span trees**: two identical train steps produce
+//!   the identical `(name, cat, depth)` sequence on the training
+//!   thread, with the paper's FP/BP/PU stage spans present and the BTT
+//!   contraction spans nested inside them.
+//! * **Near-zero disabled cost**: an instrumented site with tracing
+//!   off is one relaxed atomic load; the measured per-call overhead
+//!   stays under a conservative bound, and enabling tracing does not
+//!   perturb training (bitwise-identical parameters).
+//! * **Chrome-JSON export**: escaping round-trips through the in-repo
+//!   JSON parser and the document carries per-thread lanes.
+//! * **Gauge consistency**: the live byte gauges sampled inside
+//!   `train_step` agree with `measure_eq21_cache_bytes`, the analytic
+//!   `ResourceReport` and the optimizer's own accounting across
+//!   {f32, bf16} x {cache-all, recompute}.
+//!
+//! Every test takes `trace::TestSession` — the tracer, registry and
+//! enabled flag are process-global, and `cargo test` runs threads in
+//! parallel.
+
+use std::sync::Arc;
+use tt_trainer::config::ModelConfig;
+use tt_trainer::engine::NativeEngine;
+use tt_trainer::fpga::resources;
+use tt_trainer::optim::{OptimConfig, OptimKind};
+use tt_trainer::serve::{ServeConfig, Server};
+use tt_trainer::tensor::{Precision, Tensor};
+use tt_trainer::trace;
+use tt_trainer::trace::SpanEvent;
+use tt_trainer::train::{CheckpointPolicy, NativeTrainModel, NativeTrainer};
+use tt_trainer::util::json::Value;
+use tt_trainer::util::rng::SplitMix64;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        n_layers: 1,
+        d_hid: 48,
+        n_heads: 4,
+        seq_len: 8,
+        batch: 1,
+        vocab: 27,
+        n_intents: 5,
+        n_slots: 7,
+        tt_m: vec![4, 4, 3],
+        tt_n: vec![3, 4, 4],
+        tt_rank: 3,
+        ttm_vocab_modes: vec![3, 3, 3],
+        ttm_hid_modes: vec![4, 4, 3],
+        ttm_rank: 4,
+        pad_id: 0,
+        cls_id: 1,
+        unk_id: 2,
+    }
+}
+
+fn example() -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    (vec![1, 5, 9, 13, 4, 0, 0, 0], vec![2], vec![0, 1, 2, 3, 1, 0, 0, 0])
+}
+
+/// One traced train step on a fresh model; returns the drained events.
+fn traced_step(seed: u64) -> Vec<SpanEvent> {
+    let (tokens, intent, slots) = example();
+    let mut model = NativeTrainModel::random_init(&tiny_cfg(), seed).unwrap();
+    trace::set_enabled(true);
+    model.train_step(&tokens, &intent, &slots, 1e-2).unwrap();
+    trace::set_enabled(false);
+    trace::drain()
+}
+
+#[test]
+fn span_trees_are_deterministic_and_stage_structured() {
+    let _s = trace::TestSession::begin();
+    let run_a = traced_step(91);
+    let run_b = traced_step(91);
+    // The training thread is the one carrying the `train`-cat spans
+    // (pool jobs, if any, land on the tt-matmul lanes).
+    let train_tid = |ev: &[SpanEvent]| {
+        ev.iter().find(|e| e.cat == "train").expect("no train spans").tid
+    };
+    let on_thread = |ev: &[SpanEvent], tid: u64| -> Vec<(String, &'static str, u32)> {
+        ev.iter()
+            .filter(|e| e.tid == tid)
+            .map(|e| (e.name.clone(), e.cat, e.depth))
+            .collect()
+    };
+    let a = on_thread(&run_a, train_tid(&run_a));
+    let b = on_thread(&run_b, train_tid(&run_b));
+    assert_eq!(a, b, "span tree differs between identical runs");
+
+    // Every stage of the paper's loop shows up, in FP -> BP/PU order.
+    let names: Vec<&str> = a.iter().map(|(n, _, _)| n.as_str()).collect();
+    let first = |want: &str| {
+        names.iter().position(|n| *n == want).unwrap_or_else(|| panic!("missing span {want}"))
+    };
+    assert!(first("fp.embed") < first("fp.layer0"));
+    assert!(first("fp.layer0") < first("fp.heads"));
+    assert!(first("fp.heads") < first("bp.heads"));
+    assert!(first("bp.heads") < first("pu.heads"));
+    for want in ["bp.pool", "pu.pool", "bp.layer0", "pu.layer0", "bp.embed", "pu.embed"] {
+        first(want);
+    }
+    // BTT contraction spans exist and nest inside a stage span.
+    let tt: Vec<_> = a.iter().filter(|(_, cat, _)| *cat == "ttlinear").collect();
+    assert!(!tt.is_empty(), "no ttlinear contraction spans");
+    for (name, _, depth) in &tt {
+        assert!(
+            matches!(name.as_str(), "merge_left" | "merge_right" | "apply"),
+            "unexpected ttlinear span {name}"
+        );
+        assert!(*depth >= 1, "ttlinear span {name} not nested in a stage span");
+    }
+
+    // The FP/BP/PU aggregation covers exactly the three stages and its
+    // shares form a partition.
+    let rows = trace::stage_breakdown(&run_a);
+    let stages: Vec<&str> = rows.iter().map(|r| r.stage.as_str()).collect();
+    assert_eq!(&stages[..3], &["fp", "bp", "pu"]);
+    let share_sum: f64 = rows.iter().take(3).map(|r| r.share).sum();
+    assert!((share_sum - 1.0).abs() < 1e-9, "stage shares sum to {share_sum}");
+    assert!(rows.iter().take(3).all(|r| r.total_us > 0.0 && r.spans > 0));
+}
+
+#[test]
+fn disabled_overhead_is_bounded_and_training_unperturbed() {
+    let _s = trace::TestSession::begin();
+    // Warm the thread-local + branch predictor, then measure.
+    trace::disabled_overhead_ns(10_000);
+    let ns = trace::disabled_overhead_ns(1_000_000);
+    assert!(
+        ns < 1_000.0,
+        "disabled instrumentation costs {ns:.1} ns/call — contract is one relaxed atomic load"
+    );
+
+    // Observation-only: a traced step leaves bitwise the parameters of
+    // an untraced one (spans/gauges never feed back into compute).
+    let (tokens, intent, slots) = example();
+    let run = |on: bool| {
+        let mut model = NativeTrainModel::random_init(&tiny_cfg(), 92).unwrap();
+        trace::set_enabled(on);
+        let (loss, _) = model.train_step(&tokens, &intent, &slots, 1e-2).unwrap();
+        trace::set_enabled(false);
+        trace::reset();
+        (loss, model.to_params())
+    };
+    let (loss_off, params_off) = run(false);
+    let (loss_on, params_on) = run(true);
+    assert_eq!(loss_off, loss_on, "tracing changed the loss");
+    assert_eq!(params_off, params_on, "tracing changed the parameters");
+}
+
+#[test]
+fn chrome_json_escapes_and_round_trips_through_the_parser() {
+    let _s = trace::TestSession::begin();
+    let nasty = "fp.\"layer\\0\"\n\ttab\u{1}end";
+    let events = vec![
+        SpanEvent {
+            name: nasty.to_string(),
+            cat: "train",
+            thread: "main \"lane\"".to_string(),
+            tid: 1,
+            depth: 0,
+            seq: 0,
+            start_us: 10.0,
+            dur_us: 2.5,
+        },
+        SpanEvent {
+            name: "job".to_string(),
+            cat: "pool",
+            thread: "tt-matmul-0".to_string(),
+            tid: 2,
+            depth: 0,
+            seq: 0,
+            start_us: 11.0,
+            dur_us: 1.0,
+        },
+    ];
+    let json = trace::to_chrome_json(&events);
+    let doc = Value::parse(&json).expect("exported trace is not valid JSON");
+    let items = doc.get("traceEvents").and_then(Value::as_arr).expect("no traceEvents array");
+    // 2 lanes -> 2 metadata events, then the 2 complete events.
+    assert_eq!(items.len(), 4);
+    let metas: Vec<_> =
+        items.iter().filter(|e| e.get("ph").and_then(Value::as_str) == Some("M")).collect();
+    assert_eq!(metas.len(), 2);
+    assert_eq!(
+        metas[0].get("args").unwrap().get("name").and_then(Value::as_str),
+        Some("main \"lane\"")
+    );
+    let xs: Vec<_> =
+        items.iter().filter(|e| e.get("ph").and_then(Value::as_str) == Some("X")).collect();
+    assert_eq!(xs.len(), 2);
+    // The escaping round-trips: the parsed name is the original string.
+    assert_eq!(xs[0].get("name").and_then(Value::as_str), Some(nasty));
+    assert_eq!(xs[0].get("cat").and_then(Value::as_str), Some("train"));
+    assert_eq!(xs[0].get("ts").and_then(Value::as_f64), Some(10.0));
+    assert_eq!(xs[0].get("dur").and_then(Value::as_f64), Some(2.5));
+    assert_eq!(xs[0].get("args").unwrap().get("depth").and_then(Value::as_f64), Some(0.0));
+    assert_eq!(xs[1].get("tid").and_then(Value::as_f64), Some(2.0));
+}
+
+#[test]
+fn byte_gauges_agree_with_resource_report_across_grid() {
+    // The live gauges sampled at the stage boundary inside `train_step`
+    // must agree with (1) the executed cache measurement, (2) the
+    // analytic ResourceReport, (3) the optimizer's own allocation
+    // accounting and (4) an independent parameter-byte sum — across
+    // precision x checkpoint policy.
+    let _s = trace::TestSession::begin();
+    let (tokens, intent, slots) = example();
+    let cfg = tiny_cfg();
+    for prec in [Precision::F32, Precision::Bf16] {
+        for policy in [CheckpointPolicy::CacheAll, CheckpointPolicy::Recompute] {
+            let mut model = NativeTrainModel::random_init(&cfg, 93).unwrap();
+            model.set_optim(OptimConfig { kind: OptimKind::Adam, ..Default::default() });
+            model.set_precision(prec);
+            model.checkpoint = policy.clone();
+            trace::set_enabled(true);
+            model.train_step(&tokens, &intent, &slots, 1e-2).unwrap();
+            trace::set_enabled(false);
+            let ctx = format!("{prec:?}/{}", policy.name());
+
+            let eq21 = trace::gauge("eq21_cache_bytes").expect("eq21 gauge not set");
+            let measured = model.measure_eq21_cache_bytes(&tokens).unwrap();
+            let report = resources::report_for_policy(&cfg, OptimKind::Adam, prec, &policy);
+            assert_eq!(eq21, measured, "[{ctx}] gauge vs executed caches");
+            assert_eq!(eq21, report.eq21_cache_bytes, "[{ctx}] gauge vs ResourceReport");
+
+            let opt = trace::gauge("optim_state_bytes").expect("optimizer gauge not set");
+            assert_eq!(opt, model.optim.allocated_state_bytes(), "[{ctx}] optimizer bytes");
+            assert!(opt > 0, "[{ctx}] Adam allocated no moments");
+
+            let pb = trace::gauge("param_bytes").expect("param gauge not set");
+            let elems: u64 =
+                model.to_params().values().map(|(_, v)| v.len() as u64).sum();
+            assert_eq!(pb, elems * prec.bytes(), "[{ctx}] packed param bytes");
+
+            assert_eq!(trace::counter("train_steps_total"), 1, "[{ctx}]");
+            trace::reset();
+            trace::metrics::reset();
+        }
+    }
+}
+
+#[test]
+fn pool_jobs_span_on_worker_lanes() {
+    // The worker-pool path only engages above the parallel threshold
+    // and when the host has >= 2 cores; skip (trivially pass) on
+    // single-core runners where the pool has no workers.
+    let cores = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if cores < 2 {
+        return;
+    }
+    let _s = trace::TestSession::begin();
+    let mut rng = SplitMix64::new(94);
+    // 256^3 multiply-accumulates: above the pool dispatch threshold.
+    let a = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    trace::set_enabled(true);
+    a.matmul(&b).unwrap();
+    trace::set_enabled(false);
+    let ev = trace::drain();
+    let jobs: Vec<_> =
+        ev.iter().filter(|e| e.cat == "pool" && e.name == "job").collect();
+    assert!(!jobs.is_empty(), "no pool job spans from a parallel matmul");
+    assert!(
+        jobs.iter().all(|e| e.thread.starts_with("tt-matmul-")),
+        "pool spans not on worker lanes: {:?}",
+        jobs.iter().map(|e| &e.thread).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn serve_spans_cover_the_request_lifecycle() {
+    let _s = trace::TestSession::begin();
+    let cfg = tiny_cfg();
+    let params = NativeTrainer::random_init(&cfg, 95).unwrap().model.to_params();
+    let engine = Arc::new(NativeEngine::from_params(&cfg, &params).unwrap());
+    trace::set_enabled(true);
+    let server = Server::start(engine, ServeConfig::no_batching()).unwrap();
+    server.handle().submit(&[1, 5, 9, 13]).unwrap().wait().unwrap();
+    server.shutdown();
+    trace::set_enabled(false);
+    let ev = trace::drain();
+    for want in ["admit", "queue", "batch_execute", "respond"] {
+        assert!(
+            ev.iter().any(|e| e.cat == "serve" && e.name == want),
+            "missing serve span {want}"
+        );
+    }
+    // The executor's engine call shows up on the serve-executor lane.
+    let exec = ev
+        .iter()
+        .find(|e| e.cat == "serve" && e.name == "batch_execute")
+        .unwrap();
+    assert_eq!(exec.thread, "serve-executor");
+    assert!(
+        ev.iter().any(|e| e.cat == "engine" && e.name == "forward" && e.tid == exec.tid),
+        "engine forward span missing from the executor lane"
+    );
+}
