@@ -17,6 +17,9 @@
 //!   wallclock — measured rust-side contraction timings (BTT vs RL vs MM)
 //!   native-train — measured rust-native train/eval step latency
 //!             (no artifacts needed; FP + BP + fused SGD)
+//!   matrix  — precision x compute-path x checkpoint-policy grid
+//!             (tokens/sec, stage split, measured at-rest bytes;
+//!             writes BENCH_matrix.json, CI-gated)
 //!   serve   — continuous-batching serving scheduler load test
 //!             (no-batching baseline vs continuous, concurrency 1/8;
 //!             writes BENCH_serve.json)
@@ -85,6 +88,9 @@ fn main() {
     }
     if run("native-train") {
         native_train();
+    }
+    if run("matrix") {
+        matrix();
     }
     if run("serve") {
         serve();
@@ -200,7 +206,9 @@ fn native_train() {
     // attention wins, the bf16 storage-path rows (halved Eq. 21 cache +
     // optimizer state), and the recompute rows (dropped Eq. 21 cache;
     // bf16 x recompute is the paper's full memory story).
-    let unfused_batched = ComputePath { fused_qkv: false, batched_attention: true };
+    // Elementwise fusion stays on so this row isolates the QKV knob.
+    let unfused_batched =
+        ComputePath { fused_qkv: false, batched_attention: true, fused_elementwise: true };
     let cache = CheckpointPolicy::CacheAll;
     let recompute = CheckpointPolicy::Recompute;
     let grid = [
@@ -342,6 +350,25 @@ fn native_train() {
     match std::fs::write("BENCH_native_train.json", &json) {
         Ok(()) => println!("wrote BENCH_native_train.json"),
         Err(e) => println!("could not write BENCH_native_train.json: {e}"),
+    }
+}
+
+/// The precision x compute-path x checkpoint-policy grid
+/// (`tt_trainer::benchgrid`, shared with the `bench-matrix` CLI
+/// command): 3 precisions x {fused, looped} x {cache, recompute} at the
+/// paper config, batch 8, with per-cell tokens/sec, the FP/BP/PU stage
+/// split of a traced step and the measured at-rest packed-parameter /
+/// Eq. 21 cache / optimizer-state bytes.  Writes `BENCH_matrix.json`;
+/// CI gates on its `fused_bf16_vs_unfused_f32` staying above 1.0.
+fn matrix() {
+    hdr("matrix", "precision x path x checkpoint grid (no artifacts)");
+    // Fail loudly (see native_train): a silent skip would surface only
+    // as a missing BENCH_matrix.json artifact in CI.
+    let report = tt_trainer::benchgrid::run_paper_matrix(1, 4).expect("matrix grid");
+    print!("{}", report.render_table());
+    match std::fs::write("BENCH_matrix.json", report.to_json()) {
+        Ok(()) => println!("wrote BENCH_matrix.json"),
+        Err(e) => println!("could not write BENCH_matrix.json: {e}"),
     }
 }
 

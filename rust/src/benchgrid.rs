@@ -1,0 +1,377 @@
+//! The precision x compute-path x checkpoint-policy benchmark grid.
+//!
+//! One implementation shared by the bench binary (`cargo bench --offline
+//! -- matrix`, which writes `BENCH_matrix.json`) and the CLI
+//! (`bench-matrix`, which prints the table): for every cell of
+//! {f32, bf16, f16} x {fused, looped} x {cache, recompute} it runs real
+//! paper-config train steps and records
+//!
+//! * throughput — p50 step latency, steps/sec, tokens/sec,
+//! * the FP/BP/PU stage split of one traced step
+//!   ([`crate::trace::stage_breakdown`]),
+//! * the **measured** at-rest byte footprints: packed parameters
+//!   ([`crate::train::NativeTrainModel::param_bytes`] sums the physical
+//!   `u16`/`f32` stores, not an analytic formula), the live Eq. 21
+//!   caches and the allocated optimizer moments.
+//!
+//! The summary ratios compare each cell against the
+//! f32 / looped / cache baseline; `fused_bf16_vs_unfused_f32` is the
+//! headline number the CI regression gate asserts to stay above 1.0.
+
+use crate::config::ModelConfig;
+use crate::coordinator::Trainer;
+use crate::data::Dataset;
+use crate::optim::{OptimConfig, OptimKind};
+use crate::tensor::Precision;
+use crate::trace;
+use crate::train::{CheckpointPolicy, ComputePath, NativeTrainer};
+use crate::util::timer::bench;
+use anyhow::Result;
+
+/// One measured cell of the grid.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    pub precision: Precision,
+    /// `true` = fully fused schedule ([`ComputePath::fused`]: fused QKV,
+    /// batched attention, fused elementwise lanes); `false` = the
+    /// pre-fusion looped baseline ([`ComputePath::looped`]).
+    pub fused: bool,
+    /// `true` = [`CheckpointPolicy::CacheAll`]; `false` = `Recompute`.
+    pub cached: bool,
+    pub p50_step_secs: f64,
+    pub steps_per_sec: f64,
+    pub tokens_per_sec: f64,
+    /// Measured at-rest parameter bytes (packed representation).
+    pub param_bytes: u64,
+    /// Measured live Eq. 21 cache bytes over one batch-shaped forward.
+    pub eq21_cache_bytes: u64,
+    /// Allocated optimizer-moment bytes after the measured steps.
+    pub optim_state_bytes: u64,
+    /// `(stage, total_us)` rows of one traced step (fp / bp / pu).
+    pub stage_us: Vec<(String, f64)>,
+    pub mean_loss: f32,
+}
+
+impl MatrixCell {
+    pub fn path_name(&self) -> &'static str {
+        if self.fused {
+            "fused"
+        } else {
+            "looped"
+        }
+    }
+
+    pub fn ckpt_name(&self) -> &'static str {
+        if self.cached {
+            "cache"
+        } else {
+            "recompute"
+        }
+    }
+
+    /// `"fp 47% bp 44% pu 9%"` — the traced stage split, normalized.
+    pub fn stage_split(&self) -> String {
+        let total: f64 = self.stage_us.iter().map(|(_, us)| us).sum();
+        if total <= 0.0 {
+            return String::from("-");
+        }
+        self.stage_us
+            .iter()
+            .map(|(s, us)| format!("{s} {:.0}%", 100.0 * us / total))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// The full grid plus the workload shape it was measured at.
+#[derive(Debug, Clone)]
+pub struct MatrixReport {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub warmup: usize,
+    pub iters: usize,
+    pub cells: Vec<MatrixCell>,
+}
+
+impl MatrixReport {
+    pub fn find(&self, precision: Precision, fused: bool, cached: bool) -> Option<&MatrixCell> {
+        self.cells
+            .iter()
+            .find(|c| c.precision == precision && c.fused == fused && c.cached == cached)
+    }
+
+    /// The f32 / looped / cache reference cell every speedup is against.
+    pub fn baseline(&self) -> Option<&MatrixCell> {
+        self.find(Precision::F32, false, true)
+    }
+
+    /// tokens/sec ratio of `(precision, fused, cached)` over the
+    /// baseline cell (0.0 when either cell is missing).
+    pub fn speedup_vs_baseline(&self, precision: Precision, fused: bool, cached: bool) -> f64 {
+        match (self.find(precision, fused, cached), self.baseline()) {
+            (Some(c), Some(b)) if b.tokens_per_sec > 0.0 => c.tokens_per_sec / b.tokens_per_sec,
+            _ => 0.0,
+        }
+    }
+
+    /// The CI-gated headline: fused-elementwise bf16 over unfused f32.
+    pub fn fused_bf16_vs_unfused_f32(&self) -> f64 {
+        self.speedup_vs_baseline(Precision::Bf16, true, true)
+    }
+
+    /// Measured at-rest parameter bytes saved by packing (f32 cell minus
+    /// the given half-precision cell, at fused/cache).
+    pub fn param_bytes_saved(&self, precision: Precision) -> u64 {
+        match (self.find(Precision::F32, true, true), self.find(precision, true, true)) {
+            (Some(f), Some(h)) => f.param_bytes.saturating_sub(h.param_bytes),
+            _ => 0,
+        }
+    }
+
+    /// The `BENCH_matrix.json` document (hand-rolled, no serde).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let stages = c
+                    .stage_us
+                    .iter()
+                    .map(|(s, us)| format!("\"{s}\": {us:.1}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!(
+                    "    {{\"precision\": \"{}\", \"path\": \"{}\", \"checkpoint\": \"{}\", \
+                     \"p50_step_secs\": {:.6}, \"steps_per_sec\": {:.3}, \
+                     \"tokens_per_sec\": {:.1}, \"param_bytes\": {}, \
+                     \"eq21_cache_bytes\": {}, \"optim_state_bytes\": {}, \
+                     \"stage_us\": {{{stages}}}, \"mean_loss\": {:.5}}}",
+                    c.precision.name(),
+                    c.path_name(),
+                    c.ckpt_name(),
+                    c.p50_step_secs,
+                    c.steps_per_sec,
+                    c.tokens_per_sec,
+                    c.param_bytes,
+                    c.eq21_cache_bytes,
+                    c.optim_state_bytes,
+                    c.mean_loss
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"matrix\",\n  \"model\": \"tt_L2\",\n  \"batch\": {},\n  \
+             \"seq_len\": {},\n  \"fused_bf16_vs_unfused_f32\": {:.3},\n  \
+             \"fused_f16_vs_unfused_f32\": {:.3},\n  \"fused_vs_looped_f32\": {:.3},\n  \
+             \"bf16_param_bytes_saved\": {},\n  \"f16_param_bytes_saved\": {},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            self.batch,
+            self.seq_len,
+            self.fused_bf16_vs_unfused_f32(),
+            self.speedup_vs_baseline(Precision::F16, true, true),
+            self.speedup_vs_baseline(Precision::F32, true, true),
+            self.param_bytes_saved(Precision::Bf16),
+            self.param_bytes_saved(Precision::F16),
+            rows.join(",\n")
+        )
+    }
+
+    /// The human table the CLI prints: one row per cell, speedups
+    /// against the f32/looped/cache baseline, measured bytes, stage
+    /// split.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<5} {:<7} {:<10} {:>12} {:>10} {:>8} {:>11} {:>11} {:>11}  {}\n",
+            "prec",
+            "path",
+            "ckpt",
+            "p50 step ms",
+            "tokens/s",
+            "speedup",
+            "param B",
+            "cache B",
+            "state B",
+            "stage split"
+        ));
+        for c in &self.cells {
+            let speedup = self.speedup_vs_baseline(c.precision, c.fused, c.cached);
+            out.push_str(&format!(
+                "{:<5} {:<7} {:<10} {:>12.3} {:>10.0} {:>7.2}x {:>11} {:>11} {:>11}  {}\n",
+                c.precision.name(),
+                c.path_name(),
+                c.ckpt_name(),
+                c.p50_step_secs * 1e3,
+                c.tokens_per_sec,
+                speedup,
+                c.param_bytes,
+                c.eq21_cache_bytes,
+                c.optim_state_bytes,
+                c.stage_split()
+            ));
+        }
+        out.push_str(&format!(
+            "fused bf16 vs unfused f32: {:.2}x tokens/s | fused f32 vs looped f32: {:.2}x | \
+             bf16 packs away {} param bytes (f16: {})\n",
+            self.fused_bf16_vs_unfused_f32(),
+            self.speedup_vs_baseline(Precision::F32, true, true),
+            self.param_bytes_saved(Precision::Bf16),
+            self.param_bytes_saved(Precision::F16)
+        ));
+        out
+    }
+}
+
+/// Measure the full 3 x 2 x 2 grid at the given batch size.
+///
+/// Every cell trains the same seed-42 paper 2-layer model on the same
+/// synthetic dataset under the Adam optimizer; only the storage
+/// precision, the compute path and the checkpoint policy vary.  The
+/// stage split comes from one *extra* traced step after the timed ones
+/// (tracing is off while timing, so instrumentation never skews the
+/// throughput numbers).
+pub fn run_matrix(
+    cfg: &ModelConfig,
+    batch: usize,
+    warmup: usize,
+    iters: usize,
+) -> Result<MatrixReport> {
+    let data = Dataset::synth(cfg, 42, 64);
+    let tokens: Vec<i32> =
+        data.examples[..batch].iter().flat_map(|e| e.tokens.clone()).collect();
+    let mut cells = Vec::new();
+    for precision in Precision::all() {
+        for fused in [true, false] {
+            for cached in [true, false] {
+                let path = if fused { ComputePath::fused() } else { ComputePath::looped() };
+                let checkpoint =
+                    if cached { CheckpointPolicy::CacheAll } else { CheckpointPolicy::Recompute };
+                let optim = OptimConfig {
+                    kind: OptimKind::Adam,
+                    batch_size: batch,
+                    precision,
+                    ..Default::default()
+                };
+                let backend = NativeTrainer::random_init(cfg, 42)?
+                    .with_optim(optim)
+                    .with_compute_path(path)
+                    .with_checkpoint(checkpoint);
+                let mut trainer =
+                    Trainer::with_batch(backend, OptimKind::Adam.default_lr(), batch);
+                let stats = bench(
+                    || {
+                        trainer.train_steps(&data, 1).unwrap();
+                    },
+                    warmup,
+                    iters,
+                );
+                let steps_per_sec = 1.0 / stats.p50;
+                let tokens_per_sec = (batch * cfg.seq_len) as f64 / stats.p50;
+                let mean_loss = trainer.metrics.recent_loss(iters);
+                // One traced step for the FP/BP/PU split.
+                let was_enabled = trace::enabled();
+                trace::reset();
+                trace::set_enabled(true);
+                trainer.train_steps(&data, 1)?;
+                trace::set_enabled(was_enabled);
+                let events = trace::drain();
+                let stage_us: Vec<(String, f64)> = trace::stage_breakdown(&events)
+                    .into_iter()
+                    .map(|r| (r.stage, r.total_us))
+                    .collect();
+                let model = &trainer.backend.model;
+                cells.push(MatrixCell {
+                    precision,
+                    fused,
+                    cached,
+                    p50_step_secs: stats.p50,
+                    steps_per_sec,
+                    tokens_per_sec,
+                    param_bytes: model.param_bytes(),
+                    eq21_cache_bytes: model.measure_eq21_cache_bytes(&tokens)?,
+                    optim_state_bytes: model.optim.allocated_state_bytes(),
+                    stage_us,
+                    mean_loss,
+                });
+            }
+        }
+    }
+    Ok(MatrixReport { batch, seq_len: cfg.seq_len, warmup, iters, cells })
+}
+
+/// The paper-config grid the bench section and the CI gate run:
+/// 2 encoder layers, batch 8.
+pub fn run_paper_matrix(warmup: usize, iters: usize) -> Result<MatrixReport> {
+    run_matrix(&ModelConfig::paper(2), 8, warmup, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(precision: Precision, fused: bool, cached: bool, tps: f64, pb: u64) -> MatrixCell {
+        MatrixCell {
+            precision,
+            fused,
+            cached,
+            p50_step_secs: 0.5,
+            steps_per_sec: 2.0,
+            tokens_per_sec: tps,
+            param_bytes: pb,
+            eq21_cache_bytes: 100,
+            optim_state_bytes: 200,
+            stage_us: vec![("fp".into(), 50.0), ("bp".into(), 40.0), ("pu".into(), 10.0)],
+            mean_loss: 1.0,
+        }
+    }
+
+    fn report() -> MatrixReport {
+        MatrixReport {
+            batch: 8,
+            seq_len: 32,
+            warmup: 1,
+            iters: 2,
+            cells: vec![
+                cell(Precision::F32, false, true, 100.0, 400),
+                cell(Precision::F32, true, true, 150.0, 400),
+                cell(Precision::Bf16, true, true, 180.0, 200),
+                cell(Precision::F16, true, true, 175.0, 200),
+            ],
+        }
+    }
+
+    #[test]
+    fn speedups_are_against_the_looped_f32_cache_baseline() {
+        let r = report();
+        assert_eq!(r.baseline().unwrap().tokens_per_sec, 100.0);
+        assert!((r.fused_bf16_vs_unfused_f32() - 1.8).abs() < 1e-12);
+        assert!((r.speedup_vs_baseline(Precision::F32, true, true) - 1.5).abs() < 1e-12);
+        // Missing cells degrade to 0.0, never panic.
+        assert_eq!(r.speedup_vs_baseline(Precision::Bf16, false, false), 0.0);
+    }
+
+    #[test]
+    fn byte_savings_compare_packed_cells_at_the_fused_cache_corner() {
+        let r = report();
+        assert_eq!(r.param_bytes_saved(Precision::Bf16), 200);
+        assert_eq!(r.param_bytes_saved(Precision::F16), 200);
+    }
+
+    #[test]
+    fn json_carries_the_gate_field_and_every_row() {
+        let r = report();
+        let json = r.to_json();
+        assert!(json.contains("\"fused_bf16_vs_unfused_f32\": 1.800"));
+        assert!(json.contains("\"bench\": \"matrix\""));
+        assert_eq!(json.matches("\"precision\"").count(), 4);
+        assert!(json.contains("\"stage_us\": {\"fp\": 50.0, \"bp\": 40.0, \"pu\": 10.0}"));
+    }
+
+    #[test]
+    fn table_renders_one_line_per_cell_plus_header_and_summary() {
+        let r = report();
+        let table = r.render_table();
+        assert_eq!(table.lines().count(), 1 + r.cells.len() + 1);
+        assert!(table.contains("fp 50% bp 40% pu 10%"));
+    }
+}

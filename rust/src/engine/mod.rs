@@ -46,7 +46,7 @@
 
 use crate::config::ModelConfig;
 use crate::coordinator::metrics::argmax;
-use crate::tensor::{ops, Precision, Tensor, TTMEmbedding, TTMatrix};
+use crate::tensor::{ops, PackedTensor, PackedVec, Precision, Tensor, TTMEmbedding, TTMatrix};
 use crate::train::{blocks, layers};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -70,24 +70,35 @@ pub struct ComputePath {
     /// Run attention as one batched `(B, heads, S, S)` block instead of
     /// `B` per-example calls.
     pub batched_attention: bool,
+    /// Fuse the elementwise tail of each encoder block — bias add,
+    /// residual add and LayerNorm (resp. bias add + GELU) — into the
+    /// adjacent TT-apply output loop
+    /// ([`crate::train::blocks::bias_residual_layer_norm_fwd`],
+    /// [`crate::tensor::ops::bias_gelu`]), so the post-bias and
+    /// post-residual intermediates never round-trip through memory.
+    /// Bitwise identical to the unfused chain at every precision (the
+    /// fused lanes execute the same scalar sequence).
+    pub fused_elementwise: bool,
 }
 
 impl Default for ComputePath {
     fn default() -> Self {
-        ComputePath { fused_qkv: true, batched_attention: true }
+        ComputePath { fused_qkv: true, batched_attention: true, fused_elementwise: true }
     }
 }
 
 impl ComputePath {
-    /// The fast path (default): fused QKV + batched attention.
+    /// The fast path (default): fused QKV + batched attention + fused
+    /// elementwise lanes.
     pub fn fused() -> ComputePath {
         ComputePath::default()
     }
 
-    /// The pre-fusion reference schedule: three separate TT forwards
-    /// and a per-example attention loop.
+    /// The pre-fusion reference schedule: three separate TT forwards,
+    /// a per-example attention loop, and materialized elementwise
+    /// intermediates.
     pub fn looped() -> ComputePath {
-        ComputePath { fused_qkv: false, batched_attention: false }
+        ComputePath { fused_qkv: false, batched_attention: false, fused_elementwise: false }
     }
 }
 
@@ -104,35 +115,52 @@ pub fn pad_mask(tokens: &[i32], pad_id: i32) -> Vec<f32> {
 /// the round-on-store merge chains training folds through, cached once
 /// at load like the accelerator's on-chip core buffers.
 pub struct MergedLinear {
-    /// Z3 (M, r_d) — merged output-mode cores (left chain tail).
-    z3: Tensor,
-    /// Z1 (r_d, N) — merged input-mode cores (right chain tail).
-    z1: Tensor,
-    bias: Vec<f32>,
+    /// Z3 (M, r_d) — merged output-mode cores (left chain tail),
+    /// packed at the engine's storage width (u16-backed under bf16/f16;
+    /// the chain rounds every state on store, so packing is lossless).
+    z3: PackedTensor,
+    /// Z1 (r_d, N) — merged input-mode cores (right chain tail), packed
+    /// like Z3.
+    z1: PackedTensor,
+    bias: PackedVec,
 }
 
 impl MergedLinear {
     /// Merge a TT matrix at storage precision `prec`: the chains are
     /// folded with round-on-store (`merge_*_chain_prec`), exactly as
     /// the training forward builds them, and only the final states are
-    /// retained.
+    /// retained — **packed** at `prec`, so the at-rest factors occupy
+    /// half the bytes under a half width.  Widening on load is exact
+    /// (the states are rounded at `prec`), so outputs stay bitwise
+    /// identical to the f32-resident representation.
     pub fn from_tt_prec(tt: &TTMatrix, bias: Vec<f32>, prec: Precision) -> Result<MergedLinear> {
         let z3 = tt.merge_left_chain_prec(prec)?.pop().expect("d >= 1");
         let z1 = tt.merge_right_chain_prec(prec)?.pop().expect("d >= 1");
-        Ok(MergedLinear { z3, z1, bias })
+        Ok(MergedLinear {
+            z3: PackedTensor::pack_owned(z3, prec),
+            z1: PackedTensor::pack_owned(z1, prec),
+            bias: PackedVec::from_f32(prec, &bias),
+        })
     }
 
     /// Shared intermediate `Z2 = Xq Z1ᵀ (K, r_d)`, rounded on store —
     /// the same program point as training's `build_btt_states`.
     /// `xq` must already be rounded to `prec` (rounding is idempotent).
     fn z2_from(&self, xq: &Tensor, prec: Precision) -> Result<Tensor> {
-        Ok(prec.round_tensor_owned(xq.matmul(&self.z1.t()?)?))
+        Ok(prec.round_tensor_owned(xq.matmul(&self.z1.view().t()?)?))
+    }
+
+    /// Raw output apply `Y = Z2 Z3ᵀ (K, M)` without the bias row —
+    /// feeds the fused elementwise lanes, which add the bias inside
+    /// their own output loop.
+    fn apply_z2_raw(&self, z2: &Tensor) -> Result<Tensor> {
+        z2.matmul(&self.z3.view().t()?)
     }
 
     /// Output apply `Y = Z2 Z3ᵀ + b (K, M)` — unrounded, as in
     /// training.
     fn apply_z2(&self, z2: &Tensor) -> Result<Tensor> {
-        Ok(ops::add_row(&z2.matmul(&self.z3.t()?)?, &self.bias))
+        Ok(ops::add_row(&self.apply_z2_raw(z2)?, &self.bias.view()))
     }
 
     /// `y = W x + b` with x as rows: (K, N) -> (K, M), through the
@@ -140,6 +168,17 @@ impl MergedLinear {
     pub fn apply(&self, x: &Tensor, prec: Precision) -> Result<Tensor> {
         let xq = prec.round_tensor(x);
         self.apply_z2(&self.z2_from(&xq, prec)?)
+    }
+
+    /// `y = W x` (no bias) for the fused elementwise lanes.
+    fn apply_raw(&self, x: &Tensor, prec: Precision) -> Result<Tensor> {
+        let xq = prec.round_tensor(x);
+        self.apply_z2_raw(&self.z2_from(&xq, prec)?)
+    }
+
+    /// Measured at-rest bytes of the packed merged factors + bias.
+    pub fn bytes(&self) -> u64 {
+        self.z3.bytes() + self.z1.bytes() + self.bias.bytes()
     }
 }
 
@@ -151,10 +190,10 @@ struct EngineLayer {
     wo: MergedLinear,
     w1: MergedLinear,
     w2: MergedLinear,
-    ln1_g: Vec<f32>,
-    ln1_b: Vec<f32>,
-    ln2_g: Vec<f32>,
-    ln2_b: Vec<f32>,
+    ln1_g: PackedVec,
+    ln1_b: PackedVec,
+    ln2_g: PackedVec,
+    ln2_b: PackedVec,
     /// Input-side cores bitwise tied across Q/K/V at load time — the
     /// precondition of the fused schedule, checked once here instead of
     /// per forward.
@@ -173,13 +212,13 @@ pub struct NativeEngine {
     /// (f32 default = bitwise full precision).
     pub precision: Precision,
     embedding: TTMEmbedding,
-    pos: Tensor, // (S, H)
+    pos: PackedTensor, // (S, H)
     layers: Vec<EngineLayer>,
     pool: MergedLinear,
-    intent_w: Tensor, // (n_intents, H)
-    intent_b: Vec<f32>,
-    slot_w: Tensor, // (n_slots, H)
-    slot_b: Vec<f32>,
+    intent_w: PackedTensor, // (n_intents, H)
+    intent_b: PackedVec,
+    slot_w: PackedTensor, // (n_slots, H)
+    slot_b: PackedVec,
 }
 
 impl NativeEngine {
@@ -230,7 +269,10 @@ impl NativeEngine {
         ranks[0] = 1;
         ranks[d] = 1;
         let embedding = TTMEmbedding {
-            cores: ttm_cores,
+            cores: ttm_cores
+                .into_iter()
+                .map(|t| PackedTensor::pack_owned(t, precision))
+                .collect(),
             hid_modes: cfg.ttm_hid_modes.clone(),
             vocab_modes: cfg.ttm_vocab_modes.clone(),
             ranks,
@@ -269,10 +311,10 @@ impl NativeEngine {
                 wo: merged(&p("wo"), &tt_matrix(&p("wo"))?)?,
                 w1: merged(&p("w1"), &tt_matrix(&p("w1"))?)?,
                 w2: merged(&p("w2"), &tt_matrix(&p("w2"))?)?,
-                ln1_g: vec1(&p("ln1.g"))?,
-                ln1_b: vec1(&p("ln1.b"))?,
-                ln2_g: vec1(&p("ln2.g"))?,
-                ln2_b: vec1(&p("ln2.b"))?,
+                ln1_g: PackedVec::from_f32(precision, &vec1(&p("ln1.g"))?),
+                ln1_b: PackedVec::from_f32(precision, &vec1(&p("ln1.b"))?),
+                ln2_g: PackedVec::from_f32(precision, &vec1(&p("ln2.g"))?),
+                ln2_b: PackedVec::from_f32(precision, &vec1(&p("ln2.b"))?),
                 qkv_tied,
             });
         }
@@ -282,14 +324,39 @@ impl NativeEngine {
             compute_path,
             precision,
             embedding,
-            pos: tensor("embed.pos")?,
+            pos: PackedTensor::pack_owned(tensor("embed.pos")?, precision),
             layers,
             pool: merged("cls.pool", &tt_matrix("cls.pool")?)?,
-            intent_w: tensor("cls.intent_w")?,
-            intent_b: vec1("cls.intent_b")?,
-            slot_w: tensor("cls.slot_w")?,
-            slot_b: vec1("cls.slot_b")?,
+            intent_w: PackedTensor::pack_owned(tensor("cls.intent_w")?, precision),
+            intent_b: PackedVec::from_f32(precision, &vec1("cls.intent_b")?),
+            slot_w: PackedTensor::pack_owned(tensor("cls.slot_w")?, precision),
+            slot_b: PackedVec::from_f32(precision, &vec1("cls.slot_b")?),
         })
+    }
+
+    /// **Measured** at-rest parameter bytes of the serving engine: the
+    /// summed sizes of the actual packed buffers (TTM cores, positional
+    /// table, merged Z3/Z1 factors, biases, LN and classifier tables) —
+    /// u16-backed under a half storage width, f32 otherwise.
+    pub fn param_bytes(&self) -> u64 {
+        let mut total = self.embedding.bytes() + self.pos.bytes();
+        for layer in &self.layers {
+            for lin in [
+                &layer.wq, &layer.wk, &layer.wv, &layer.wo, &layer.w1, &layer.w2,
+            ] {
+                total += lin.bytes();
+            }
+            total += layer.ln1_g.bytes()
+                + layer.ln1_b.bytes()
+                + layer.ln2_g.bytes()
+                + layer.ln2_b.bytes();
+        }
+        total
+            + self.pool.bytes()
+            + self.intent_w.bytes()
+            + self.intent_b.bytes()
+            + self.slot_w.bytes()
+            + self.slot_b.bytes()
     }
 
     /// Batched forward over a `(B, S)` token block (row-major, full
@@ -332,6 +399,7 @@ impl NativeEngine {
         // Embedding: TTM lookup memoized per unique token id (the
         // round-on-store chain's final state is the embedding row) +
         // positional table per slot.
+        let pos = self.pos.view();
         let mut x = Tensor::zeros(&[k_rows, h]);
         let mut rows: HashMap<i32, Vec<f32>> = HashMap::new();
         for (i, &t) in tokens.iter().enumerate() {
@@ -342,7 +410,7 @@ impl NativeEngine {
             let row = &rows[&t];
             let p = i % seq;
             for j in 0..h {
-                x.data[i * h + j] = row[j] + self.pos.at2(p, j);
+                x.data[i * h + j] = row[j] + pos.at2(p, j);
             }
         }
 
@@ -388,23 +456,58 @@ impl NativeEngine {
                 }
                 ctx
             };
-            let o = layer.wo.apply(&ctx, prec)?;
-            // Same LN entry point as training (cache dropped) — ensures
-            // identical bits rather than a re-derived formula.
-            let (x1, _) = blocks::layer_norm_fwd(&ops::add(&x, &o), &layer.ln1_g, &layer.ln1_b, 1e-5);
-            let h1 = layer.w1.apply(&x1, prec)?;
-            let ffn = layer.w2.apply(&ops::gelu(&h1), prec)?;
-            let (x2, _) =
-                blocks::layer_norm_fwd(&ops::add(&x1, &ffn), &layer.ln2_g, &layer.ln2_b, 1e-5);
-            x = x2;
+            // Elementwise tail: fused lanes (bias + residual + LN and
+            // bias + GELU in one output pass) or the materialized
+            // reference — the same shared block entry points as
+            // training, so bits are identical either way.
+            x = if self.compute_path.fused_elementwise {
+                let o_raw = layer.wo.apply_raw(&ctx, prec)?;
+                let (x1, _) = blocks::bias_residual_layer_norm_fwd(
+                    &o_raw,
+                    &layer.wo.bias.view(),
+                    &x,
+                    &layer.ln1_g.view(),
+                    &layer.ln1_b.view(),
+                    1e-5,
+                );
+                let h1_raw = layer.w1.apply_raw(&x1, prec)?;
+                let (_h1, g1) = ops::bias_gelu(&h1_raw, &layer.w1.bias.view());
+                let ffn_raw = layer.w2.apply_raw(&g1, prec)?;
+                let (x2, _) = blocks::bias_residual_layer_norm_fwd(
+                    &ffn_raw,
+                    &layer.w2.bias.view(),
+                    &x1,
+                    &layer.ln2_g.view(),
+                    &layer.ln2_b.view(),
+                    1e-5,
+                );
+                x2
+            } else {
+                let o = layer.wo.apply(&ctx, prec)?;
+                let (x1, _) = blocks::layer_norm_fwd(
+                    &ops::add(&x, &o),
+                    &layer.ln1_g.view(),
+                    &layer.ln1_b.view(),
+                    1e-5,
+                );
+                let h1 = layer.w1.apply(&x1, prec)?;
+                let ffn = layer.w2.apply(&ops::gelu(&h1), prec)?;
+                let (x2, _) = blocks::layer_norm_fwd(
+                    &ops::add(&x1, &ffn),
+                    &layer.ln2_g.view(),
+                    &layer.ln2_b.view(),
+                    1e-5,
+                );
+                x2
+            };
         }
 
         // Classifier: shared TT pooler + heads; per-example CLS rows
         // drive the intent head.
         let pooled = ops::tanh(&self.pool.apply(&x, prec)?);
         let cls = ops::cls_rows(&pooled, b, seq)?;
-        let intent = ops::add_row(&cls.matmul(&self.intent_w.t()?)?, &self.intent_b);
-        let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
+        let intent = ops::add_row(&cls.matmul(&self.intent_w.view().t()?)?, &self.intent_b.view());
+        let slots = ops::add_row(&pooled.matmul(&self.slot_w.view().t()?)?, &self.slot_b.view());
         Ok((intent.data, slots.data))
     }
 

@@ -79,6 +79,24 @@
 //!   exact-zero probability and gradient.  No per-example sub-tensors
 //!   are materialized — head packing slices the K-stacked projection
 //!   buffers by offset.
+//! * **Fused elementwise lanes** — with
+//!   [`engine::ComputePath::fused_elementwise`] (on by default) the
+//!   bias-add, residual-add, LayerNorm and GELU surrounding each
+//!   TT-apply run inside the apply's output loop instead of as
+//!   separate whole-tensor passes: the TT linears produce bias-free
+//!   raw outputs (`forward_ckpt_raw` / `MergedLinear::apply_raw`) and
+//!   [`train::blocks::bias_residual_layer_norm_fwd`],
+//!   [`tensor::ops::bias_gelu`] and the two-summand VJP
+//!   [`train::blocks::layer_norm_vjp2`] consume them element-by-element,
+//!   so the `bias+residual` / `bias+preactivation` intermediates and
+//!   the materialized `dY_a + dY_b` gradient sum never round-trip
+//!   through memory.  The fused lanes execute the *identical* scalar
+//!   order as the unfused chain (and share one
+//!   [`tensor::ops::gelu_scalar`] / [`tensor::ops::gelu_grad_scalar`]
+//!   definition with it), and the elementwise chain stays pure f32 at
+//!   every storage precision, so fused-vs-unfused outputs, gradients
+//!   and whole Adam trajectories are **bitwise identical at every
+//!   `Precision`** (pinned in `train::model` tests).
 //! * **SIMD microkernels** — the innermost matmul/bmm loops are
 //!   fixed-width register-blocked tiles (`chunks_exact`, unrolled
 //!   accumulators) the autovectorizer lifts to packed FMAs, with a
@@ -91,7 +109,12 @@
 //! `cargo bench --offline -- native-train` measures the fused/batched
 //! path against the pre-fusion looped schedule in the same run and
 //! records both in `BENCH_native_train.json` (uploaded as a CI
-//! artifact).
+//! artifact).  `cargo bench --offline -- matrix` (and the
+//! `bench-matrix` CLI command) runs the full [`benchgrid`] —
+//! {f32, bf16, f16} x {fused, looped} x {cache, recompute} — recording
+//! per-cell tokens/sec, the traced FP/BP/PU stage split and the
+//! measured at-rest bytes into `BENCH_matrix.json`; CI gates on the
+//! fused-bf16 cell staying faster than the unfused-f32 baseline.
 //!
 //! ## Precision
 //!
@@ -101,18 +124,27 @@
 //! predecessor (arXiv:2104.03420): storage happens at the selected
 //! width, compute always accumulates in f32.
 //!
-//! * **Storage width** — the TT-linear Eq. 21 activation caches
-//!   ([`train::TTLinear::forward_prec`], genuinely `u16`-packed via
-//!   [`tensor::PackedTensor`]) and the optimizer moments
-//!   ([`tensor::PackedVec`]) live physically at the selected width;
-//!   the TTM embedding chain states and the parameter cores are
-//!   rounded to representable values (round-on-store — chain states
-//!   before each next fold, cores by the PU stage and once on entry by
-//!   `NativeTrainModel::set_precision`) while their runtime buffers
-//!   stay f32 — the width-parameterized accounting charges everything
-//!   at 16 bits ([`fpga::resources::report_with_optim_prec`],
-//!   `fpga::bram::*_at`), halving the Adam 2x state and the Eq. 21
-//!   caches the U50 report carries.
+//! * **Storage width** — everything at rest lives *physically* at the
+//!   selected width, `u16`-packed under bf16/f16: the TT-linear Eq. 21
+//!   activation caches ([`train::TTLinear::forward_prec`], via
+//!   [`tensor::PackedTensor`]), the optimizer moments
+//!   ([`tensor::PackedVec`]), and — since the packed-parameter
+//!   tentpole — the parameters themselves: TT cores in
+//!   [`tensor::PackedTTMatrix`] (TT linears, fused QKV), TTM embedding
+//!   cores and the positional/head tensors in [`tensor::PackedTensor`],
+//!   LayerNorm vectors and biases in [`tensor::PackedVec`], and the
+//!   merged Z1/Z3 inference factors inside `engine::MergedLinear`.
+//!   Packing is **lossless** because every store site rounds on store
+//!   (chain states before each next fold, cores by the PU stage and
+//!   once on entry by `NativeTrainModel::set_precision`, merged factors
+//!   by the merge chains), so the at-rest value is always exactly
+//!   representable and `pack(widen(x)) == x` bitwise.
+//!   `NativeTrainModel::param_bytes` / `NativeEngine::param_bytes` sum
+//!   the *measured* packed buffers (the `param_bytes` trace gauge
+//!   samples the same sum), pinned exactly half the f32 figure in
+//!   `rust/tests/packed_params.rs`; the width-parameterized accounting
+//!   ([`fpga::resources::report_with_optim_prec`], `fpga::bram::*_at`)
+//!   charges the same 16 bits into the U50 budget.
 //! * **Accumulation width** — every contraction widens on load (exact
 //!   for both 16-bit formats) and runs the unchanged f32 microkernels
 //!   ([`tensor::dense`]); results round to the storage width only on
@@ -287,6 +319,7 @@
 #![allow(clippy::manual_memcpy)]
 #![allow(clippy::type_complexity)]
 
+pub mod benchgrid;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;

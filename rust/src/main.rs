@@ -8,6 +8,7 @@
 //! tt-trainer eval  --ckpt DIR                  # accuracy on the test split
 //! tt-trainer cost-model                        # Fig. 6 + Fig. 7 sweeps
 //! tt-trainer serve-bench --ckpt DIR            # continuous-batching load test
+//! tt-trainer bench-matrix                      # precision x path x policy grid
 //! tt-trainer trace-report                      # FP/BP/PU wall-clock breakdown
 //! tt-trainer bram                              # Figs. 11/12/14
 //! tt-trainer schedule                          # Figs. 9/10
@@ -43,6 +44,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "cost-model" => cmd_cost_model(),
         "serve-bench" => cmd_serve_bench(&args),
+        "bench-matrix" => cmd_bench_matrix(&args),
         "trace-report" => cmd_trace_report(&args),
         "bram" => cmd_bram(),
         "schedule" => cmd_schedule(),
@@ -93,6 +95,14 @@ COMMANDS:
                   --out BENCH_serve.json
                   --trace FILE (Chrome trace of admit/queue/execute spans)
                   grid: {no-batching, continuous} x concurrency {1, 8}
+  bench-matrix  precision x compute-path x checkpoint-policy training
+                grid ({f32,bf16,f16} x {fused,looped} x
+                {cache,recompute}): tokens/sec with speedups vs the
+                f32/looped/cache baseline, traced FP/BP/PU stage split,
+                measured at-rest packed-param / Eq. 21 cache /
+                optimizer-state bytes
+                  --layers 2 --batch 8 --warmup 1 --iters 4
+                  --out FILE (also write the BENCH_matrix.json document)
   trace-report  FP/BP/PU wall-clock breakdown from a short traced
                 native run, next to the Eq. 20 cost-model prediction
                   --steps 4 --layers 2 --batch N --seed 42
@@ -436,6 +446,29 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     std::fs::write(out, loadgen::bench_json(&reports))?;
     println!("scenario reports written to {out}");
     trace_finish(trace_path)?;
+    Ok(())
+}
+
+/// Run the precision x compute-path x checkpoint-policy training grid
+/// (`tt_trainer::benchgrid`, the same implementation `cargo bench
+/// --offline -- matrix` records into `BENCH_matrix.json`) and print the
+/// table with speedups against the f32/looped/cache baseline.
+fn cmd_bench_matrix(args: &Args) -> Result<()> {
+    let layers = args.get_usize("layers", 2);
+    let batch = args.get_usize("batch", 8).max(1);
+    let warmup = args.get_usize("warmup", 1);
+    let iters = args.get_usize("iters", 4).max(1);
+    let cfg = ModelConfig::paper(layers);
+    println!(
+        "bench-matrix: {layers}-layer paper config | batch {batch} | {warmup} warmup + {iters} \
+         timed steps per cell"
+    );
+    let report = tt_trainer::benchgrid::run_matrix(&cfg, batch, warmup, iters)?;
+    print!("{}", report.render_table());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("grid written to {out}");
+    }
     Ok(())
 }
 

@@ -21,5 +21,5 @@ pub mod ttm;
 
 pub use dense::{svd, Tensor};
 pub use precision::{PackedTensor, PackedVec, Precision};
-pub use tt::{ContractionStats, TTMatrix};
+pub use tt::{ContractionStats, PackedTTMatrix, TTMatrix};
 pub use ttm::TTMEmbedding;

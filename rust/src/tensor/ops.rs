@@ -51,15 +51,57 @@ pub fn softmax_rows(x: &Tensor, mask: Option<&[f32]>) -> Tensor {
     out
 }
 
-/// GELU (tanh approximation, matching `jax.nn.gelu`'s default).
+/// Scalar GELU (tanh approximation, matching `jax.nn.gelu`'s default)
+/// — the **single definition** of the approximation: the dense
+/// [`gelu`], the fused [`bias_gelu`] lane and the VJP derivative
+/// ([`gelu_grad_scalar`], used by `train::blocks::gelu_vjp`) all call
+/// it, so the forward and its derivative can never drift apart.
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Derivative of [`gelu_scalar`] at `x` (same tanh approximation,
+/// expressions kept verbatim so existing fixed points don't move).
+#[inline]
+pub fn gelu_grad_scalar(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// GELU (tanh approximation) over a whole tensor.
 pub fn gelu(x: &Tensor) -> Tensor {
     let mut out = x.clone();
     for v in out.data.iter_mut() {
-        let x = *v;
-        let c = (2.0f32 / std::f32::consts::PI).sqrt();
-        *v = 0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh());
+        *v = gelu_scalar(*v);
     }
     out
+}
+
+/// Fused bias row-add + GELU on a raw (bias-free) TT-apply output
+/// `y (K, M)`: one elementwise pass computes `h = y + bias` and
+/// `gelu(h)` together, so the pre-activation never makes a separate
+/// round trip through memory before the nonlinearity reads it.
+/// Bitwise identical to [`add_row`] followed by [`gelu`] (identical
+/// scalar order per element).  `h` is returned alongside because the
+/// GELU VJP consumes the pre-activation.
+pub fn bias_gelu(y: &Tensor, bias: &[f32]) -> (Tensor, Tensor) {
+    let (rows, cols) = (y.shape[0], y.shape[1]);
+    debug_assert_eq!(bias.len(), cols);
+    let mut h = Tensor::zeros(&[rows, cols]);
+    let mut g = Tensor::zeros(&[rows, cols]);
+    for i in 0..rows {
+        for j in 0..cols {
+            let hv = y.data[i * cols + j] + bias[j];
+            h.data[i * cols + j] = hv;
+            g.data[i * cols + j] = gelu_scalar(hv);
+        }
+    }
+    (h, g)
 }
 
 /// Row-wise LayerNorm over the last axis: `(x - mu) / sqrt(var + eps) * g + b`.

@@ -251,7 +251,7 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 /// flat storage build on this, so the per-element rounding contract
 /// has a single source of truth: [`Precision::quantize_bits`] /
 /// [`Precision::widen_bits`]).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PackedVec {
     F32(Vec<f32>),
     Half(Precision, Vec<u16>),
@@ -308,6 +308,26 @@ impl PackedVec {
         }
     }
 
+    /// The stored values as f32: a zero-copy borrow for the f32
+    /// variant, an exact widening for the half formats.
+    pub fn view(&self) -> Cow<'_, [f32]> {
+        match self {
+            PackedVec::F32(v) => Cow::Borrowed(v.as_slice()),
+            PackedVec::Half(p, bits) => {
+                Cow::Owned(bits.iter().map(|&b| p.widen_bits(b)).collect())
+            }
+        }
+    }
+
+    /// Re-store the buffer at a (possibly different) precision.  Values
+    /// already representable at `prec` survive bitwise (re-quantizing a
+    /// fixed point of the rounding is the identity).
+    pub fn set_precision(&mut self, prec: Precision) {
+        if self.precision() != prec {
+            *self = PackedVec::from_f32(prec, &self.to_f32());
+        }
+    }
+
     /// Run one update over the buffer as f32 values: **in place** for
     /// the f32 variant (the hot default path — no allocation, no
     /// copy), widen/compute/round-on-store for the half variants.
@@ -330,12 +350,12 @@ impl PackedVec {
 /// the default full-precision hot path never copies a cache — while
 /// half-precision tensors are genuinely packed to `u16` (the realized
 /// half-width Eq. 21 cache) and widen exactly on load.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PackedTensor {
     repr: Repr,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 enum Repr {
     F32(Tensor),
     Half {
@@ -408,6 +428,43 @@ impl PackedTensor {
     /// accounting charges.
     pub fn bytes(&self) -> u64 {
         self.numel() as u64 * self.precision().bytes()
+    }
+
+    /// One stored element, widened to f32.  Lets sparse readers (e.g.
+    /// the TTM embedding's per-token core slices) widen only the
+    /// elements they touch instead of the whole core.
+    #[inline]
+    pub fn get(&self, idx: usize) -> f32 {
+        match &self.repr {
+            Repr::F32(t) => t.data[idx],
+            Repr::Half { prec, bits, .. } => prec.widen_bits(bits[idx]),
+        }
+    }
+
+    /// Run one update over the flat buffer as f32 values: in place for
+    /// the f32 variant, widen/compute/round-on-store for the half
+    /// formats.  Updating with values already representable at the
+    /// stored precision (the optimizer rounds on store) is lossless.
+    pub fn update_in_place(&mut self, f: impl FnOnce(&mut Vec<f32>)) {
+        match &mut self.repr {
+            Repr::F32(t) => f(&mut t.data),
+            Repr::Half { prec, bits, .. } => {
+                let mut vals: Vec<f32> = bits.iter().map(|&b| prec.widen_bits(b)).collect();
+                f(&mut vals);
+                assert_eq!(vals.len(), bits.len(), "update changed the element count");
+                for (b, &x) in bits.iter_mut().zip(&vals) {
+                    *b = prec.quantize_bits(x);
+                }
+            }
+        }
+    }
+
+    /// Re-store at a (possibly different) precision.  Values already
+    /// representable at `prec` survive bitwise.
+    pub fn set_precision(&mut self, prec: Precision) {
+        if self.precision() != prec {
+            *self = PackedTensor::pack_owned(self.unpack(), prec);
+        }
     }
 }
 
@@ -564,6 +621,52 @@ mod tests {
             }
         }
         assert!(PackedVec::empty(Precision::Bf16).is_empty());
+    }
+
+    #[test]
+    fn packed_tensor_get_update_and_reprecision() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(64);
+        let t = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        for prec in Precision::all() {
+            let mut p = PackedTensor::pack(&t, prec);
+            // get() widens exactly the stored value.
+            for i in 0..t.data.len() {
+                assert_eq!(p.get(i).to_bits(), prec.round(t.data[i]).to_bits());
+            }
+            // Updating with already-representable values is lossless.
+            let before = p.unpack();
+            p.update_in_place(|v| {
+                for x in v.iter_mut() {
+                    *x = prec.round(*x * 3.0);
+                }
+            });
+            for (got, &was) in p.unpack().data.iter().zip(&before.data) {
+                assert_eq!(got.to_bits(), prec.round(was * 3.0).to_bits());
+            }
+            // Re-precision to the same format is the identity; a round
+            // trip through f32 and back is bitwise lossless.
+            let snapshot = p.clone();
+            p.set_precision(prec);
+            assert_eq!(p, snapshot);
+            p.set_precision(Precision::F32);
+            assert_eq!(p.precision(), Precision::F32);
+            p.set_precision(prec);
+            assert_eq!(p.unpack(), snapshot.unpack());
+        }
+    }
+
+    #[test]
+    fn packed_vec_view_and_reprecision() {
+        let vals = [1.5f32, -0.375, 1024.0];
+        let mut pv = PackedVec::from_f32(Precision::F32, &vals);
+        assert!(matches!(pv.view(), Cow::Borrowed(_)), "f32 view must be zero-copy");
+        pv.set_precision(Precision::Bf16);
+        assert_eq!(pv.bytes(), 3 * 2);
+        // These values are bf16-representable: the round trip is exact.
+        assert_eq!(pv.view().as_ref(), &vals);
+        pv.set_precision(Precision::F32);
+        assert_eq!(pv.view().as_ref(), &vals);
     }
 
     #[test]

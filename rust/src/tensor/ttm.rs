@@ -2,15 +2,21 @@
 //! (paper Sec. III-C, Eqs. 8/17).
 
 use super::dense::Tensor;
-use super::precision::Precision;
+use super::precision::{PackedTensor, Precision};
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Result};
 
 /// A (vocab, hidden) embedding table in TTM format.  Core k has shape
 /// (r_{k-1}, m_k, n_k, r_k) with m = hidden modes, n = vocab modes.
+///
+/// Cores are stored **at rest** as [`PackedTensor`]s: genuinely
+/// `u16`-packed under the half precisions (so the table's measured
+/// bytes halve), a plain f32 buffer otherwise.  Per-token lookups
+/// widen only the sliced elements ([`PackedTensor::get`]), never a
+/// whole core.
 #[derive(Debug, Clone)]
 pub struct TTMEmbedding {
-    pub cores: Vec<Tensor>,
+    pub cores: Vec<PackedTensor>,
     pub hid_modes: Vec<usize>,
     pub vocab_modes: Vec<usize>,
     pub ranks: Vec<usize>,
@@ -26,7 +32,21 @@ impl TTMEmbedding {
     }
 
     pub fn param_count(&self) -> usize {
-        self.cores.iter().map(Tensor::numel).sum()
+        self.cores.iter().map(PackedTensor::numel).sum()
+    }
+
+    /// **Measured** bytes at rest: the sum of the actual core buffer
+    /// sizes at their stored precision.
+    pub fn bytes(&self) -> u64 {
+        self.cores.iter().map(PackedTensor::bytes).sum()
+    }
+
+    /// Re-store every core at `prec` (bitwise lossless for values
+    /// already representable there).
+    pub fn set_precision(&mut self, prec: Precision) {
+        for core in &mut self.cores {
+            core.set_precision(prec);
+        }
     }
 
     pub fn randn(
@@ -44,10 +64,13 @@ impl TTMEmbedding {
         let sigma = ((target_std as f64).powi(2) / rank_paths).powf(1.0 / (2.0 * d as f64));
         let cores = (0..d)
             .map(|k| {
-                Tensor::randn(
-                    &[ranks[k], hid_modes[k], vocab_modes[k], ranks[k + 1]],
-                    sigma as f32,
-                    rng,
+                PackedTensor::pack_owned(
+                    Tensor::randn(
+                        &[ranks[k], hid_modes[k], vocab_modes[k], ranks[k + 1]],
+                        sigma as f32,
+                        rng,
+                    ),
+                    Precision::F32,
                 )
             })
             .collect();
@@ -176,9 +199,10 @@ impl TTMEmbedding {
         grad: &mut Tensor,
     ) -> Result<()> {
         let core = &self.cores[k];
-        let (rp, mk, nk, rk) = (core.shape[0], core.shape[1], core.shape[2], core.shape[3]);
-        if grad.shape != core.shape {
-            return Err(anyhow!("grad shape {:?} != core {:?}", grad.shape, core.shape));
+        let shape = core.shape();
+        let (rp, mk, nk, rk) = (shape[0], shape[1], shape[2], shape[3]);
+        if grad.shape.as_slice() != shape {
+            return Err(anyhow!("grad shape {:?} != core {:?}", grad.shape, shape));
         }
         if k == 0 {
             for a in 0..mk {
@@ -203,7 +227,8 @@ impl TTMEmbedding {
     /// ordered so the chain matmul in `lookup` is contiguous.
     fn slice(&self, k: usize, j: usize) -> Result<Tensor> {
         let core = &self.cores[k];
-        let (rp, mk, nk, rk) = (core.shape[0], core.shape[1], core.shape[2], core.shape[3]);
+        let shape = core.shape();
+        let (rp, mk, nk, rk) = (shape[0], shape[1], shape[2], shape[3]);
         if j >= nk {
             return Err(anyhow!("digit {j} out of mode {nk}"));
         }
@@ -212,7 +237,7 @@ impl TTMEmbedding {
             let mut out = Tensor::zeros(&[mk, rk]);
             for a in 0..mk {
                 for b in 0..rk {
-                    out.data[a * rk + b] = core.data[(a * nk + j) * rk + b];
+                    out.data[a * rk + b] = core.get((a * nk + j) * rk + b);
                 }
             }
             Ok(out)
@@ -223,7 +248,7 @@ impl TTMEmbedding {
                 for a in 0..mk {
                     for b in 0..rk {
                         out.data[r * mk * rk + a * rk + b] =
-                            core.data[((r * mk + a) * nk + j) * rk + b];
+                            core.get(((r * mk + a) * nk + j) * rk + b);
                     }
                 }
             }
@@ -293,21 +318,21 @@ mod tests {
         let d_row: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
         let (_, states) = e.lookup_cached(token).unwrap();
         let mut grads: Vec<Tensor> =
-            e.cores.iter().map(|c| Tensor::zeros(&c.shape)).collect();
+            e.cores.iter().map(|c| Tensor::zeros(c.shape())).collect();
         e.lookup_vjp(token, &states, &d_row, &mut grads).unwrap();
         // loss(w) = <d_row, lookup(token)> — central differences on every
         // core entry must match the scattered analytic gradient.
         let eps = 1e-2f32;
         for k in 0..e.cores.len() {
             for idx in 0..e.cores[k].numel() {
-                let orig = e.cores[k].data[idx];
-                e.cores[k].data[idx] = orig + eps;
+                let orig = e.cores[k].get(idx);
+                e.cores[k].update_in_place(|d| d[idx] = orig + eps);
                 let up: f32 =
                     e.lookup(token).unwrap().data.iter().zip(&d_row).map(|(a, b)| a * b).sum();
-                e.cores[k].data[idx] = orig - eps;
+                e.cores[k].update_in_place(|d| d[idx] = orig - eps);
                 let dn: f32 =
                     e.lookup(token).unwrap().data.iter().zip(&d_row).map(|(a, b)| a * b).sum();
-                e.cores[k].data[idx] = orig;
+                e.cores[k].update_in_place(|d| d[idx] = orig);
                 let fd = (up - dn) / (2.0 * eps);
                 let an = grads[k].data[idx];
                 assert!(

@@ -71,18 +71,99 @@ pub fn layer_norm_vjp(
     (dx, dg, db)
 }
 
-/// GELU backward (tanh approximation, matching [`ops::gelu`]).
+/// GELU backward (tanh approximation, matching [`ops::gelu`]); the
+/// derivative lives in [`ops::gelu_grad_scalar`] next to the shared
+/// forward scalar so the pair cannot drift apart.
 pub fn gelu_vjp(x: &Tensor, dy: &Tensor) -> Tensor {
     debug_assert_eq!(x.shape, dy.shape);
-    let c = (2.0f32 / std::f32::consts::PI).sqrt();
     let mut out = dy.clone();
     for (o, &xv) in out.data.iter_mut().zip(&x.data) {
-        let u = c * (xv + 0.044715 * xv * xv * xv);
-        let t = u.tanh();
-        let du = c * (1.0 + 3.0 * 0.044715 * xv * xv);
-        *o *= 0.5 * (1.0 + t) + 0.5 * xv * (1.0 - t * t) * du;
+        *o *= ops::gelu_grad_scalar(xv);
     }
     out
+}
+
+/// Fused bias row-add + residual add + LayerNorm forward.  Consumes the
+/// raw (bias-free) TT-apply output `y (K, H)`, the layer's output bias
+/// and the residual input `x`, and produces bitwise the same
+/// `(out, cache)` as `ops::add_row` -> `ops::add(&x, ..)` ->
+/// [`layer_norm_fwd`]: per element `t = x + (y + bias)` in that exact
+/// order, then the identical row-normalization loops.  The post-bias and
+/// post-residual intermediates live only in one row-sized scratch buffer
+/// instead of two full `(K, H)` tensors round-tripping through memory.
+pub fn bias_residual_layer_norm_fwd(
+    y: &Tensor,
+    bias: &[f32],
+    x: &Tensor,
+    g: &[f32],
+    b: &[f32],
+    eps: f32,
+) -> (Tensor, LayerNormCache) {
+    let (rows, cols) = (y.shape[0], y.shape[1]);
+    debug_assert_eq!(x.shape, y.shape);
+    debug_assert_eq!(bias.len(), cols);
+    debug_assert_eq!(g.len(), cols);
+    let mut out = Tensor::zeros(&[rows, cols]);
+    let mut xhat = Tensor::zeros(&[rows, cols]);
+    let mut inv_all = vec![0.0f32; rows];
+    let mut row = vec![0.0f32; cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let o = y.data[i * cols + j] + bias[j];
+            row[j] = x.data[i * cols + j] + o;
+        }
+        let mu = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        inv_all[i] = inv;
+        for j in 0..cols {
+            let xh = (row[j] - mu) * inv;
+            xhat.data[i * cols + j] = xh;
+            out.data[i * cols + j] = xh * g[j] + b[j];
+        }
+    }
+    (out, LayerNormCache { xhat, inv: inv_all })
+}
+
+/// [`layer_norm_vjp`] with the upstream gradient formed inline as
+/// `dy = dy_a + dy_b` (the residual-join sum), so the summed gradient
+/// tensor never materializes.  Bitwise identical to
+/// `ops::add(dy_a, dy_b)` followed by [`layer_norm_vjp`].
+pub fn layer_norm_vjp2(
+    cache: &LayerNormCache,
+    g: &[f32],
+    dy_a: &Tensor,
+    dy_b: &Tensor,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy_a.shape, dy_b.shape);
+    let (rows, cols) = (dy_a.shape[0], dy_a.shape[1]);
+    let mut dx = Tensor::zeros(&[rows, cols]);
+    let mut dg = vec![0.0f32; cols];
+    let mut db = vec![0.0f32; cols];
+    for i in 0..rows {
+        let ar = &dy_a.data[i * cols..(i + 1) * cols];
+        let br = &dy_b.data[i * cols..(i + 1) * cols];
+        let xhr = &cache.xhat.data[i * cols..(i + 1) * cols];
+        let mut m1 = 0.0f32; // mean of dy * g
+        let mut m2 = 0.0f32; // mean of dy * g * xhat
+        for j in 0..cols {
+            let dyv = ar[j] + br[j];
+            let dxh = dyv * g[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+            dg[j] += dyv * xhr[j];
+            db[j] += dyv;
+        }
+        m1 /= cols as f32;
+        m2 /= cols as f32;
+        let inv = cache.inv[i];
+        for j in 0..cols {
+            let dyv = ar[j] + br[j];
+            let dxh = dyv * g[j];
+            dx.data[i * cols + j] = inv * (dxh - m1 - xhr[j] * m2);
+        }
+    }
+    (dx, dg, db)
 }
 
 /// Tanh backward from the forward *output* `y`: `dx = dy * (1 - y^2)`.
@@ -350,6 +431,61 @@ mod tests {
             );
             v.data[idx] = orig;
         }
+    }
+
+    #[test]
+    fn fused_bias_residual_layer_norm_is_bitwise_identical() {
+        let mut rng = SplitMix64::new(91);
+        let (rows, cols) = (5usize, 7usize);
+        let y = Tensor::randn(&[rows, cols], 0.9, &mut rng);
+        let x = Tensor::randn(&[rows, cols], 0.9, &mut rng);
+        let bias: Vec<f32> = (0..cols).map(|j| 0.1 * j as f32 - 0.3).collect();
+        let g: Vec<f32> = (0..cols).map(|j| 1.0 + 0.05 * j as f32).collect();
+        let b: Vec<f32> = (0..cols).map(|j| 0.02 * j as f32).collect();
+        // Unfused reference: add_row -> residual add -> layer_norm_fwd.
+        let o = ops::add_row(&y, &bias);
+        let res = ops::add(&x, &o);
+        let (want, want_cache) = layer_norm_fwd(&res, &g, &b, 1e-5);
+        let (got, got_cache) = bias_residual_layer_norm_fwd(&y, &bias, &x, &g, &b, 1e-5);
+        assert_eq!(want.data, got.data, "fused LN forward must match bitwise");
+        assert_eq!(want_cache.xhat.data, got_cache.xhat.data);
+        assert_eq!(want_cache.inv, got_cache.inv);
+    }
+
+    #[test]
+    fn fused_layer_norm_vjp2_is_bitwise_identical() {
+        let mut rng = SplitMix64::new(92);
+        let (rows, cols) = (4usize, 6usize);
+        let x = Tensor::randn(&[rows, cols], 1.1, &mut rng);
+        let g: Vec<f32> = (0..cols).map(|j| 1.0 - 0.03 * j as f32).collect();
+        let b = vec![0.0f32; cols];
+        let (_, cache) = layer_norm_fwd(&x, &g, &b, 1e-5);
+        let dy_a = Tensor::randn(&[rows, cols], 0.8, &mut rng);
+        let dy_b = Tensor::randn(&[rows, cols], 0.8, &mut rng);
+        let dy = ops::add(&dy_a, &dy_b);
+        let (want_dx, want_dg, want_db) = layer_norm_vjp(&cache, &g, &dy);
+        let (got_dx, got_dg, got_db) = layer_norm_vjp2(&cache, &g, &dy_a, &dy_b);
+        assert_eq!(want_dx.data, got_dx.data, "fused LN vjp must match bitwise");
+        assert_eq!(want_dg, got_dg);
+        assert_eq!(want_db, got_db);
+    }
+
+    #[test]
+    fn fused_bias_gelu_is_bitwise_identical() {
+        let mut rng = SplitMix64::new(93);
+        let (rows, cols) = (3usize, 9usize);
+        let y = Tensor::randn(&[rows, cols], 1.3, &mut rng);
+        let bias: Vec<f32> = (0..cols).map(|j| 0.07 * j as f32 - 0.2).collect();
+        let h_ref = ops::add_row(&y, &bias);
+        let g_ref = ops::gelu(&h_ref);
+        let (h, g) = ops::bias_gelu(&y, &bias);
+        assert_eq!(h_ref.data, h.data, "fused pre-activation must match bitwise");
+        assert_eq!(g_ref.data, g.data, "fused GELU must match bitwise");
+        // The VJP derivative scalar pairs with the same forward scalar.
+        let dy = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let d1 = gelu_vjp(&h_ref, &dy);
+        let d2 = gelu_vjp(&h, &dy);
+        assert_eq!(d1.data, d2.data);
     }
 
     #[test]

@@ -17,16 +17,31 @@
 //! [`ContractionStats`] in the tests.
 
 use crate::optim::{Hyper, ModelOptim};
-use crate::tensor::{ops, ContractionStats, PackedTensor, Precision, Tensor, TTMatrix};
+use crate::tensor::precision::PackedVec;
+use crate::tensor::{
+    ops, ContractionStats, PackedTTMatrix, PackedTensor, Precision, Tensor, TTMatrix,
+};
 use crate::trace;
 use anyhow::{anyhow, Result};
 use std::borrow::Cow;
 
 /// A trainable TT-format linear layer (cores + dense bias).
+///
+/// The cores and bias live **at rest** in a [`PackedTTMatrix`] /
+/// [`PackedVec`]: genuinely `u16`-packed buffers under the half
+/// precisions (half the measured bytes), plain f32 otherwise.  Reads
+/// go through [`TTLinear::tt`] / [`TTLinear::bias`], which widen on
+/// load (zero-copy borrows on the f32 path); writes go through
+/// [`TTLinear::update_tt`] / [`TTLinear::update_bias`], which repack
+/// on store.  Because the PU stage rounds every updated parameter to
+/// the storage precision ([`ModelOptim::step`]), the at-rest values
+/// are always exactly representable and the widen/repack round trip
+/// is bitwise lossless — packed storage computes the same bits as the
+/// rounded-f32 representation it replaces.
 #[derive(Debug, Clone)]
 pub struct TTLinear {
-    pub tt: TTMatrix,
-    pub bias: Vec<f32>,
+    store: PackedTTMatrix,
+    bias: PackedVec,
 }
 
 /// Per-layer gradient-checkpointing mode: what the forward pass retains
@@ -171,11 +186,16 @@ pub struct TTLinearGrads {
 }
 
 impl TTLinear {
+    /// Build from f32 cores and bias; the layer stores them at
+    /// [`Precision::F32`] until [`TTLinear::set_precision`] repacks.
     pub fn new(tt: TTMatrix, bias: Vec<f32>) -> Result<TTLinear> {
         if bias.len() != tt.m() {
             return Err(anyhow!("bias len {} != M {}", bias.len(), tt.m()));
         }
-        Ok(TTLinear { tt, bias })
+        Ok(TTLinear {
+            store: PackedTTMatrix::pack_owned(tt, Precision::F32),
+            bias: PackedVec::from_f32(Precision::F32, &bias),
+        })
     }
 
     /// Random layer with zero bias (TT cores scaled for `target_std` of
@@ -189,7 +209,53 @@ impl TTLinear {
     ) -> TTLinear {
         let tt = TTMatrix::randn(m_modes, n_modes, rank, target_std, rng);
         let bias = vec![0.0; tt.m()];
-        TTLinear { tt, bias }
+        TTLinear::new(tt, bias).expect("bias sized to M")
+    }
+
+    /// Widen-on-load view of the TT cores: a zero-copy borrow on the
+    /// f32 path, an exact widening for the packed half formats.
+    pub fn tt(&self) -> Cow<'_, TTMatrix> {
+        self.store.view()
+    }
+
+    /// Widen-on-load view of the bias row.
+    pub fn bias(&self) -> Cow<'_, [f32]> {
+        self.bias.view()
+    }
+
+    /// Mutate the cores through a widen → edit → repack-on-store round
+    /// trip (in place on the f32 path).
+    pub fn update_tt(&mut self, f: impl FnOnce(&mut TTMatrix)) {
+        self.store.update(f);
+    }
+
+    /// Mutate the bias through the same round trip.
+    pub fn update_bias(&mut self, f: impl FnOnce(&mut [f32])) {
+        self.bias.update_in_place(f);
+    }
+
+    /// Storage precision of the at-rest cores and bias.
+    pub fn precision(&self) -> Precision {
+        self.store.precision()
+    }
+
+    /// Re-store cores and bias at `prec` (bitwise lossless for values
+    /// already representable there — i.e. anything the PU stage wrote).
+    pub fn set_precision(&mut self, prec: Precision) {
+        self.store.set_precision(prec);
+        self.bias.set_precision(prec);
+    }
+
+    /// Trainable parameter count (cores + bias).
+    pub fn param_count(&self) -> usize {
+        self.store.param_count() + self.bias.len()
+    }
+
+    /// **Measured** parameter bytes at rest: the sum of the actual
+    /// core and bias buffer sizes at the stored precision — exactly
+    /// half the f32 figure under bf16/f16.
+    pub fn param_bytes(&self) -> u64 {
+        self.store.bytes() + self.bias.bytes()
     }
 
     /// Forward pass `Y = X W^T + b` on row-major `x (K, N)` at full
@@ -235,25 +301,42 @@ impl TTLinear {
         mode: CheckpointMode,
         stats: &mut ContractionStats,
     ) -> Result<(Tensor, TTLinearCache)> {
-        let d = self.tt.d();
-        let (m, n) = (self.tt.m(), self.tt.n());
+        let (y_raw, cache) = self.forward_ckpt_raw(x, prec, mode, stats)?;
+        Ok((ops::add_row(&y_raw, &self.bias()), cache))
+    }
+
+    /// [`TTLinear::forward_ckpt`] **without the bias row-add**: returns
+    /// the raw TT-apply output `X W^T` so a fused elementwise lane
+    /// (bias + residual + LayerNorm, or bias + GELU — see
+    /// `train::blocks`) can consume it element-by-element without the
+    /// intermediate `Y = X W^T + b` ever round-tripping through memory.
+    /// The cache is identical to [`TTLinear::forward_ckpt`]'s.
+    pub fn forward_ckpt_raw(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        mode: CheckpointMode,
+        stats: &mut ContractionStats,
+    ) -> Result<(Tensor, TTLinearCache)> {
+        let tt = self.tt();
+        let d = tt.d();
+        let (m, n) = (tt.m(), tt.n());
         if x.ndim() != 2 || x.shape[1] != n {
             return Err(anyhow!("x must be (K, {n}), got {:?}", x.shape));
         }
         let k_dim = x.shape[0];
-        let r_d = self.tt.ranks[d];
+        let r_d = tt.ranks[d];
 
         let xq = prec.round_tensor(x);
         // Chains + Z2 through the shared builder (the same fold order
         // the `Recompute` backward re-runs; merge costs go through the
         // same accounting helper as matmul_btt).
-        let (left_chain, right_chain, z2) = build_btt_states(&self.tt, &xq, prec, true, stats)?;
+        let (left_chain, right_chain, z2) = build_btt_states(&tt, &xq, prec, true, stats)?;
         let z3 = left_chain.last().expect("d >= 1");
         let sp = trace::span("ttlinear", "apply");
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         drop(sp);
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
-        let y = ops::add_row(&y, &self.bias);
         let pack = |t: Tensor| PackedTensor::pack_owned(t, prec);
         let states = match mode {
             CheckpointMode::Recompute => None,
@@ -275,9 +358,10 @@ impl TTLinear {
         cache: &TTLinearCache,
         stats: &mut ContractionStats,
     ) -> Result<(Tensor, TTLinearGrads)> {
-        let d = self.tt.d();
-        let (m, n) = (self.tt.m(), self.tt.n());
-        let r_d = self.tt.ranks[d];
+        let tt = self.tt();
+        let d = tt.d();
+        let (m, n) = (tt.m(), tt.n());
+        let r_d = tt.ranks[d];
         if dy.ndim() != 2 || dy.shape[1] != m || dy.shape[0] != cache.x.shape()[0] {
             return Err(anyhow!("dy must be (K, {m}), got {:?}", dy.shape));
         }
@@ -314,7 +398,7 @@ impl TTLinear {
             ),
             None => {
                 let prec = cache.x.precision();
-                let (left, right, z2) = build_btt_states(&self.tt, x.as_ref(), prec, false, stats)?;
+                let (left, right, z2) = build_btt_states(&tt, x.as_ref(), prec, false, stats)?;
                 (
                     left.into_iter().map(Cow::Owned).collect(),
                     right.into_iter().map(Cow::Owned).collect(),
@@ -334,8 +418,8 @@ impl TTLinear {
         let dx = dz2.matmul(z1)?; // (K, N)
         stats.record_step((k_dim * r_d * n) as u64, (k_dim * n) as u64, false);
 
-        let mut core_grads = unroll_left_chain(&self.tt, &left_chain, dz3, stats)?;
-        core_grads.extend(unroll_right_chain(&self.tt, &right_chain, dz1, stats)?);
+        let mut core_grads = unroll_left_chain(&tt, &left_chain, dz3, stats)?;
+        core_grads.extend(unroll_right_chain(&tt, &right_chain, dz1, stats)?);
 
         Ok((dx, TTLinearGrads { cores: core_grads, bias: dbias }))
     }
@@ -352,10 +436,15 @@ impl TTLinear {
         prefix: &str,
         hyper: &Hyper,
     ) {
-        for (k, (core, g)) in self.tt.cores.iter_mut().zip(&grads.cores).enumerate() {
-            opt.step(&format!("{prefix}.cores.{k}"), &mut core.data, &g.data, hyper);
-        }
-        opt.step(&format!("{prefix}.bias"), &mut self.bias, &grads.bias, hyper);
+        // The optimizer rounds every updated value to the storage
+        // precision, so the repack-on-store below is bitwise lossless.
+        self.store.update(|tt| {
+            for (k, (core, g)) in tt.cores.iter_mut().zip(&grads.cores).enumerate() {
+                opt.step(&format!("{prefix}.cores.{k}"), &mut core.data, &g.data, hyper);
+            }
+        });
+        self.bias
+            .update_in_place(|b| opt.step(&format!("{prefix}.bias"), b, &grads.bias, hyper));
     }
 }
 
@@ -438,7 +527,7 @@ fn unroll_right_chain(
 /// `G_{d+1}..G_{2d}`.  Checkpoints trained with independent projections
 /// report `false` and fall back to three separate forwards.
 pub fn qkv_input_cores_shared(wq: &TTLinear, wk: &TTLinear, wv: &TTLinear) -> bool {
-    tt_input_cores_tied(&wq.tt, &wk.tt, &wv.tt)
+    tt_input_cores_tied(&wq.tt(), &wk.tt(), &wv.tt())
 }
 
 /// Core of [`qkv_input_cores_shared`] on raw [`TTMatrix`] triples —
@@ -537,32 +626,32 @@ pub struct QkvFusedGrads {
 /// Eq. 21 stored-element accounting (forward) vs the transient BP
 /// rebuild (multiplies only — `btt_qkv_recompute_muls`).
 fn build_qkv_states(
-    wq: &TTLinear,
-    wk: &TTLinear,
-    wv: &TTLinear,
+    qtt: &TTMatrix,
+    ktt: &TTMatrix,
+    vtt: &TTMatrix,
     xq: &Tensor,
     prec: Precision,
     stored: bool,
     stats: &mut ContractionStats,
 ) -> Result<([Vec<Tensor>; 3], Vec<Tensor>, Tensor)> {
-    let d = wq.tt.d();
-    let (k_dim, n) = (xq.shape[0], wq.tt.n());
-    let r_d = wq.tt.ranks[d];
+    let d = qtt.d();
+    let (k_dim, n) = (xq.shape[0], qtt.n());
+    let r_d = qtt.ranks[d];
     let mut scratch = ContractionStats::default();
     let sp = trace::span("ttlinear", "merge_right");
-    let right = wq.tt.merge_right_chain_prec(prec)?;
+    let right = qtt.merge_right_chain_prec(prec)?;
     drop(sp);
-    wq.tt.record_merge_right_stats(&mut scratch);
+    qtt.record_merge_right_stats(&mut scratch);
     let z1 = right.last().expect("d >= 1");
     let sp = trace::span("ttlinear", "apply");
     let z2 = prec.round_tensor_owned(xq.matmul(&z1.t()?)?); // (K, r_d)
     drop(sp);
     scratch.record_step((k_dim * n * r_d) as u64, (k_dim * r_d) as u64, stored);
     let mut lefts = Vec::with_capacity(3);
-    for w in [wq, wk, wv] {
+    for tt in [qtt, ktt, vtt] {
         let _sp = trace::span("ttlinear", "merge_left");
-        lefts.push(w.tt.merge_left_chain_prec(prec)?);
-        w.tt.record_merge_left_stats(&mut scratch);
+        lefts.push(tt.merge_left_chain_prec(prec)?);
+        tt.record_merge_left_stats(&mut scratch);
     }
     record_rebuild(stats, scratch, stored);
     Ok((lefts.try_into().expect("three projections"), right, z2))
@@ -616,19 +705,21 @@ pub fn forward_qkv_fused_ckpt(
     if !qkv_input_cores_shared(wq, wk, wv) {
         return Err(anyhow!("fused QKV requires tied input-side cores across Q/K/V"));
     }
-    let d = wq.tt.d();
-    let (m, n) = (wq.tt.m(), wq.tt.n());
+    let (qtt, ktt, vtt) = (wq.tt(), wk.tt(), wv.tt());
+    let d = qtt.d();
+    let (m, n) = (qtt.m(), qtt.n());
     if x.ndim() != 2 || x.shape[1] != n {
         return Err(anyhow!("x must be (K, {n}), got {:?}", x.shape));
     }
     let k_dim = x.shape[0];
-    let r_d = wq.tt.ranks[d];
+    let r_d = qtt.ranks[d];
 
     // Shared input side (one right merge, one rounded Z2) and the
     // three left chains, through the shared builder — the same fused
     // fold order the `Recompute` backward re-runs.
     let xq = prec.round_tensor(x);
-    let (left_chains, right_chain, z2) = build_qkv_states(wq, wk, wv, &xq, prec, true, stats)?;
+    let (left_chains, right_chain, z2) =
+        build_qkv_states(&qtt, &ktt, &vtt, &xq, prec, true, stats)?;
 
     // Per-projection output applies.
     let mut ys = Vec::with_capacity(3);
@@ -637,7 +728,7 @@ pub fn forward_qkv_fused_ckpt(
         let z3 = chain.last().expect("d >= 1");
         let y = z2.matmul(&z3.t()?)?; // (K, M)
         stats.record_step((k_dim * r_d * m) as u64, (k_dim * m) as u64, false);
-        ys.push(ops::add_row(&y, &w.bias));
+        ys.push(ops::add_row(&y, &w.bias()));
     }
     let ys: [Tensor; 3] = ys.try_into().expect("three projections");
     let states = match mode {
@@ -670,9 +761,10 @@ pub fn backward_qkv_fused(
     cache: &QkvFusedCache,
     stats: &mut ContractionStats,
 ) -> Result<(Tensor, QkvFusedGrads)> {
-    let d = wq.tt.d();
-    let (m, n) = (wq.tt.m(), wq.tt.n());
-    let r_d = wq.tt.ranks[d];
+    let (qtt, ktt, vtt) = (wq.tt(), wk.tt(), wv.tt());
+    let d = qtt.d();
+    let (m, n) = (qtt.m(), qtt.n());
+    let r_d = qtt.ranks[d];
     let k_dim = cache.x.shape()[0];
     for dy in [dq, dk, dv] {
         if dy.ndim() != 2 || dy.shape[1] != m || dy.shape[0] != k_dim {
@@ -700,7 +792,8 @@ pub fn backward_qkv_fused(
         ),
         None => {
             let prec = cache.x.precision();
-            let (lefts, right, z2) = build_qkv_states(wq, wk, wv, x.as_ref(), prec, false, stats)?;
+            let (lefts, right, z2) =
+                build_qkv_states(&qtt, &ktt, &vtt, x.as_ref(), prec, false, stats)?;
             (
                 lefts.map(|c| c.into_iter().map(Cow::Owned).collect()),
                 right.into_iter().map(Cow::Owned).collect(),
@@ -711,7 +804,7 @@ pub fn backward_qkv_fused(
     let mut dz2 = Tensor::zeros(&[k_dim, r_d]);
     let mut m_grads = Vec::with_capacity(3);
     let mut biases = Vec::with_capacity(3);
-    for (p, (w, dy)) in [wq, wk, wv].into_iter().zip([dq, dk, dv]).enumerate() {
+    for (p, (tt, dy)) in [&qtt, &ktt, &vtt].into_iter().zip([dq, dk, dv]).enumerate() {
         let mut dbias = vec![0.0f32; m];
         for row in dy.data.chunks(m) {
             for (b, &v) in dbias.iter_mut().zip(row) {
@@ -726,7 +819,7 @@ pub fn backward_qkv_fused(
         let part = dy.matmul(z3)?; // (K, r_d) contribution to dZ2
         stats.record_step((k_dim * m * r_d) as u64, (k_dim * r_d) as u64, false);
         dz2 = ops::add(&dz2, &part);
-        m_grads.push(unroll_left_chain(&w.tt, left_chain, dz3, stats)?);
+        m_grads.push(unroll_left_chain(tt, left_chain, dz3, stats)?);
     }
 
     // Shared input side, charged once.
@@ -735,7 +828,7 @@ pub fn backward_qkv_fused(
     stats.record_step((r_d * k_dim * n) as u64, (r_d * n) as u64, false);
     let dx = dz2.matmul(z1)?; // (K, N)
     stats.record_step((k_dim * r_d * n) as u64, (k_dim * n) as u64, false);
-    let n_cores = unroll_right_chain(&wq.tt, &right_chain, dz1, stats)?;
+    let n_cores = unroll_right_chain(&qtt, &right_chain, dz1, stats)?;
 
     let m_cores: [Vec<Tensor>; 3] = m_grads.try_into().expect("three projections");
     let bias: [Vec<f32>; 3] = biases.try_into().expect("three projections");
@@ -756,40 +849,49 @@ pub fn apply_update_qkv_fused(
     layer_prefix: &str,
     hyper: &Hyper,
 ) {
-    let d = wq.tt.d();
+    let d = wq.tt().d();
     {
         let mut one = |w: &mut TTLinear, name: &str, p: usize| {
-            for k in 0..d {
-                opt.step(
-                    &format!("{layer_prefix}.{name}.cores.{k}"),
-                    &mut w.tt.cores[k].data,
-                    &grads.m_cores[p][k].data,
-                    hyper,
-                );
-            }
-            opt.step(
-                &format!("{layer_prefix}.{name}.bias"),
-                &mut w.bias,
-                &grads.bias[p],
-                hyper,
-            );
+            w.update_tt(|tt| {
+                for k in 0..d {
+                    opt.step(
+                        &format!("{layer_prefix}.{name}.cores.{k}"),
+                        &mut tt.cores[k].data,
+                        &grads.m_cores[p][k].data,
+                        hyper,
+                    );
+                }
+            });
+            w.update_bias(|b| {
+                opt.step(&format!("{layer_prefix}.{name}.bias"), b, &grads.bias[p], hyper)
+            });
         };
         one(wq, "wq", 0);
         one(wk, "wk", 1);
         one(wv, "wv", 2);
     }
-    for k in 0..d {
-        let c = d + k;
-        opt.step(
-            &format!("{layer_prefix}.wq.cores.{c}"),
-            &mut wq.tt.cores[c].data,
-            &grads.n_cores[k].data,
-            hyper,
-        );
-        // wq/wk/wv are distinct borrows, so the updated core copies
-        // straight across without an intermediate allocation.
-        wk.tt.cores[c].data.copy_from_slice(&wq.tt.cores[c].data);
-        wv.tt.cores[c].data.copy_from_slice(&wq.tt.cores[c].data);
+    // Shared input cores: one optimizer step on the canonical (wq)
+    // slot, then copy the updated values across.  The optimizer rounds
+    // on store, so the copy and the repack are bitwise lossless and
+    // the three projections stay in lockstep.
+    wq.update_tt(|tt| {
+        for k in 0..d {
+            let c = d + k;
+            opt.step(
+                &format!("{layer_prefix}.wq.cores.{c}"),
+                &mut tt.cores[c].data,
+                &grads.n_cores[k].data,
+                hyper,
+            );
+        }
+    });
+    let src = wq.tt();
+    for w in [wk, wv] {
+        w.update_tt(|tt| {
+            for c in d..2 * d {
+                tt.cores[c].data.copy_from_slice(&src.cores[c].data);
+            }
+        });
     }
 }
 
@@ -811,8 +913,8 @@ mod tests {
         let mut stats = ContractionStats::default();
         let (y, _) = l.forward(&x, &mut stats).unwrap();
         // Column-major reference through the instrumented engine.
-        let (y_cols, ref_stats) = l.tt.matmul_btt(&x.t().unwrap()).unwrap();
-        let y_ref = ops::add_row(&y_cols.t().unwrap(), &l.bias);
+        let (y_cols, ref_stats) = l.tt().matmul_btt(&x.t().unwrap()).unwrap();
+        let y_ref = ops::add_row(&y_cols.t().unwrap(), &l.bias());
         assert!(y.max_abs_diff(&y_ref) < 1e-4);
         assert_eq!(stats.muls, ref_stats.muls);
         assert_eq!(stats.stored_intermediate_elems, ref_stats.stored_intermediate_elems);
@@ -825,9 +927,9 @@ mod tests {
         let k_dim = 7usize;
         let x = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
         let shape = LinearShape {
-            m_modes: l.tt.m_modes.clone(),
-            n_modes: l.tt.n_modes.clone(),
-            ranks: l.tt.ranks.clone(),
+            m_modes: l.tt().m_modes.clone(),
+            n_modes: l.tt().n_modes.clone(),
+            ranks: l.tt().ranks.clone(),
         };
         let mut fwd = ContractionStats::default();
         let (y, cache) = l.forward(&x, &mut fwd).unwrap();
@@ -855,7 +957,7 @@ mod tests {
         let (y, cache) = l.forward(&x, &mut stats).unwrap();
         let dy = Tensor::randn(&[6, y.shape[1]], 1.0, &mut rng);
         let (dx, grads) = l.backward(&dy, &cache, &mut stats).unwrap();
-        let w = l.tt.to_dense().unwrap(); // (M, N)
+        let w = l.tt().to_dense().unwrap(); // (M, N)
         let dx_dense = dy.matmul(&w).unwrap();
         assert!(dx.max_abs_diff(&dx_dense) < 1e-4);
         // Bias gradient: column sums of dY.
@@ -900,8 +1002,8 @@ mod tests {
             }
             assert!(last < 0.6 * first.unwrap(), "{kind:?}: loss {last} vs {first:?}");
             // One slot per core + bias, state sized by the rule.
-            let elems: u64 = l.tt.cores.iter().map(|c| c.numel() as u64).sum::<u64>()
-                + l.bias.len() as u64;
+            let elems: u64 = l.tt().cores.iter().map(|c| c.numel() as u64).sum::<u64>()
+                + l.bias().len() as u64;
             assert_eq!(
                 opt.allocated_state_elems(),
                 kind.state_multiplier() as u64 * elems
@@ -998,9 +1100,9 @@ mod tests {
         // The rebuild is charged exactly as the cost model's FLOP delta
         // and never as stored intermediates.
         let shape = LinearShape {
-            m_modes: l.tt.m_modes.clone(),
-            n_modes: l.tt.n_modes.clone(),
-            ranks: l.tt.ranks.clone(),
+            m_modes: l.tt().m_modes.clone(),
+            n_modes: l.tt().n_modes.clone(),
+            ranks: l.tt().ranks.clone(),
         };
         assert_eq!(b_r.muls, b_c.muls + shape.btt_recompute_muls(k_dim as u64));
         assert_eq!(b_r.stored_intermediate_elems, b_c.stored_intermediate_elems);
@@ -1010,12 +1112,16 @@ mod tests {
     /// precondition) at the tiny shape.
     fn fused_triplet(rng: &mut SplitMix64) -> (TTLinear, TTLinear, TTLinear) {
         let wq = layer(rng);
-        let d = wq.tt.d();
+        let d = wq.tt().d();
         let mut wk = layer(rng);
         let mut wv = layer(rng);
-        for c in d..2 * d {
-            wk.tt.cores[c] = wq.tt.cores[c].clone();
-            wv.tt.cores[c] = wq.tt.cores[c].clone();
+        let src = wq.tt().into_owned();
+        for w in [&mut wk, &mut wv] {
+            w.update_tt(|tt| {
+                for c in d..2 * d {
+                    tt.cores[c] = src.cores[c].clone();
+                }
+            });
         }
         assert!(qkv_input_cores_shared(&wq, &wk, &wv));
         (wq, wk, wv)
@@ -1039,9 +1145,9 @@ mod tests {
         assert!(fused.muls < sep.muls, "{} !< {}", fused.muls, sep.muls);
         assert!(fused.stored_intermediate_elems < sep.stored_intermediate_elems);
         let shape = LinearShape {
-            m_modes: wq.tt.m_modes.clone(),
-            n_modes: wq.tt.n_modes.clone(),
-            ranks: wq.tt.ranks.clone(),
+            m_modes: wq.tt().m_modes.clone(),
+            n_modes: wq.tt().n_modes.clone(),
+            ranks: wq.tt().ranks.clone(),
         };
         assert_eq!(fused.muls, shape.btt_fwd_qkv_muls(k_dim as u64));
         assert_eq!(
@@ -1065,19 +1171,20 @@ mod tests {
         let mut bwd = ContractionStats::default();
         let (dx, grads) =
             backward_qkv_fused(&wq, &wk, &wv, &dq, &dk, &dv, &cache, &mut bwd).unwrap();
+        let qtt = wq.tt().into_owned();
         let shape = LinearShape {
-            m_modes: wq.tt.m_modes.clone(),
-            n_modes: wq.tt.n_modes.clone(),
-            ranks: wq.tt.ranks.clone(),
+            m_modes: qtt.m_modes.clone(),
+            n_modes: qtt.n_modes.clone(),
+            ranks: qtt.ranks.clone(),
         };
         assert_eq!(bwd.muls, shape.btt_qkv_bwd_muls(k_dim as u64), "BP = 2x fused FP");
 
         // Reference: three separate backwards on the tied layers; dX and
         // the shared input-core gradients are the sums over projections.
-        let d = wq.tt.d();
+        let d = qtt.d();
         let mut dx_ref = Tensor::zeros(&dx.shape);
         let mut n_ref: Vec<Tensor> =
-            (d..2 * d).map(|c| Tensor::zeros(&wq.tt.cores[c].shape)).collect();
+            (d..2 * d).map(|c| Tensor::zeros(&qtt.cores[c].shape)).collect();
         for (p, (w, dy)) in [(&wq, &dq), (&wk, &dk), (&wv, &dv)].into_iter().enumerate() {
             let mut s = ContractionStats::default();
             let (_, c) = w.forward(&x, &mut s).unwrap();
@@ -1126,10 +1233,11 @@ mod tests {
             );
         }
         // State: 3x (m-cores + bias) + 1x shared n-cores — not 3x.
-        let d = wq.tt.d();
-        let m_side: u64 = (0..d).map(|k| wq.tt.cores[k].numel() as u64).sum();
-        let n_side: u64 = (d..2 * d).map(|c| wq.tt.cores[c].numel() as u64).sum();
-        let distinct = 3 * (m_side + wq.bias.len() as u64) + n_side;
+        let qtt = wq.tt().into_owned();
+        let d = qtt.d();
+        let m_side: u64 = (0..d).map(|k| qtt.cores[k].numel() as u64).sum();
+        let n_side: u64 = (d..2 * d).map(|c| qtt.cores[c].numel() as u64).sum();
+        let distinct = 3 * (m_side + wq.bias().len() as u64) + n_side;
         assert_eq!(opt.allocated_state_elems(), 2 * distinct);
     }
 }

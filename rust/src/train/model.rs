@@ -35,7 +35,9 @@
 use crate::config::ModelConfig;
 use crate::engine::{pad_mask, ComputePath, NativeEngine, ParamMap};
 use crate::optim::{ModelOptim, OptimConfig};
-use crate::tensor::{ops, ContractionStats, Precision, Tensor, TTMEmbedding, TTMatrix};
+use crate::tensor::{
+    ops, ContractionStats, PackedTensor, PackedVec, Precision, Tensor, TTMEmbedding, TTMatrix,
+};
 use crate::trace;
 use crate::train::blocks::{self, LayerNormCache};
 use crate::train::layers::{self, CheckpointMode, QkvFusedCache, TTLinear, TTLinearCache};
@@ -51,10 +53,10 @@ pub struct TrainEncoderLayer {
     pub wo: TTLinear,
     pub w1: TTLinear,
     pub w2: TTLinear,
-    pub ln1_g: Vec<f32>,
-    pub ln1_b: Vec<f32>,
-    pub ln2_g: Vec<f32>,
-    pub ln2_b: Vec<f32>,
+    pub ln1_g: PackedVec,
+    pub ln1_b: PackedVec,
+    pub ln2_g: PackedVec,
+    pub ln2_b: PackedVec,
 }
 
 /// Gradient-checkpointing policy for the Eq. 21 activation caches —
@@ -123,13 +125,13 @@ impl CheckpointPolicy {
 pub struct NativeTrainModel {
     pub cfg: ModelConfig,
     pub embedding: TTMEmbedding,
-    pub pos: Tensor,
+    pub pos: PackedTensor,
     pub layers: Vec<TrainEncoderLayer>,
     pub pool: TTLinear,
-    pub intent_w: Tensor,
-    pub intent_b: Vec<f32>,
-    pub slot_w: Tensor,
-    pub slot_b: Vec<f32>,
+    pub intent_w: PackedTensor,
+    pub intent_b: PackedVec,
+    pub slot_w: PackedTensor,
+    pub slot_b: PackedVec,
     /// The PU stage: pluggable per-parameter update rules + state.
     pub optim: ModelOptim,
     /// Compute-schedule selection (fused/batched by default).
@@ -281,10 +283,14 @@ impl NativeTrainModel {
                 // and therefore every untied tensor — is identical
                 // between the tied and untied inits.)
                 if tie_qkv {
-                    let d = wq.tt.d();
-                    for c in d..2 * d {
-                        wk.tt.cores[c] = wq.tt.cores[c].clone();
-                        wv.tt.cores[c] = wq.tt.cores[c].clone();
+                    let src = wq.tt().into_owned();
+                    let d = src.d();
+                    for w in [&mut wk, &mut wv] {
+                        w.update_tt(|tt| {
+                            for c in d..2 * d {
+                                tt.cores[c] = src.cores[c].clone();
+                            }
+                        });
                     }
                 }
                 TrainEncoderLayer {
@@ -294,10 +300,10 @@ impl NativeTrainModel {
                     wo: linear(&mut rng),
                     w1: linear(&mut rng),
                     w2: linear(&mut rng),
-                    ln1_g: vec![1.0; cfg.d_hid],
-                    ln1_b: vec![0.0; cfg.d_hid],
-                    ln2_g: vec![1.0; cfg.d_hid],
-                    ln2_b: vec![0.0; cfg.d_hid],
+                    ln1_g: PackedVec::from_f32(Precision::F32, &vec![1.0; cfg.d_hid]),
+                    ln1_b: PackedVec::from_f32(Precision::F32, &vec![0.0; cfg.d_hid]),
+                    ln2_g: PackedVec::from_f32(Precision::F32, &vec![1.0; cfg.d_hid]),
+                    ln2_b: PackedVec::from_f32(Precision::F32, &vec![0.0; cfg.d_hid]),
                 }
             })
             .collect();
@@ -306,13 +312,19 @@ impl NativeTrainModel {
         Ok(NativeTrainModel {
             cfg: cfg.clone(),
             embedding,
-            pos,
+            pos: PackedTensor::pack_owned(pos, Precision::F32),
             layers,
             pool,
-            intent_w: Tensor::randn(&[cfg.n_intents, cfg.d_hid], head_std, &mut rng),
-            intent_b: vec![0.0; cfg.n_intents],
-            slot_w: Tensor::randn(&[cfg.n_slots, cfg.d_hid], head_std, &mut rng),
-            slot_b: vec![0.0; cfg.n_slots],
+            intent_w: PackedTensor::pack_owned(
+                Tensor::randn(&[cfg.n_intents, cfg.d_hid], head_std, &mut rng),
+                Precision::F32,
+            ),
+            intent_b: PackedVec::from_f32(Precision::F32, &vec![0.0; cfg.n_intents]),
+            slot_w: PackedTensor::pack_owned(
+                Tensor::randn(&[cfg.n_slots, cfg.d_hid], head_std, &mut rng),
+                Precision::F32,
+            ),
+            slot_b: PackedVec::from_f32(Precision::F32, &vec![0.0; cfg.n_slots]),
             optim: ModelOptim::new(OptimConfig::default()),
             compute_path: ComputePath::default(),
             precision: Precision::F32,
@@ -344,7 +356,10 @@ impl NativeTrainModel {
         ranks[0] = 1;
         ranks[d] = 1;
         let embedding = TTMEmbedding {
-            cores: ttm_cores,
+            cores: ttm_cores
+                .into_iter()
+                .map(|t| PackedTensor::pack_owned(t, Precision::F32))
+                .collect(),
             hid_modes: cfg.ttm_hid_modes.clone(),
             vocab_modes: cfg.ttm_vocab_modes.clone(),
             ranks,
@@ -375,23 +390,23 @@ impl NativeTrainModel {
                 wo: tt_linear(&p("wo"))?,
                 w1: tt_linear(&p("w1"))?,
                 w2: tt_linear(&p("w2"))?,
-                ln1_g: vec1(&p("ln1.g"))?,
-                ln1_b: vec1(&p("ln1.b"))?,
-                ln2_g: vec1(&p("ln2.g"))?,
-                ln2_b: vec1(&p("ln2.b"))?,
+                ln1_g: PackedVec::from_f32(Precision::F32, &vec1(&p("ln1.g"))?),
+                ln1_b: PackedVec::from_f32(Precision::F32, &vec1(&p("ln1.b"))?),
+                ln2_g: PackedVec::from_f32(Precision::F32, &vec1(&p("ln2.g"))?),
+                ln2_b: PackedVec::from_f32(Precision::F32, &vec1(&p("ln2.b"))?),
             });
         }
 
         Ok(NativeTrainModel {
             cfg: cfg.clone(),
             embedding,
-            pos: tensor("embed.pos")?,
+            pos: PackedTensor::pack_owned(tensor("embed.pos")?, Precision::F32),
             layers,
             pool: tt_linear("cls.pool")?,
-            intent_w: tensor("cls.intent_w")?,
-            intent_b: vec1("cls.intent_b")?,
-            slot_w: tensor("cls.slot_w")?,
-            slot_b: vec1("cls.slot_b")?,
+            intent_w: PackedTensor::pack_owned(tensor("cls.intent_w")?, Precision::F32),
+            intent_b: PackedVec::from_f32(Precision::F32, &vec1("cls.intent_b")?),
+            slot_w: PackedTensor::pack_owned(tensor("cls.slot_w")?, Precision::F32),
+            slot_b: PackedVec::from_f32(Precision::F32, &vec1("cls.slot_b")?),
             optim: ModelOptim::new(OptimConfig::default()),
             // Fused by default; layers whose loaded Q/K/V input cores
             // are not tied fall back to separate forwards per layer.
@@ -414,16 +429,18 @@ impl NativeTrainModel {
         self.set_precision(prec);
     }
 
-    /// Visit every trainable parameter buffer exactly once — the same
-    /// parameter set [`NativeTrainModel::to_params`] exports and the PU
-    /// stage updates.  Keeping the walk in one place makes whole-model
-    /// invariants (like the storage-precision rounding below)
-    /// structural: a new parameter added here is covered everywhere.
-    fn for_each_param_mut(&mut self, mut f: impl FnMut(&mut Vec<f32>)) {
+    /// Visit every trainable parameter buffer exactly once (widened to
+    /// f32 for the duration of the visit) — the same parameter set
+    /// [`NativeTrainModel::to_params`] exports and the PU stage updates.
+    /// Test-only: production code touches the packed stores directly;
+    /// the visitor exists so the structural walk/export agreement stays
+    /// pinned (`param_visitor_covers_exactly_the_exported_set`).
+    #[cfg(test)]
+    fn for_each_param_mut(&mut self, mut f: impl FnMut(&mut [f32])) {
         for core in &mut self.embedding.cores {
-            f(&mut core.data);
+            core.update_in_place(|d| f(d));
         }
-        f(&mut self.pos.data);
+        self.pos.update_in_place(|d| f(d));
         for layer in &mut self.layers {
             for lin in [
                 &mut layer.wq,
@@ -433,42 +450,72 @@ impl NativeTrainModel {
                 &mut layer.w1,
                 &mut layer.w2,
             ] {
-                for core in &mut lin.tt.cores {
-                    f(&mut core.data);
-                }
-                f(&mut lin.bias);
+                lin.update_tt(|tt| {
+                    for core in &mut tt.cores {
+                        f(&mut core.data);
+                    }
+                });
+                lin.update_bias(|b| f(b));
             }
-            f(&mut layer.ln1_g);
-            f(&mut layer.ln1_b);
-            f(&mut layer.ln2_g);
-            f(&mut layer.ln2_b);
+            layer.ln1_g.update_in_place(|d| f(d));
+            layer.ln1_b.update_in_place(|d| f(d));
+            layer.ln2_g.update_in_place(|d| f(d));
+            layer.ln2_b.update_in_place(|d| f(d));
         }
-        for core in &mut self.pool.tt.cores {
-            f(&mut core.data);
-        }
-        f(&mut self.pool.bias);
-        f(&mut self.intent_w.data);
-        f(&mut self.intent_b);
-        f(&mut self.slot_w.data);
-        f(&mut self.slot_b);
+        self.pool.update_tt(|tt| {
+            for core in &mut tt.cores {
+                f(&mut core.data);
+            }
+        });
+        self.pool.update_bias(|b| f(b));
+        self.intent_w.update_in_place(|d| f(d));
+        self.intent_b.update_in_place(|d| f(d));
+        self.slot_w.update_in_place(|d| f(d));
+        self.slot_b.update_in_place(|d| f(d));
     }
 
     /// Select the storage precision of the whole mixed-precision path:
     /// Eq. 21 caches and TTM chain states are packed at this width, the
     /// PU stage keeps its moments at this width and rounds every
-    /// updated parameter on store — and, entering a half format, every
-    /// current parameter is rounded once so the weights at rest are
-    /// exactly representable from the first step.  Compute accumulates
-    /// in f32 throughout; `Precision::F32` restores the bitwise
-    /// full-precision path (already-stored parameters are not altered).
+    /// updated parameter on store — and every parameter store is
+    /// physically **re-packed** at the new width.  Entering a half
+    /// format therefore both rounds every current parameter once
+    /// (weights at rest are exactly representable from the first step)
+    /// and actually halves the at-rest parameter bytes: TT/BTT cores,
+    /// biases and the LN/positional/classifier tables live in u16
+    /// buffers, widened to f32 on load for the unchanged f32-accumulate
+    /// kernels.  Compute accumulates in f32 throughout;
+    /// `Precision::F32` restores the bitwise full-precision path
+    /// (widening is exact, so already-rounded parameters are not
+    /// altered).
     pub fn set_precision(&mut self, p: Precision) {
         self.precision = p;
         // Re-packs any already-allocated moment buffers too, so the
         // PU-stage state width tracks the model mid-lifecycle.
         self.optim.set_precision(p);
-        if p.is_half() {
-            self.for_each_param_mut(|data| p.round_slice_in_place(data));
+        self.embedding.set_precision(p);
+        self.pos.set_precision(p);
+        for layer in &mut self.layers {
+            for lin in [
+                &mut layer.wq,
+                &mut layer.wk,
+                &mut layer.wv,
+                &mut layer.wo,
+                &mut layer.w1,
+                &mut layer.w2,
+            ] {
+                lin.set_precision(p);
+            }
+            layer.ln1_g.set_precision(p);
+            layer.ln1_b.set_precision(p);
+            layer.ln2_g.set_precision(p);
+            layer.ln2_b.set_precision(p);
         }
+        self.pool.set_precision(p);
+        self.intent_w.set_precision(p);
+        self.intent_b.set_precision(p);
+        self.slot_w.set_precision(p);
+        self.slot_b.set_precision(p);
     }
 
     /// Export all parameters as a flat name -> array map (the inverse of
@@ -483,9 +530,9 @@ impl NativeTrainModel {
             map.insert(name, (vec![v.len()], v.to_vec()));
         };
         for (k, core) in self.embedding.cores.iter().enumerate() {
-            put_t(&mut map, format!("embed.ttm.{k}"), core);
+            put_t(&mut map, format!("embed.ttm.{k}"), &core.view());
         }
-        put_t(&mut map, "embed.pos".to_string(), &self.pos);
+        put_t(&mut map, "embed.pos".to_string(), &self.pos.view());
         for (i, layer) in self.layers.iter().enumerate() {
             let lins = [
                 ("wq", &layer.wq),
@@ -496,24 +543,26 @@ impl NativeTrainModel {
                 ("w2", &layer.w2),
             ];
             for (name, lin) in lins {
-                for (k, core) in lin.tt.cores.iter().enumerate() {
+                let tt = lin.tt();
+                for (k, core) in tt.cores.iter().enumerate() {
                     put_t(&mut map, format!("layers.{i}.{name}.cores.{k}"), core);
                 }
-                put_v(&mut map, format!("layers.{i}.{name}.bias"), &lin.bias);
+                put_v(&mut map, format!("layers.{i}.{name}.bias"), &lin.bias());
             }
-            put_v(&mut map, format!("layers.{i}.ln1.g"), &layer.ln1_g);
-            put_v(&mut map, format!("layers.{i}.ln1.b"), &layer.ln1_b);
-            put_v(&mut map, format!("layers.{i}.ln2.g"), &layer.ln2_g);
-            put_v(&mut map, format!("layers.{i}.ln2.b"), &layer.ln2_b);
+            put_v(&mut map, format!("layers.{i}.ln1.g"), &layer.ln1_g.view());
+            put_v(&mut map, format!("layers.{i}.ln1.b"), &layer.ln1_b.view());
+            put_v(&mut map, format!("layers.{i}.ln2.g"), &layer.ln2_g.view());
+            put_v(&mut map, format!("layers.{i}.ln2.b"), &layer.ln2_b.view());
         }
-        for (k, core) in self.pool.tt.cores.iter().enumerate() {
+        let pool_tt = self.pool.tt();
+        for (k, core) in pool_tt.cores.iter().enumerate() {
             put_t(&mut map, format!("cls.pool.cores.{k}"), core);
         }
-        put_v(&mut map, "cls.pool.bias".to_string(), &self.pool.bias);
-        put_t(&mut map, "cls.intent_w".to_string(), &self.intent_w);
-        put_v(&mut map, "cls.intent_b".to_string(), &self.intent_b);
-        put_t(&mut map, "cls.slot_w".to_string(), &self.slot_w);
-        put_v(&mut map, "cls.slot_b".to_string(), &self.slot_b);
+        put_v(&mut map, "cls.pool.bias".to_string(), &self.pool.bias());
+        put_t(&mut map, "cls.intent_w".to_string(), &self.intent_w.view());
+        put_v(&mut map, "cls.intent_b".to_string(), &self.intent_b.view());
+        put_t(&mut map, "cls.slot_w".to_string(), &self.slot_w.view());
+        put_v(&mut map, "cls.slot_b".to_string(), &self.slot_b.view());
         map
     }
 
@@ -545,6 +594,8 @@ impl NativeTrainModel {
         let prec = self.precision;
         let aux_recompute = self.checkpoint.aux_mode() == CheckpointMode::Recompute;
         let sp_embed = trace::span("train", "fp.embed");
+        // Widen the positional table once per forward (Borrowed at f32).
+        let pos = self.pos.view();
         let mut x = Tensor::zeros(&[k_rows, h]);
         let mut emb_unique: Vec<(i32, Vec<Tensor>)> = Vec::new();
         let mut emb_index = Vec::with_capacity(k_rows);
@@ -569,7 +620,7 @@ impl NativeTrainModel {
             let row = &emb_unique[ui].1.last().expect("nonempty").data;
             let p = i % s;
             for j in 0..h {
-                x.data[i * h + j] = row[j] + self.pos.at2(p, j);
+                x.data[i * h + j] = row[j] + pos.at2(p, j);
             }
             emb_index.push(ui);
         }
@@ -626,14 +677,51 @@ impl NativeTrainModel {
                 }
                 (ctx, AttnFwd::PerExample(probs))
             };
-            let (o, wo_c) = layer.wo.forward_ckpt(&ctx, prec, mode, stats)?;
-            let res1 = ops::add(&x, &o);
-            let (x1, ln1_c) = blocks::layer_norm_fwd(&res1, &layer.ln1_g, &layer.ln1_b, 1e-5);
-            let (h1, w1_c) = layer.w1.forward_ckpt(&x1, prec, mode, stats)?;
-            let g1 = ops::gelu(&h1);
-            let (ffn, w2_c) = layer.w2.forward_ckpt(&g1, prec, mode, stats)?;
-            let res2 = ops::add(&x1, &ffn);
-            let (x2, ln2_c) = blocks::layer_norm_fwd(&res2, &layer.ln2_g, &layer.ln2_b, 1e-5);
+            // Elementwise tail of the block: fused lanes run the bias
+            // add, residual add and LayerNorm (resp. bias add + GELU)
+            // inside one pass over the TT-apply output, so the
+            // post-bias/post-residual intermediates never round-trip
+            // through memory; the unfused reference materializes each.
+            // Same scalar order per element, so the two are bitwise
+            // identical at every precision (pinned by parity tests).
+            let (x2, wo_c, ln1_c, x1, h1, w1_c, w2_c, ln2_c) = if self
+                .compute_path
+                .fused_elementwise
+            {
+                let (o_raw, wo_c) = layer.wo.forward_ckpt_raw(&ctx, prec, mode, stats)?;
+                let (x1, ln1_c) = blocks::bias_residual_layer_norm_fwd(
+                    &o_raw,
+                    &layer.wo.bias(),
+                    &x,
+                    &layer.ln1_g.view(),
+                    &layer.ln1_b.view(),
+                    1e-5,
+                );
+                let (h1_raw, w1_c) = layer.w1.forward_ckpt_raw(&x1, prec, mode, stats)?;
+                let (h1, g1) = ops::bias_gelu(&h1_raw, &layer.w1.bias());
+                let (ffn_raw, w2_c) = layer.w2.forward_ckpt_raw(&g1, prec, mode, stats)?;
+                let (x2, ln2_c) = blocks::bias_residual_layer_norm_fwd(
+                    &ffn_raw,
+                    &layer.w2.bias(),
+                    &x1,
+                    &layer.ln2_g.view(),
+                    &layer.ln2_b.view(),
+                    1e-5,
+                );
+                (x2, wo_c, ln1_c, x1, h1, w1_c, w2_c, ln2_c)
+            } else {
+                let (o, wo_c) = layer.wo.forward_ckpt(&ctx, prec, mode, stats)?;
+                let res1 = ops::add(&x, &o);
+                let (x1, ln1_c) =
+                    blocks::layer_norm_fwd(&res1, &layer.ln1_g.view(), &layer.ln1_b.view(), 1e-5);
+                let (h1, w1_c) = layer.w1.forward_ckpt(&x1, prec, mode, stats)?;
+                let g1 = ops::gelu(&h1);
+                let (ffn, w2_c) = layer.w2.forward_ckpt(&g1, prec, mode, stats)?;
+                let res2 = ops::add(&x1, &ffn);
+                let (x2, ln2_c) =
+                    blocks::layer_norm_fwd(&res2, &layer.ln2_g.view(), &layer.ln2_b.view(), 1e-5);
+                (x2, wo_c, ln1_c, x1, h1, w1_c, w2_c, ln2_c)
+            };
             layer_fwd.push(LayerFwd {
                 q,
                 k,
@@ -657,8 +745,8 @@ impl NativeTrainModel {
         let pooled = ops::tanh(&pool_pre);
         // Per-example CLS rows drive the intent head.
         let cls = ops::cls_rows(&pooled, b, s)?;
-        let intent = ops::add_row(&cls.matmul(&self.intent_w.t()?)?, &self.intent_b);
-        let slots = ops::add_row(&pooled.matmul(&self.slot_w.t()?)?, &self.slot_b);
+        let intent = ops::add_row(&cls.matmul(&self.intent_w.view().t()?)?, &self.intent_b.view());
+        let slots = ops::add_row(&pooled.matmul(&self.slot_w.view().t()?)?, &self.slot_b.view());
         Ok(ForwardCaches {
             batch: b,
             mask,
@@ -711,15 +799,34 @@ impl NativeTrainModel {
         total
     }
 
-    /// At-rest parameter bytes at the current storage width: every
-    /// trainable buffer [`NativeTrainModel::to_params`] exports (TT/TTM
-    /// cores, biases, LN/positional/classifier tables), charged at
-    /// [`Precision::bytes`] per element — the accounting convention the
-    /// width-parameterized U50 report uses for cores.  Feeds the
-    /// `param_bytes` gauge.
+    /// **Measured** at-rest parameter bytes: the sum of the actual
+    /// packed buffer sizes of every trainable store
+    /// [`NativeTrainModel::to_params`] exports (TT/TTM cores, biases,
+    /// LN/positional/classifier tables) — u16-backed under a half
+    /// storage width, f32 otherwise.  Because every exported parameter
+    /// is physically packed, this agrees exactly with the analytic
+    /// `element count x Precision::bytes` convention the
+    /// width-parameterized U50 report uses (pinned by the
+    /// `param_bytes` gauge cross-check test).
     pub fn param_bytes(&self) -> u64 {
-        let elems: u64 = self.to_params().values().map(|(_, v)| v.len() as u64).sum();
-        elems * self.precision.bytes()
+        let mut total = self.embedding.bytes() + self.pos.bytes();
+        for layer in &self.layers {
+            for lin in [
+                &layer.wq, &layer.wk, &layer.wv, &layer.wo, &layer.w1, &layer.w2,
+            ] {
+                total += lin.param_bytes();
+            }
+            total += layer.ln1_g.bytes()
+                + layer.ln1_b.bytes()
+                + layer.ln2_g.bytes()
+                + layer.ln2_b.bytes();
+        }
+        total
+            + self.pool.param_bytes()
+            + self.intent_w.bytes()
+            + self.intent_b.bytes()
+            + self.slot_w.bytes()
+            + self.slot_b.bytes()
     }
 
     /// Inference (same contract as the PJRT engine's eval): returns
@@ -822,11 +929,14 @@ impl NativeTrainModel {
 
         // ---- Classifier heads ----------------------------------------
         // d_pooled from both heads, computed before any head update.
-        let mut d_pooled = d_slot.matmul(&self.slot_w)?; // (B*S, H)
-        for e in 0..b {
-            for (c, &dil) in d_il.data[e * ni..(e + 1) * ni].iter().enumerate() {
-                for j in 0..h {
-                    d_pooled.data[e * s * h + j] += dil * self.intent_w.at2(c, j);
+        let mut d_pooled = d_slot.matmul(&self.slot_w.view())?; // (B*S, H)
+        {
+            let intent_w = self.intent_w.view();
+            for e in 0..b {
+                for (c, &dil) in d_il.data[e * ni..(e + 1) * ni].iter().enumerate() {
+                    for j in 0..h {
+                        d_pooled.data[e * s * h + j] += dil * intent_w.at2(c, j);
+                    }
                 }
             }
         }
@@ -847,10 +957,15 @@ impl NativeTrainModel {
         drop(sp_bp_heads);
         {
             let _sp = trace::span("train", "pu.heads");
-            self.optim.step("cls.intent_w", &mut self.intent_w.data, &d_intent_w.data, &hyper);
-            self.optim.step("cls.intent_b", &mut self.intent_b, &d_intent_b, &hyper);
-            self.optim.step("cls.slot_w", &mut self.slot_w.data, &d_slot_w.data, &hyper);
-            self.optim.step("cls.slot_b", &mut self.slot_b, &d_slot_b, &hyper);
+            let optim = &mut self.optim;
+            self.intent_w
+                .update_in_place(|v| optim.step("cls.intent_w", v, &d_intent_w.data, &hyper));
+            self.intent_b
+                .update_in_place(|v| optim.step("cls.intent_b", v, &d_intent_b, &hyper));
+            self.slot_w
+                .update_in_place(|v| optim.step("cls.slot_w", v, &d_slot_w.data, &hyper));
+            self.slot_b
+                .update_in_place(|v| optim.step("cls.slot_b", v, &d_slot_b, &hyper));
         }
 
         // ---- Pooler --------------------------------------------------
@@ -879,12 +994,13 @@ impl NativeTrainModel {
             let bp = || trace::span_fmt("train", || format!("bp.layer{li}"));
             let pu = || trace::span_fmt("train", || format!("pu.layer{li}"));
             let sp = bp();
-            let (d_res2, dg2, db2) = blocks::layer_norm_vjp(&f.ln2_c, &layer.ln2_g, &dx);
+            let (d_res2, dg2, db2) = blocks::layer_norm_vjp(&f.ln2_c, &layer.ln2_g.view(), &dx);
             drop(sp);
             {
                 let _sp = pu();
-                self.optim.step(&p("ln2.g"), &mut layer.ln2_g, &dg2, &hyper);
-                self.optim.step(&p("ln2.b"), &mut layer.ln2_b, &db2, &hyper);
+                let optim = &mut self.optim;
+                layer.ln2_g.update_in_place(|v| optim.step(&p("ln2.g"), v, &dg2, &hyper));
+                layer.ln2_b.update_in_place(|v| optim.step(&p("ln2.b"), v, &db2, &hyper));
             }
             let sp = bp();
             let (d_g1, w2_grads) = layer.w2.backward(&d_res2, &f.w2_c, &mut stats)?;
@@ -902,13 +1018,21 @@ impl NativeTrainModel {
                 layer.w1.apply_update(&w1_grads, &mut self.optim, &p("w1"), &hyper);
             }
             let sp = bp();
-            let d_x1 = ops::add(&d_res2, &d_x1_ffn);
-            let (d_res1, dg1, db1) = blocks::layer_norm_vjp(&f.ln1_c, &layer.ln1_g, &d_x1);
+            // Fused lane: the residual-join sum d_res2 + d_x1_ffn feeds
+            // the LN1 VJP inline instead of materializing first —
+            // bitwise identical to the unfused reference.
+            let (d_res1, dg1, db1) = if self.compute_path.fused_elementwise {
+                blocks::layer_norm_vjp2(&f.ln1_c, &layer.ln1_g.view(), &d_res2, &d_x1_ffn)
+            } else {
+                let d_x1 = ops::add(&d_res2, &d_x1_ffn);
+                blocks::layer_norm_vjp(&f.ln1_c, &layer.ln1_g.view(), &d_x1)
+            };
             drop(sp);
             {
                 let _sp = pu();
-                self.optim.step(&p("ln1.g"), &mut layer.ln1_g, &dg1, &hyper);
-                self.optim.step(&p("ln1.b"), &mut layer.ln1_b, &db1, &hyper);
+                let optim = &mut self.optim;
+                layer.ln1_g.update_in_place(|v| optim.step(&p("ln1.g"), v, &dg1, &hyper));
+                layer.ln1_b.update_in_place(|v| optim.step(&p("ln1.b"), v, &db1, &hyper));
             }
             let sp = bp();
             let (d_ctx, wo_grads) = layer.wo.backward(&d_res1, &f.wo_c, &mut stats)?;
@@ -1008,7 +1132,7 @@ impl NativeTrainModel {
             .embedding
             .cores
             .iter()
-            .map(|c| Tensor::zeros(&c.shape))
+            .map(|c| Tensor::zeros(c.shape()))
             .collect();
         let mut d_rows = vec![vec![0.0f32; h]; fwd.emb_unique.len()];
         for (i, &ui) in fwd.emb_index.iter().enumerate() {
@@ -1035,8 +1159,9 @@ impl NativeTrainModel {
         drop(sp_bp_embed);
         {
             let _sp = trace::span("train", "pu.embed");
+            let optim = &mut self.optim;
             for (k, (core, g)) in self.embedding.cores.iter_mut().zip(&emb_grads).enumerate() {
-                self.optim.step(&format!("embed.ttm.{k}"), &mut core.data, &g.data, &hyper);
+                core.update_in_place(|v| optim.step(&format!("embed.ttm.{k}"), v, &g.data, &hyper));
             }
         }
         // Positional-table gradient: sum over examples (ascending order).
@@ -1050,7 +1175,8 @@ impl NativeTrainModel {
         drop(sp_bp_pos);
         {
             let _sp = trace::span("train", "pu.embed");
-            self.optim.step("embed.pos", &mut self.pos.data, &d_pos, &hyper);
+            let optim = &mut self.optim;
+            self.pos.update_in_place(|v| optim.step("embed.pos", v, &d_pos, &hyper));
         }
 
         // PU -> next-FP stage boundary: moments now reflect this step.
@@ -1250,7 +1376,7 @@ pub(crate) mod tests {
         // cores instead of three, so two copies per layer drop out of
         // the per-layer tensor_params accounting.
         let d = cfg.tt_m.len();
-        let n_side: usize = model.layers[0].wq.tt.cores[d..].iter().map(|c| c.numel()).sum();
+        let n_side: usize = model.layers[0].wq.tt().cores[d..].iter().map(|c| c.numel()).sum();
         assert_eq!(
             model.optim.allocated_state_elems(),
             2 * (cfg.tensor_params() - cfg.n_layers * 2 * n_side) as u64
@@ -1327,6 +1453,38 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn fused_elementwise_is_bitwise_identical_across_precisions() {
+        // Toggling ONLY the fused-elementwise lanes (same QKV/attention
+        // schedule) must not move a single bit: the fused lanes execute
+        // the exact scalar sequence of the unfused chain — forward
+        // (bias + residual + LN, bias + GELU), backward (residual-join
+        // sum into the LN1 VJP) and therefore the whole Adam
+        // trajectory, at every storage precision.
+        let cfg = tiny_cfg();
+        let (tokens, intents, slots) = two_examples();
+        for prec in Precision::all() {
+            let run = |fused_elem: bool| {
+                let mut model = NativeTrainModel::random_init(&cfg, 21).unwrap();
+                model.set_optim(OptimConfig {
+                    kind: OptimKind::Adam,
+                    precision: prec,
+                    ..Default::default()
+                });
+                model.compute_path.fused_elementwise = fused_elem;
+                let logits = model.eval(&tokens).unwrap();
+                for _ in 0..3 {
+                    model.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+                }
+                (logits, model.to_params())
+            };
+            let (logits_f, params_f) = run(true);
+            let (logits_u, params_u) = run(false);
+            assert_eq!(logits_f, logits_u, "eval diverged at {}", prec.name());
+            assert_eq!(params_f, params_u, "trajectory diverged at {}", prec.name());
+        }
+    }
+
+    #[test]
     fn memoized_embedding_matches_inference_reference() {
         // Heavy token repetition (duplicates + pads): the training
         // forward's emb_unique/emb_index bookkeeping must match the
@@ -1364,11 +1522,11 @@ pub(crate) mod tests {
         // Same RNG stream: everything except wk/wv input cores matches
         // the tied init bitwise.
         assert_eq!(tied.pos, untied.pos);
-        assert_eq!(tied.layers[0].wq.tt.cores, untied.layers[0].wq.tt.cores);
+        assert_eq!(tied.layers[0].wq.tt().cores, untied.layers[0].wq.tt().cores);
         let d = cfg.tt_m.len();
         assert_eq!(
-            tied.layers[0].wk.tt.cores[..d],
-            untied.layers[0].wk.tt.cores[..d]
+            tied.layers[0].wk.tt().cores[..d],
+            untied.layers[0].wk.tt().cores[..d]
         );
         // Training still works (separate-forwards fallback) and keeps
         // the projections independent.

@@ -73,12 +73,16 @@ fn two_examples() -> (Vec<i32>, Vec<i32>, Vec<i32>) {
 fn fused_triplet(rng: &mut SplitMix64) -> (TTLinear, TTLinear, TTLinear) {
     let layer = |rng: &mut SplitMix64| TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
     let wq = layer(rng);
-    let d = wq.tt.d();
     let mut wk = layer(rng);
     let mut wv = layer(rng);
-    for c in d..2 * d {
-        wk.tt.cores[c] = wq.tt.cores[c].clone();
-        wv.tt.cores[c] = wq.tt.cores[c].clone();
+    let src = wq.tt().into_owned();
+    let d = src.d();
+    for w in [&mut wk, &mut wv] {
+        w.update_tt(|tt| {
+            for c in d..2 * d {
+                tt.cores[c] = src.cores[c].clone();
+            }
+        });
     }
     assert!(qkv_input_cores_shared(&wq, &wk, &wv));
     (wq, wk, wv)
@@ -125,9 +129,9 @@ fn fused_qkv_recompute_grads_bitwise_identical_at_f32() {
     }
     // The rebuild is charged exactly as the fused recompute-FLOP delta.
     let shape = LinearShape {
-        m_modes: wq.tt.m_modes.clone(),
-        n_modes: wq.tt.n_modes.clone(),
-        ranks: wq.tt.ranks.clone(),
+        m_modes: wq.tt().m_modes.clone(),
+        n_modes: wq.tt().n_modes.clone(),
+        ranks: wq.tt().ranks.clone(),
     };
     assert_eq!(b_r.muls, b_c.muls + shape.btt_qkv_recompute_muls(k_dim as u64));
     assert_eq!(b_r.stored_intermediate_elems, b_c.stored_intermediate_elems);
@@ -190,14 +194,14 @@ fn tt_linear_fd_gradients_through_recompute() {
         .unwrap();
     let (_, grads) = layer.backward(&probe, &cache, &mut stats).unwrap();
     let eps = 1e-2f32;
-    for k in 0..layer.tt.cores.len() {
-        for idx in 0..layer.tt.cores[k].numel() {
-            let orig = layer.tt.cores[k].data[idx];
-            layer.tt.cores[k].data[idx] = orig + eps;
+    for k in 0..layer.tt().cores.len() {
+        for idx in 0..layer.tt().cores[k].numel() {
+            let orig = layer.tt().cores[k].data[idx];
+            layer.update_tt(|tt| tt.cores[k].data[idx] = orig + eps);
             let up = loss(&layer);
-            layer.tt.cores[k].data[idx] = orig - eps;
+            layer.update_tt(|tt| tt.cores[k].data[idx] = orig - eps);
             let dn = loss(&layer);
-            layer.tt.cores[k].data[idx] = orig;
+            layer.update_tt(|tt| tt.cores[k].data[idx] = orig);
             let fd = (up - dn) / (2.0 * eps);
             let an = grads.cores[k].data[idx];
             let rel = (fd - an).abs() / (1.0 + an.abs());
@@ -210,7 +214,7 @@ fn tt_linear_fd_gradients_through_recompute() {
 fn fused_qkv_fd_gradients_through_recompute() {
     let mut rng = SplitMix64::new(74);
     let (mut wq, mut wk, mut wv) = fused_triplet(&mut rng);
-    let d = wq.tt.d();
+    let d = wq.tt().d();
     let x = Tensor::randn(&[4, 12], 1.0, &mut rng);
     let probes: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[4, 12], 1.0, &mut rng)).collect();
     let loss = |wq: &TTLinear, wk: &TTLinear, wv: &TTLinear| -> f32 {
@@ -248,13 +252,13 @@ fn fused_qkv_fd_gradients_through_recompute() {
     let eps = 1e-2f32;
     // Output-side (per-projection) cores: perturb wq only.
     for k in 0..d {
-        for idx in 0..wq.tt.cores[k].numel() {
-            let orig = wq.tt.cores[k].data[idx];
-            wq.tt.cores[k].data[idx] = orig + eps;
+        for idx in 0..wq.tt().cores[k].numel() {
+            let orig = wq.tt().cores[k].data[idx];
+            wq.update_tt(|tt| tt.cores[k].data[idx] = orig + eps);
             let up = loss(&wq, &wk, &wv);
-            wq.tt.cores[k].data[idx] = orig - eps;
+            wq.update_tt(|tt| tt.cores[k].data[idx] = orig - eps);
             let dn = loss(&wq, &wk, &wv);
-            wq.tt.cores[k].data[idx] = orig;
+            wq.update_tt(|tt| tt.cores[k].data[idx] = orig);
             let fd = (up - dn) / (2.0 * eps);
             let an = grads.m_cores[0][k].data[idx];
             let rel = (fd - an).abs() / (1.0 + an.abs());
@@ -265,18 +269,18 @@ fn fused_qkv_fd_gradients_through_recompute() {
     // together; the analytic gradient is the summed n_cores slot.
     for k in 0..d {
         let c = d + k;
-        for idx in 0..wq.tt.cores[c].numel() {
-            let orig = wq.tt.cores[c].data[idx];
+        for idx in 0..wq.tt().cores[c].numel() {
+            let orig = wq.tt().cores[c].data[idx];
             for w in [&mut wq, &mut wk, &mut wv] {
-                w.tt.cores[c].data[idx] = orig + eps;
+                w.update_tt(|tt| tt.cores[c].data[idx] = orig + eps);
             }
             let up = loss(&wq, &wk, &wv);
             for w in [&mut wq, &mut wk, &mut wv] {
-                w.tt.cores[c].data[idx] = orig - eps;
+                w.update_tt(|tt| tt.cores[c].data[idx] = orig - eps);
             }
             let dn = loss(&wq, &wk, &wv);
             for w in [&mut wq, &mut wk, &mut wv] {
-                w.tt.cores[c].data[idx] = orig;
+                w.update_tt(|tt| tt.cores[c].data[idx] = orig);
             }
             let fd = (up - dn) / (2.0 * eps);
             let an = grads.n_cores[k].data[idx];
@@ -418,7 +422,7 @@ fn stored_bytes_under_recompute_strictly_below_cacheall() {
         let k_dim = 1 + rng.below(12) as usize;
         let prec = Precision::all()[rng.below(3) as usize];
         let l = TTLinear::randn(&m_modes, &n_modes, rank, 0.5, rng);
-        let x = Tensor::randn(&[k_dim, l.tt.n()], 1.0, rng);
+        let x = Tensor::randn(&[k_dim, l.tt().n()], 1.0, rng);
         let mut s = ContractionStats::default();
         let (_, ca) = l.forward_ckpt(&x, prec, CheckpointMode::CacheAll, &mut s).unwrap();
         let (_, re) = l.forward_ckpt(&x, prec, CheckpointMode::Recompute, &mut s).unwrap();
@@ -431,9 +435,9 @@ fn stored_bytes_under_recompute_strictly_below_cacheall() {
         assert_eq!(re.stored_elems(), 0);
         // Both modes agree with the analytic checkpointed-byte forms.
         let shape = LinearShape {
-            m_modes: l.tt.m_modes.clone(),
-            n_modes: l.tt.n_modes.clone(),
-            ranks: l.tt.ranks.clone(),
+            m_modes: l.tt().m_modes.clone(),
+            n_modes: l.tt().n_modes.clone(),
+            ranks: l.tt().ranks.clone(),
         };
         assert_eq!(ca.stored_elems(), shape.btt_training_cache_elems(k_dim as u64));
         assert_eq!(

@@ -18,10 +18,14 @@ fn triplet(rng: &mut SplitMix64) -> (TTLinear, TTLinear, TTLinear) {
     let wq = TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
     let mut wk = TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
     let mut wv = TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, rng);
-    let d = wq.tt.d();
-    for c in d..2 * d {
-        wk.tt.cores[c] = wq.tt.cores[c].clone();
-        wv.tt.cores[c] = wq.tt.cores[c].clone();
+    let src = wq.tt().into_owned();
+    let d = src.d();
+    for w in [&mut wk, &mut wv] {
+        w.update_tt(|tt| {
+            for c in d..2 * d {
+                tt.cores[c] = src.cores[c].clone();
+            }
+        });
     }
     assert!(qkv_input_cores_shared(&wq, &wk, &wv));
     (wq, wk, wv)
@@ -48,9 +52,9 @@ fn fused_qkv_forward_matches_three_separate_forwards() {
     // matching the new cost-model expression.
     assert!(fused.muls < sep.muls);
     let shape = LinearShape {
-        m_modes: wq.tt.m_modes.clone(),
-        n_modes: wq.tt.n_modes.clone(),
-        ranks: wq.tt.ranks.clone(),
+        m_modes: wq.tt().m_modes.clone(),
+        n_modes: wq.tt().n_modes.clone(),
+        ranks: wq.tt().ranks.clone(),
     };
     assert_eq!(fused.muls, shape.btt_fwd_qkv_muls(k_dim as u64));
     assert_eq!(sep.muls, 3 * shape.btt_muls(k_dim as u64));
@@ -65,7 +69,7 @@ fn fused_qkv_gradients_match_finite_differences() {
     // every bias entry must match the fused backward.
     let mut rng = SplitMix64::new(102);
     let (wq, wk, wv) = triplet(&mut rng);
-    let d = wq.tt.d();
+    let d = wq.tt().d();
     let mut lins = [wq, wk, wv];
     let k_dim = 4usize;
     let x = Tensor::randn(&[k_dim, 12], 1.0, &mut rng);
@@ -92,13 +96,13 @@ fn fused_qkv_gradients_match_finite_differences() {
     // Per-projection output-side cores.
     for p in 0..3 {
         for k in 0..d {
-            for idx in 0..lins[p].tt.cores[k].numel() {
-                let orig = lins[p].tt.cores[k].data[idx];
-                lins[p].tt.cores[k].data[idx] = orig + eps;
+            for idx in 0..lins[p].tt().cores[k].numel() {
+                let orig = lins[p].tt().cores[k].data[idx];
+                lins[p].update_tt(|tt| tt.cores[k].data[idx] = orig + eps);
                 let up = loss(&lins, &probes);
-                lins[p].tt.cores[k].data[idx] = orig - eps;
+                lins[p].update_tt(|tt| tt.cores[k].data[idx] = orig - eps);
                 let dn = loss(&lins, &probes);
-                lins[p].tt.cores[k].data[idx] = orig;
+                lins[p].update_tt(|tt| tt.cores[k].data[idx] = orig);
                 let fd = (up - dn) / (2.0 * eps);
                 let an = grads.m_cores[p][k].data[idx];
                 assert!(
@@ -112,11 +116,11 @@ fn fused_qkv_gradients_match_finite_differences() {
     // tied parameterization's derivative is the summed gradient).
     for k in 0..d {
         let c = d + k;
-        for idx in 0..lins[0].tt.cores[c].numel() {
-            let orig = lins[0].tt.cores[c].data[idx];
-            let mut set = |lins: &mut [TTLinear; 3], v: f32| {
+        for idx in 0..lins[0].tt().cores[c].numel() {
+            let orig = lins[0].tt().cores[c].data[idx];
+            let set = |lins: &mut [TTLinear; 3], v: f32| {
                 for l in lins.iter_mut() {
-                    l.tt.cores[c].data[idx] = v;
+                    l.update_tt(|tt| tt.cores[c].data[idx] = v);
                 }
             };
             set(&mut lins, orig + eps);

@@ -248,27 +248,27 @@ fn tt_layer_gradients_match_finite_differences() {
     assert_eq!(y.shape, vec![4, 6]);
     let (_, grads) = layer.backward(&probe, &cache, &mut stats).unwrap();
     let eps = 1e-2f32;
-    for k in 0..layer.tt.cores.len() {
-        for idx in 0..layer.tt.cores[k].numel() {
-            let orig = layer.tt.cores[k].data[idx];
-            layer.tt.cores[k].data[idx] = orig + eps;
+    for k in 0..layer.tt().cores.len() {
+        for idx in 0..layer.tt().cores[k].numel() {
+            let orig = layer.tt().cores[k].data[idx];
+            layer.update_tt(|tt| tt.cores[k].data[idx] = orig + eps);
             let up = loss(&layer);
-            layer.tt.cores[k].data[idx] = orig - eps;
+            layer.update_tt(|tt| tt.cores[k].data[idx] = orig - eps);
             let dn = loss(&layer);
-            layer.tt.cores[k].data[idx] = orig;
+            layer.update_tt(|tt| tt.cores[k].data[idx] = orig);
             let fd = (up - dn) / (2.0 * eps);
             let an = grads.cores[k].data[idx];
             let rel = (fd - an).abs() / (1.0 + an.abs());
             assert!(rel < 1e-3, "core {k}[{idx}]: fd {fd} vs analytic {an} (rel {rel})");
         }
     }
-    for idx in 0..layer.bias.len() {
-        let orig = layer.bias[idx];
-        layer.bias[idx] = orig + eps;
+    for idx in 0..layer.bias().len() {
+        let orig = layer.bias()[idx];
+        layer.update_bias(|b| b[idx] = orig + eps);
         let up = loss(&layer);
-        layer.bias[idx] = orig - eps;
+        layer.update_bias(|b| b[idx] = orig - eps);
         let dn = loss(&layer);
-        layer.bias[idx] = orig;
+        layer.update_bias(|b| b[idx] = orig);
         let fd = (up - dn) / (2.0 * eps);
         let an = grads.bias[idx];
         assert!((fd - an).abs() / (1.0 + an.abs()) < 1e-3, "bias[{idx}]: {fd} vs {an}");

@@ -1,0 +1,193 @@
+//! Packed parameter storage — the tentpole invariants:
+//!
+//! * **Bitwise parity with rounded-f32 storage.**  A layer whose
+//!   parameters live physically `u16`-packed (`set_precision`) computes
+//!   the exact same bits — forward, backward, and across a 24-step Adam
+//!   trajectory — as a layer holding the identically *rounded* values
+//!   in plain f32 storage.  Packing only changes the resting
+//!   representation; widen-on-load is exact for both 16-bit formats,
+//!   and the PU stage rounds on store, so the packed store is lossless
+//!   for everything that ever rests in it.
+//! * **Measured byte halving.**  `param_bytes` sums the physical
+//!   representation (not an analytic count), so halving the storage
+//!   precision halves the at-rest parameter bytes *exactly* — for a
+//!   single TT layer, the whole training model, and the merged-factor
+//!   inference engine.
+
+use tt_trainer::config::ModelConfig;
+use tt_trainer::optim::{ModelOptim, OptimConfig, OptimKind};
+use tt_trainer::tensor::{ContractionStats, Precision, Tensor};
+use tt_trainer::train::{NativeTrainer, TTLinear};
+use tt_trainer::util::rng::SplitMix64;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        n_layers: 1,
+        d_hid: 48,
+        n_heads: 4,
+        seq_len: 8,
+        batch: 1,
+        vocab: 27,
+        n_intents: 5,
+        n_slots: 7,
+        tt_m: vec![4, 4, 3],
+        tt_n: vec![3, 4, 4],
+        tt_rank: 3,
+        ttm_vocab_modes: vec![3, 3, 3],
+        ttm_hid_modes: vec![4, 4, 3],
+        ttm_rank: 4,
+        pad_id: 0,
+        cls_id: 1,
+        unk_id: 2,
+    }
+}
+
+/// A deterministic tiny layer (m = n = 12); two calls with the same
+/// seed produce bitwise-identical layers.
+fn tiny_layer(seed: u64) -> TTLinear {
+    let mut rng = SplitMix64::new(seed);
+    TTLinear::randn(&[4, 3], &[3, 4], 3, 0.5, &mut rng)
+}
+
+/// Round the layer's values to `prec` while keeping plain f32 storage —
+/// the pre-packing representation the packed store must reproduce
+/// bitwise.
+fn rounded_f32_layer(seed: u64, prec: Precision) -> TTLinear {
+    let mut layer = tiny_layer(seed);
+    layer.update_tt(|tt| {
+        for core in &mut tt.cores {
+            prec.round_slice_in_place(&mut core.data);
+        }
+    });
+    layer.update_bias(|b| prec.round_slice_in_place(b));
+    layer
+}
+
+#[test]
+fn packed_forward_is_bitwise_identical_to_rounded_f32_storage() {
+    for prec in [Precision::Bf16, Precision::F16] {
+        let reference = rounded_f32_layer(91, prec);
+        let mut packed = tiny_layer(91);
+        packed.set_precision(prec);
+        // Same values at rest...
+        assert_eq!(packed.tt().cores, reference.tt().cores, "{prec:?}: packing moved bits");
+        assert_eq!(&*packed.bias(), &*reference.bias());
+        // ...and the same forward bits through the precision-aware path.
+        let mut rng = SplitMix64::new(92);
+        let x = prec.round_tensor(&Tensor::randn(&[5, 12], 1.0, &mut rng));
+        let mut s1 = ContractionStats::default();
+        let mut s2 = ContractionStats::default();
+        let (y_packed, _) = packed.forward_prec(&x, prec, &mut s1).unwrap();
+        let (y_ref, _) = reference.forward_prec(&x, prec, &mut s2).unwrap();
+        assert_eq!(y_packed.data, y_ref.data, "{prec:?}: forward diverged");
+    }
+}
+
+#[test]
+fn packed_backward_is_bitwise_identical_to_rounded_f32_storage() {
+    for prec in [Precision::Bf16, Precision::F16] {
+        let reference = rounded_f32_layer(93, prec);
+        let mut packed = tiny_layer(93);
+        packed.set_precision(prec);
+        let mut rng = SplitMix64::new(94);
+        let x = prec.round_tensor(&Tensor::randn(&[5, 12], 1.0, &mut rng));
+        let probe = Tensor::randn(&[5, 12], 1.0, &mut rng);
+        let run = |l: &TTLinear| {
+            let mut s = ContractionStats::default();
+            let (_, cache) = l.forward_prec(&x, prec, &mut s).unwrap();
+            l.backward(&probe, &cache, &mut s).unwrap()
+        };
+        let (dx_packed, g_packed) = run(&packed);
+        let (dx_ref, g_ref) = run(&reference);
+        assert_eq!(dx_packed.data, dx_ref.data, "{prec:?}: dX diverged");
+        for (k, (a, b)) in g_packed.cores.iter().zip(&g_ref.cores).enumerate() {
+            assert_eq!(a.data, b.data, "{prec:?}: core grad {k} diverged");
+        }
+        assert_eq!(g_packed.bias, g_ref.bias, "{prec:?}: bias grad diverged");
+    }
+}
+
+#[test]
+fn packed_adam_trajectory_is_bitwise_identical_to_rounded_f32_storage() {
+    // 24 Adam steps on the packed layer vs the rounded-f32-stored twin,
+    // both driven by the PU stage (which rounds params on store under
+    // half precision — exactly what makes the packed store lossless).
+    for prec in [Precision::Bf16, Precision::F16] {
+        let mut reference = rounded_f32_layer(95, prec);
+        let mut packed = tiny_layer(95);
+        packed.set_precision(prec);
+        let cfg = OptimConfig { kind: OptimKind::Adam, precision: prec, ..Default::default() };
+        let mut opt_packed = ModelOptim::new(cfg.clone());
+        let mut opt_ref = ModelOptim::new(cfg);
+        let hyper = opt_ref.hyper(1e-2);
+        let mut rng = SplitMix64::new(96);
+        for step in 0..24 {
+            let x = prec.round_tensor(&Tensor::randn(&[5, 12], 1.0, &mut rng));
+            let probe = Tensor::randn(&[5, 12], 1.0, &mut rng);
+            let advance = |l: &mut TTLinear, opt: &mut ModelOptim| {
+                let mut s = ContractionStats::default();
+                let (_, cache) = l.forward_prec(&x, prec, &mut s).unwrap();
+                let (_, grads) = l.backward(&probe, &cache, &mut s).unwrap();
+                for (k, g) in grads.cores.iter().enumerate() {
+                    l.update_tt(|tt| {
+                        opt.step(&format!("core.{k}"), &mut tt.cores[k].data, &g.data, &hyper)
+                    });
+                }
+                l.update_bias(|b| opt.step("bias", b, &grads.bias, &hyper));
+            };
+            advance(&mut packed, &mut opt_packed);
+            advance(&mut reference, &mut opt_ref);
+            assert_eq!(
+                packed.tt().cores,
+                reference.tt().cores,
+                "{prec:?}: cores diverged at step {step}"
+            );
+            assert_eq!(
+                &*packed.bias(),
+                &*reference.bias(),
+                "{prec:?}: bias diverged at step {step}"
+            );
+        }
+    }
+}
+
+#[test]
+fn halving_the_precision_halves_layer_param_bytes_exactly() {
+    let mut layer = tiny_layer(97);
+    let f32_bytes = layer.param_bytes();
+    assert_eq!(f32_bytes, 4 * layer.param_count() as u64);
+    for prec in [Precision::Bf16, Precision::F16] {
+        layer.set_precision(prec);
+        assert_eq!(2 * layer.param_bytes(), f32_bytes, "{prec:?}: not exactly half");
+    }
+    // Widening back restores the full f32 footprint.
+    layer.set_precision(Precision::F32);
+    assert_eq!(layer.param_bytes(), f32_bytes);
+}
+
+#[test]
+fn halving_the_precision_halves_model_and_engine_param_bytes_exactly() {
+    // The whole-model and merged-factor-engine footprints are sums of
+    // the physical stores, so the halving is exact end to end — the
+    // byte counts depend only on shapes and widths, never on values.
+    let cfg = tiny_cfg();
+    let at = |prec: Precision| {
+        let t = NativeTrainer::random_init(&cfg, 98)
+            .unwrap()
+            .with_optim(OptimConfig {
+                kind: OptimKind::Adam,
+                precision: prec,
+                ..Default::default()
+            });
+        let model_bytes = t.model.param_bytes();
+        let engine_bytes = t.model.engine().unwrap().param_bytes();
+        (model_bytes, engine_bytes)
+    };
+    let (model_f32, engine_f32) = at(Precision::F32);
+    assert!(model_f32 > 0 && engine_f32 > 0);
+    for prec in [Precision::Bf16, Precision::F16] {
+        let (model_half, engine_half) = at(prec);
+        assert_eq!(2 * model_half, model_f32, "{prec:?}: model bytes not exactly half");
+        assert_eq!(2 * engine_half, engine_f32, "{prec:?}: engine bytes not exactly half");
+    }
+}

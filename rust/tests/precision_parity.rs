@@ -143,10 +143,15 @@ fn gradients_fd_check_through_the_rounding_round_trip() {
     for prec in [Precision::Bf16, Precision::F16] {
         let mut rng = SplitMix64::new(31);
         let mut layer = TTLinear::randn(&[3, 2], &[2, 3], 2, 0.5, &mut rng);
-        for core in &mut layer.tt.cores {
-            prec.round_slice_in_place(&mut core.data);
-        }
-        prec.round_slice_in_place(&mut layer.bias);
+        // Round the values but keep f32 storage: the FD loop below
+        // perturbs by a non-representable eps, which a packed store
+        // would silently re-quantize.
+        layer.update_tt(|tt| {
+            for core in &mut tt.cores {
+                prec.round_slice_in_place(&mut core.data);
+            }
+        });
+        layer.update_bias(|b| prec.round_slice_in_place(b));
         let x = prec.round_tensor(&Tensor::randn(&[4, 6], 1.0, &mut rng));
         let probe = Tensor::randn(&[4, 6], 1.0, &mut rng); // loss = <probe, y>
         let loss = |l: &TTLinear| -> f32 {
@@ -158,14 +163,14 @@ fn gradients_fd_check_through_the_rounding_round_trip() {
         let (_, cache) = layer.forward_prec(&x, prec, &mut stats).unwrap();
         let (_, grads) = layer.backward(&probe, &cache, &mut stats).unwrap();
         let eps = 1e-2f32;
-        for k in 0..layer.tt.cores.len() {
-            for idx in 0..layer.tt.cores[k].numel() {
-                let orig = layer.tt.cores[k].data[idx];
-                layer.tt.cores[k].data[idx] = orig + eps;
+        for k in 0..layer.tt().cores.len() {
+            for idx in 0..layer.tt().cores[k].numel() {
+                let orig = layer.tt().cores[k].data[idx];
+                layer.update_tt(|tt| tt.cores[k].data[idx] = orig + eps);
                 let up = loss(&layer);
-                layer.tt.cores[k].data[idx] = orig - eps;
+                layer.update_tt(|tt| tt.cores[k].data[idx] = orig - eps);
                 let dn = loss(&layer);
-                layer.tt.cores[k].data[idx] = orig;
+                layer.update_tt(|tt| tt.cores[k].data[idx] = orig);
                 let fd = (up - dn) / (2.0 * eps);
                 let an = grads.cores[k].data[idx];
                 assert!(
