@@ -20,6 +20,9 @@
 //!   matrix  — precision x compute-path x checkpoint-policy grid
 //!             (tokens/sec, stage split, measured at-rest bytes;
 //!             writes BENCH_matrix.json, CI-gated)
+//!   replicas — data-parallel replica sweep R in {1,2,4} at one global
+//!             batch (tokens/sec + exchange-volume + per-device budget;
+//!             writes BENCH_replicas.json, CI-gated on >= 4 cores)
 //!   serve   — continuous-batching serving scheduler load test
 //!             (no-batching baseline vs continuous, concurrency 1/8;
 //!             writes BENCH_serve.json)
@@ -91,6 +94,9 @@ fn main() {
     }
     if run("matrix") {
         matrix();
+    }
+    if run("replicas") {
+        replicas();
     }
     if run("serve") {
         serve();
@@ -369,6 +375,41 @@ fn matrix() {
     match std::fs::write("BENCH_matrix.json", report.to_json()) {
         Ok(()) => println!("wrote BENCH_matrix.json"),
         Err(e) => println!("could not write BENCH_matrix.json: {e}"),
+    }
+}
+
+/// The data-parallel replica sweep (`tt_trainer::benchgrid`, shared
+/// with the `bench-replicas` CLI command): tokens/sec of the
+/// deterministic fixed-order all-reduce group at R ∈ {1, 2, 4} on one
+/// global batch at the paper config.  Writes `BENCH_replicas.json`;
+/// CI gates on `r4_vs_r1` ≥ 1.5 when the runner has ≥ 4 cores (the
+/// JSON records `host_cores` so the gate can skip loudly otherwise).
+/// Also prints the exchange-volume sweep and the per-device budget
+/// split so the scaling row carries its memory story.
+fn replicas() {
+    hdr("replicas", "data-parallel replica sweep (no artifacts)");
+    let cfg = ModelConfig::paper(2);
+    // Fail loudly (see native_train): a silent skip would surface only
+    // as a missing BENCH_replicas.json artifact in CI.
+    let report = tt_trainer::benchgrid::run_paper_replicas(1, 4).expect("replica sweep");
+    print!("{}", report.render_table());
+    print!("{}", sweeps::replica_exchange_table(&cfg, Precision::F32));
+    let budget = resources::replica_budget(
+        &cfg,
+        OptimKind::Adam,
+        Precision::F32,
+        &CheckpointPolicy::CacheAll,
+        4,
+    );
+    println!(
+        "N=4 budget: device0 state {} B | follower state {} B | exchange buffer {} B/dev",
+        budget.device0.optim_state_bytes,
+        budget.device_n.optim_state_bytes,
+        budget.exchange_buffer_bytes
+    );
+    match std::fs::write("BENCH_replicas.json", report.to_json()) {
+        Ok(()) => println!("wrote BENCH_replicas.json"),
+        Err(e) => println!("could not write BENCH_replicas.json: {e}"),
     }
 }
 

@@ -17,6 +17,13 @@
 //! The summary ratios compare each cell against the
 //! f32 / looped / cache baseline; `fused_bf16_vs_unfused_f32` is the
 //! headline number the CI regression gate asserts to stay above 1.0.
+//!
+//! [`run_replicas`] is the data-parallel companion sweep (`cargo bench
+//! --offline -- replicas` / CLI `bench-replicas`): tokens/sec of
+//! [`crate::replica::ReplicaGroup`] at R ∈ {1, 2, 4} on one global
+//! batch, written to `BENCH_replicas.json` with the `r4_vs_r1` headline
+//! the CI scaling gate reads (skipping on hosts with fewer than 4
+//! cores).
 
 use crate::config::ModelConfig;
 use crate::coordinator::Trainer;
@@ -305,6 +312,160 @@ pub fn run_paper_matrix(warmup: usize, iters: usize) -> Result<MatrixReport> {
     run_matrix(&ModelConfig::paper(2), 8, warmup, iters)
 }
 
+/// One measured replica-count cell of the data-parallel sweep.
+#[derive(Debug, Clone)]
+pub struct ReplicaCell {
+    pub replicas: usize,
+    pub batch: usize,
+    pub p50_step_secs: f64,
+    pub steps_per_sec: f64,
+    pub tokens_per_sec: f64,
+    pub mean_loss: f32,
+}
+
+/// The replica sweep plus the host shape it was measured on.  The CI
+/// regression gate reads `r4_vs_r1` from `BENCH_replicas.json` and
+/// skips (loudly) when `host_cores < 4` — scaling numbers from an
+/// oversubscribed runner would gate on noise.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub warmup: usize,
+    pub iters: usize,
+    /// `std::thread::available_parallelism()` on the measuring host.
+    pub host_cores: usize,
+    pub rows: Vec<ReplicaCell>,
+}
+
+impl ReplicaReport {
+    pub fn find(&self, replicas: usize) -> Option<&ReplicaCell> {
+        self.rows.iter().find(|c| c.replicas == replicas)
+    }
+
+    /// tokens/sec ratio of a replica count over the R=1 baseline
+    /// (0.0 when either cell is missing).
+    pub fn speedup_vs_r1(&self, replicas: usize) -> f64 {
+        match (self.find(replicas), self.find(1)) {
+            (Some(c), Some(b)) if b.tokens_per_sec > 0.0 => c.tokens_per_sec / b.tokens_per_sec,
+            _ => 0.0,
+        }
+    }
+
+    /// The CI-gated headline: R=4 tokens/sec over R=1 at the same
+    /// global batch.
+    pub fn r4_vs_r1(&self) -> f64 {
+        self.speedup_vs_r1(4)
+    }
+
+    /// The `BENCH_replicas.json` document (hand-rolled, no serde).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|c| {
+                format!(
+                    "    {{\"replicas\": {}, \"batch\": {}, \"p50_step_secs\": {:.6}, \
+                     \"steps_per_sec\": {:.3}, \"tokens_per_sec\": {:.1}, \"mean_loss\": {:.5}}}",
+                    c.replicas,
+                    c.batch,
+                    c.p50_step_secs,
+                    c.steps_per_sec,
+                    c.tokens_per_sec,
+                    c.mean_loss
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"replicas\",\n  \"model\": \"tt_L2\",\n  \"batch\": {},\n  \
+             \"seq_len\": {},\n  \"host_cores\": {},\n  \"r2_vs_r1\": {:.3},\n  \
+             \"r4_vs_r1\": {:.3},\n  \"rows\": [\n{}\n  ]\n}}\n",
+            self.batch,
+            self.seq_len,
+            self.host_cores,
+            self.speedup_vs_r1(2),
+            self.r4_vs_r1(),
+            rows.join(",\n")
+        )
+    }
+
+    /// The human table the CLI prints: one row per replica count,
+    /// speedups against the R=1 baseline.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>8} {:>7} {:>12} {:>10} {:>8} {:>10}\n",
+            "replicas", "batch", "p50 step ms", "tokens/s", "speedup", "mean loss"
+        ));
+        for c in &self.rows {
+            out.push_str(&format!(
+                "{:>8} {:>7} {:>12.3} {:>10.0} {:>7.2}x {:>10.4}\n",
+                c.replicas,
+                c.batch,
+                c.p50_step_secs * 1e3,
+                c.tokens_per_sec,
+                self.speedup_vs_r1(c.replicas),
+                c.mean_loss
+            ));
+        }
+        out.push_str(&format!(
+            "R=4 vs R=1: {:.2}x tokens/s on {} host core(s)\n",
+            self.r4_vs_r1(),
+            self.host_cores
+        ));
+        out
+    }
+}
+
+/// Measure the data-parallel sweep at R ∈ {1, 2, 4} on one global
+/// batch.  Every cell trains the same seed-42 model on the same
+/// synthetic dataset under Adam at the fused/cache/f32 corner; only the
+/// replica count varies, so the tokens/sec column isolates the
+/// fork-join scaling of [`crate::replica::ReplicaGroup`].
+pub fn run_replicas(
+    cfg: &ModelConfig,
+    batch: usize,
+    warmup: usize,
+    iters: usize,
+) -> Result<ReplicaReport> {
+    let data = Dataset::synth(cfg, 42, 64);
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rows = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let optim = OptimConfig {
+            kind: OptimKind::Adam,
+            batch_size: batch,
+            precision: Precision::F32,
+            ..Default::default()
+        };
+        let lead = NativeTrainer::random_init(cfg, 42)?.with_optim(optim);
+        let group = crate::replica::ReplicaGroup::new(lead, replicas)?;
+        let mut trainer = Trainer::with_batch(group, OptimKind::Adam.default_lr(), batch);
+        let stats = bench(
+            || {
+                trainer.train_steps(&data, 1).unwrap();
+            },
+            warmup,
+            iters,
+        );
+        rows.push(ReplicaCell {
+            replicas,
+            batch,
+            p50_step_secs: stats.p50,
+            steps_per_sec: 1.0 / stats.p50,
+            tokens_per_sec: (batch * cfg.seq_len) as f64 / stats.p50,
+            mean_loss: trainer.metrics.recent_loss(iters),
+        });
+    }
+    Ok(ReplicaReport { batch, seq_len: cfg.seq_len, warmup, iters, host_cores, rows })
+}
+
+/// The paper-config replica sweep the bench section and the CI gate
+/// run: 2 encoder layers, global batch 8, R ∈ {1, 2, 4}.
+pub fn run_paper_replicas(warmup: usize, iters: usize) -> Result<ReplicaReport> {
+    run_replicas(&ModelConfig::paper(2), 8, warmup, iters)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,5 +534,51 @@ mod tests {
         let table = r.render_table();
         assert_eq!(table.lines().count(), 1 + r.cells.len() + 1);
         assert!(table.contains("fp 50% bp 40% pu 10%"));
+    }
+
+    fn replica_report() -> ReplicaReport {
+        let row = |replicas: usize, tps: f64| ReplicaCell {
+            replicas,
+            batch: 8,
+            p50_step_secs: 0.5,
+            steps_per_sec: 2.0,
+            tokens_per_sec: tps,
+            mean_loss: 1.5,
+        };
+        ReplicaReport {
+            batch: 8,
+            seq_len: 32,
+            warmup: 1,
+            iters: 2,
+            host_cores: 8,
+            rows: vec![row(1, 100.0), row(2, 170.0), row(4, 260.0)],
+        }
+    }
+
+    #[test]
+    fn replica_speedups_are_against_the_r1_baseline() {
+        let r = replica_report();
+        assert!((r.r4_vs_r1() - 2.6).abs() < 1e-12);
+        assert!((r.speedup_vs_r1(2) - 1.7).abs() < 1e-12);
+        // Missing cells degrade to 0.0, never panic.
+        assert_eq!(r.speedup_vs_r1(8), 0.0);
+    }
+
+    #[test]
+    fn replica_json_carries_the_gate_fields_and_every_row() {
+        let r = replica_report();
+        let json = r.to_json();
+        assert!(json.contains("\"bench\": \"replicas\""));
+        assert!(json.contains("\"r4_vs_r1\": 2.600"));
+        assert!(json.contains("\"host_cores\": 8"));
+        assert_eq!(json.matches("\"replicas\":").count(), 3);
+    }
+
+    #[test]
+    fn replica_table_renders_one_line_per_row_plus_header_and_summary() {
+        let r = replica_report();
+        let table = r.render_table();
+        assert_eq!(table.lines().count(), 1 + r.rows.len() + 1);
+        assert!(table.contains("R=4 vs R=1: 2.60x"));
     }
 }

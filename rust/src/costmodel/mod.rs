@@ -483,6 +483,43 @@ impl LinearShape {
     }
 }
 
+// -- Data-parallel gradient exchange (compressed-core all-reduce) -----------
+
+/// Bytes of one replica's complete compressed-core gradient set at a
+/// wire precision: every trainable scalar
+/// ([`crate::config::ModelConfig::tensor_params`] — TT/TTM cores,
+/// biases, LayerNorm vectors, heads, positional table) times the
+/// element width.  This is the per-replica unit `G` of the exchange —
+/// tiny by construction, which is the paper's compression argument
+/// applied to scale-out.  Upper bound for the fused-QKV schedule: the
+/// tied input-side cores travel **once** in the actual
+/// [`crate::train::GradMap`], so the realized exchange is slightly
+/// smaller than this untied count (the measured figure is published as
+/// the `allreduce_grad_bytes` gauge).
+pub fn core_grad_bytes(cfg: &crate::config::ModelConfig, prec: crate::tensor::Precision) -> u64 {
+    cfg.tensor_params() as u64 * prec.bytes()
+}
+
+/// Per-device traffic of a ring all-reduce over `n` devices:
+/// `2 (n−1)/n · grad_bytes` (reduce-scatter + all-gather, each moving
+/// `(n−1)/n` of the buffer).  Zero for a single device.
+pub fn ring_allreduce_bytes(grad_bytes: u64, n: usize) -> u64 {
+    if n <= 1 {
+        0
+    } else {
+        grad_bytes * 2 * (n as u64 - 1) / n as u64
+    }
+}
+
+/// Root traffic of the naive gather-then-broadcast reduction: the root
+/// receives `(n−1)` full gradient buffers (and broadcasts `(n−1)`
+/// parameter copies back).  The in-process [`crate::replica`] exchange
+/// has this shape — affordable precisely because `grad_bytes` is
+/// compressed-core sized.
+pub fn naive_allreduce_bytes(grad_bytes: u64, n: usize) -> u64 {
+    grad_bytes * (n as u64).saturating_sub(1)
+}
+
 /// One row of a Fig. 6-style comparison.
 #[derive(Debug, Clone)]
 pub struct CostRow {

@@ -113,6 +113,37 @@ pub fn optimizer_state_table_prec(cfg: &ModelConfig, precision: Precision) -> St
     out
 }
 
+/// Data-parallel gradient-exchange sweep: for N ∈ {1, 2, 4, 8}
+/// replicas, the per-replica compressed-core gradient payload
+/// ([`super::core_grad_bytes`]) and the per-device ring vs root naive
+/// all-reduce traffic.  The closing note pins the optimizer-state
+/// contract: moments live **once** on the lead regardless of N (see
+/// [`crate::optim::StateFootprint`]), so scale-out multiplies exchange
+/// traffic but never PU-stage state.
+pub fn replica_exchange_table(cfg: &ModelConfig, precision: Precision) -> String {
+    let g = super::core_grad_bytes(cfg, precision);
+    let kb = |b: u64| b as f64 / 1e3;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>8} {:>14} {:>14} {:>14}\n",
+        "replicas",
+        format!("grad {} KB", precision.name()),
+        "ring KB/dev",
+        "naive KB@root"
+    ));
+    for n in [1usize, 2, 4, 8] {
+        out.push_str(&format!(
+            "{:>8} {:>14.2} {:>14.2} {:>14.2}\n",
+            n,
+            kb(g),
+            kb(super::ring_allreduce_bytes(g, n)),
+            kb(super::naive_allreduce_bytes(g, n)),
+        ));
+    }
+    out.push_str("optimizer state: lives once on the lead at every N (not N copies)\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +201,28 @@ mod tests {
         // single MB while the dense equivalent would be ~73 MB.
         let adam = StateFootprint::for_model(&ModelConfig::paper(2), OptimKind::Adam);
         assert!(adam.state_mb() < 3.0, "compressed Adam state {} MB", adam.state_mb());
+    }
+
+    #[test]
+    fn replica_exchange_table_shape_and_math() {
+        let cfg = ModelConfig::paper(2);
+        let s = replica_exchange_table(&cfg, Precision::F32);
+        assert_eq!(s.lines().count(), 6, "header + 4 replica rows + state note");
+        assert!(s.contains("lives once"), "state-lives-once note missing");
+        let g = super::super::core_grad_bytes(&cfg, Precision::F32);
+        assert_eq!(g, cfg.tensor_params() as u64 * 4);
+        // Ring: 0 at N=1, 2(N-1)/N·G otherwise; naive: (N-1)·G.
+        assert_eq!(super::super::ring_allreduce_bytes(g, 1), 0);
+        assert_eq!(super::super::ring_allreduce_bytes(g, 2), g);
+        assert_eq!(super::super::ring_allreduce_bytes(g, 4), g * 2 * 3 / 4);
+        assert_eq!(super::super::naive_allreduce_bytes(g, 1), 0);
+        assert_eq!(super::super::naive_allreduce_bytes(g, 4), g * 3);
+        // Ring beats naive for every N > 2 and the payload itself is
+        // compressed-core tiny (well under a megabyte at fp32).
+        assert!(super::super::ring_allreduce_bytes(g, 4) < super::super::naive_allreduce_bytes(g, 4));
+        assert!(g < 4_000_000, "compressed-core grad set unexpectedly large: {g} bytes");
+        // Half-width wire precision halves the payload exactly.
+        assert_eq!(super::super::core_grad_bytes(&cfg, Precision::Bf16) * 2, g);
     }
 
     #[test]

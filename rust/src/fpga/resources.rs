@@ -228,6 +228,15 @@ pub fn eq21_cache_bytes_for_policy(
 /// transiently inside the per-layer working set, which this model
 /// already charges), shrinking the depth-scaling URAM demand by
 /// exactly the dropped cache bytes.
+///
+/// **Data parallelism does not multiply the optimizer-state charge.**
+/// One report describes one device; under N-replica training
+/// ([`crate::replica::ReplicaGroup`]) the PU stage — and hence the
+/// moment buffers this report charges — runs only on the lead device.
+/// Follower devices size as the same report with
+/// [`OptimKind::Sgd`] (zero state); [`replica_budget`] builds exactly
+/// that pair of views and charges the gradient exchange buffer
+/// explicitly instead.
 pub fn report_for_policy(
     cfg: &ModelConfig,
     optim: OptimKind,
@@ -330,6 +339,70 @@ pub fn report_for_policy(
         checkpoint: policy.clone(),
         eq21_cache_bytes,
         optim_state_bytes,
+    }
+}
+
+/// Per-device budget view of an N-replica data-parallel deployment.
+///
+/// Device 0 (the lead) runs FP + BP + the only PU stage, so it carries
+/// the optimizer state; devices 1..N run FP + BP only and are sized
+/// with zero optimizer state ([`OptimKind::Sgd`] report).  Every device
+/// additionally holds one **gradient exchange buffer** — a second copy
+/// of the compressed-core gradient set it ships into the fixed-order
+/// all-reduce ([`crate::costmodel::core_grad_bytes`]) — which this view
+/// charges explicitly rather than hiding inside the activation stash.
+#[derive(Debug, Clone)]
+pub struct ReplicaBudget {
+    pub replicas: usize,
+    /// Lead device: full report including the optimizer state.
+    pub device0: ResourceReport,
+    /// Follower devices (identical to each other): no optimizer state.
+    pub device_n: ResourceReport,
+    /// Per-device gradient exchange buffer, bytes (0 when `replicas == 1`
+    /// — a single device reduces nothing and reuses the grads in place).
+    pub exchange_buffer_bytes: u64,
+    /// URAM blocks the exchange buffer rounds up to on each device.
+    pub exchange_uram_blocks: usize,
+}
+
+impl ReplicaBudget {
+    /// Total URAM demand of a device including its exchange buffer.
+    pub fn uram_demand(&self, device: usize) -> usize {
+        let base = if device == 0 {
+            self.device0.uram_required
+        } else {
+            self.device_n.uram_required
+        };
+        base + self.exchange_uram_blocks
+    }
+}
+
+/// Build the per-device budget pair for an N-replica deployment at a
+/// storage precision and checkpointing policy.  The optimizer state is
+/// charged once — on `device0` only — mirroring the runtime contract
+/// ([`crate::optim::StateFootprint`], [`crate::replica::ReplicaGroup`]);
+/// followers get the zero-state ([`OptimKind::Sgd`]) sizing.
+pub fn replica_budget(
+    cfg: &ModelConfig,
+    optim: OptimKind,
+    precision: Precision,
+    policy: &CheckpointPolicy,
+    replicas: usize,
+) -> ReplicaBudget {
+    let device0 = report_for_policy(cfg, optim, precision, policy);
+    let device_n = report_for_policy(cfg, OptimKind::Sgd, precision, policy);
+    let exchange_buffer_bytes = if replicas > 1 {
+        crate::costmodel::core_grad_bytes(cfg, precision)
+    } else {
+        0
+    };
+    let exchange_uram_blocks = (8 * exchange_buffer_bytes as usize).div_ceil(U50::URAM_BITS);
+    ReplicaBudget {
+        replicas: replicas.max(1),
+        device0,
+        device_n,
+        exchange_buffer_bytes,
+        exchange_uram_blocks,
     }
 }
 
@@ -562,6 +635,40 @@ mod tests {
         let shallow = report_for_policy(&cfg, OptimKind::Adam, Precision::F32, &short);
         assert!(shallow.eq21_cache_bytes > mid.eq21_cache_bytes);
         assert!(shallow.eq21_cache_bytes < ca.eq21_cache_bytes);
+    }
+
+    #[test]
+    fn replica_budget_charges_state_once_and_exchange_explicitly() {
+        // Acceptance (no-double-charge): the N-replica budget carries the
+        // optimizer state only on device 0; followers size as the
+        // zero-state report, at every N.
+        let cfg = ModelConfig::paper(2);
+        let policy = CheckpointPolicy::CacheAll;
+        let solo = report_for_policy(&cfg, OptimKind::Adam, Precision::F32, &policy);
+        for n in [1usize, 2, 4] {
+            let b = replica_budget(&cfg, OptimKind::Adam, Precision::F32, &policy, n);
+            assert_eq!(b.replicas, n);
+            assert_eq!(b.device0.optim_state_bytes, solo.optim_state_bytes);
+            assert_eq!(b.device_n.optim_state_bytes, 0, "N={n}: follower charged state");
+            assert_eq!(b.device_n.optim_state_bram + b.device_n.optim_state_uram, 0);
+            if n == 1 {
+                assert_eq!(b.exchange_buffer_bytes, 0, "R=1 reduces nothing");
+                assert_eq!(b.exchange_uram_blocks, 0);
+            } else {
+                assert_eq!(
+                    b.exchange_buffer_bytes,
+                    crate::costmodel::core_grad_bytes(&cfg, Precision::F32)
+                );
+                assert!(b.exchange_uram_blocks >= 1);
+                // Exchange buffer is compressed-core sized: it fits a
+                // handful of URAM blocks, and both device views still
+                // fit the U50 including it.
+                assert!(b.exchange_uram_blocks < 16, "{} blocks", b.exchange_uram_blocks);
+                assert!(b.uram_demand(0) <= b.device0.uram.available);
+                assert!(b.uram_demand(1) <= b.device_n.uram.available);
+                assert!(b.uram_demand(1) <= b.uram_demand(0) + b.exchange_uram_blocks);
+            }
+        }
     }
 
     #[test]

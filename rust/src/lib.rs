@@ -260,6 +260,48 @@
 //! ([`costmodel::LinearShape::btt_serve_muls`], surfaced by the CLI
 //! `cost-model` command).
 //!
+//! ## Data parallelism
+//!
+//! The compression story makes gradient exchange nearly free — a full
+//! compressed-core gradient set is kilobytes-to-megabytes — so the
+//! crate scales *across* batch shards with [`replica::ReplicaGroup`]
+//! (`--replicas N` on the `train` command): N [`train::NativeTrainModel`]
+//! replicas on N threads, each running the pure
+//! [`train::NativeTrainModel::forward_backward`] over its shard, one
+//! optimizer step on the reduced gradients, then a parameter
+//! broadcast.
+//!
+//! * **Sharding rule** — replica `r` of `N` takes global examples
+//!   `r, r + N, r + 2N, …` (stride-`N`); a batch smaller than `N`
+//!   (e.g. an epoch's partial tail) is dropped by the coordinator's
+//!   existing tail rule via `supports_batch`.
+//! * **Reduction order** — shard-mean gradients are buffered whole
+//!   (they are tiny by construction) and reduced as
+//!   `g = Σ_r (b_r/B)·g_r` in ascending replica index with f32
+//!   arithmetic, per slot, element by element
+//!   ([`replica::allreduce_fixed_order`]); thread completion order
+//!   cannot affect the result.
+//! * **Determinism contract** — R=1 is **bitwise identical** to the
+//!   plain single-model trainer (the weight-1 scale is skipped);
+//!   same R ⇒ bitwise-identical trajectories across runs; different R
+//!   re-associates the batch mean and agrees within the usual
+//!   ~1e-5-class float tolerance (`rust/tests/replicas.rs`).
+//! * **Exchange-volume math** — with `G` gradient bytes per replica,
+//!   the in-process exchange buffers `(N−1)·G` in and `(N−1)·P`
+//!   parameter bytes back; a ring all-reduce over real links would
+//!   move `2(N−1)/N·G` per device
+//!   ([`costmodel::ring_allreduce_bytes`], tabulated by
+//!   `costmodel::sweeps::replica_exchange_table`).  Optimizer state is
+//!   never exchanged and lives **once**, on the lead replica
+//!   ([`fpga::resources::ReplicaBudget`] charges it to device 0 only).
+//!
+//! `cargo bench --offline -- replicas` (and the `bench-replicas` CLI
+//! command) records tokens/sec at R ∈ {1, 2, 4} into
+//! `BENCH_replicas.json`, with the R=4 / R=1 speedup gated in CI on
+//! multi-core runners.  The matmul worker pool width is independently
+//! controllable with `--threads` (see [`tensor`] module docs on
+//! replica × pool oversubscription).
+//!
 //! ## Observability
 //!
 //! The paper's headline claims are *per-stage* numbers — FP/BP/PU
@@ -328,6 +370,7 @@ pub mod engine;
 pub mod fpga;
 pub mod inference;
 pub mod optim;
+pub mod replica;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

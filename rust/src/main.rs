@@ -37,6 +37,14 @@ use tt_trainer::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // Global --threads N: pin the shared matmul worker pool's width
+    // before any command touches it (0 / absent = one lane per
+    // available core).  Must run before the first large contraction —
+    // the pool is process-global and built once.
+    if let Some(t) = args.get("threads") {
+        let threads: usize = t.parse().map_err(|_| anyhow!("bad --threads"))?;
+        tt_trainer::tensor::configure_worker_threads(threads);
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "info" => cmd_info(&args),
@@ -45,6 +53,7 @@ fn main() -> Result<()> {
         "cost-model" => cmd_cost_model(),
         "serve-bench" => cmd_serve_bench(&args),
         "bench-matrix" => cmd_bench_matrix(&args),
+        "bench-replicas" => cmd_bench_replicas(&args),
         "trace-report" => cmd_trace_report(&args),
         "bram" => cmd_bram(),
         "schedule" => cmd_schedule(),
@@ -60,6 +69,14 @@ const HELP: &str = "\
 tt-trainer: tensor-compressed transformer training (rust native + JAX/Pallas AOT)
 
 USAGE: tt-trainer <command> [options]
+
+GLOBAL:
+  --threads N   width of the shared matmul worker pool (default: one
+                lane per available core; set before anything else runs
+                — the pool is process-global and built once).  With
+                --replicas R the peak thread count is R + pool width;
+                --threads 1 keeps contractions serial so replicas are
+                the only parallelism axis.
 
 COMMANDS:
   info          manifest summary (Table II/III view)
@@ -80,6 +97,12 @@ COMMANDS:
                            --trace FILE (Chrome trace-event JSON of the
                              fp/bp/pu + contraction spans; load in
                              ui.perfetto.dev or chrome://tracing)
+                           --replicas R (deterministic data-parallel
+                             training: R model shards, strided batch
+                             sharding, fixed-order compressed-core
+                             gradient all-reduce; R=1 is bitwise the
+                             plain trainer, same-R reruns are bitwise
+                             reproducible; needs --batch >= R)
                   pjrt:    --variant tt_L2 --artifacts DIR
   eval          evaluate on the test split
                   --backend native|pjrt [--limit N]
@@ -103,6 +126,12 @@ COMMANDS:
                 optimizer-state bytes
                   --layers 2 --batch 8 --warmup 1 --iters 4
                   --out FILE (also write the BENCH_matrix.json document)
+  bench-replicas  data-parallel replica sweep (R in {1,2,4} at one
+                global batch): tokens/sec with speedups vs R=1, plus
+                the exchange-volume table and the per-device budget
+                split (optimizer state lives once, on the lead)
+                  --layers 2 --batch 8 --warmup 1 --iters 4
+                  --out FILE (also write the BENCH_replicas.json document)
   trace-report  FP/BP/PU wall-clock breakdown from a short traced
                 native run, next to the Eq. 20 cost-model prediction
                   --steps 4 --layers 2 --batch N --seed 42
@@ -239,7 +268,23 @@ fn cmd_train(args: &Args) -> Result<()> {
                 precision.name()
             );
             let backend = native_backend(args, seed, &["init-ckpt"], optim)?;
-            run_training(Trainer::with_batch(backend, lr, batch), args, seed)
+            let replicas = args.get_usize("replicas", 1).max(1);
+            if replicas > 1 {
+                if batch < replicas {
+                    return Err(anyhow!(
+                        "--replicas {replicas} needs --batch >= {replicas} \
+                         (every replica takes at least one example per step)"
+                    ));
+                }
+                println!(
+                    "data-parallel: {replicas} replicas, strided batch sharding, \
+                     fixed-order compressed-core all-reduce"
+                );
+                let group = tt_trainer::replica::ReplicaGroup::new(backend, replicas)?;
+                run_training(Trainer::with_batch(group, lr, batch), args, seed)
+            } else {
+                run_training(Trainer::with_batch(backend, lr, batch), args, seed)
+            }
         }
         "pjrt" => cmd_train_pjrt(args, seed),
         other => Err(anyhow!("unknown --backend '{other}' (native|pjrt)")),
@@ -468,6 +513,46 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, report.to_json())?;
         println!("grid written to {out}");
+    }
+    Ok(())
+}
+
+/// Run the data-parallel replica sweep (`tt_trainer::benchgrid`, the
+/// same implementation `cargo bench --offline -- replicas` records into
+/// `BENCH_replicas.json`): tokens/sec at R in {1, 2, 4} on one global
+/// batch, plus the exchange-volume sweep and the per-device budget
+/// split showing the optimizer state charged once, on the lead.
+fn cmd_bench_replicas(args: &Args) -> Result<()> {
+    let layers = args.get_usize("layers", 2);
+    let batch = args.get_usize("batch", 8).max(1);
+    let warmup = args.get_usize("warmup", 1);
+    let iters = args.get_usize("iters", 4).max(1);
+    let cfg = ModelConfig::paper(layers);
+    println!(
+        "bench-replicas: {layers}-layer paper config | global batch {batch} | {warmup} warmup + \
+         {iters} timed steps per replica count"
+    );
+    let report = tt_trainer::benchgrid::run_replicas(&cfg, batch, warmup, iters)?;
+    print!("{}", report.render_table());
+    print!("{}", sweeps::replica_exchange_table(&cfg, Precision::F32));
+    let budget = resources::replica_budget(
+        &cfg,
+        OptimKind::Adam,
+        Precision::F32,
+        &CheckpointPolicy::CacheAll,
+        4,
+    );
+    println!(
+        "N=4 budget: device0 state {} B | follower state {} B | exchange buffer {} B/dev \
+         ({} URAM block(s))",
+        budget.device0.optim_state_bytes,
+        budget.device_n.optim_state_bytes,
+        budget.exchange_buffer_bytes,
+        budget.exchange_uram_blocks
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json())?;
+        println!("replica sweep written to {out}");
     }
     Ok(())
 }

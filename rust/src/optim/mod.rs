@@ -199,7 +199,12 @@ impl OptimConfig {
 /// One parameter tensor's update rule + state (the PU stage for one
 /// core).  `param` and `grad` must have the same length on every call,
 /// and state buffers are sized lazily on the first step.
-pub trait Optimizer {
+///
+/// `Send + Sync` is a supertrait so that models holding boxed
+/// optimizers can be shared immutably across replica threads
+/// ([`crate::replica`]); every built-in rule is plain owned data, so
+/// the bound is free.
+pub trait Optimizer: Send + Sync {
     fn step(&mut self, param: &mut [f32], grad: &[f32], hyper: &Hyper);
 
     /// State elements currently held (0 until the first step for
@@ -617,6 +622,13 @@ impl std::fmt::Debug for ModelOptim {
 /// Analytic optimizer-state memory report for one model configuration —
 /// the row the cost model and the FPGA resource simulator charge against
 /// the U50 budget alongside cores and Eq. 21 caches.
+///
+/// **Data parallelism does not multiply this.**  Under
+/// [`crate::replica::ReplicaGroup`] the optimizer state lives exactly
+/// once — on the lead model that applies the reduced gradients;
+/// followers never step and never allocate moment slots.  A replicated
+/// deployment therefore charges one `StateFootprint` total, not one
+/// per device (see `crate::fpga::resources::ReplicaBudget`).
 #[derive(Debug, Clone, Copy)]
 pub struct StateFootprint {
     pub kind: OptimKind,

@@ -1,0 +1,488 @@
+//! Deterministic data-parallel training: N model replicas, one
+//! optimizer step.
+//!
+//! The paper's compression argument makes data parallelism unusually
+//! cheap: the *entire* trainable state of a 6-ENC model lives in a few
+//! MB of TT/TTM cores, so a full gradient exchange per step — the
+//! classic data-parallel bottleneck — is kilobytes-to-megabytes, not
+//! gigabytes.  [`ReplicaGroup`] exploits that: it runs N
+//! [`NativeTrainModel`] replicas on N threads, each computing
+//! forward + backward over its slice of the global batch, buffers each
+//! replica's complete compressed-core gradient set
+//! ([`crate::train::GradMap`]), reduces them in a **fixed order**, and
+//! applies **one** optimizer step to the lead model before
+//! broadcasting the updated parameters back out.
+//!
+//! # Sharding rule
+//!
+//! A global batch of `B` examples is split by stride: replica `r` of
+//! `N` takes examples `r, r + N, r + 2N, …` (so shard sizes differ by
+//! at most one, and shard membership depends only on `(B, N)`).  The
+//! coordinator's partial-tail drop rule composes through
+//! [`TrainBackend::supports_batch`]: a tail smaller than `N` cannot
+//! give every replica work and is dropped, exactly like a tail the
+//! PJRT backend cannot execute.
+//!
+//! # Reduction order and the determinism contract
+//!
+//! Each replica computes a *shard-mean* gradient.  The global
+//! batch-mean is recovered as the weighted sum
+//! `g = Σ_r (b_r / B) · g_r`, accumulated in **ascending replica
+//! index** with f32 arithmetic, per optimizer slot, element by element
+//! ([`allreduce_fixed_order`]).  Thread completion order never touches
+//! the result — gradients are buffered per replica and reduced only
+//! after all shards finished.  Consequences, pinned by
+//! `rust/tests/replicas.rs`:
+//!
+//! * **R = 1 is bitwise-identical to [`NativeTrainModel`]**: the
+//!   single shard has weight `b_0 / B = 1`, the scale multiply is
+//!   skipped, and the reduced map is byte-for-byte the plain backward's.
+//! * **Same R ⇒ bitwise-identical trajectory** across runs: sharding,
+//!   reduction order and the single PU stage are all deterministic.
+//! * **Different R ⇒ same trajectory within tolerance**: the weighted
+//!   sum re-associates the batch-mean reduction (the same ~1e-5-class
+//!   effect as reordering example summation, documented for the
+//!   mini-batch reduction contract in [`crate::optim::mean_accumulate`]).
+//!
+//! # Exchange volume
+//!
+//! With `G = 4·Σ|gradient slots|` bytes per replica (f32 on the wire),
+//! the buffered in-process exchange moves `(N−1)·G` into the reducer
+//! and `(N−1)·P` parameter bytes back out.  A ring all-reduce over
+//! real links would move `2(N−1)/N · G` per device
+//! ([`crate::costmodel::ring_allreduce_bytes`]); both figures are
+//! published as gauges (`allreduce_grad_bytes`, `allreduce_ring_bytes`)
+//! and tabulated by `costmodel::sweeps::replica_exchange_table`.
+//! Optimizer state is **never** exchanged and never replicated — the
+//! moments live once, on the lead model (see
+//! [`crate::optim::StateFootprint`]).
+//!
+//! Each replica thread is named `replica-{r}`, so every span recorded
+//! inside a shard's backward lands in its own per-replica lane in the
+//! Chrome trace; the reduce/apply/broadcast phases carry the
+//! `allreduce` category on the coordinating thread.
+
+use crate::config::ModelConfig;
+use crate::coordinator::backend::{StepOutput, TrainBackend};
+use crate::tensor::ContractionStats;
+use crate::trace;
+use crate::train::model::GradMap;
+use crate::train::{NativeTrainModel, NativeTrainer};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// N-replica data-parallel trainer over one [`NativeTrainer`].
+///
+/// The lead trainer owns the optimizer state and the checkpoint
+/// format; followers are parameter mirrors that only ever run the pure
+/// `forward_backward`.  See the module docs for the sharding /
+/// reduction / determinism contract.
+pub struct ReplicaGroup {
+    lead: NativeTrainer,
+    followers: Vec<NativeTrainModel>,
+    /// Merged instrumentation of the most recent step: contraction
+    /// counts summed over all replicas, peak intermediate taken as the
+    /// max (replicas run concurrently, so peaks coexist).
+    pub last_stats: ContractionStats,
+}
+
+impl ReplicaGroup {
+    /// Wrap `lead` into a group of `replicas` total models.  Followers
+    /// are built as exact parameter mirrors (same packed bits, compute
+    /// path, precision and checkpoint policy) with **no optimizer
+    /// state of their own** — they never step.
+    pub fn new(lead: NativeTrainer, replicas: usize) -> Result<ReplicaGroup> {
+        if replicas == 0 {
+            return Err(anyhow!("replica group needs at least 1 replica"));
+        }
+        let mut followers = Vec::with_capacity(replicas - 1);
+        for _ in 1..replicas {
+            let mut m = NativeTrainModel::from_params(&lead.model.cfg, &lead.model.to_params())?;
+            m.compute_path = lead.model.compute_path;
+            m.checkpoint = lead.model.checkpoint.clone();
+            // Exact packed-bit mirror (from_params round-trips through
+            // f32; copying the packed tensors removes even that).
+            m.copy_params_from(&lead.model);
+            followers.push(m);
+        }
+        Ok(ReplicaGroup { lead, followers, last_stats: ContractionStats::default() })
+    }
+
+    /// Total replica count (lead + followers).
+    pub fn replicas(&self) -> usize {
+        1 + self.followers.len()
+    }
+
+    /// Direct access to the lead trainer (owner of optimizer state and
+    /// checkpoints).
+    pub fn lead(&self) -> &NativeTrainer {
+        &self.lead
+    }
+
+    /// Optimizer-state bytes of the whole group — the lead's figure,
+    /// because followers hold none (the no-double-charge contract).
+    pub fn allocated_state_bytes(&self) -> u64 {
+        self.lead.model.optim.allocated_state_bytes()
+    }
+
+    /// Optimizer-state elements across all *followers* — zero by
+    /// construction; exposed so tests can assert the no-double-charge
+    /// contract directly.
+    pub fn follower_state_elems(&self) -> u64 {
+        self.followers.iter().map(|m| m.optim.allocated_state_elems()).sum()
+    }
+
+    /// One data-parallel training step over a global `(B, S)` batch:
+    /// shard by stride, run N concurrent backwards, reduce in fixed
+    /// order, apply one optimizer step on the lead, broadcast.
+    /// Returns the global batch-mean loss and the merged stats.
+    pub fn replica_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<(f32, ContractionStats)> {
+        let rn = self.replicas();
+        let s = self.lead.model.cfg.seq_len;
+        let b = intent.len();
+        if b < rn || tokens.len() != b * s || slots.len() != b * s {
+            return Err(anyhow!(
+                "replica_step: need (B, {s}) tokens/slots and B >= {rn} intents, \
+                 got {} / {} / {b}",
+                tokens.len(),
+                slots.len()
+            ));
+        }
+        let shards: Vec<_> = (0..rn).map(|r| shard_examples(tokens, intent, slots, s, r, rn)).collect();
+
+        // ---- N concurrent shard backwards (pure; `&model`) ----------
+        let models: Vec<&NativeTrainModel> = std::iter::once(&self.lead.model)
+            .chain(self.followers.iter())
+            .collect();
+        let mut shard_results: Vec<(usize, usize, f32, GradMap, ContractionStats)> =
+            std::thread::scope(|scope| -> Result<Vec<_>> {
+                let mut handles = Vec::with_capacity(rn);
+                for (r, (model, (tok, int, sl))) in models.iter().zip(&shards).enumerate() {
+                    let handle = std::thread::Builder::new()
+                        .name(format!("replica-{r}"))
+                        .spawn_scoped(scope, move || -> Result<_> {
+                            let (loss, grads, stats) = model.forward_backward(tok, int, sl)?;
+                            Ok((r, int.len(), loss, grads, stats))
+                        })
+                        .map_err(|e| anyhow!("failed to spawn replica thread {r}: {e}"))?;
+                    handles.push(handle);
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().map_err(|_| anyhow!("replica thread panicked"))?)
+                    .collect()
+            })?;
+        shard_results.sort_by_key(|(r, ..)| *r);
+
+        // Merged stats: work adds up across replicas; peaks coexist.
+        let mut stats = ContractionStats::default();
+        for (_, _, _, _, st) in &shard_results {
+            stats.muls += st.muls;
+            stats.stored_intermediate_elems += st.stored_intermediate_elems;
+            stats.steps += st.steps;
+            stats.peak_intermediate_elems = stats.peak_intermediate_elems.max(st.peak_intermediate_elems);
+        }
+
+        // Global batch-mean loss, same fixed ascending order (and the
+        // same skip-the-multiply-at-weight-1 rule) as the gradients.
+        let scale0 = shard_results[0].1 as f32 / b as f32;
+        let mut loss = if scale0 == 1.0 {
+            shard_results[0].2
+        } else {
+            shard_results[0].2 * scale0
+        };
+        for (_, br, l, _, _) in &shard_results[1..] {
+            loss += l * (*br as f32 / b as f32);
+        }
+
+        // ---- Fixed-order all-reduce in the compressed core layout ---
+        let t0 = Instant::now();
+        let reduced = {
+            let _sp = trace::span("allreduce", "reduce.cores");
+            let shards_in: Vec<(usize, usize, GradMap)> = shard_results
+                .into_iter()
+                .map(|(r, br, _, g, _)| (r, br, g))
+                .collect();
+            if trace::enabled() {
+                let grad_bytes: u64 =
+                    shards_in[0].2.values().map(|g| 4 * g.len() as u64).sum();
+                trace::gauge_set("allreduce_grad_bytes", grad_bytes);
+                trace::gauge_set(
+                    "allreduce_ring_bytes",
+                    crate::costmodel::ring_allreduce_bytes(grad_bytes, rn),
+                );
+            }
+            allreduce_fixed_order(shards_in)?
+        };
+        if trace::enabled() {
+            trace::gauge_set("allreduce_micros", t0.elapsed().as_micros() as u64);
+        }
+
+        // ---- One PU stage on the lead, then broadcast ---------------
+        {
+            let _sp = trace::span("allreduce", "apply.reduced");
+            self.lead.model.apply_grads(&reduced, lr)?;
+        }
+        {
+            let _sp = trace::span("allreduce", "broadcast.params");
+            let lead = &self.lead.model;
+            for f in self.followers.iter_mut() {
+                f.copy_params_from(lead);
+            }
+        }
+        self.lead.invalidate_eval_cache();
+        if trace::enabled() {
+            trace::gauge_set(
+                "optim_state_bytes",
+                self.lead.model.optim.allocated_state_bytes(),
+            );
+            trace::counter_add("train_steps_total", 1);
+        }
+        Ok((loss, stats))
+    }
+}
+
+/// Strided shard `r` of `rn`: examples `r, r + rn, r + 2·rn, …` of a
+/// `(B, S)` batch.  Returns owned `(tokens, intents, slots)` slices in
+/// global example order (ascending), so each shard's own batch-mean is
+/// deterministic.
+fn shard_examples(
+    tokens: &[i32],
+    intent: &[i32],
+    slots: &[i32],
+    s: usize,
+    r: usize,
+    rn: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let b = intent.len();
+    let mut tok = Vec::new();
+    let mut int = Vec::new();
+    let mut sl = Vec::new();
+    for e in (r..b).step_by(rn) {
+        tok.extend_from_slice(&tokens[e * s..(e + 1) * s]);
+        int.push(intent[e]);
+        sl.extend_from_slice(&slots[e * s..(e + 1) * s]);
+    }
+    (tok, int, sl)
+}
+
+/// Reduce per-replica shard-mean gradient maps into the global
+/// batch-mean map, **independent of input order**: shards are sorted
+/// by replica index, then accumulated ascending with f32 arithmetic —
+/// `g = Σ_r (b_r / B) · g_r`, slot by slot, element by element.
+///
+/// Each entry is `(replica index, shard batch size, shard-mean
+/// gradients)`.  The accumulator is *initialized from* replica 0's
+/// scaled contribution rather than zeros, and a weight of exactly 1
+/// skips the multiply — so a single shard passes through
+/// byte-for-byte (R=1 bitwise parity, including signed zeros and
+/// NaN payloads).
+pub fn allreduce_fixed_order(mut shards: Vec<(usize, usize, GradMap)>) -> Result<GradMap> {
+    if shards.is_empty() {
+        return Err(anyhow!("allreduce: no shards"));
+    }
+    shards.sort_by_key(|(r, ..)| *r);
+    for w in shards.windows(2) {
+        if w[0].0 == w[1].0 {
+            return Err(anyhow!("allreduce: duplicate replica index {}", w[0].0));
+        }
+    }
+    let total: usize = shards.iter().map(|(_, br, _)| *br).sum();
+    if total == 0 {
+        return Err(anyhow!("allreduce: zero total batch"));
+    }
+    let mut it = shards.into_iter();
+    let (_, b0, mut acc) = it.next().expect("non-empty checked above");
+    let scale0 = b0 as f32 / total as f32;
+    if scale0 != 1.0 {
+        for g in acc.values_mut() {
+            for v in g.iter_mut() {
+                *v *= scale0;
+            }
+        }
+    }
+    for (r, br, gmap) in it {
+        if gmap.len() != acc.len() {
+            return Err(anyhow!(
+                "allreduce: replica {r} has {} gradient slots, expected {}",
+                gmap.len(),
+                acc.len()
+            ));
+        }
+        let scale = br as f32 / total as f32;
+        // BTreeMap iteration is sorted by key, so zipping walks both
+        // maps in the same (deterministic) slot order.
+        for ((name_a, a), (name_b, gb)) in acc.iter_mut().zip(gmap.iter()) {
+            if name_a != name_b {
+                return Err(anyhow!(
+                    "allreduce: replica {r} slot '{name_b}' does not match '{name_a}'"
+                ));
+            }
+            if a.len() != gb.len() {
+                return Err(anyhow!(
+                    "allreduce: replica {r} slot '{name_a}' has {} elements, expected {}",
+                    gb.len(),
+                    a.len()
+                ));
+            }
+            for (av, &bv) in a.iter_mut().zip(gb.iter()) {
+                *av += scale * bv;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+impl TrainBackend for ReplicaGroup {
+    fn backend_name(&self) -> &'static str {
+        "native-replicas"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.lead.model.cfg
+    }
+
+    /// Every replica must receive at least one example; smaller
+    /// batches (e.g. the epoch's partial tail) are dropped by the
+    /// coordinator's existing tail rule.
+    fn supports_batch(&self, batch: usize) -> bool {
+        batch >= self.replicas()
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let t0 = Instant::now();
+        let _sp = trace::span("step", "train_step");
+        let (loss, stats) = self.replica_step(tokens, intent, slots, lr)?;
+        self.last_stats = stats;
+        Ok(StepOutput {
+            loss,
+            execute_secs: t0.elapsed().as_secs_f64(),
+            host_secs: 0.0,
+        })
+    }
+
+    fn eval(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.lead.eval(tokens)
+    }
+
+    /// Checkpoints are the lead's (parameters + optimizer state):
+    /// followers are always byte-identical mirrors after a step, so
+    /// one copy of the parameters is the whole group's state.
+    fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        self.lead.save_checkpoint(dir)
+    }
+
+    fn load_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        self.lead.load_checkpoint(dir)?;
+        let lead = &self.lead.model;
+        for f in self.followers.iter_mut() {
+            f.compute_path = lead.compute_path;
+            f.checkpoint = lead.checkpoint.clone();
+            f.copy_params_from(lead);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(entries: &[(&str, &[f32])]) -> GradMap {
+        entries.iter().map(|(k, v)| (k.to_string(), v.to_vec())).collect()
+    }
+
+    #[test]
+    fn strided_sharding_partitions_the_batch() {
+        let s = 2usize;
+        let b = 7usize;
+        let tokens: Vec<i32> = (0..(b * s) as i32).collect();
+        let intent: Vec<i32> = (100..100 + b as i32).collect();
+        let slots: Vec<i32> = (200..200 + (b * s) as i32).collect();
+        for rn in 1..=4 {
+            let mut seen = vec![false; b];
+            let mut total = 0usize;
+            for r in 0..rn {
+                let (tok, int, sl) = shard_examples(&tokens, &intent, &slots, s, r, rn);
+                assert_eq!(tok.len(), int.len() * s);
+                assert_eq!(sl.len(), int.len() * s);
+                for (i, &iv) in int.iter().enumerate() {
+                    let e = (iv - 100) as usize;
+                    assert_eq!(e % rn, r, "example {e} on wrong shard");
+                    assert!(!seen[e], "example {e} sharded twice");
+                    seen[e] = true;
+                    // Rows travel with their example, in order.
+                    assert_eq!(&tok[i * s..(i + 1) * s], &tokens[e * s..(e + 1) * s]);
+                    assert_eq!(&sl[i * s..(i + 1) * s], &slots[e * s..(e + 1) * s]);
+                }
+                total += int.len();
+            }
+            assert_eq!(total, b, "R={rn}: shards must partition the batch");
+        }
+    }
+
+    #[test]
+    fn allreduce_is_input_order_independent() {
+        let a = map(&[("p", &[1.0, 2.0]), ("q", &[0.5])]);
+        let c = map(&[("p", &[3.0, -2.0]), ("q", &[1.5])]);
+        let d = map(&[("p", &[-1.0, 8.0]), ("q", &[4.0])]);
+        let fwd = allreduce_fixed_order(vec![
+            (0, 2, a.clone()),
+            (1, 2, c.clone()),
+            (2, 1, d.clone()),
+        ])
+        .unwrap();
+        // Same shards handed over in "completion order" — bitwise equal.
+        let rev = allreduce_fixed_order(vec![(2, 1, d), (0, 2, a), (1, 2, c)]).unwrap();
+        assert_eq!(fwd, rev);
+        // Weighted by shard size: p[0] = (2*1 + 2*3 + 1*-1)/5.
+        assert_eq!(fwd["p"][0], (2.0 * 1.0 + 2.0 * 3.0 - 1.0) / 5.0);
+    }
+
+    #[test]
+    fn single_shard_passes_through_bitwise() {
+        // Signed zero survives: scaling by a computed 1.0 is skipped.
+        let g = map(&[("p", &[-0.0f32, 1.25, f32::MIN_POSITIVE])]);
+        let out = allreduce_fixed_order(vec![(0, 3, g.clone())]).unwrap();
+        for (a, b) in out["p"].iter().zip(g["p"].iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn allreduce_rejects_malformed_shards() {
+        let g = map(&[("p", &[1.0])]);
+        assert!(allreduce_fixed_order(vec![]).is_err(), "empty accepted");
+        assert!(
+            allreduce_fixed_order(vec![(0, 1, g.clone()), (0, 1, g.clone())]).is_err(),
+            "duplicate replica index accepted"
+        );
+        assert!(
+            allreduce_fixed_order(vec![(0, 0, g.clone())]).is_err(),
+            "zero total batch accepted"
+        );
+        let other = map(&[("z", &[1.0])]);
+        assert!(
+            allreduce_fixed_order(vec![(0, 1, g.clone()), (1, 1, other)]).is_err(),
+            "mismatched slot names accepted"
+        );
+        let short = map(&[("p", &[1.0, 2.0])]);
+        assert!(
+            allreduce_fixed_order(vec![(0, 1, g), (1, 1, short)]).is_err(),
+            "mismatched slot lengths accepted"
+        );
+    }
+}

@@ -27,6 +27,23 @@
 //! tensors) and parallelize over the batch — the shape of per-head
 //! attention in both the forward and backward pass.
 //!
+//! ## Pool width and replica oversubscription
+//!
+//! The pool defaults to one compute thread per available core (the
+//! caller plus `cores − 1` workers) and is **process-global**: under
+//! data-parallel training ([`crate::replica`]) all N replica threads
+//! share this one pool, so peak demand is `N + workers` runnable
+//! threads — oversubscribed by design, since shards rarely hit their
+//! parallel sections simultaneously and the OS scheduler time-slices
+//! the rest.  For reproducible benchmarking (or to bound CPU use),
+//! [`configure_worker_threads`] (CLI `--threads N`) pins the *total*
+//! compute-thread width before the pool spawns; `--threads 1` makes
+//! every matmul serial on its calling thread, which under `--replicas
+//! N` degrades gracefully to pure batch-level parallelism.
+//! Oversubscription (or any width) never affects results: dispatch
+//! shape is chosen by problem size alone and accumulation order is
+//! fixed by the kernel, so outputs stay bitwise identical.
+//!
 //! ## Mixed precision
 //!
 //! These kernels are the **f32 accumulation** half of the
@@ -144,12 +161,42 @@ struct Pool {
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
+/// Requested pool width (`0` = auto: available cores).  Consulted once,
+/// when the pool lazily initializes; see [`configure_worker_threads`].
+static REQUESTED_THREADS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Set the matmul worker-pool width to `threads` total compute threads
+/// (`0` restores the default: every available core).  The calling
+/// thread always works the first band itself, so `threads = n` spawns
+/// `n - 1` workers and `threads = 1` is the fully serial kernel.
+///
+/// Must be called **before** the first large matmul of the process —
+/// the pool spawns lazily exactly once and its width is then fixed; a
+/// late call is a loud no-op (`stderr` warning) rather than a silent
+/// reconfiguration.  Determinism is unaffected either way: results are
+/// bitwise identical at any width (see the module docs).
+pub fn configure_worker_threads(threads: usize) {
+    REQUESTED_THREADS.store(threads, std::sync::atomic::Ordering::SeqCst);
+    if let Some(p) = POOL.get() {
+        if threads != 0 && threads.saturating_sub(1) != p.workers {
+            eprintln!(
+                "warning: matmul pool already running with {} worker(s); \
+                 --threads {threads} ignored (set it before the first large matmul)",
+                p.workers
+            );
+        }
+    }
+}
+
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
-        let workers = std::thread::available_parallelism()
-            .map(|t| t.get())
-            .unwrap_or(1)
-            .saturating_sub(1);
+        let requested = REQUESTED_THREADS.load(std::sync::atomic::Ordering::SeqCst);
+        let threads = if requested > 0 {
+            requested
+        } else {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+        };
+        let workers = threads.saturating_sub(1);
         for i in 0..workers {
             std::thread::Builder::new()
                 .name(format!("tt-matmul-{i}"))

@@ -19,7 +19,7 @@ pub mod precision;
 pub mod tt;
 pub mod ttm;
 
-pub use dense::{svd, Tensor};
+pub use dense::{configure_worker_threads, svd, Tensor};
 pub use precision::{PackedTensor, PackedVec, Precision};
 pub use tt::{ContractionStats, PackedTTMatrix, TTMatrix};
 pub use ttm::TTMEmbedding;

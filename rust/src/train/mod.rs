@@ -58,5 +58,5 @@ pub use layers::{
 // schedule, which training and serving now share); re-exported here so
 // `crate::train::ComputePath` keeps working.
 pub use crate::engine::ComputePath;
-pub use model::{CheckpointPolicy, NativeTrainModel};
+pub use model::{CheckpointPolicy, GradMap, NativeTrainModel};
 pub use native::NativeTrainer;

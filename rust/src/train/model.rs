@@ -40,12 +40,26 @@ use crate::tensor::{
 };
 use crate::trace;
 use crate::train::blocks::{self, LayerNormCache};
-use crate::train::layers::{self, CheckpointMode, QkvFusedCache, TTLinear, TTLinearCache};
+use crate::train::layers::{
+    self, CheckpointMode, QkvFusedCache, QkvFusedGrads, TTLinear, TTLinearCache, TTLinearGrads,
+};
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+
+/// Flat `optimizer slot name -> f32 gradient` map produced by
+/// [`NativeTrainModel::forward_backward`] and consumed by
+/// [`NativeTrainModel::apply_grads`].  Keys are exactly the per-core
+/// PU-stage state names (the manifest naming scheme, e.g.
+/// `layers.0.wq.cores.3`); under the fused QKV schedule the tied
+/// input-side cores appear **once**, under `wq`'s canonical names.
+/// `BTreeMap` iteration is sorted, so walking a `GradMap` — and
+/// therefore the replica all-reduce built on it
+/// ([`crate::replica::allreduce_fixed_order`]) — is deterministic.
+pub type GradMap = BTreeMap<String, Vec<f32>>;
 
 /// One trainable encoder block (paper Eq. 1).
+#[derive(Clone)]
 pub struct TrainEncoderLayer {
     pub wq: TTLinear,
     pub wk: TTLinear,
@@ -216,6 +230,127 @@ struct ForwardCaches {
 fn rows(t: &Tensor, r0: usize, nrows: usize) -> Result<Tensor> {
     let w = t.shape[1];
     Tensor::from_vec(t.data[r0 * w..(r0 + nrows) * w].to_vec(), &[nrows, w])
+}
+
+/// Fetch a flat-vector gradient from the map, enforcing presence and
+/// length (the optimizer only debug-asserts lengths, so the release
+/// path must check here).
+fn expect_grad<'a>(grads: &'a GradMap, name: &str, len: usize) -> Result<&'a Vec<f32>> {
+    let g = grads
+        .get(name)
+        .ok_or_else(|| anyhow!("apply_grads: missing gradient '{name}'"))?;
+    if g.len() != len {
+        return Err(anyhow!(
+            "apply_grads: gradient '{name}' has {} elements, parameter has {len}",
+            g.len()
+        ));
+    }
+    Ok(g)
+}
+
+/// Move one TT linear's gradients into the map under its per-core
+/// slot names (`{prefix}.cores.{k}` / `{prefix}.bias`).
+fn insert_linear_grads(map: &mut GradMap, prefix: &str, g: TTLinearGrads) {
+    for (k, core) in g.cores.into_iter().enumerate() {
+        map.insert(format!("{prefix}.cores.{k}"), core.data);
+    }
+    map.insert(format!("{prefix}.bias"), g.bias);
+}
+
+/// Move a fused-QKV gradient set into the map: per-projection output
+/// cores and biases under their own names, the **shared** input-side
+/// core gradients (already summed over q/k/v) once under `wq`'s
+/// canonical slots — exactly the state keys
+/// [`layers::apply_update_qkv_fused`] steps, so the map mirrors the
+/// PU-stage footprint (1x, not 3x, for the tied cores).
+fn insert_qkv_fused_grads(map: &mut GradMap, layer_prefix: &str, g: QkvFusedGrads) {
+    let d = g.n_cores.len();
+    let QkvFusedGrads { m_cores, n_cores, bias } = g;
+    for ((cores, b), name) in m_cores.into_iter().zip(bias).zip(["wq", "wk", "wv"]) {
+        for (k, core) in cores.into_iter().enumerate() {
+            map.insert(format!("{layer_prefix}.{name}.cores.{k}"), core.data);
+        }
+        map.insert(format!("{layer_prefix}.{name}.bias"), b);
+    }
+    for (k, core) in n_cores.into_iter().enumerate() {
+        map.insert(format!("{layer_prefix}.wq.cores.{}", d + k), core.data);
+    }
+}
+
+/// Rebuild a [`TTLinearGrads`] for `lin` from the map (inverse of
+/// [`insert_linear_grads`]); a missing name or a shape mismatch is a
+/// hard error, never a silently skipped update.
+fn gather_linear_grads(grads: &GradMap, prefix: &str, lin: &TTLinear) -> Result<TTLinearGrads> {
+    let tt = lin.tt();
+    let mut cores = Vec::with_capacity(tt.cores.len());
+    for (k, core) in tt.cores.iter().enumerate() {
+        let name = format!("{prefix}.cores.{k}");
+        let g = grads
+            .get(&name)
+            .ok_or_else(|| anyhow!("apply_grads: missing gradient '{name}'"))?;
+        cores.push(Tensor::from_vec(g.clone(), &core.shape)?);
+    }
+    let name = format!("{prefix}.bias");
+    let bias = grads
+        .get(&name)
+        .ok_or_else(|| anyhow!("apply_grads: missing gradient '{name}'"))?;
+    if bias.len() != tt.m() {
+        return Err(anyhow!(
+            "apply_grads: gradient '{name}' has {} elements, bias has {}",
+            bias.len(),
+            tt.m()
+        ));
+    }
+    Ok(TTLinearGrads { cores, bias: bias.clone() })
+}
+
+/// Rebuild a [`QkvFusedGrads`] from the map (inverse of
+/// [`insert_qkv_fused_grads`]).
+fn gather_qkv_fused_grads(
+    grads: &GradMap,
+    layer_prefix: &str,
+    layer: &TrainEncoderLayer,
+) -> Result<QkvFusedGrads> {
+    let fetch = |name: String, shape: &[usize]| -> Result<Tensor> {
+        let g = grads
+            .get(&name)
+            .ok_or_else(|| anyhow!("apply_grads: missing gradient '{name}'"))?;
+        Tensor::from_vec(g.clone(), shape)
+    };
+    let qtt = layer.wq.tt();
+    let d = qtt.d();
+    let mut m_cores: [Vec<Tensor>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    let mut bias: [Vec<f32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (i, (name, lin)) in [("wq", &layer.wq), ("wk", &layer.wk), ("wv", &layer.wv)]
+        .into_iter()
+        .enumerate()
+    {
+        let tt = lin.tt();
+        for k in 0..d {
+            m_cores[i]
+                .push(fetch(format!("{layer_prefix}.{name}.cores.{k}"), &tt.cores[k].shape)?);
+        }
+        let bname = format!("{layer_prefix}.{name}.bias");
+        let b = grads
+            .get(&bname)
+            .ok_or_else(|| anyhow!("apply_grads: missing gradient '{bname}'"))?;
+        if b.len() != tt.m() {
+            return Err(anyhow!(
+                "apply_grads: gradient '{bname}' has {} elements, bias has {}",
+                b.len(),
+                tt.m()
+            ));
+        }
+        bias[i] = b.clone();
+    }
+    let mut n_cores = Vec::with_capacity(d);
+    for k in 0..d {
+        n_cores.push(fetch(
+            format!("{layer_prefix}.wq.cores.{}", d + k),
+            &qtt.cores[d + k].shape,
+        )?);
+    }
+    Ok(QkvFusedGrads { m_cores, n_cores, bias })
 }
 
 fn validate_cfg(cfg: &ModelConfig) -> Result<()> {
@@ -855,9 +990,19 @@ impl NativeTrainModel {
 
     /// One training step (FP -> BP -> PU) over a `(B, S)` mini-batch:
     /// forward with caching, joint cross-entropy averaged over the
-    /// batch, hand-derived backward at `K = B * S`, and in-place
-    /// optimizer updates as each gradient becomes available.  Returns
+    /// batch, hand-derived backward at `K = B * S`, and optimizer
+    /// updates on the full gradient set.  Returns
     /// `(mean loss, step stats)`.
+    ///
+    /// Implemented as [`Self::forward_backward`] followed by
+    /// [`Self::apply_grads`].  This split is **bitwise identical** to
+    /// the historical interleaved schedule (each update fired as soon
+    /// as its gradient existed): the backward reads every parameter
+    /// strictly before that parameter's own update, and per-parameter
+    /// optimizer slots are independent, so deferring all PU work after
+    /// the full BP changes no value anywhere.  The split is what lets
+    /// [`crate::replica`] run N backward passes concurrently and step
+    /// once on the reduced gradients.
     pub fn train_step(
         &mut self,
         tokens: &[i32],
@@ -865,6 +1010,31 @@ impl NativeTrainModel {
         slots: &[i32],
         lr: f32,
     ) -> Result<(f32, ContractionStats)> {
+        let (loss, grads, stats) = self.forward_backward(tokens, intent, slots)?;
+        self.apply_grads(&grads, lr)?;
+        // PU -> next-FP stage boundary: moments now reflect this step.
+        if trace::enabled() {
+            trace::gauge_set("optim_state_bytes", self.optim.allocated_state_bytes());
+            trace::counter_add("train_steps_total", 1);
+        }
+        Ok((loss, stats))
+    }
+
+    /// FP + BP only: forward with caching, joint cross-entropy, and
+    /// the hand-derived backward — **no parameter or optimizer-state
+    /// mutation** (`&self`).  Returns the mean loss, the flat
+    /// [`GradMap`] (one entry per optimizer slot; tied fused-QKV input
+    /// cores appear once, under `wq`'s names), and the contraction
+    /// stats.  Feed the map to [`Self::apply_grads`] — directly for a
+    /// single-replica step, or after
+    /// [`crate::replica::allreduce_fixed_order`] under data
+    /// parallelism.
+    pub fn forward_backward(
+        &self,
+        tokens: &[i32],
+        intent: &[i32],
+        slots: &[i32],
+    ) -> Result<(f32, GradMap, ContractionStats)> {
         let cfg_nh = self.cfg.n_heads;
         let (s, h) = (self.cfg.seq_len, self.cfg.d_hid);
         let ns = self.cfg.n_slots;
@@ -925,7 +1095,7 @@ impl NativeTrainModel {
             }
         }
 
-        let hyper = self.optim.hyper(lr);
+        let mut grads = GradMap::new();
 
         // ---- Classifier heads ----------------------------------------
         // d_pooled from both heads, computed before any head update.
@@ -955,69 +1125,32 @@ impl NativeTrainModel {
             }
         }
         drop(sp_bp_heads);
-        {
-            let _sp = trace::span("train", "pu.heads");
-            let optim = &mut self.optim;
-            self.intent_w
-                .update_in_place(|v| optim.step("cls.intent_w", v, &d_intent_w.data, &hyper));
-            self.intent_b
-                .update_in_place(|v| optim.step("cls.intent_b", v, &d_intent_b, &hyper));
-            self.slot_w
-                .update_in_place(|v| optim.step("cls.slot_w", v, &d_slot_w.data, &hyper));
-            self.slot_b
-                .update_in_place(|v| optim.step("cls.slot_b", v, &d_slot_b, &hyper));
-        }
+        grads.insert("cls.intent_w".to_string(), d_intent_w.data);
+        grads.insert("cls.intent_b".to_string(), d_intent_b);
+        grads.insert("cls.slot_w".to_string(), d_slot_w.data);
+        grads.insert("cls.slot_b".to_string(), d_slot_b);
 
         // ---- Pooler --------------------------------------------------
         let sp_bp_pool = trace::span("train", "bp.pool");
         let d_pool_pre = blocks::tanh_vjp(&fwd.pooled, &d_pooled);
         let (mut dx, pool_grads) = self.pool.backward(&d_pool_pre, &fwd.pool_c, &mut stats)?;
         drop(sp_bp_pool);
-        {
-            let _sp = trace::span("train", "pu.pool");
-            self.pool.apply_update(&pool_grads, &mut self.optim, "cls.pool", &hyper);
-        }
+        insert_linear_grads(&mut grads, "cls.pool", pool_grads);
 
         // ---- Encoder blocks, reversed --------------------------------
-        for (li, (layer, f)) in self
-            .layers
-            .iter_mut()
-            .zip(fwd.layer_fwd.iter())
-            .enumerate()
-            .rev()
-        {
+        for (li, (layer, f)) in self.layers.iter().zip(fwd.layer_fwd.iter()).enumerate().rev() {
             let p = |name: &str| format!("layers.{li}.{name}");
-            // BP and PU interleave within a block (each gradient is
-            // consumed by its update as soon as it exists), so the
-            // stage spans wrap the individual sub-sections; same-name
-            // siblings sum in the stage report.
-            let bp = || trace::span_fmt("train", || format!("bp.layer{li}"));
-            let pu = || trace::span_fmt("train", || format!("pu.layer{li}"));
-            let sp = bp();
+            // Pure backward: one bp span covers the whole block; the
+            // matching pu span lives in `apply_grads`.
+            let _sp = trace::span_fmt("train", || format!("bp.layer{li}"));
             let (d_res2, dg2, db2) = blocks::layer_norm_vjp(&f.ln2_c, &layer.ln2_g.view(), &dx);
-            drop(sp);
-            {
-                let _sp = pu();
-                let optim = &mut self.optim;
-                layer.ln2_g.update_in_place(|v| optim.step(&p("ln2.g"), v, &dg2, &hyper));
-                layer.ln2_b.update_in_place(|v| optim.step(&p("ln2.b"), v, &db2, &hyper));
-            }
-            let sp = bp();
+            grads.insert(p("ln2.g"), dg2);
+            grads.insert(p("ln2.b"), db2);
             let (d_g1, w2_grads) = layer.w2.backward(&d_res2, &f.w2_c, &mut stats)?;
-            drop(sp);
-            {
-                let _sp = pu();
-                layer.w2.apply_update(&w2_grads, &mut self.optim, &p("w2"), &hyper);
-            }
-            let sp = bp();
+            insert_linear_grads(&mut grads, &p("w2"), w2_grads);
             let d_h1 = blocks::gelu_vjp(&f.h1, &d_g1);
             let (d_x1_ffn, w1_grads) = layer.w1.backward(&d_h1, &f.w1_c, &mut stats)?;
-            drop(sp);
-            {
-                let _sp = pu();
-                layer.w1.apply_update(&w1_grads, &mut self.optim, &p("w1"), &hyper);
-            }
-            let sp = bp();
+            insert_linear_grads(&mut grads, &p("w1"), w1_grads);
             // Fused lane: the residual-join sum d_res2 + d_x1_ffn feeds
             // the LN1 VJP inline instead of materializing first —
             // bitwise identical to the unfused reference.
@@ -1027,22 +1160,11 @@ impl NativeTrainModel {
                 let d_x1 = ops::add(&d_res2, &d_x1_ffn);
                 blocks::layer_norm_vjp(&f.ln1_c, &layer.ln1_g.view(), &d_x1)
             };
-            drop(sp);
-            {
-                let _sp = pu();
-                let optim = &mut self.optim;
-                layer.ln1_g.update_in_place(|v| optim.step(&p("ln1.g"), v, &dg1, &hyper));
-                layer.ln1_b.update_in_place(|v| optim.step(&p("ln1.b"), v, &db1, &hyper));
-            }
-            let sp = bp();
+            grads.insert(p("ln1.g"), dg1);
+            grads.insert(p("ln1.b"), db1);
             let (d_ctx, wo_grads) = layer.wo.backward(&d_res1, &f.wo_c, &mut stats)?;
-            drop(sp);
-            {
-                let _sp = pu();
-                layer.wo.apply_update(&wo_grads, &mut self.optim, &p("wo"), &hyper);
-            }
+            insert_linear_grads(&mut grads, &p("wo"), wo_grads);
             // Attention backward, mirroring the forward's schedule.
-            let sp = bp();
             let (dq, dk, dv) = match &f.attn {
                 AttnFwd::Batched(probs) => blocks::multi_head_attention_vjp_batched(
                     &f.q, &f.k, &f.v, probs, &d_ctx, cfg_nh, b,
@@ -1071,50 +1193,22 @@ impl NativeTrainModel {
                     (dq, dk, dv)
                 }
             };
-            drop(sp);
-            // QKV backward + PU, fused or separate to match the forward.
+            // QKV backward, fused or separate to match the forward.
             let dx_qkv = match &f.qkv {
                 QkvFwd::Fused(cache) => {
-                    let sp = bp();
-                    let (dx_qkv, grads) = layers::backward_qkv_fused(
+                    let (dx_qkv, qkv_grads) = layers::backward_qkv_fused(
                         &layer.wq, &layer.wk, &layer.wv, &dq, &dk, &dv, cache, &mut stats,
                     )?;
-                    drop(sp);
-                    let _sp = pu();
-                    layers::apply_update_qkv_fused(
-                        &mut layer.wq,
-                        &mut layer.wk,
-                        &mut layer.wv,
-                        &grads,
-                        &mut self.optim,
-                        &format!("layers.{li}"),
-                        &hyper,
-                    );
+                    insert_qkv_fused_grads(&mut grads, &format!("layers.{li}"), qkv_grads);
                     dx_qkv
                 }
                 QkvFwd::Separate(c) => {
-                    let sp = bp();
                     let (dx_q, wq_grads) = layer.wq.backward(&dq, &c.wq_c, &mut stats)?;
-                    drop(sp);
-                    {
-                        let _sp = pu();
-                        layer.wq.apply_update(&wq_grads, &mut self.optim, &p("wq"), &hyper);
-                    }
-                    let sp = bp();
+                    insert_linear_grads(&mut grads, &p("wq"), wq_grads);
                     let (dx_k, wk_grads) = layer.wk.backward(&dk, &c.wk_c, &mut stats)?;
-                    drop(sp);
-                    {
-                        let _sp = pu();
-                        layer.wk.apply_update(&wk_grads, &mut self.optim, &p("wk"), &hyper);
-                    }
-                    let sp = bp();
+                    insert_linear_grads(&mut grads, &p("wk"), wk_grads);
                     let (dx_v, wv_grads) = layer.wv.backward(&dv, &c.wv_c, &mut stats)?;
-                    drop(sp);
-                    {
-                        let _sp = pu();
-                        layer.wv.apply_update(&wv_grads, &mut self.optim, &p("wv"), &hyper);
-                    }
-                    let _sp = bp();
+                    insert_linear_grads(&mut grads, &p("wv"), wv_grads);
                     ops::add(&ops::add(&dx_q, &dx_k), &dx_v)
                 }
             };
@@ -1156,14 +1250,10 @@ impl NativeTrainModel {
                     .lookup_vjp(*t as usize, &full, d_row, &mut emb_grads)?;
             }
         }
-        drop(sp_bp_embed);
-        {
-            let _sp = trace::span("train", "pu.embed");
-            let optim = &mut self.optim;
-            for (k, (core, g)) in self.embedding.cores.iter_mut().zip(&emb_grads).enumerate() {
-                core.update_in_place(|v| optim.step(&format!("embed.ttm.{k}"), v, &g.data, &hyper));
-            }
+        for (k, g) in emb_grads.into_iter().enumerate() {
+            grads.insert(format!("embed.ttm.{k}"), g.data);
         }
+        drop(sp_bp_embed);
         // Positional-table gradient: sum over examples (ascending order).
         let sp_bp_pos = trace::span("train", "bp.embed");
         let mut d_pos = vec![0.0f32; s * h];
@@ -1172,20 +1262,145 @@ impl NativeTrainModel {
                 *dp += dv;
             }
         }
+        grads.insert("embed.pos".to_string(), d_pos);
         drop(sp_bp_pos);
+
+        Ok((loss, grads, stats))
+    }
+
+    /// PU stage: one optimizer step over a full [`GradMap`] — the
+    /// exact complement of [`Self::forward_backward`].  Updates walk
+    /// the same schedule order as the historical interleaved step
+    /// (heads, pooler, encoder blocks high-to-low, embedding,
+    /// positional), so the composition is bitwise identical to it.
+    /// Every expected slot must be present with the right length /
+    /// shape; a mismatch is a hard error and **no prefix of the
+    /// updates is rolled back**, so callers should treat an `Err` as
+    /// fatal for this model instance.
+    pub fn apply_grads(&mut self, grads: &GradMap, lr: f32) -> Result<()> {
+        let hyper = self.optim.hyper(lr);
+        let (s, h) = (self.cfg.seq_len, self.cfg.d_hid);
+        let (ni, ns) = (self.cfg.n_intents, self.cfg.n_slots);
+
+        // ---- Classifier heads ----------------------------------------
+        {
+            let _sp = trace::span("train", "pu.heads");
+            let d_intent_w = expect_grad(grads, "cls.intent_w", ni * h)?;
+            let d_intent_b = expect_grad(grads, "cls.intent_b", ni)?;
+            let d_slot_w = expect_grad(grads, "cls.slot_w", ns * h)?;
+            let d_slot_b = expect_grad(grads, "cls.slot_b", ns)?;
+            let optim = &mut self.optim;
+            self.intent_w
+                .update_in_place(|v| optim.step("cls.intent_w", v, d_intent_w, &hyper));
+            self.intent_b
+                .update_in_place(|v| optim.step("cls.intent_b", v, d_intent_b, &hyper));
+            self.slot_w.update_in_place(|v| optim.step("cls.slot_w", v, d_slot_w, &hyper));
+            self.slot_b.update_in_place(|v| optim.step("cls.slot_b", v, d_slot_b, &hyper));
+        }
+
+        // ---- Pooler --------------------------------------------------
+        {
+            let _sp = trace::span("train", "pu.pool");
+            let g = gather_linear_grads(grads, "cls.pool", &self.pool)?;
+            self.pool.apply_update(&g, &mut self.optim, "cls.pool", &hyper);
+        }
+
+        // ---- Encoder blocks, reversed (same order as the backward) ---
+        let d = self.cfg.tt_m.len();
+        for li in (0..self.layers.len()).rev() {
+            let _sp = trace::span_fmt("train", || format!("pu.layer{li}"));
+            let p = |name: &str| format!("layers.{li}.{name}");
+            {
+                let layer = &mut self.layers[li];
+                let dg2 = expect_grad(grads, &p("ln2.g"), h)?;
+                let db2 = expect_grad(grads, &p("ln2.b"), h)?;
+                let optim = &mut self.optim;
+                layer.ln2_g.update_in_place(|v| optim.step(&p("ln2.g"), v, dg2, &hyper));
+                layer.ln2_b.update_in_place(|v| optim.step(&p("ln2.b"), v, db2, &hyper));
+            }
+            let g2 = gather_linear_grads(grads, &p("w2"), &self.layers[li].w2)?;
+            self.layers[li].w2.apply_update(&g2, &mut self.optim, &p("w2"), &hyper);
+            let g1 = gather_linear_grads(grads, &p("w1"), &self.layers[li].w1)?;
+            self.layers[li].w1.apply_update(&g1, &mut self.optim, &p("w1"), &hyper);
+            {
+                let layer = &mut self.layers[li];
+                let dg1 = expect_grad(grads, &p("ln1.g"), h)?;
+                let db1 = expect_grad(grads, &p("ln1.b"), h)?;
+                let optim = &mut self.optim;
+                layer.ln1_g.update_in_place(|v| optim.step(&p("ln1.g"), v, dg1, &hyper));
+                layer.ln1_b.update_in_place(|v| optim.step(&p("ln1.b"), v, db1, &hyper));
+            }
+            let go = gather_linear_grads(grads, &p("wo"), &self.layers[li].wo)?;
+            self.layers[li].wo.apply_update(&go, &mut self.optim, &p("wo"), &hyper);
+            // Fused-vs-separate QKV is recovered from the map itself:
+            // under the fused schedule the tied input cores exist only
+            // under `wq`'s names, so `wk.cores.{d}` is absent.
+            let fused = !grads.contains_key(&p(&format!("wk.cores.{d}")));
+            if fused {
+                let g = gather_qkv_fused_grads(grads, &format!("layers.{li}"), &self.layers[li])?;
+                let layer = &mut self.layers[li];
+                layers::apply_update_qkv_fused(
+                    &mut layer.wq,
+                    &mut layer.wk,
+                    &mut layer.wv,
+                    &g,
+                    &mut self.optim,
+                    &format!("layers.{li}"),
+                    &hyper,
+                );
+            } else {
+                let gq = gather_linear_grads(grads, &p("wq"), &self.layers[li].wq)?;
+                self.layers[li].wq.apply_update(&gq, &mut self.optim, &p("wq"), &hyper);
+                let gk = gather_linear_grads(grads, &p("wk"), &self.layers[li].wk)?;
+                self.layers[li].wk.apply_update(&gk, &mut self.optim, &p("wk"), &hyper);
+                let gv = gather_linear_grads(grads, &p("wv"), &self.layers[li].wv)?;
+                self.layers[li].wv.apply_update(&gv, &mut self.optim, &p("wv"), &hyper);
+            }
+        }
+
+        // ---- Embedding + positional table ----------------------------
         {
             let _sp = trace::span("train", "pu.embed");
             let optim = &mut self.optim;
-            self.pos.update_in_place(|v| optim.step("embed.pos", v, &d_pos, &hyper));
+            for (k, core) in self.embedding.cores.iter_mut().enumerate() {
+                let name = format!("embed.ttm.{k}");
+                let numel: usize = core.shape().iter().product();
+                let g = grads
+                    .get(&name)
+                    .ok_or_else(|| anyhow!("apply_grads: missing gradient '{name}'"))?;
+                if g.len() != numel {
+                    return Err(anyhow!(
+                        "apply_grads: gradient '{name}' has {} elements, core has {numel}",
+                        g.len()
+                    ));
+                }
+                core.update_in_place(|v| optim.step(&name, v, g, &hyper));
+            }
         }
-
-        // PU -> next-FP stage boundary: moments now reflect this step.
-        if trace::enabled() {
-            trace::gauge_set("optim_state_bytes", self.optim.allocated_state_bytes());
-            trace::counter_add("train_steps_total", 1);
+        {
+            let _sp = trace::span("train", "pu.embed");
+            let d_pos = expect_grad(grads, "embed.pos", s * h)?;
+            let optim = &mut self.optim;
+            self.pos.update_in_place(|v| optim.step("embed.pos", v, d_pos, &hyper));
         }
+        Ok(())
+    }
 
-        Ok((loss, stats))
+    /// Overwrite this model's parameters (and storage precision) with
+    /// `src`'s — the replica broadcast primitive.  Optimizer state,
+    /// compute path and checkpoint policy are deliberately untouched:
+    /// under data parallelism the moments live once, on the model that
+    /// ran [`Self::apply_grads`]; followers only mirror parameters.
+    pub fn copy_params_from(&mut self, src: &NativeTrainModel) {
+        self.embedding = src.embedding.clone();
+        self.pos = src.pos.clone();
+        self.layers = src.layers.clone();
+        self.pool = src.pool.clone();
+        self.intent_w = src.intent_w.clone();
+        self.intent_b = src.intent_b.clone();
+        self.slot_w = src.slot_w.clone();
+        self.slot_b = src.slot_b.clone();
+        self.precision = src.precision;
     }
 }
 

@@ -94,6 +94,14 @@ impl NativeTrainer {
         self.model.checkpoint = policy;
         self
     }
+
+    /// Drop the cached eval engine.  Required whenever `model`'s
+    /// parameters are mutated from outside [`TrainBackend::train_step`]
+    /// — e.g. the replica step, which applies reduced gradients via
+    /// [`NativeTrainModel::apply_grads`] directly.
+    pub fn invalidate_eval_cache(&self) {
+        *self.eval_model.borrow_mut() = None;
+    }
 }
 
 /// Checkpoint-name prefix of optimizer-state entries
