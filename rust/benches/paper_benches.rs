@@ -361,11 +361,12 @@ fn native_train() {
 
 /// The precision x compute-path x checkpoint-policy grid
 /// (`tt_trainer::benchgrid`, shared with the `bench-matrix` CLI
-/// command): 3 precisions x {fused, looped} x {cache, recompute} at the
+/// command): 4 precisions x {fused, looped} x {cache, recompute} at the
 /// paper config, batch 8, with per-cell tokens/sec, the FP/BP/PU stage
 /// split of a traced step and the measured at-rest packed-parameter /
 /// Eq. 21 cache / optimizer-state bytes.  Writes `BENCH_matrix.json`;
-/// CI gates on its `fused_bf16_vs_unfused_f32` staying above 1.0.
+/// CI gates on its `fused_bf16_vs_unfused_f32` staying above 1.0 and
+/// on `int8_param_bytes_ratio` staying at or below 0.27x f32.
 fn matrix() {
     hdr("matrix", "precision x path x checkpoint grid (no artifacts)");
     // Fail loudly (see native_train): a silent skip would surface only

@@ -3,8 +3,8 @@
 //! One implementation shared by the bench binary (`cargo bench --offline
 //! -- matrix`, which writes `BENCH_matrix.json`) and the CLI
 //! (`bench-matrix`, which prints the table): for every cell of
-//! {f32, bf16, f16} x {fused, looped} x {cache, recompute} it runs real
-//! paper-config train steps and records
+//! {f32, bf16, f16, int8} x {fused, looped} x {cache, recompute} it runs
+//! real paper-config train steps and records
 //!
 //! * throughput — p50 step latency, steps/sec, tokens/sec,
 //! * the FP/BP/PU stage split of one traced step
@@ -135,8 +135,27 @@ impl MatrixReport {
         }
     }
 
-    /// The `BENCH_matrix.json` document (hand-rolled, no serde).
+    /// Measured at-rest parameter bytes of the given precision as a
+    /// fraction of the f32 cell (fused/cache corner; 0.0 when a cell is
+    /// missing).  The CI gate reads `int8_param_bytes_ratio` from
+    /// `BENCH_matrix.json` and asserts it stays at or below 0.27 —
+    /// block-scaled int8 is 1 code byte plus one f32 scale per
+    /// 64-element block, i.e. ~0.266x the f32 bytes.
+    pub fn param_bytes_ratio(&self, precision: Precision) -> f64 {
+        match (self.find(Precision::F32, true, true), self.find(precision, true, true)) {
+            (Some(f), Some(p)) if f.param_bytes > 0 => {
+                p.param_bytes as f64 / f.param_bytes as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// The `BENCH_matrix.json` document (hand-rolled, no serde).  Every
+    /// float goes through [`crate::coordinator::metrics::json_num`]: an
+    /// unmeasured cell (empty sample set) carries NaN, and a bare `NaN`
+    /// token would invalidate the whole document.
     pub fn to_json(&self) -> String {
+        let num = crate::coordinator::metrics::json_num;
         let rows: Vec<String> = self
             .cells
             .iter()
@@ -144,41 +163,44 @@ impl MatrixReport {
                 let stages = c
                     .stage_us
                     .iter()
-                    .map(|(s, us)| format!("\"{s}\": {us:.1}"))
+                    .map(|(s, us)| format!("\"{s}\": {}", num(*us, 1)))
                     .collect::<Vec<_>>()
                     .join(", ");
                 format!(
                     "    {{\"precision\": \"{}\", \"path\": \"{}\", \"checkpoint\": \"{}\", \
-                     \"p50_step_secs\": {:.6}, \"steps_per_sec\": {:.3}, \
-                     \"tokens_per_sec\": {:.1}, \"param_bytes\": {}, \
+                     \"p50_step_secs\": {}, \"steps_per_sec\": {}, \
+                     \"tokens_per_sec\": {}, \"param_bytes\": {}, \
                      \"eq21_cache_bytes\": {}, \"optim_state_bytes\": {}, \
-                     \"stage_us\": {{{stages}}}, \"mean_loss\": {:.5}}}",
+                     \"stage_us\": {{{stages}}}, \"mean_loss\": {}}}",
                     c.precision.name(),
                     c.path_name(),
                     c.ckpt_name(),
-                    c.p50_step_secs,
-                    c.steps_per_sec,
-                    c.tokens_per_sec,
+                    num(c.p50_step_secs, 6),
+                    num(c.steps_per_sec, 3),
+                    num(c.tokens_per_sec, 1),
                     c.param_bytes,
                     c.eq21_cache_bytes,
                     c.optim_state_bytes,
-                    c.mean_loss
+                    num(c.mean_loss as f64, 5)
                 )
             })
             .collect();
         format!(
             "{{\n  \"bench\": \"matrix\",\n  \"model\": \"tt_L2\",\n  \"batch\": {},\n  \
-             \"seq_len\": {},\n  \"fused_bf16_vs_unfused_f32\": {:.3},\n  \
-             \"fused_f16_vs_unfused_f32\": {:.3},\n  \"fused_vs_looped_f32\": {:.3},\n  \
+             \"seq_len\": {},\n  \"fused_bf16_vs_unfused_f32\": {},\n  \
+             \"fused_f16_vs_unfused_f32\": {},\n  \"fused_vs_looped_f32\": {},\n  \
              \"bf16_param_bytes_saved\": {},\n  \"f16_param_bytes_saved\": {},\n  \
+             \"int8_param_bytes_saved\": {},\n  \"int8_param_bytes_ratio\": {},\n  \
              \"rows\": [\n{}\n  ]\n}}\n",
             self.batch,
             self.seq_len,
-            self.fused_bf16_vs_unfused_f32(),
-            self.speedup_vs_baseline(Precision::F16, true, true),
-            self.speedup_vs_baseline(Precision::F32, true, true),
+            num(self.fused_bf16_vs_unfused_f32(), 3),
+            num(self.speedup_vs_baseline(Precision::F16, true, true), 3),
+            num(self.speedup_vs_baseline(Precision::F32, true, true), 3),
             self.param_bytes_saved(Precision::Bf16),
             self.param_bytes_saved(Precision::F16),
+            self.param_bytes_saved(Precision::Int8),
+            num(self.param_bytes_ratio(Precision::Int8), 4),
             rows.join(",\n")
         )
     }
@@ -219,17 +241,19 @@ impl MatrixReport {
         }
         out.push_str(&format!(
             "fused bf16 vs unfused f32: {:.2}x tokens/s | fused f32 vs looped f32: {:.2}x | \
-             bf16 packs away {} param bytes (f16: {})\n",
+             bf16 packs away {} param bytes (f16: {}, int8: {} at {:.4}x f32)\n",
             self.fused_bf16_vs_unfused_f32(),
             self.speedup_vs_baseline(Precision::F32, true, true),
             self.param_bytes_saved(Precision::Bf16),
-            self.param_bytes_saved(Precision::F16)
+            self.param_bytes_saved(Precision::F16),
+            self.param_bytes_saved(Precision::Int8),
+            self.param_bytes_ratio(Precision::Int8)
         ));
         out
     }
 }
 
-/// Measure the full 3 x 2 x 2 grid at the given batch size.
+/// Measure the full 4 x 2 x 2 grid at the given batch size.
 ///
 /// Every cell trains the same seed-42 paper 2-layer model on the same
 /// synthetic dataset under the Adam optimizer; only the storage
@@ -497,6 +521,9 @@ mod tests {
                 cell(Precision::F32, true, true, 150.0, 400),
                 cell(Precision::Bf16, true, true, 180.0, 200),
                 cell(Precision::F16, true, true, 175.0, 200),
+                // 400 f32 bytes = 100 elems: int8 stores 100 codes +
+                // 2 block scales = 108 bytes, ratio 0.27.
+                cell(Precision::Int8, true, true, 185.0, 108),
             ],
         }
     }
@@ -516,6 +543,9 @@ mod tests {
         let r = report();
         assert_eq!(r.param_bytes_saved(Precision::Bf16), 200);
         assert_eq!(r.param_bytes_saved(Precision::F16), 200);
+        assert_eq!(r.param_bytes_saved(Precision::Int8), 292);
+        assert!((r.param_bytes_ratio(Precision::Int8) - 0.27).abs() < 1e-12);
+        assert!((r.param_bytes_ratio(Precision::Bf16) - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -524,8 +554,24 @@ mod tests {
         let json = r.to_json();
         assert!(json.contains("\"fused_bf16_vs_unfused_f32\": 1.800"));
         assert!(json.contains("\"bench\": \"matrix\""));
-        assert_eq!(json.matches("\"precision\"").count(), 4);
+        assert_eq!(json.matches("\"precision\"").count(), 5);
         assert!(json.contains("\"stage_us\": {\"fp\": 50.0, \"bp\": 40.0, \"pu\": 10.0}"));
+        assert!(json.contains("\"int8_param_bytes_ratio\": 0.2700"));
+        assert!(json.contains("\"int8_param_bytes_saved\": 292"));
+    }
+
+    #[test]
+    fn unmeasured_cell_serializes_null_not_nan() {
+        // Regression: `recent_loss` over zero samples is NaN and the
+        // writer used `{:.5}` — a bare `NaN` token corrupts the whole
+        // BENCH_matrix.json document.
+        let mut r = report();
+        r.cells[0].mean_loss = f32::NAN;
+        r.cells[0].p50_step_secs = f64::NAN;
+        let json = r.to_json();
+        assert!(!json.contains("NaN"), "bare NaN token in {json}");
+        assert!(json.contains("\"mean_loss\": null"), "{json}");
+        assert!(json.contains("\"p50_step_secs\": null"), "{json}");
     }
 
     #[test]

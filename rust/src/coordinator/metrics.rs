@@ -144,6 +144,21 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, n) - 1]
 }
 
+/// Format a metric value for a hand-rolled JSON document: finite
+/// values print with `decimals` fraction digits, non-finite values —
+/// e.g. the [`percentile`] of an empty sample set, or a 0/0 rate —
+/// print as `null`.  Bare `NaN`/`inf` tokens are not valid JSON and
+/// corrupt the whole BENCH document for every downstream parser, so
+/// every writer that can see an empty sample path must route floats
+/// through this.
+pub fn json_num(v: f64, decimals: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.decimals$}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +220,21 @@ mod tests {
         assert_eq!(m.execute_percentile_secs(95.0), 0.04);
         // The cumulative sum and the sample list agree.
         assert!((m.execute_samples.iter().sum::<f64>() - m.execute_secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_sample_percentile_serializes_as_null_not_nan() {
+        // The regression: an empty sample set (zero completed requests
+        // / steps) gives a NaN percentile, and a writer that formats it
+        // with `{:.4}` emits a bare `NaN` token — invalid JSON.  The
+        // shared formatter must turn every non-finite into `null`.
+        let p = percentile(&[], 50.0);
+        assert!(p.is_nan());
+        assert_eq!(json_num(p, 4), "null");
+        assert_eq!(json_num(f64::INFINITY, 2), "null");
+        assert_eq!(json_num(f64::NEG_INFINITY, 2), "null");
+        assert_eq!(json_num(0.25, 3), "0.250");
+        assert_eq!(json_num(3.0, 0), "3");
     }
 
     #[test]

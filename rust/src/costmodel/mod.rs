@@ -367,14 +367,16 @@ impl LinearShape {
 
     /// Eq. 21 intermediate memory in **bytes** at a storage precision —
     /// element counts are precision-independent, the bytes halve for
-    /// the 16-bit formats.
+    /// the 16-bit formats and drop to ~1/4 (1 code byte + 1/16 scale
+    /// byte per element) for block-scaled int8
+    /// ([`crate::tensor::Precision::storage_bytes`]).
     pub fn btt_memory_bytes(&self, k_dim: u64, precision: crate::tensor::Precision) -> u64 {
-        self.btt_memory(k_dim) * precision.bytes()
+        precision.storage_bytes(self.btt_memory(k_dim))
     }
 
     /// Fused-QKV Eq. 21 cache in bytes at a storage precision.
     pub fn btt_qkv_memory_bytes(&self, k_dim: u64, precision: crate::tensor::Precision) -> u64 {
-        self.btt_qkv_memory(k_dim) * precision.bytes()
+        precision.storage_bytes(self.btt_qkv_memory(k_dim))
     }
 
     /// Eq. 21 bytes one BTT layer holds **at rest** between FP and BP
@@ -414,13 +416,16 @@ impl LinearShape {
         }
     }
 
-    /// PU-stage optimizer-state bytes at a storage precision.
+    /// PU-stage optimizer-state bytes at a storage precision, charged
+    /// per moment buffer (`state_multiplier` contiguous buffers of the
+    /// per-moment element count) so the int8 per-block scale sidecar is
+    /// counted the way the slots allocate it.
     pub fn optimizer_state_bytes(
         &self,
         state_multiplier: u64,
         precision: crate::tensor::Precision,
     ) -> u64 {
-        self.optimizer_state_elems(state_multiplier) * precision.bytes()
+        state_multiplier * precision.storage_bytes(self.optimizer_state_elems(1))
     }
 
     // -- Batched serving (shared engine, merged factors at rest) -------------
@@ -479,7 +484,7 @@ impl LinearShape {
         k_dim: u64,
         precision: crate::tensor::Precision,
     ) -> u64 {
-        self.btt_serve_transient_elems(k_dim) * precision.bytes()
+        precision.storage_bytes(self.btt_serve_transient_elems(k_dim))
     }
 }
 
@@ -497,7 +502,7 @@ impl LinearShape {
 /// smaller than this untied count (the measured figure is published as
 /// the `allreduce_grad_bytes` gauge).
 pub fn core_grad_bytes(cfg: &crate::config::ModelConfig, prec: crate::tensor::Precision) -> u64 {
-    cfg.tensor_params() as u64 * prec.bytes()
+    prec.storage_bytes(cfg.tensor_params() as u64)
 }
 
 /// Per-device traffic of a ring all-reduce over `n` devices:

@@ -111,15 +111,16 @@
 //! records both in `BENCH_native_train.json` (uploaded as a CI
 //! artifact).  `cargo bench --offline -- matrix` (and the
 //! `bench-matrix` CLI command) runs the full [`benchgrid`] —
-//! {f32, bf16, f16} x {fused, looped} x {cache, recompute} — recording
-//! per-cell tokens/sec, the traced FP/BP/PU stage split and the
-//! measured at-rest bytes into `BENCH_matrix.json`; CI gates on the
-//! fused-bf16 cell staying faster than the unfused-f32 baseline.
+//! {f32, bf16, f16, int8} x {fused, looped} x {cache, recompute} —
+//! recording per-cell tokens/sec, the traced FP/BP/PU stage split and
+//! the measured at-rest bytes into `BENCH_matrix.json`; CI gates on the
+//! fused-bf16 cell staying faster than the unfused-f32 baseline and on
+//! the int8 cell's `param_bytes` staying at or below 0.27x f32.
 //!
 //! ## Precision
 //!
 //! The native trainer runs a **mixed-precision storage path**
-//! ([`tensor::Precision`]: `f32` / `bf16` / `f16`; CLI
+//! ([`tensor::Precision`]: `f32` / `bf16` / `f16` / `int8`; CLI
 //! `--precision bf16`) in the spirit of the paper's low-precision
 //! predecessor (arXiv:2104.03420): storage happens at the selected
 //! width, compute always accumulates in f32.
@@ -145,10 +146,45 @@
 //!   `rust/tests/packed_params.rs`; the width-parameterized accounting
 //!   ([`fpga::resources::report_with_optim_prec`], `fpga::bram::*_at`)
 //!   charges the same 16 bits into the U50 budget.
+//! * **Block-scaled int8** — `Precision::Int8` drops the at-rest width
+//!   to **1 byte/element plus one f32 scale per 64-element block**
+//!   ([`tensor::ScaledBlockVec`] / [`tensor::ScaledBlockTensor`],
+//!   `tensor::INT8_BLOCK`): ~0.266x the f32 bytes for parameters,
+//!   Eq. 21 caches and optimizer moments alike (the `fpga` report and
+//!   `costmodel` formulas charge the scale sidecar explicitly).  The
+//!   per-block scale is `amax / 127` snapped to bf16 precision, so
+//!   every `code * scale` product is exact in f32 and
+//!   dequantize-requantize is a bitwise fixed point — the same
+//!   round-on-store contract as the 16-bit formats, with the rounding
+//!   unit being the 64-element block instead of the scalar.  Block
+//!   boundaries are fixed (element index / 64 over the flat buffer), so
+//!   quantization is deterministic and thread-count independent; note
+//!   that because the block — not the scalar — is the rounding unit, an
+//!   activation row's stored bits depend on its whole `(K, ·)` buffer,
+//!   so int8 bitwise contracts hold per identical batch shape (the
+//!   per-request batch-invariance the serving suite pins for f32/bf16
+//!   is deliberately not an int8 contract).  Under
+//!   int8 the Adam-family second moment is stored in the **sqrt
+//!   domain** (`optim::moment2_sqrt_domain`), which keeps a block's
+//!   numerator and denominator flushing to zero together instead of
+//!   leaving a live numerator over a flushed denominator.
 //! * **Accumulation width** — every contraction widens on load (exact
-//!   for both 16-bit formats) and runs the unchanged f32 microkernels
+//!   for both 16-bit formats and for int8 codes times bf16-snapped
+//!   scales) and runs the unchanged f32 microkernels
 //!   ([`tensor::dense`]); results round to the storage width only on
 //!   store, with **round-to-nearest-even** ([`tensor::precision`]).
+//! * **Loss scaling / overflow guard** — f16's narrow exponent (and
+//!   int8's narrow code range) can overflow a bad batch into inf/NaN
+//!   gradients.  Every PU stage below f32 is guarded
+//!   ([`train::NativeTrainModel::apply_grads_guarded`], also on the
+//!   replica lead): a non-finite loss or gradient skips the step
+//!   (parameters and moments untouched), backs off the dynamic
+//!   [`optim::LossScaler`] (power-of-two halving, doubling after 2000
+//!   good steps), and counts `train_steps_skipped_nonfinite` in the
+//!   trace.  With f32 gradient accumulation the power-of-two
+//!   multiply/divide pair is a bitwise identity, so the scaler drives
+//!   the detect-skip-backoff protocol rather than an actual rescale —
+//!   finite steps stay bitwise unchanged.
 //! * **Determinism contract** — the conversions are pure integer bit
 //!   manipulation, so the kernels' bitwise-deterministic band split
 //!   becomes a per-precision guarantee: same inputs + same precision =
@@ -156,8 +192,10 @@
 //!   legacy full-precision path.
 //! * **Checkpointing** — optimizer moments (and the Adam step count)
 //!   serialize into the npy checkpoint set as name-verified
-//!   `optim.state.*` entries, so `--optimizer adam` training resumes
-//!   exactly; parameter-only checkpoints (e.g. PJRT exports) still load
+//!   `optim.state.*` entries, and the loss-scaler state rides along as
+//!   `optim.loss_scale` once it moves off its default, so `--optimizer
+//!   adam` training resumes exactly — including the overflow-guard
+//!   posture; parameter-only checkpoints (e.g. PJRT exports) still load
 //!   and start the PU state fresh.
 //!
 //! The `rust/tests/precision_parity.rs` suite bounds the bf16 loss

@@ -87,9 +87,12 @@ COMMANDS:
                   native:  --layers 2 [--init-ckpt DIR]
                            --optimizer sgd|momentum|adam|adamw --batch N
                            --weight-decay 0.0
-                           --precision f32|bf16|f16 (storage path:
+                           --precision f32|bf16|f16|int8 (storage path:
                              Eq. 21 caches, optimizer moments and stored
-                             params at 16 bits; compute stays f32)
+                             params at 16 bits — or block-scaled int8 at
+                             ~1 byte/element; compute stays f32, and the
+                             dynamic loss scaler guards half/int8 steps
+                             against non-finite gradients)
                            --checkpoint cache|recompute (gradient
                              checkpointing: recompute drops the Eq. 21
                              caches and rebuilds them in the BP stage;
@@ -107,19 +110,19 @@ COMMANDS:
   eval          evaluate on the test split
                   --backend native|pjrt [--limit N]
                   native:  --layers 2 --ckpt DIR (or --init-ckpt DIR)
-                           --precision f32|bf16|f16 (round stored
+                           --precision f32|bf16|f16|int8 (round stored
                              params first: weights-at-rest preview)
                   pjrt:    --variant tt_L2 --artifacts DIR
   cost-model    Fig. 6 comparison + Fig. 7 sweeps
   serve-bench   load-test the continuous-batching serving scheduler
                   --ckpt DIR | --init-ckpt DIR (else random init)
                   --layers 2 --requests 256 --seed 42
-                  --precision f32|bf16|f16
+                  --precision f32|bf16|f16|int8
                   --out BENCH_serve.json
                   --trace FILE (Chrome trace of admit/queue/execute spans)
                   grid: {no-batching, continuous} x concurrency {1, 8}
   bench-matrix  precision x compute-path x checkpoint-policy training
-                grid ({f32,bf16,f16} x {fused,looped} x
+                grid ({f32,bf16,f16,int8} x {fused,looped} x
                 {cache,recompute}): tokens/sec with speedups vs the
                 f32/looped/cache baseline, traced FP/BP/PU stage split,
                 measured at-rest packed-param / Eq. 21 cache /
@@ -135,7 +138,7 @@ COMMANDS:
   trace-report  FP/BP/PU wall-clock breakdown from a short traced
                 native run, next to the Eq. 20 cost-model prediction
                   --steps 4 --layers 2 --batch N --seed 42
-                  --precision f32|bf16|f16
+                  --precision f32|bf16|f16|int8
                   --trace FILE (also dump the Chrome trace)
   bram          BRAM allocator study (Figs. 11/12/14)
   schedule      kernel scheduling study (Figs. 9/10)
@@ -267,15 +270,13 @@ fn cmd_train(args: &Args) -> Result<()> {
                 optim.weight_decay,
                 precision.name()
             );
+            // Validate the (replicas, batch) pairing before anything is
+            // built: a global batch below R would make the tail rule
+            // drop every batch and train zero steps.
+            let replicas = args.get_usize("replicas", 1);
+            tt_trainer::replica::validate_replica_batch(replicas, batch)?;
             let backend = native_backend(args, seed, &["init-ckpt"], optim)?;
-            let replicas = args.get_usize("replicas", 1).max(1);
             if replicas > 1 {
-                if batch < replicas {
-                    return Err(anyhow!(
-                        "--replicas {replicas} needs --batch >= {replicas} \
-                         (every replica takes at least one example per step)"
-                    ));
-                }
                 println!(
                     "data-parallel: {replicas} replicas, strided batch sharding, \
                      fixed-order compressed-core all-reduce"

@@ -160,10 +160,12 @@ pub struct OptimConfig {
     /// Storage precision of the PU stage: optimizer moments are kept
     /// packed at this width (except the Adam-family second moment,
     /// which stores at bf16 under an f16 path — see
-    /// `moment2_precision`) and every updated parameter is rounded on
-    /// store (round-to-nearest-even), so the cores a half-precision
-    /// model trains are always exactly representable at this width.
-    /// Updates themselves accumulate in f32.
+    /// `moment2_precision` — and in sqrt domain under block-scaled
+    /// int8 — see `moment2_sqrt_domain`) and every updated parameter
+    /// is rounded on store (round-to-nearest-even per scalar for the
+    /// half formats, blockwise requantization for int8), so the cores
+    /// a sub-f32 model trains are always exactly representable at this
+    /// width.  Updates themselves accumulate in f32.
     pub precision: Precision,
 }
 
@@ -363,9 +365,15 @@ macro_rules! adam_family_state {
             if self.m.is_empty() {
                 return Vec::new();
             }
+            // The exported "v" slot always holds the *true* second
+            // moment, whatever the storage domain — checkpoints stay
+            // meaningful across precision changes, and the sqrt-domain
+            // round trip is still bitwise (sqrt(fl(u^2)) == u).
+            let mut v = self.v.to_f32();
+            moment2_to_true(self.prec, &mut v);
             vec![
                 ("m", self.m.to_f32()),
-                ("v", self.v.to_f32()),
+                ("v", v),
                 // f32 represents the step count exactly up to 2^24.
                 ("t", vec![self.t as f32]),
             ]
@@ -374,7 +382,11 @@ macro_rules! adam_family_state {
         fn import_state(&mut self, slot: &str, values: &[f32]) -> Result<()> {
             match slot {
                 "m" => self.m = PackedVec::from_f32(self.prec, values),
-                "v" => self.v = PackedVec::from_f32(moment2_precision(self.prec), values),
+                "v" => {
+                    let mut v = values.to_vec();
+                    moment2_from_true(self.prec, &mut v);
+                    self.v = PackedVec::from_f32(moment2_precision(self.prec), &v);
+                }
                 "t" => {
                     self.t = *values
                         .first()
@@ -389,9 +401,12 @@ macro_rules! adam_family_state {
         }
 
         fn set_state_precision(&mut self, prec: Precision) {
+            let mut v = self.v.to_f32();
+            moment2_to_true(self.prec, &mut v);
+            moment2_from_true(prec, &mut v);
             self.prec = prec;
             self.m = PackedVec::from_f32(prec, &self.m.to_f32());
-            self.v = PackedVec::from_f32(moment2_precision(prec), &self.v.to_f32());
+            self.v = PackedVec::from_f32(moment2_precision(prec), &v);
         }
     };
 }
@@ -403,11 +418,47 @@ macro_rules! adam_family_state {
 /// `m` stays finite — the update `m_hat / (sqrt(0) + eps)` then blows
 /// up by ~1/eps.  bf16 has f32's exponent range at the same 16-bit
 /// width, so the range-critical moment stores at bf16 under an f16
-/// path; the byte accounting is unchanged.
+/// path; the byte accounting is unchanged.  Int8 keeps int8 storage
+/// but switches the *domain* — see [`moment2_sqrt_domain`].
 fn moment2_precision(prec: Precision) -> Precision {
     match prec {
         Precision::F16 => Precision::Bf16,
         p => p,
+    }
+}
+
+/// Whether the Adam-family second moment stores `sqrt(v)` instead of
+/// `v`.  Block-scaled int8 shares one scale across 64 elements, so a
+/// squared moment whose block-mate is 254x larger quantizes to zero —
+/// and a zero denominator under a *surviving* first moment is the
+/// 1/eps explosion all over again.  Storing `u = sqrt(v)` makes the
+/// flush thresholds of `m` and of the denominator coincide (both are
+/// ~|g|-proportional): whenever the stored denominator dies, the
+/// stored numerator died with it and the update is exactly 0 instead
+/// of explosive.  The half/f32 formats keep linear-domain storage
+/// bitwise unchanged.
+fn moment2_sqrt_domain(prec: Precision) -> bool {
+    matches!(prec, Precision::Int8)
+}
+
+/// Widen a stored second-moment buffer to true `v` values (squares
+/// the sqrt-domain int8 representation; identity otherwise).
+fn moment2_to_true(prec: Precision, vals: &mut [f32]) {
+    if moment2_sqrt_domain(prec) {
+        for x in vals.iter_mut() {
+            *x *= *x;
+        }
+    }
+}
+
+/// Convert true `v` values to the stored domain for `prec` (square
+/// root for int8; identity otherwise).  `sqrt(fl(u^2)) == u` in
+/// round-to-nearest, so export -> import round trips bitwise.
+fn moment2_from_true(prec: Precision, vals: &mut [f32]) {
+    if moment2_sqrt_domain(prec) {
+        for x in vals.iter_mut() {
+            *x = x.sqrt();
+        }
     }
 }
 
@@ -448,15 +499,23 @@ impl Optimizer for Adam {
         let (b1, b2) = (hyper.beta1, hyper.beta2);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
+        let sqrt_dom = moment2_sqrt_domain(self.prec);
         let v_sv = &mut self.v;
         self.m.update_in_place(|m| {
             v_sv.update_in_place(|v| {
                 for (i, (p, &g)) in param.iter_mut().zip(grad).enumerate() {
                     let g = g + hyper.weight_decay * *p;
                     m[i] = b1 * m[i] + (1.0 - b1) * g;
-                    v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                    let vt = if sqrt_dom {
+                        let vt = b2 * (v[i] * v[i]) + (1.0 - b2) * g * g;
+                        v[i] = vt.sqrt();
+                        vt
+                    } else {
+                        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                        v[i]
+                    };
                     let mhat = m[i] / bc1;
-                    let vhat = v[i] / bc2;
+                    let vhat = vt / bc2;
                     *p -= hyper.lr * mhat / (vhat.sqrt() + hyper.eps);
                 }
             });
@@ -502,15 +561,23 @@ impl Optimizer for AdamW {
         let (b1, b2) = (hyper.beta1, hyper.beta2);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
+        let sqrt_dom = moment2_sqrt_domain(self.prec);
         let v_sv = &mut self.v;
         self.m.update_in_place(|m| {
             v_sv.update_in_place(|v| {
                 for (i, (p, &g)) in param.iter_mut().zip(grad).enumerate() {
                     *p -= hyper.lr * hyper.weight_decay * *p;
                     m[i] = b1 * m[i] + (1.0 - b1) * g;
-                    v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                    let vt = if sqrt_dom {
+                        let vt = b2 * (v[i] * v[i]) + (1.0 - b2) * g * g;
+                        v[i] = vt.sqrt();
+                        vt
+                    } else {
+                        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                        v[i]
+                    };
                     let mhat = m[i] / bc1;
-                    let vhat = v[i] / bc2;
+                    let vhat = vt / bc2;
                     *p -= hyper.lr * mhat / (vhat.sqrt() + hyper.eps);
                 }
             });
@@ -666,7 +733,10 @@ impl StateFootprint {
     }
 
     pub fn state_bytes(&self) -> u64 {
-        self.precision.bytes() * self.state_elems
+        // Charge per moment buffer (multiplier contiguous buffers of
+        // `param_elems`), so the int8 per-block scale overhead is
+        // counted the way the slots actually allocate it.
+        self.kind.state_multiplier() as u64 * self.precision.storage_bytes(self.param_elems)
     }
 
     pub fn state_mb(&self) -> f64 {
@@ -703,6 +773,138 @@ pub fn mean_accumulate(per_example: &[Vec<f32>]) -> Vec<f32> {
         *a *= inv;
     }
     acc
+}
+
+/// Default dynamic loss scale (2^16 — the conventional AMP start).
+pub const LOSS_SCALE_INIT: f32 = 65536.0;
+/// Loss-scale floor: never scale below 1 (identity).
+pub const LOSS_SCALE_MIN: f32 = 1.0;
+/// Loss-scale ceiling: 2^24, beyond which growth stops.
+pub const LOSS_SCALE_MAX: f32 = 16777216.0;
+/// Consecutive finite steps before the scale doubles.
+pub const LOSS_SCALE_GROWTH_INTERVAL: u32 = 2000;
+
+/// Dynamic loss scaler — the overflow guard of the PU stage under
+/// sub-f32 storage (and the half-precision bug fix: an f16 run
+/// previously had *no* non-finite guard at all, so one inf gradient
+/// silently poisoned the Adam moments and every packed store after
+/// them).
+///
+/// The scale is **always a power of two** (power-of-two init, x2
+/// growth, x0.5 backoff, power-of-two clamps), so multiplying the loss
+/// and dividing the gradients back is bitwise the identity whenever
+/// everything stays finite — which is also why this codebase, whose
+/// gradients accumulate in f32 end to end, does not need to execute
+/// the multiply/divide pair at all: f32 accumulation cannot underflow
+/// at the magnitudes half-storage training produces, so the scale's
+/// numeric effect is vacuous and applying it would only burn cycles.
+/// What the scaler *does* drive is the guard protocol the trainer
+/// runs every step:
+///
+/// 1. scan the raw f32 gradients (and the loss) for non-finite values;
+/// 2. if any: **skip the step entirely** (parameters and moments
+///    untouched), call [`LossScaler::on_overflow`] — scale halves,
+///    the good-step run resets;
+/// 3. otherwise apply the update and call
+///    [`LossScaler::on_good_step`] — after
+///    [`LOSS_SCALE_GROWTH_INTERVAL`] consecutive good steps the scale
+///    doubles (clamped to [`LOSS_SCALE_MAX`]).
+///
+/// The `{scale, good_steps}` pair is checkpointed with the optimizer
+/// state (`optim.loss_scale`) so a resumed run continues the same
+/// schedule bitwise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossScaler {
+    scale: f32,
+    good_steps: u32,
+    growth_interval: u32,
+    /// Steps skipped due to non-finite gradients (session diagnostic,
+    /// not checkpointed).
+    overflow_steps: u64,
+}
+
+impl Default for LossScaler {
+    fn default() -> Self {
+        LossScaler::new()
+    }
+}
+
+impl LossScaler {
+    pub fn new() -> LossScaler {
+        LossScaler::with_scale(LOSS_SCALE_INIT, LOSS_SCALE_GROWTH_INTERVAL)
+    }
+
+    /// Custom start scale / growth interval (tests, CLI overrides).
+    /// The scale is clamped into [`LOSS_SCALE_MIN`]..[`LOSS_SCALE_MAX`];
+    /// a zero growth interval is treated as 1.
+    pub fn with_scale(scale: f32, growth_interval: u32) -> LossScaler {
+        LossScaler {
+            scale: scale.clamp(LOSS_SCALE_MIN, LOSS_SCALE_MAX),
+            good_steps: 0,
+            growth_interval: growth_interval.max(1),
+            overflow_steps: 0,
+        }
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    pub fn good_steps(&self) -> u32 {
+        self.good_steps
+    }
+
+    pub fn overflow_steps(&self) -> u64 {
+        self.overflow_steps
+    }
+
+    /// Record a step whose loss and gradients were all finite; doubles
+    /// the scale after `growth_interval` consecutive good steps.
+    pub fn on_good_step(&mut self) {
+        self.good_steps += 1;
+        if self.good_steps >= self.growth_interval {
+            self.scale = (self.scale * 2.0).min(LOSS_SCALE_MAX);
+            self.good_steps = 0;
+        }
+    }
+
+    /// Record a non-finite loss/gradient: halve the scale (floored at
+    /// [`LOSS_SCALE_MIN`]) and reset the good-step run.  The caller
+    /// must also skip the parameter update for this step.
+    pub fn on_overflow(&mut self) {
+        self.scale = (self.scale * 0.5).max(LOSS_SCALE_MIN);
+        self.good_steps = 0;
+        self.overflow_steps += 1;
+    }
+
+    /// True when `loss` and every gradient value are finite — the
+    /// trainer's per-step overflow probe.
+    pub fn step_is_finite<'a, I>(loss: f32, grads: I) -> bool
+    where
+        I: IntoIterator<Item = &'a f32>,
+    {
+        loss.is_finite() && grads.into_iter().all(|g| g.is_finite())
+    }
+
+    /// Checkpoint payload: `[scale, good_steps]` (both exact in f32 —
+    /// the scale is a power of two, the counter stays far below 2^24).
+    pub fn export(&self) -> Vec<f32> {
+        vec![self.scale, self.good_steps as f32]
+    }
+
+    /// Restore a payload written by [`LossScaler::export`]; the growth
+    /// interval is configuration, not state, and is kept.
+    pub fn import(&mut self, values: &[f32]) -> Result<()> {
+        if values.len() != 2 {
+            return Err(anyhow!("loss-scale entry: expected 2 values, got {}", values.len()));
+        }
+        if !(values[0].is_finite() && values[0] > 0.0) {
+            return Err(anyhow!("loss-scale entry: bad scale {}", values[0]));
+        }
+        self.scale = values[0].clamp(LOSS_SCALE_MIN, LOSS_SCALE_MAX);
+        self.good_steps = values[1] as u32;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1029,6 +1231,139 @@ mod tests {
             assert_eq!(half.state_elems, f32_fp.state_elems);
             assert_eq!(2 * half.state_bytes(), f32_fp.state_bytes());
         }
+    }
+
+    #[test]
+    fn int8_moments_minimize_and_resume_bitwise() {
+        // Block-scaled int8 moments (second moment in sqrt domain)
+        // still drive the quadratic down, charge ~1.0625 B/elem, and
+        // export/import resumes the trajectory bitwise.
+        let target: Vec<f32> = vec![1.0, -2.0, 0.5, 3.0];
+        for kind in [OptimKind::Momentum, OptimKind::Adam, OptimKind::AdamW] {
+            let mut opt = kind.build_prec(Precision::Int8);
+            let h = OptimConfig::default().hyper(0.1);
+            let mut p = vec![0.0f32; 4];
+            let loss = |p: &[f32]| -> f32 {
+                p.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / 2.0
+            };
+            let start = loss(&p);
+            for _ in 0..200 {
+                let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+                opt.step(&mut p, &g, &h);
+            }
+            assert!(
+                loss(&p) < 0.10 * start,
+                "{kind:?}@int8: loss {} vs start {start}",
+                loss(&p)
+            );
+            // 4 elems = 1 block per moment buffer: 4 codes + 4 scale
+            // bytes each.
+            let per_moment = Precision::Int8.storage_bytes(4);
+            assert_eq!(per_moment, 8);
+            assert_eq!(opt.state_bytes(), kind.state_multiplier() as u64 * per_moment);
+            // Export -> fresh import -> both continue bitwise equal.
+            let mut resumed = kind.build_prec(Precision::Int8);
+            for (tag, vals) in opt.export_state() {
+                resumed.import_state(tag, &vals).unwrap();
+            }
+            let mut p2 = p.clone();
+            for step in 0..10 {
+                let g = grad_at(step, 4);
+                opt.step(&mut p, &g, &h);
+                resumed.step(&mut p2, &g, &h);
+                assert_eq!(p, p2, "{kind:?}@int8 diverged after resume at step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_second_moment_block_flush_is_not_explosive() {
+        // One huge-gradient element sharing a 64-block with tiny ones:
+        // in linear domain the tiny elements' v quantizes to 0 while
+        // their m survives (the 1/eps explosion); the sqrt-domain
+        // storage keeps both alive or kills both, so updates stay
+        // ~lr-bounded.
+        for kind in [OptimKind::Adam, OptimKind::AdamW] {
+            let mut opt = kind.build_prec(Precision::Int8);
+            let h = OptimConfig::default().hyper(1e-2);
+            let n = 64usize;
+            let mut p = vec![0.5f32; n];
+            for step in 0..50 {
+                // Element 0 dominates the block by 50x; the rest sit in
+                // the dangerous v/vmax in (1/64516, 1/254) band.
+                let g: Vec<f32> =
+                    (0..n).map(|i| if i == 0 { 5.0 } else { 0.1 }).collect();
+                opt.step(&mut p, &g, &h);
+                for (i, &v) in p.iter().enumerate() {
+                    assert!(
+                        v.is_finite() && v.abs() < 10.0,
+                        "{kind:?}@int8: p[{i}] = {v} exploded at step {step}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_state_footprint_is_quarter_class_bytes() {
+        // The analytic footprint charges 1 code byte + 4/64 scale bytes
+        // per element: 1.0625/4 = 0.265625x the f32 figure per moment.
+        let cfg = ModelConfig::paper(2);
+        let f32_fp = StateFootprint::for_model(&cfg, OptimKind::Adam);
+        let int8 = StateFootprint::for_model_prec(&cfg, OptimKind::Adam, Precision::Int8);
+        assert_eq!(int8.state_elems, f32_fp.state_elems);
+        let ratio = int8.state_bytes() as f64 / f32_fp.state_bytes() as f64;
+        assert!(
+            ratio <= 0.27,
+            "int8 optimizer state is {ratio:.4}x f32 (want <= 0.27)"
+        );
+        assert!(ratio >= 0.25, "int8 state ratio {ratio:.4} below the 1 B/elem floor");
+    }
+
+    #[test]
+    fn loss_scaler_backs_off_grows_and_roundtrips() {
+        let mut s = LossScaler::with_scale(1024.0, 3);
+        assert_eq!(s.scale(), 1024.0);
+        // Backoff halves and resets the good-step run.
+        s.on_good_step();
+        s.on_good_step();
+        s.on_overflow();
+        assert_eq!(s.scale(), 512.0);
+        assert_eq!(s.good_steps(), 0);
+        assert_eq!(s.overflow_steps(), 1);
+        // Growth doubles only after the full interval.
+        s.on_good_step();
+        s.on_good_step();
+        assert_eq!(s.scale(), 512.0);
+        s.on_good_step();
+        assert_eq!(s.scale(), 1024.0);
+        assert_eq!(s.good_steps(), 0);
+        // Clamps: floor at 1, ceiling at 2^24.
+        let mut floor = LossScaler::with_scale(1.0, 3);
+        floor.on_overflow();
+        assert_eq!(floor.scale(), LOSS_SCALE_MIN);
+        let mut ceil = LossScaler::with_scale(LOSS_SCALE_MAX, 1);
+        ceil.on_good_step();
+        assert_eq!(ceil.scale(), LOSS_SCALE_MAX);
+        // Export/import restores {scale, good_steps} exactly.
+        s.on_good_step();
+        let payload = s.export();
+        let mut restored = LossScaler::with_scale(LOSS_SCALE_INIT, 3);
+        restored.import(&payload).unwrap();
+        assert_eq!(restored.scale(), s.scale());
+        assert_eq!(restored.good_steps(), s.good_steps());
+        assert!(restored.import(&[0.0, 0.0]).is_err());
+        assert!(restored.import(&[f32::NAN, 0.0]).is_err());
+        assert!(restored.import(&[2.0]).is_err());
+    }
+
+    #[test]
+    fn loss_scaler_finiteness_probe() {
+        assert!(LossScaler::step_is_finite(0.5, [0.1f32, -0.2].iter()));
+        assert!(!LossScaler::step_is_finite(f32::NAN, [0.1f32].iter()));
+        assert!(!LossScaler::step_is_finite(0.5, [0.1f32, f32::INFINITY].iter()));
+        assert!(!LossScaler::step_is_finite(0.5, [f32::NEG_INFINITY].iter()));
+        assert!(LossScaler::step_is_finite(0.0, core::iter::empty()));
     }
 
     #[test]

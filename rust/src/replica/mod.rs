@@ -226,11 +226,16 @@ impl ReplicaGroup {
         }
 
         // ---- One PU stage on the lead, then broadcast ---------------
-        {
+        // The guarded apply scans the reduced map (a non-finite shard
+        // gradient survives the weighted sum as non-finite) and the
+        // global loss; an overflow step is skipped on the lead, backs
+        // off the loss scale, and leaves every replica untouched — so
+        // no broadcast is needed and the group stays bitwise in sync.
+        let applied = {
             let _sp = trace::span("allreduce", "apply.reduced");
-            self.lead.model.apply_grads(&reduced, lr)?;
-        }
-        {
+            self.lead.model.apply_grads_guarded(loss, &reduced, lr)?
+        };
+        if applied {
             let _sp = trace::span("allreduce", "broadcast.params");
             let lead = &self.lead.model;
             for f in self.followers.iter_mut() {
@@ -247,6 +252,28 @@ impl ReplicaGroup {
         }
         Ok((loss, stats))
     }
+}
+
+/// Validate a `(replicas, global batch)` pairing **before** training
+/// starts.  Every replica must get at least one example per step
+/// ([`ReplicaGroup::supports_batch`]); when the global batch is smaller
+/// than the replica count, the coordinator's partial-tail rule drops
+/// *every* batch and the run silently "trains" zero steps.  The CLI
+/// calls this at parse time so the misconfiguration errors loudly up
+/// front instead.
+pub fn validate_replica_batch(replicas: usize, global_batch: usize) -> Result<()> {
+    if replicas == 0 {
+        return Err(anyhow!("--replicas must be at least 1"));
+    }
+    if global_batch < replicas {
+        return Err(anyhow!(
+            "--replicas {replicas} with global batch {global_batch}: every step's \
+             batch is smaller than the replica count, so the partial-tail drop \
+             rule would discard every batch and the run would train zero steps. \
+             Lower --replicas to at most {global_batch} or raise --batch."
+        ));
+    }
+    Ok(())
 }
 
 /// Strided shard `r` of `rn`: examples `r, r + rn, r + 2·rn, …` of a

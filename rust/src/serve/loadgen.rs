@@ -60,15 +60,20 @@ pub struct LoadReport {
 impl LoadReport {
     /// One scenario as a JSON object (manual formatting — the crate
     /// stays dependency-free, same idiom as `BENCH_native_train.json`).
+    /// Latency/throughput floats go through
+    /// [`crate::coordinator::metrics::json_num`]: a scenario that
+    /// served zero requests has NaN percentiles, and a bare `NaN`
+    /// token would invalidate the whole `BENCH_serve.json` document.
     pub fn json(&self) -> String {
+        let num = crate::coordinator::metrics::json_num;
         format!(
             concat!(
                 "{{\"name\": \"{}\", \"policy\": \"{}\", \"concurrency\": {}, ",
                 "\"max_batch\": {}, \"requests\": {}, \"served\": {}, ",
-                "\"failed\": {}, \"rejected\": {}, \"p50_ms\": {:.4}, ",
-                "\"p95_ms\": {:.4}, \"p99_ms\": {:.4}, \"mean_ms\": {:.4}, ",
-                "\"wall_secs\": {:.4}, \"throughput_rps\": {:.2}, ",
-                "\"mean_batch\": {:.2}, \"max_batch_seen\": {}}}"
+                "\"failed\": {}, \"rejected\": {}, \"p50_ms\": {}, ",
+                "\"p95_ms\": {}, \"p99_ms\": {}, \"mean_ms\": {}, ",
+                "\"wall_secs\": {}, \"throughput_rps\": {}, ",
+                "\"mean_batch\": {}, \"max_batch_seen\": {}}}"
             ),
             self.name,
             self.policy,
@@ -78,13 +83,13 @@ impl LoadReport {
             self.served,
             self.failed,
             self.rejected,
-            self.p50_ms,
-            self.p95_ms,
-            self.p99_ms,
-            self.mean_ms,
-            self.wall_secs,
-            self.throughput_rps,
-            self.mean_batch,
+            num(self.p50_ms, 4),
+            num(self.p95_ms, 4),
+            num(self.p99_ms, 4),
+            num(self.mean_ms, 4),
+            num(self.wall_secs, 4),
+            num(self.throughput_rps, 2),
+            num(self.mean_batch, 2),
             self.max_batch_seen,
         )
     }
@@ -167,7 +172,10 @@ pub fn run_load(
     let stats = server.shutdown();
     let lat = latencies.into_inner().expect("latency sink poisoned");
     let (p50_ms, p95_ms, p99_ms, mean_ms) = if lat.is_empty() {
-        (0.0, 0.0, 0.0, 0.0)
+        // No completed requests: the latency distribution is undefined.
+        // Carry the NaN through — `LoadReport::json` renders it `null`;
+        // a fake 0.0 here would read as "zero latency" downstream.
+        (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
     } else {
         (
             percentile(&lat, 50.0),
@@ -278,6 +286,37 @@ mod tests {
         {
             assert!(json.contains(key), "missing {key} in {json}");
         }
+    }
+
+    #[test]
+    fn zero_served_report_emits_null_not_nan() {
+        // Regression: a scenario with no completed requests has NaN
+        // percentiles; the writer used to format them with `{:.4}` and
+        // emit bare `NaN` tokens — invalid JSON that corrupted the
+        // whole BENCH_serve.json document.
+        let report = LoadReport {
+            name: "starved".into(),
+            policy: "continuous",
+            concurrency: 1,
+            max_batch: 16,
+            requests: 4,
+            served: 0,
+            failed: 4,
+            rejected: 0,
+            p50_ms: f64::NAN,
+            p95_ms: f64::NAN,
+            p99_ms: f64::NAN,
+            mean_ms: f64::NAN,
+            wall_secs: 0.1,
+            throughput_rps: 0.0,
+            mean_batch: f64::NAN,
+            max_batch_seen: 0,
+        };
+        let json = bench_json(std::slice::from_ref(&report));
+        assert!(!json.contains("NaN"), "bare NaN token in {json}");
+        assert!(json.contains("\"p50_ms\": null"), "{json}");
+        assert!(json.contains("\"mean_batch\": null"), "{json}");
+        assert!(json.contains("\"throughput_rps\": 0.00"), "{json}");
     }
 
     #[test]

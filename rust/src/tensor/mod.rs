@@ -10,8 +10,9 @@
 //!   contraction orders with instrumentation (validates Eqs. 18-21).
 //! * [`ttm`] — TTM embedding tables (paper Eq. 8/17).
 //! * [`precision`] — the mixed-precision storage substrate
-//!   (f32/bf16/f16 with deterministic round-to-nearest-even and packed
-//!   half-width buffers; compute always accumulates in f32).
+//!   (f32/bf16/f16 plus block-scaled int8, deterministic
+//!   round-to-nearest-even, genuinely packed sub-f32 buffers; compute
+//!   always accumulates in f32).
 
 pub mod dense;
 pub mod ops;
@@ -20,6 +21,8 @@ pub mod tt;
 pub mod ttm;
 
 pub use dense::{configure_worker_threads, svd, Tensor};
-pub use precision::{PackedTensor, PackedVec, Precision};
+pub use precision::{
+    PackedTensor, PackedVec, Precision, ScaledBlockTensor, ScaledBlockVec, INT8_BLOCK,
+};
 pub use tt::{ContractionStats, PackedTTMatrix, TTMatrix};
 pub use ttm::TTMEmbedding;

@@ -1,24 +1,44 @@
-//! Mixed-precision storage substrate: `f32` / `bf16` / `f16` element
-//! formats with **deterministic round-to-nearest-even** conversion and
-//! packed half-width buffers.
+//! Mixed-precision storage substrate: `f32` / `bf16` / `f16` /
+//! block-scaled `int8` element formats with **deterministic
+//! round-to-nearest-even** conversion and packed sub-f32 buffers.
 //!
 //! The contract of the whole mixed-precision path lives here:
 //!
 //! * **Storage** happens at [`Precision`] width — TT/TTM cores, the
 //!   Eq. 21 activation caches ([`PackedTensor`], genuinely `u16`-packed
-//!   for the half formats) and the optimizer moments.
+//!   for the half formats, `i8`-coded with per-block scales for int8)
+//!   and the optimizer moments.
 //! * **Compute** always accumulates in `f32`: packed buffers are
-//!   widened on load (`bf16 -> f32` is exact; `f16 -> f32` is exact),
-//!   the [`crate::tensor::dense`] microkernels run unchanged, and the
+//!   widened on load (`bf16 -> f32` is exact; `f16 -> f32` is exact;
+//!   int8 `code * scale` is an exact f32 product — see below), the
+//!   [`crate::tensor::dense`] microkernels run unchanged, and the
 //!   result is rounded **once, on store**, with round-to-nearest-even.
 //! * **Determinism**: the conversions are pure integer bit
-//!   manipulation, so the kernels' bitwise-deterministic band-split
-//!   guarantee becomes a *per-precision* guarantee — same inputs, same
-//!   precision, same bits, regardless of thread count.
+//!   manipulation (and, for int8, fixed block boundaries + a scale
+//!   derived by a fixed formula), so the kernels'
+//!   bitwise-deterministic band-split guarantee becomes a
+//!   *per-precision* guarantee — same inputs, same precision, same
+//!   bits, regardless of thread count.
 //!
-//! On the U50 this is the next 2x of on-chip memory and bandwidth: the
-//! Adam moment pair, the Eq. 21 caches and the core arrays all halve
-//! (see `crate::fpga::resources::report_with_optim_prec` and the
+//! **Block-scaled int8** ([`Precision::Int8`], [`ScaledBlockVec`] /
+//! [`ScaledBlockTensor`]) stores one `i8` code per element plus one
+//! `f32` scale per [`INT8_BLOCK`]-element block (blocks are fixed
+//! windows of the flat buffer, starting at index 0).  The scale is
+//! `amax / 127` *snapped to bf16 precision* (still stored as f32):
+//! with an 8-bit-mantissa scale and codes in `[-127, 127]` every
+//! `code * scale` product is exact in f32, so dequantize -> requantize
+//! is a **bitwise fixed point** — repacking stored values reproduces
+//! the same codes, the same scales and the same widened values.  That
+//! idempotence is what lets int8 checkpoints round-trip through f32
+//! `ParamMap`s and the serving engine bitwise, exactly like the half
+//! formats' `pack(round(x)) == pack(x)` contract.  An all-zero (or
+//! subnormal-below-scale-floor) block stores scale 0 and codes 0.
+//!
+//! On the U50 this is the next 2x (half formats) and then ~4x (int8:
+//! 1 byte/element + 4/64 bytes of scale = 0.2656x f32) of on-chip
+//! memory and bandwidth: the Adam moment pair, the Eq. 21 caches and
+//! the core arrays all shrink (see
+//! `crate::fpga::resources::report_with_optim_prec` and the
 //! width-parameterized BRAM allocator in `crate::fpga::bram`).
 
 use super::dense::Tensor;
@@ -36,11 +56,16 @@ pub enum Precision {
     /// IEEE-754 binary16: 5-bit exponent, 10-bit mantissa.  More
     /// mantissa than bf16 but overflows beyond 65504.
     F16,
+    /// Block-scaled int8: one `i8` code in `[-127, 127]` per element
+    /// plus one f32 scale (bf16-snapped `amax/127`) per
+    /// [`INT8_BLOCK`]-element block.  1 byte/element + 1/16 byte of
+    /// scale amortized.
+    Int8,
 }
 
 impl Precision {
-    pub fn all() -> [Precision; 3] {
-        [Precision::F32, Precision::Bf16, Precision::F16]
+    pub fn all() -> [Precision; 4] {
+        [Precision::F32, Precision::Bf16, Precision::F16, Precision::Int8]
     }
 
     pub fn name(&self) -> &'static str {
@@ -48,6 +73,7 @@ impl Precision {
             Precision::F32 => "f32",
             Precision::Bf16 => "bf16",
             Precision::F16 => "f16",
+            Precision::Int8 => "int8",
         }
     }
 
@@ -57,15 +83,18 @@ impl Precision {
             "f32" | "fp32" | "float32" => Ok(Precision::F32),
             "bf16" | "bfloat16" => Ok(Precision::Bf16),
             "f16" | "fp16" | "half" | "float16" => Ok(Precision::F16),
-            other => Err(anyhow!("unknown precision '{other}' (f32|bf16|f16)")),
+            "int8" | "i8" => Ok(Precision::Int8),
+            other => Err(anyhow!("unknown precision '{other}' (f32|bf16|f16|int8)")),
         }
     }
 
-    /// Bytes per stored element.
+    /// Bytes per stored element (excluding the int8 per-block scale —
+    /// see [`Precision::storage_bytes`] for the at-rest total).
     pub fn bytes(&self) -> u64 {
         match self {
             Precision::F32 => 4,
             Precision::Bf16 | Precision::F16 => 2,
+            Precision::Int8 => 1,
         }
     }
 
@@ -74,6 +103,21 @@ impl Precision {
         match self {
             Precision::F32 => 32,
             Precision::Bf16 | Precision::F16 => 16,
+            Precision::Int8 => 8,
+        }
+    }
+
+    /// Total at-rest bytes of `elems` stored elements — the single
+    /// source of truth every byte-accounting formula charges.  For
+    /// int8 this includes the per-block f32 scales
+    /// (`elems + 4 * ceil(elems / 64)` = 1.0625 bytes/element);
+    /// for the other formats it is simply `elems * bytes()`.
+    pub fn storage_bytes(&self, elems: u64) -> u64 {
+        match self {
+            Precision::Int8 => {
+                elems + INT8_SCALE_BYTES * elems.div_ceil(INT8_BLOCK as u64)
+            }
+            p => elems * p.bytes(),
         }
     }
 
@@ -83,22 +127,37 @@ impl Precision {
 
     /// Storage round-trip of one value: round to this precision
     /// (round-to-nearest-even) and widen back to f32.  Identity for
-    /// [`Precision::F32`]; idempotent for every format.
+    /// [`Precision::F32`] **and** [`Precision::Int8`] — int8 rounding
+    /// is a property of a whole block (the scale is shared), so a
+    /// single scalar has no int8 rounding; the block-aware store point
+    /// is [`Precision::round_slice_in_place`].  Idempotent for every
+    /// format.
     #[inline]
     pub fn round(&self, x: f32) -> f32 {
         match self {
-            Precision::F32 => x,
+            Precision::F32 | Precision::Int8 => x,
             Precision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
             Precision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
         }
     }
 
     /// Round a whole buffer in place (no-op for f32) — the
-    /// "round-on-store" half of the compute contract.
+    /// "round-on-store" half of the compute contract.  For int8 this
+    /// is the blockwise quantize/dequantize round trip over fixed
+    /// 64-element windows of the slice (idempotent: requantizing a
+    /// rounded buffer reproduces it bitwise).
     pub fn round_slice_in_place(&self, xs: &mut [f32]) {
-        if self.is_half() {
-            for x in xs.iter_mut() {
-                *x = self.round(*x);
+        match self {
+            Precision::F32 => {}
+            Precision::Bf16 | Precision::F16 => {
+                for x in xs.iter_mut() {
+                    *x = self.round(*x);
+                }
+            }
+            Precision::Int8 => {
+                for block in xs.chunks_mut(INT8_BLOCK) {
+                    int8_round_block_in_place(block);
+                }
             }
         }
     }
@@ -122,7 +181,9 @@ impl Precision {
         match self {
             Precision::Bf16 => f32_to_bf16_bits(x),
             Precision::F16 => f32_to_f16_bits(x),
-            Precision::F32 => unreachable!("f32 is not packed to 16 bits"),
+            Precision::F32 | Precision::Int8 => {
+                unreachable!("only the half formats pack to 16 bits")
+            }
         }
     }
 
@@ -132,7 +193,9 @@ impl Precision {
         match self {
             Precision::Bf16 => bf16_bits_to_f32(bits),
             Precision::F16 => f16_bits_to_f32(bits),
-            Precision::F32 => unreachable!("f32 is not packed to 16 bits"),
+            Precision::F32 | Precision::Int8 => {
+                unreachable!("only the half formats pack to 16 bits")
+            }
         }
     }
 }
@@ -243,6 +306,182 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// Block-scaled int8 — fixed 64-element blocks, bf16-snapped amax/127
+// scale, round-to-nearest-even codes in [-127, 127].
+// ---------------------------------------------------------------------------
+
+/// Elements per int8 scaling block.  Block boundaries are fixed
+/// windows of the flat buffer starting at index 0 — part of the
+/// determinism contract (same data, same blocks, same bits).
+pub const INT8_BLOCK: usize = 64;
+
+/// Bytes of one per-block scale (stored as f32).
+pub const INT8_SCALE_BYTES: u64 = 4;
+
+/// The per-block scale: `amax / 127`, snapped to bf16 precision
+/// (round-to-nearest-even on the low 16 mantissa bits) but stored as
+/// f32.  The snap is load-bearing, not cosmetic: with an
+/// 8-bit-mantissa scale and 8-bit codes every `code * scale` product
+/// is **exact** in f32 (<= 15 significand bits), so
+/// requantize(dequantize(codes)) reproduces the codes *and* the scale
+/// bitwise — without it the recomputed `amax/127` can drift by 1 ulp
+/// and break checkpoint/engine round-trips.  `amax == 0` (or small
+/// enough that the snapped quotient underflows to zero) yields scale
+/// 0: the all-zero block.
+pub fn int8_block_scale(amax: f32) -> f32 {
+    if amax == 0.0 || !amax.is_finite() {
+        return 0.0;
+    }
+    bf16_bits_to_f32(f32_to_bf16_bits(amax / 127.0))
+}
+
+/// Quantize one value against a block scale: round-to-nearest-even to
+/// an integer code, clamped to the symmetric range `[-127, 127]`
+/// (-128 is never produced, so every stored code is a fixed point of
+/// quantize(dequantize(..))).  A zero scale (all-zero block) or a
+/// non-finite quotient yields code 0.
+pub fn int8_quantize(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let t = x / scale;
+    if !t.is_finite() {
+        return 0;
+    }
+    // Round-to-nearest-even without `round_ties_even` (rust 1.75).
+    let f = t.floor();
+    let d = t - f;
+    let mut q = f as i32;
+    if d > 0.5 || (d == 0.5 && q % 2 != 0) {
+        q += 1;
+    }
+    q.clamp(-127, 127) as i8
+}
+
+/// Dequantize one code: `code * scale`, exact in f32 (8-bit code x
+/// 8-bit-mantissa scale).  Code 0 is exactly 0.0 regardless of scale.
+#[inline]
+pub fn int8_dequantize(code: i8, scale: f32) -> f32 {
+    if code == 0 {
+        0.0
+    } else {
+        code as f32 * scale
+    }
+}
+
+/// Blockwise store rounding of one <= 64-element window in place:
+/// quantize against the block's own scale, widen back.  This is the
+/// int8 arm of [`Precision::round_slice_in_place`] and the reference
+/// semantics [`ScaledBlockVec::from_f32`] packs to.
+fn int8_round_block_in_place(block: &mut [f32]) {
+    let amax = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = int8_block_scale(amax);
+    for x in block.iter_mut() {
+        *x = int8_dequantize(int8_quantize(*x, scale), scale);
+    }
+}
+
+/// Shape-less block-scaled int8 buffer: one `i8` code per element,
+/// one f32 scale per [`INT8_BLOCK`]-element block.  The int8 sibling
+/// of the u16-packed [`PackedVec::Half`] payload, and the storage the
+/// [`PackedVec::Int8`] / [`PackedTensor`] int8 variants rest on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaledBlockVec {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl ScaledBlockVec {
+    /// Quantize-on-store construction: fixed block boundaries, scale
+    /// = bf16-snapped `amax/127` per block, RNE codes.  Idempotent:
+    /// `from_f32(&v.to_f32()) == v` bitwise.
+    pub fn from_f32(vals: &[f32]) -> ScaledBlockVec {
+        let mut codes = Vec::with_capacity(vals.len());
+        let mut scales = Vec::with_capacity(vals.len().div_ceil(INT8_BLOCK));
+        for block in vals.chunks(INT8_BLOCK) {
+            let amax = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = int8_block_scale(amax);
+            scales.push(scale);
+            for &x in block {
+                codes.push(int8_quantize(x, scale));
+            }
+        }
+        ScaledBlockVec { codes, scales }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// At-rest bytes: one byte per code + 4 bytes per block scale —
+    /// exactly [`Precision::storage_bytes`] for
+    /// [`Precision::Int8`].
+    pub fn bytes(&self) -> u64 {
+        self.codes.len() as u64 + INT8_SCALE_BYTES * self.scales.len() as u64
+    }
+
+    /// One element, dequantized (exact product).
+    #[inline]
+    pub fn get(&self, idx: usize) -> f32 {
+        int8_dequantize(self.codes[idx], self.scales[idx / INT8_BLOCK])
+    }
+
+    /// Widen-on-load copy (exact per element given the stored scale).
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.codes.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// The raw per-block scales (test/diagnostic access).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// The raw codes (test/diagnostic access).
+    pub fn codes(&self) -> &[i8] {
+        &self.codes
+    }
+}
+
+/// A shaped block-scaled int8 tensor — the int8 counterpart of the
+/// u16-packed [`PackedTensor`] payload.  Blocks run over the flat
+/// row-major buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaledBlockTensor {
+    pub shape: Vec<usize>,
+    data: ScaledBlockVec,
+}
+
+impl ScaledBlockTensor {
+    pub fn from_tensor(t: &Tensor) -> ScaledBlockTensor {
+        ScaledBlockTensor {
+            shape: t.shape.clone(),
+            data: ScaledBlockVec::from_f32(&t.data),
+        }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.to_f32() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data.bytes()
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> f32 {
+        self.data.get(idx)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Packed storage
 // ---------------------------------------------------------------------------
 
@@ -255,12 +494,14 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 pub enum PackedVec {
     F32(Vec<f32>),
     Half(Precision, Vec<u16>),
+    Int8(ScaledBlockVec),
 }
 
 impl PackedVec {
     pub fn zeros(prec: Precision, n: usize) -> PackedVec {
         match prec {
             Precision::F32 => PackedVec::F32(vec![0.0; n]),
+            Precision::Int8 => PackedVec::Int8(ScaledBlockVec::from_f32(&vec![0.0; n])),
             p => PackedVec::Half(p, vec![p.quantize_bits(0.0); n]),
         }
     }
@@ -269,10 +510,12 @@ impl PackedVec {
         PackedVec::zeros(prec, 0)
     }
 
-    /// Round-on-store construction from f32 values.
+    /// Round-on-store construction from f32 values (blockwise
+    /// quantize-on-store for int8).
     pub fn from_f32(prec: Precision, vals: &[f32]) -> PackedVec {
         match prec {
             Precision::F32 => PackedVec::F32(vals.to_vec()),
+            Precision::Int8 => PackedVec::Int8(ScaledBlockVec::from_f32(vals)),
             p => PackedVec::Half(p, vals.iter().map(|&x| p.quantize_bits(x)).collect()),
         }
     }
@@ -285,6 +528,7 @@ impl PackedVec {
         match self {
             PackedVec::F32(v) => v.len(),
             PackedVec::Half(_, v) => v.len(),
+            PackedVec::Int8(v) => v.len(),
         }
     }
 
@@ -292,36 +536,43 @@ impl PackedVec {
         match self {
             PackedVec::F32(_) => Precision::F32,
             PackedVec::Half(p, _) => *p,
+            PackedVec::Int8(_) => Precision::Int8,
         }
     }
 
-    /// Bytes at rest — what the on-chip accounting charges.
+    /// Bytes at rest — what the on-chip accounting charges (includes
+    /// the int8 per-block scales).
     pub fn bytes(&self) -> u64 {
-        self.len() as u64 * self.precision().bytes()
+        self.precision().storage_bytes(self.len() as u64)
     }
 
-    /// Widen-on-load copy (exact for every format).
+    /// Widen-on-load copy (exact for every format given the stored
+    /// representation).
     pub fn to_f32(&self) -> Vec<f32> {
         match self {
             PackedVec::F32(v) => v.clone(),
             PackedVec::Half(p, bits) => bits.iter().map(|&b| p.widen_bits(b)).collect(),
+            PackedVec::Int8(v) => v.to_f32(),
         }
     }
 
     /// The stored values as f32: a zero-copy borrow for the f32
-    /// variant, an exact widening for the half formats.
+    /// variant, an exact widening for the packed formats.
     pub fn view(&self) -> Cow<'_, [f32]> {
         match self {
             PackedVec::F32(v) => Cow::Borrowed(v.as_slice()),
             PackedVec::Half(p, bits) => {
                 Cow::Owned(bits.iter().map(|&b| p.widen_bits(b)).collect())
             }
+            PackedVec::Int8(v) => Cow::Owned(v.to_f32()),
         }
     }
 
     /// Re-store the buffer at a (possibly different) precision.  Values
     /// already representable at `prec` survive bitwise (re-quantizing a
-    /// fixed point of the rounding is the identity).
+    /// fixed point of the rounding is the identity — for int8 this
+    /// holds blockwise because the bf16-snapped scale recomputes
+    /// bitwise from its own dequantized block).
     pub fn set_precision(&mut self, prec: Precision) {
         if self.precision() != prec {
             *self = PackedVec::from_f32(prec, &self.to_f32());
@@ -330,7 +581,7 @@ impl PackedVec {
 
     /// Run one update over the buffer as f32 values: **in place** for
     /// the f32 variant (the hot default path — no allocation, no
-    /// copy), widen/compute/round-on-store for the half variants.
+    /// copy), widen/compute/round-on-store for the packed variants.
     pub fn update_in_place(&mut self, f: impl FnOnce(&mut [f32])) {
         match self {
             PackedVec::F32(v) => f(v),
@@ -340,6 +591,11 @@ impl PackedVec {
                 for (b, &x) in bits.iter_mut().zip(&vals) {
                     *b = p.quantize_bits(x);
                 }
+            }
+            PackedVec::Int8(v) => {
+                let mut vals = v.to_f32();
+                f(&mut vals);
+                *v = ScaledBlockVec::from_f32(&vals);
             }
         }
     }
@@ -363,6 +619,7 @@ enum Repr {
         shape: Vec<usize>,
         bits: Vec<u16>,
     },
+    Int8(ScaledBlockTensor),
 }
 
 impl PackedTensor {
@@ -370,6 +627,7 @@ impl PackedTensor {
     pub fn pack_owned(t: Tensor, precision: Precision) -> PackedTensor {
         let repr = match precision {
             Precision::F32 => Repr::F32(t),
+            Precision::Int8 => Repr::Int8(ScaledBlockTensor::from_tensor(&t)),
             p => Repr::Half {
                 prec: p,
                 bits: t.data.iter().map(|&x| p.quantize_bits(x)).collect(),
@@ -388,12 +646,13 @@ impl PackedTensor {
         match &self.repr {
             Repr::F32(t) => &t.shape,
             Repr::Half { shape, .. } => shape,
+            Repr::Int8(t) => &t.shape,
         }
     }
 
     /// The stored tensor as f32: a zero-copy borrow for f32 storage,
-    /// an exact widening for the half formats — the widen-on-load side
-    /// of the compute contract.
+    /// an exact widening for the packed formats — the widen-on-load
+    /// side of the compute contract.
     pub fn view(&self) -> Cow<'_, Tensor> {
         match &self.repr {
             Repr::F32(t) => Cow::Borrowed(t),
@@ -401,6 +660,7 @@ impl PackedTensor {
                 shape: shape.clone(),
                 data: bits.iter().map(|&b| prec.widen_bits(b)).collect(),
             }),
+            Repr::Int8(t) => Cow::Owned(t.to_tensor()),
         }
     }
 
@@ -414,6 +674,7 @@ impl PackedTensor {
         match &self.repr {
             Repr::F32(t) => t.data.len(),
             Repr::Half { bits, .. } => bits.len(),
+            Repr::Int8(t) => t.numel(),
         }
     }
 
@@ -421,13 +682,14 @@ impl PackedTensor {
         match &self.repr {
             Repr::F32(_) => Precision::F32,
             Repr::Half { prec, .. } => *prec,
+            Repr::Int8(_) => Precision::Int8,
         }
     }
 
     /// Bytes this tensor occupies at rest — the quantity the on-chip
-    /// accounting charges.
+    /// accounting charges (includes the int8 per-block scales).
     pub fn bytes(&self) -> u64 {
-        self.numel() as u64 * self.precision().bytes()
+        self.precision().storage_bytes(self.numel() as u64)
     }
 
     /// One stored element, widened to f32.  Lets sparse readers (e.g.
@@ -438,13 +700,15 @@ impl PackedTensor {
         match &self.repr {
             Repr::F32(t) => t.data[idx],
             Repr::Half { prec, bits, .. } => prec.widen_bits(bits[idx]),
+            Repr::Int8(t) => t.get(idx),
         }
     }
 
     /// Run one update over the flat buffer as f32 values: in place for
-    /// the f32 variant, widen/compute/round-on-store for the half
+    /// the f32 variant, widen/compute/round-on-store for the packed
     /// formats.  Updating with values already representable at the
-    /// stored precision (the optimizer rounds on store) is lossless.
+    /// stored precision (the optimizer rounds on store; int8
+    /// requantization is blockwise idempotent) is lossless.
     pub fn update_in_place(&mut self, f: impl FnOnce(&mut Vec<f32>)) {
         match &mut self.repr {
             Repr::F32(t) => f(&mut t.data),
@@ -455,6 +719,12 @@ impl PackedTensor {
                 for (b, &x) in bits.iter_mut().zip(&vals) {
                     *b = prec.quantize_bits(x);
                 }
+            }
+            Repr::Int8(t) => {
+                let mut vals = t.data.to_f32();
+                f(&mut vals);
+                assert_eq!(vals.len(), t.numel(), "update changed the element count");
+                t.data = ScaledBlockVec::from_f32(&vals);
             }
         }
     }
@@ -606,18 +876,26 @@ mod tests {
         for prec in Precision::all() {
             let mut pv = PackedVec::from_f32(prec, &vals);
             assert_eq!(pv.len(), 3);
-            assert_eq!(pv.bytes(), 3 * prec.bytes());
-            for (got, &want) in pv.to_f32().iter().zip(&vals) {
-                assert_eq!(got.to_bits(), prec.round(want).to_bits());
+            assert_eq!(pv.bytes(), prec.storage_bytes(3));
+            if prec != Precision::Int8 {
+                // Scalar formats: stored == round(input) per element.
+                // (Int8 rounding is a block property, checked below.)
+                for (got, &want) in pv.to_f32().iter().zip(&vals) {
+                    assert_eq!(got.to_bits(), prec.round(want).to_bits());
+                }
             }
             pv.update_in_place(|v| {
                 for x in v.iter_mut() {
                     *x *= 2.0;
                 }
             });
-            // Every stored value is a fixed point of the rounding.
-            for got in pv.to_f32() {
-                assert_eq!(got.to_bits(), prec.round(got).to_bits());
+            // Every stored buffer is a fixed point of the store
+            // rounding: re-storing the widened values is the identity
+            // (blockwise for int8, per-scalar otherwise).
+            let stored = pv.to_f32();
+            let again = PackedVec::from_f32(prec, &stored);
+            for (a, b) in stored.iter().zip(again.to_f32()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{prec:?}: store not idempotent");
             }
         }
         assert!(PackedVec::empty(Precision::Bf16).is_empty());
@@ -631,18 +909,29 @@ mod tests {
         for prec in Precision::all() {
             let mut p = PackedTensor::pack(&t, prec);
             // get() widens exactly the stored value.
+            let widened = p.unpack();
             for i in 0..t.data.len() {
-                assert_eq!(p.get(i).to_bits(), prec.round(t.data[i]).to_bits());
+                assert_eq!(p.get(i).to_bits(), widened.data[i].to_bits());
+                if prec != Precision::Int8 {
+                    assert_eq!(p.get(i).to_bits(), prec.round(t.data[i]).to_bits());
+                }
             }
-            // Updating with already-representable values is lossless.
-            let before = p.unpack();
+            // Updating with values rounded at the store points is
+            // bitwise reproducible (for int8 the blockwise
+            // round_slice_in_place is the store rounding).
             p.update_in_place(|v| {
                 for x in v.iter_mut() {
-                    *x = prec.round(*x * 3.0);
+                    *x *= 3.0;
                 }
+                prec.round_slice_in_place(v);
             });
-            for (got, &was) in p.unpack().data.iter().zip(&before.data) {
-                assert_eq!(got.to_bits(), prec.round(was * 3.0).to_bits());
+            let mut reference = widened.data.clone();
+            for x in reference.iter_mut() {
+                *x *= 3.0;
+            }
+            prec.round_slice_in_place(&mut reference);
+            for (got, want) in p.unpack().data.iter().zip(&reference) {
+                assert_eq!(got.to_bits(), want.to_bits(), "{prec:?}: rounded update drifted");
             }
             // Re-precision to the same format is the identity; a round
             // trip through f32 and back is bitwise lossless.
@@ -677,6 +966,96 @@ mod tests {
         assert_eq!(Precision::parse("fp16").unwrap(), Precision::F16);
         assert_eq!(Precision::parse("bfloat16").unwrap(), Precision::Bf16);
         assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
-        assert!(Precision::parse("int8").is_err());
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse("i8").unwrap(), Precision::Int8);
+        assert!(Precision::parse("fp8").is_err());
+    }
+
+    #[test]
+    fn int8_scale_is_bf16_snapped_and_products_are_exact() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(71);
+        for _ in 0..200 {
+            let amax = (rng.normal().abs() as f32 + 1e-6) * 10f32.powi(rng.below(12) as i32 - 6);
+            let s = int8_block_scale(amax);
+            // The scale is a bf16 fixed point (low 16 mantissa bits 0)
+            // within one bf16 ulp of amax/127.
+            assert_eq!(s.to_bits() & 0xFFFF, 0, "scale {s} not bf16-snapped");
+            let snap_tol = (amax / 127.0) * 2.0f32.powi(-8) + f32::MIN_POSITIVE;
+            assert!((s - amax / 127.0).abs() <= snap_tol);
+            // code * scale is exact: dividing back recovers the code.
+            for q in [-127i8, -64, -3, 1, 77, 127] {
+                let v = int8_dequantize(q, s);
+                assert_eq!((v / s) as i32, q as i32, "q*s not exact at s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_block_quantize_roundtrip_properties() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(72);
+        let vals: Vec<f32> = (0..200).map(|_| rng.normal() as f32 * 3.0).collect();
+        let sb = ScaledBlockVec::from_f32(&vals);
+        assert_eq!(sb.len(), 200);
+        assert_eq!(sb.scales().len(), 4); // ceil(200 / 64)
+        assert_eq!(sb.bytes(), 200 + 4 * 4);
+        // Quantization error per element is at most scale/2 (+ the
+        // clamp-free guarantee: every |code| <= 127).
+        for (i, &x) in vals.iter().enumerate() {
+            let s = sb.scales()[i / INT8_BLOCK];
+            assert!(sb.codes()[i] >= -127);
+            assert!((sb.get(i) - x).abs() <= s * 0.5 + 1e-30, "elem {i}");
+        }
+        // Idempotence: requantizing the dequantized buffer reproduces
+        // codes, scales and values bitwise.
+        let again = ScaledBlockVec::from_f32(&sb.to_f32());
+        assert_eq!(again, sb);
+        // round_slice_in_place agrees with pack/unpack (same blocks).
+        let mut rounded = vals.clone();
+        Precision::Int8.round_slice_in_place(&mut rounded);
+        for (a, b) in rounded.iter().zip(sb.to_f32()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_zero_and_subnormal_blocks() {
+        // amax == 0: zero scale, zero codes, exact zero round trip.
+        let zeros = vec![0.0f32; 96];
+        let sb = ScaledBlockVec::from_f32(&zeros);
+        assert!(sb.scales().iter().all(|&s| s == 0.0));
+        assert!(sb.codes().iter().all(|&q| q == 0));
+        assert!(sb.to_f32().iter().all(|&v| v.to_bits() == 0));
+        // A subnormal-only block either flushes to zero (scale
+        // underflow) or stays within the scale/2 error bound — in both
+        // cases deterministically and idempotently.
+        let tiny: Vec<f32> = (1u32..65)
+            .map(|i| f32::from_bits(i) * if i % 2 == 0 { -1.0 } else { 1.0 })
+            .collect();
+        let sb = ScaledBlockVec::from_f32(&tiny);
+        let s = sb.scales()[0];
+        for (i, &x) in tiny.iter().enumerate() {
+            assert!((sb.get(i) - x).abs() <= s * 0.5 + f32::MIN_POSITIVE);
+        }
+        assert_eq!(ScaledBlockVec::from_f32(&sb.to_f32()), sb);
+        // Non-finite amax degrades to the all-zero block rather than
+        // emitting NaN (the loss-scaler guard keeps real training data
+        // finite before it ever reaches storage).
+        let bad = vec![f32::INFINITY, 1.0, -2.0];
+        let sb = ScaledBlockVec::from_f32(&bad);
+        assert!(sb.to_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn int8_every_code_survives_quantize_dequantize() {
+        // quantize(dequantize(q)) == q for every representable code,
+        // across a spread of block scales (the satellite property).
+        for s in [int8_block_scale(1.0), int8_block_scale(3.7e-3), int8_block_scale(8.1e4)] {
+            for q in -127i32..=127 {
+                let v = int8_dequantize(q as i8, s);
+                assert_eq!(int8_quantize(v, s) as i32, q, "code {q} at scale {s}");
+            }
+        }
     }
 }

@@ -480,16 +480,19 @@ impl TTMatrix {
 ///
 /// The f32 variant keeps the working representation — [`view`] is a
 /// zero-copy borrow, so the default full-precision hot path is
-/// untouched.  The half variants store every core genuinely `u16`-packed
-/// ([`PackedTensor`] per core) and widen exactly on load, so the cores'
-/// at-rest bytes *measurably* halve instead of just being accounted as
-/// halved.
+/// untouched.  The sub-f32 variants store every core genuinely packed
+/// ([`PackedTensor`] per core: `u16` for bf16/f16, block-scaled `i8`
+/// codes for int8) and widen exactly on load, so the cores' at-rest
+/// bytes *measurably* shrink instead of just being accounted as
+/// shrunk.
 ///
 /// The precision contract that makes this lossless: the optimizer
-/// rounds parameters on store (`ModelOptim::step`), so every value a
-/// half-precision model holds at rest is a fixed point of the rounding
-/// — `pack` then `widen` reproduces it bitwise, and [`update`]'s
-/// widen/mutate/repack round trip is exact.
+/// rounds parameters on store (`ModelOptim::step` — per-scalar RNE for
+/// the half formats, blockwise quantization over each core's flat
+/// buffer for int8), so every value a reduced-precision model holds at
+/// rest is a fixed point of the store rounding — `pack` then `widen`
+/// reproduces it bitwise, and [`update`]'s widen/mutate/repack round
+/// trip is exact.
 ///
 /// [`view`]: PackedTTMatrix::view
 /// [`update`]: PackedTTMatrix::update
@@ -703,18 +706,26 @@ mod tests {
         for prec in Precision::all() {
             let mut p = PackedTTMatrix::pack_owned(tt.clone(), prec);
             let before = p.view().into_owned();
-            // An optimizer-style update: mutate, then round on store.
+            // An optimizer-style update: mutate, then round on store
+            // (per-scalar for the half formats, blockwise per core
+            // buffer for int8 — the same boundaries packing uses).
             p.update(|m| {
                 for core in &mut m.cores {
                     for x in core.data.iter_mut() {
-                        *x = prec.round(*x * 0.5);
+                        *x *= 0.5;
                     }
+                    prec.round_slice_in_place(&mut core.data);
                 }
             });
             let after = p.view().into_owned();
             for (core, was) in after.cores.iter().zip(&before.cores) {
-                for (a, &b) in core.data.iter().zip(&was.data) {
-                    assert_eq!(a.to_bits(), prec.round(b * 0.5).to_bits());
+                let mut want = was.data.clone();
+                for x in want.iter_mut() {
+                    *x *= 0.5;
+                }
+                prec.round_slice_in_place(&mut want);
+                for (a, b) in core.data.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{prec:?}: update drifted");
                 }
             }
             // set_precision round trip through f32 keeps the bits.

@@ -112,11 +112,11 @@ impl TTLinearCache {
         }
     }
 
-    /// Bytes the Eq. 21 cache occupies at rest: `stored_elems` times
-    /// the storage width — exactly half the f32 figure for bf16/f16,
-    /// and 0 under `Recompute`.
+    /// Bytes the Eq. 21 cache occupies at rest: `stored_elems` at the
+    /// storage width — exactly half the f32 figure for bf16/f16, ~1/4
+    /// (codes + per-block scales) for int8, and 0 under `Recompute`.
     pub fn stored_bytes(&self) -> u64 {
-        self.stored_elems() * self.x.precision().bytes()
+        self.x.precision().storage_bytes(self.stored_elems())
     }
 
     /// The checkpointing mode this cache was built under.
@@ -593,7 +593,7 @@ impl QkvFusedCache {
     /// Bytes at rest of the fused Eq. 21 cache (see
     /// [`TTLinearCache::stored_bytes`]).
     pub fn stored_bytes(&self) -> u64 {
-        self.stored_elems() * self.x.precision().bytes()
+        self.x.precision().storage_bytes(self.stored_elems())
     }
 
     /// The checkpointing mode this cache was built under.

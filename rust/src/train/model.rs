@@ -34,7 +34,7 @@
 
 use crate::config::ModelConfig;
 use crate::engine::{pad_mask, ComputePath, NativeEngine, ParamMap};
-use crate::optim::{ModelOptim, OptimConfig};
+use crate::optim::{LossScaler, ModelOptim, OptimConfig};
 use crate::tensor::{
     ops, ContractionStats, PackedTensor, PackedVec, Precision, Tensor, TTMEmbedding, TTMatrix,
 };
@@ -148,6 +148,12 @@ pub struct NativeTrainModel {
     pub slot_b: PackedVec,
     /// The PU stage: pluggable per-parameter update rules + state.
     pub optim: ModelOptim,
+    /// Dynamic loss scaler + non-finite step guard (the f16 overflow
+    /// fix): [`NativeTrainModel::apply_grads_guarded`] skips any step
+    /// whose loss or gradients are non-finite and backs the scale off,
+    /// so one overflowed batch can no longer poison the moments.
+    /// Checkpointed with the optimizer state (`optim.loss_scale`).
+    pub scaler: LossScaler,
     /// Compute-schedule selection (fused/batched by default).
     pub compute_path: ComputePath,
     /// Storage precision of the mixed-precision path (f32 default):
@@ -461,6 +467,7 @@ impl NativeTrainModel {
             ),
             slot_b: PackedVec::from_f32(Precision::F32, &vec![0.0; cfg.n_slots]),
             optim: ModelOptim::new(OptimConfig::default()),
+            scaler: LossScaler::new(),
             compute_path: ComputePath::default(),
             precision: Precision::F32,
             checkpoint: CheckpointPolicy::CacheAll,
@@ -543,6 +550,7 @@ impl NativeTrainModel {
             slot_w: PackedTensor::pack_owned(tensor("cls.slot_w")?, Precision::F32),
             slot_b: PackedVec::from_f32(Precision::F32, &vec1("cls.slot_b")?),
             optim: ModelOptim::new(OptimConfig::default()),
+            scaler: LossScaler::new(),
             // Fused by default; layers whose loaded Q/K/V input cores
             // are not tied fall back to separate forwards per layer.
             compute_path: ComputePath::default(),
@@ -1011,13 +1019,41 @@ impl NativeTrainModel {
         lr: f32,
     ) -> Result<(f32, ContractionStats)> {
         let (loss, grads, stats) = self.forward_backward(tokens, intent, slots)?;
-        self.apply_grads(&grads, lr)?;
+        self.apply_grads_guarded(loss, &grads, lr)?;
         // PU -> next-FP stage boundary: moments now reflect this step.
         if trace::enabled() {
             trace::gauge_set("optim_state_bytes", self.optim.allocated_state_bytes());
             trace::counter_add("train_steps_total", 1);
         }
         Ok((loss, stats))
+    }
+
+    /// PU stage behind the overflow guard: scans the loss and every
+    /// gradient for non-finite values before any state is touched.  A
+    /// clean step applies normally and feeds the [`LossScaler`]'s
+    /// good-step run; an overflowed step (f16 forward past 65504, a
+    /// poisoned batch, …) is **skipped entirely** — parameters and
+    /// moments untouched, loss scale backed off — so one bad batch can
+    /// no longer write inf/NaN into the Adam moments and every packed
+    /// store after them.  Returns `true` iff the update was applied.
+    ///
+    /// On finite steps this is bitwise [`Self::apply_grads`]; every
+    /// single-model and data-parallel PU path
+    /// ([`Self::train_step`], [`crate::replica::ReplicaGroup`]) goes
+    /// through here so the guard cannot be bypassed by construction.
+    pub fn apply_grads_guarded(&mut self, loss: f32, grads: &GradMap, lr: f32) -> Result<bool> {
+        let finite = LossScaler::step_is_finite(loss, grads.values().flatten());
+        if !finite {
+            self.scaler.on_overflow();
+            if trace::enabled() {
+                trace::counter_add("train_steps_skipped_nonfinite", 1);
+                trace::gauge_set("loss_scale", self.scaler.scale() as u64);
+            }
+            return Ok(false);
+        }
+        self.apply_grads(grads, lr)?;
+        self.scaler.on_good_step();
+        Ok(true)
     }
 
     /// FP + BP only: forward with caching, joint cross-entropy, and

@@ -110,6 +110,12 @@ impl NativeTrainer {
 const OPTIM_STATE_PREFIX: &str = "optim.state.";
 /// Checkpoint entry recording which update rule the state belongs to.
 const OPTIM_KIND_ENTRY: &str = "optim.kind";
+/// Checkpoint entry holding the dynamic loss-scaler state
+/// (`[scale, good_steps]`, [`crate::optim::LossScaler::export`]).
+/// Written only when the scaler has moved off its power-on default, so
+/// untrained checkpoints keep the historical file set; absence on load
+/// means "default scaler", which is exactly what a fresh model holds.
+const LOSS_SCALE_ENTRY: &str = "optim.loss_scale";
 
 impl TrainBackend for NativeTrainer {
     fn backend_name(&self) -> &'static str {
@@ -161,8 +167,13 @@ impl TrainBackend for NativeTrainer {
     /// checkpoints, which are matched by name, not position.  When the
     /// PU stage holds state (momentum / Adam moments), it is appended
     /// as `optim.state.<param>.<slot>` entries plus an `optim.kind`
-    /// marker, so `--optimizer adam` training resumes exactly; plain
-    /// SGD checkpoints stay byte-identical to the historical format.
+    /// marker, so `--optimizer adam` training resumes exactly; the
+    /// dynamic loss-scaler state rides along as an `optim.loss_scale`
+    /// entry once it has moved off its default (guarded-step skips
+    /// back it off, good steps advance its growth counter), so a
+    /// resumed run keeps the exact overflow-guard posture.  Untrained
+    /// plain-SGD checkpoints stay byte-identical to the historical
+    /// format.
     fn save_checkpoint(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let mut next = 0usize;
@@ -183,6 +194,10 @@ impl TrainBackend for NativeTrainer {
                 write(&format!("{OPTIM_STATE_PREFIX}{key}"), &[vals.len()], vals)?;
             }
         }
+        if self.model.scaler != crate::optim::LossScaler::new() {
+            let scaler = self.model.scaler.export();
+            write(LOSS_SCALE_ENTRY, &[scaler.len()], &scaler)?;
+        }
         Ok(())
     }
 
@@ -197,10 +212,15 @@ impl TrainBackend for NativeTrainer {
         let mut params = ParamMap::new();
         let mut optim_entries: Vec<(String, Vec<f32>)> = Vec::new();
         let mut optim_kind: Option<u32> = None;
+        let mut loss_scale: Option<Vec<f32>> = None;
         for (name, path) in npy::checkpoint_entries(dir)? {
             let (shape, data) = npy::read_npy_f32(&path)?;
             if name == OPTIM_KIND_ENTRY {
                 optim_kind = data.first().map(|&c| c as u32);
+                continue;
+            }
+            if name == LOSS_SCALE_ENTRY {
+                loss_scale = Some(data);
                 continue;
             }
             if let Some(key) = name.strip_prefix(OPTIM_STATE_PREFIX) {
@@ -269,6 +289,11 @@ impl TrainBackend for NativeTrainer {
                 }
             }
             self.model.optim.import_state(&optim_entries)?;
+        }
+        // from_params starts the scaler at its default; a checkpointed
+        // entry restores the exact overflow-guard posture.
+        if let Some(vals) = loss_scale {
+            self.model.scaler.import(&vals)?;
         }
         *self.eval_model.borrow_mut() = None; // parameters replaced
         Ok(())

@@ -1,0 +1,362 @@
+//! Block-scaled int8 storage suite — all runnable with no artifacts:
+//!
+//! * quantize/dequantize error bounds, the exact fixed-point property
+//!   for every int8 code, and the amax = 0 / subnormal-block edge
+//!   cases, through the public `tensor::precision` surface,
+//! * int8 training is bitwise deterministic across reruns,
+//! * the 24-step int8 Adam loss trajectory stays within (generous)
+//!   tolerance of bf16 and actually trains,
+//! * at-rest `param_bytes` / Adam state bytes land in the
+//!   quarter-of-f32 class with the per-block scale sidecar charged
+//!   exactly (1 byte per element + 4 bytes per 64-element block),
+//! * the dynamic loss scaler backs off on a non-finite step, skips the
+//!   update entirely, checkpoints with the optimizer state, and the
+//!   restored run resumes bitwise — at int8 and at f16 (the
+//!   spiked-batch overflow regression).
+
+use tt_trainer::config::ModelConfig;
+use tt_trainer::coordinator::TrainBackend;
+use tt_trainer::engine::ParamMap;
+use tt_trainer::optim::{OptimConfig, OptimKind, LOSS_SCALE_INIT};
+use tt_trainer::tensor::precision::{int8_block_scale, int8_dequantize, int8_quantize};
+use tt_trainer::tensor::{PackedVec, Precision, ScaledBlockVec, INT8_BLOCK};
+use tt_trainer::train::NativeTrainer;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        n_layers: 1,
+        d_hid: 48,
+        n_heads: 4,
+        seq_len: 8,
+        batch: 1,
+        vocab: 27,
+        n_intents: 5,
+        n_slots: 7,
+        tt_m: vec![4, 4, 3],
+        tt_n: vec![3, 4, 4],
+        tt_rank: 3,
+        ttm_vocab_modes: vec![3, 3, 3],
+        ttm_hid_modes: vec![4, 4, 3],
+        ttm_rank: 4,
+        pad_id: 0,
+        cls_id: 1,
+        unk_id: 2,
+    }
+}
+
+/// Two fixed examples at the tiny config (tokens, intents, slots).
+fn two_examples() -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let tokens = vec![
+        1, 5, 9, 13, 4, 0, 0, 0, // example 0
+        1, 3, 2, 7, 11, 26, 6, 0, // example 1
+    ];
+    let intents = vec![2, 4];
+    let slots = vec![
+        0, 1, 2, 3, 1, 0, 0, 0, //
+        0, 2, 2, 4, 5, 6, 1, 0, //
+    ];
+    (tokens, intents, slots)
+}
+
+fn int8_trainer(seed: u64) -> NativeTrainer {
+    NativeTrainer::random_init(&tiny_cfg(), seed).unwrap().with_optim(OptimConfig {
+        kind: OptimKind::Adam,
+        precision: Precision::Int8,
+        ..Default::default()
+    })
+}
+
+/// Run 24 batched Adam steps at the given storage precision and return
+/// the per-step losses plus the final exported parameters.
+fn adam_trajectory(prec: Precision) -> (Vec<f32>, ParamMap) {
+    let (tokens, intents, slots) = two_examples();
+    let mut t = NativeTrainer::random_init(&tiny_cfg(), 21)
+        .unwrap()
+        .with_optim(OptimConfig { kind: OptimKind::Adam, precision: prec, ..Default::default() });
+    let losses = (0..24)
+        .map(|_| t.train_step(&tokens, &intents, &slots, 1e-2).unwrap().loss)
+        .collect();
+    (losses, t.model.to_params())
+}
+
+#[test]
+fn quantize_dequantize_error_is_within_half_a_step() {
+    // |x - dequant(quant(x))| <= scale/2 + snap slop for every in-range
+    // value: RNE to the nearest code, with the bf16-snapped scale
+    // widening the step by at most 2^-8 relative.
+    let vals: Vec<f32> = (0..256).map(|i| ((i * 37 + 11) % 509) as f32 * 0.013 - 3.2).collect();
+    let v = ScaledBlockVec::from_f32(&vals);
+    assert_eq!(v.len(), vals.len());
+    for (blk, chunk) in vals.chunks(INT8_BLOCK).enumerate() {
+        let amax = chunk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let scale = v.scales()[blk];
+        // The stored scale is the bf16-snapped amax/127 (snap is RNE,
+        // so within 2^-8 relative of the exact quotient).
+        assert_eq!(scale, int8_block_scale(amax), "block {blk} scale");
+        assert!((scale - amax / 127.0).abs() <= amax / 127.0 * (1.0 / 256.0) + f32::MIN_POSITIVE);
+        for (i, &x) in chunk.iter().enumerate() {
+            let got = v.get(blk * INT8_BLOCK + i);
+            // Half a quantization step, plus the clamp slack when the
+            // snapped scale landed just below amax/127.
+            let bound = scale * 0.51 + 1e-30;
+            assert!(
+                (x - got).abs() <= bound,
+                "block {blk} elem {i}: {x} -> {got} (scale {scale})"
+            );
+        }
+    }
+    // Round-on-store fixed point: re-quantizing the dequantized values
+    // reproduces the identical codes and scales, bitwise.
+    let again = ScaledBlockVec::from_f32(&v.to_f32());
+    assert_eq!(v.codes(), again.codes());
+    assert_eq!(
+        v.scales().iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+        again.scales().iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn every_int8_code_survives_quantize_dequantize() {
+    // quantize(dequantize(q)) == q for every representable code, at a
+    // spread of scales: the stored representation is a fixed point.
+    for &amax in &[1.0f32, 0.37, 1024.0, 3.1e-3] {
+        let scale = int8_block_scale(amax);
+        for q in -127i8..=127 {
+            let x = int8_dequantize(q, scale);
+            assert_eq!(int8_quantize(x, scale), q, "code {q} at scale {scale}");
+        }
+    }
+}
+
+#[test]
+fn zero_and_subnormal_blocks_are_exact_or_flushed_finite() {
+    // amax == 0: the block stores scale 0 and all-zero codes, and
+    // dequantizes to exactly 0.0.
+    let zeros = vec![0.0f32; INT8_BLOCK + 5];
+    let v = ScaledBlockVec::from_f32(&zeros);
+    assert!(v.scales().iter().all(|&s| s == 0.0));
+    assert!(v.codes().iter().all(|&c| c == 0));
+    assert!(v.to_f32().iter().all(|&x| x == 0.0));
+    // Subnormal-only block: either representable within the error
+    // bound or flushed to zero — never non-finite, and idempotent.
+    let tiny = vec![f32::MIN_POSITIVE * 0.5, -f32::MIN_POSITIVE * 0.25, 0.0, 1e-41];
+    let v = ScaledBlockVec::from_f32(&tiny);
+    let back = v.to_f32();
+    assert!(back.iter().all(|x| x.is_finite()));
+    let again = ScaledBlockVec::from_f32(&back);
+    assert_eq!(v.codes(), again.codes());
+}
+
+#[test]
+fn int8_training_is_bitwise_deterministic() {
+    // The determinism contract at int8: fixed block boundaries and the
+    // deterministic scale rule make two identical runs bitwise equal —
+    // losses and every exported parameter.
+    let (losses_a, params_a) = adam_trajectory(Precision::Int8);
+    let (losses_b, params_b) = adam_trajectory(Precision::Int8);
+    assert_eq!(losses_a, losses_b, "repeated int8 training diverged bitwise");
+    assert_eq!(params_a, params_b, "repeated int8 training produced different params");
+}
+
+#[test]
+fn int8_loss_trajectory_tracks_bf16_within_tolerance() {
+    // Acceptance: 24 int8 Adam steps within (generous) tolerance of
+    // bf16.  Block quantization perturbs small-magnitude elements by up
+    // to half the block's step, so the drift band is wider than
+    // bf16-vs-f32 — but the run must stay finite and actually train.
+    let (bf16_losses, _) = adam_trajectory(Precision::Bf16);
+    let (int8_losses, _) = adam_trajectory(Precision::Int8);
+    assert_eq!(int8_losses.len(), 24);
+    assert!(int8_losses.iter().all(|l| l.is_finite()), "int8 produced non-finite loss");
+    let rels: Vec<f32> = bf16_losses
+        .iter()
+        .zip(&int8_losses)
+        .map(|(&b, &q)| (q - b).abs() / (1.0 + b.abs()))
+        .collect();
+    let mean_rel = rels.iter().sum::<f32>() / rels.len() as f32;
+    let max_rel = rels.iter().copied().fold(0.0f32, f32::max);
+    assert!(
+        mean_rel < 0.35,
+        "int8 trajectory drifted: mean rel {mean_rel:.4} (per-step {rels:?})"
+    );
+    assert!(max_rel < 1.2, "int8 trajectory diverged: max rel {max_rel:.4}");
+    let first = int8_losses[0];
+    let last = *int8_losses.last().unwrap();
+    assert!(last < 0.9 * first, "int8 did not train: {first} -> {last}");
+}
+
+#[test]
+fn int8_bytes_match_the_block_formula_exactly() {
+    // Exact at-rest accounting: 1 byte per element + one 4-byte f32
+    // scale per (started) 64-element block, at every store layer —
+    // `storage_bytes`, `ScaledBlockVec` and `PackedVec` must agree.
+    for n in [1usize, 5, 63, 64, 65, 129, 1000] {
+        let expected = (n + 4 * n.div_ceil(INT8_BLOCK)) as u64;
+        assert_eq!(Precision::Int8.storage_bytes(n as u64), expected, "formula at n={n}");
+        let vals: Vec<f32> = (0..n).map(|i| (i as f32) * 0.21 - 3.0).collect();
+        assert_eq!(ScaledBlockVec::from_f32(&vals).bytes(), expected, "ScaledBlockVec n={n}");
+        assert_eq!(
+            PackedVec::from_f32(Precision::Int8, &vals).bytes(),
+            expected,
+            "PackedVec n={n}"
+        );
+    }
+}
+
+#[test]
+fn int8_model_and_adam_state_bytes_land_in_the_quarter_class() {
+    // Measured end to end on real stores.  At paper width (d_hid 768,
+    // block-aligned stores dominate) the aggregate sits at ~0.2656x
+    // f32; the strict <= 0.27 acceptance gate on the 6-ENC config is
+    // pinned by the U50 report test and the bench-matrix CI gate.  The
+    // tiny config here carries a higher share of sub-block stores
+    // (4-byte scale on a 36-element core), so its band is wider.
+    let f32_params = NativeTrainer::random_init(&ModelConfig::paper(2), 40)
+        .unwrap()
+        .model
+        .param_bytes();
+    let int8_paper = NativeTrainer::random_init(&ModelConfig::paper(2), 40).unwrap();
+    let int8_params = int8_paper.with_precision(Precision::Int8).model.param_bytes();
+    let ratio = int8_params as f64 / f32_params as f64;
+    assert!(
+        (0.25..=0.27).contains(&ratio),
+        "paper-config int8 param bytes ratio {ratio:.4} ({int8_params} / {f32_params})"
+    );
+
+    let (tokens, intents, slots) = two_examples();
+    let state = |prec: Precision| {
+        let mut t = NativeTrainer::random_init(&tiny_cfg(), 23).unwrap().with_optim(
+            OptimConfig { kind: OptimKind::Adam, precision: prec, ..Default::default() },
+        );
+        t.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+        (t.model.optim.allocated_state_elems(), t.model.optim.allocated_state_bytes())
+    };
+    let (f_elems, f_bytes) = state(Precision::F32);
+    let (q_elems, q_bytes) = state(Precision::Int8);
+    assert_eq!(f_elems, q_elems, "state element counts must not depend on precision");
+    let state_ratio = q_bytes as f64 / f_bytes as f64;
+    assert!(
+        state_ratio > 0.25 && state_ratio < 0.30,
+        "tiny-config int8 Adam state ratio {state_ratio:.4} ({q_bytes} / {f_bytes})"
+    );
+}
+
+#[test]
+fn nonfinite_step_backs_off_scale_and_skips_the_update() {
+    let (tokens, intents, slots) = two_examples();
+    let mut t = int8_trainer(25);
+    for _ in 0..3 {
+        t.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+    }
+    assert_eq!(t.model.scaler.scale(), LOSS_SCALE_INIT);
+    assert_eq!(t.model.scaler.good_steps(), 3);
+    let before = t.model.to_params();
+
+    // Poison one gradient of a real backward pass — what an f16
+    // overflow or a corrupt batch produces — and push it through the
+    // guarded PU stage.
+    let (loss, mut grads, _) = t.model.forward_backward(&tokens, &intents, &slots).unwrap();
+    let poisoned = grads.keys().next().unwrap().clone();
+    grads.get_mut(&poisoned).unwrap()[0] = f32::INFINITY;
+    let applied = t.model.apply_grads_guarded(loss, &grads, 1e-2).unwrap();
+    assert!(!applied, "non-finite step was applied");
+    assert_eq!(t.model.to_params(), before, "skipped step still mutated parameters");
+    assert_eq!(t.model.scaler.scale(), LOSS_SCALE_INIT / 2.0, "scale did not back off");
+    assert_eq!(t.model.scaler.good_steps(), 0);
+    assert_eq!(t.model.scaler.overflow_steps(), 1);
+
+    // A NaN loss alone (finite gradients) must also be caught.
+    let (_, clean_grads, _) = t.model.forward_backward(&tokens, &intents, &slots).unwrap();
+    assert!(!t.model.apply_grads_guarded(f32::NAN, &clean_grads, 1e-2).unwrap());
+    assert_eq!(t.model.to_params(), before);
+
+    // The run keeps training normally afterwards.
+    let out = t.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+    assert!(out.loss.is_finite());
+    assert_eq!(t.model.scaler.good_steps(), 1);
+}
+
+#[test]
+fn loss_scaler_state_checkpoints_and_resumes_bitwise() {
+    let (tokens, intents, slots) = two_examples();
+    let mut a = int8_trainer(26);
+    for _ in 0..2 {
+        a.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+    }
+    // Force one overflow so the scaler is off its power-on default and
+    // must ride along in the checkpoint.
+    let (loss, mut grads, _) = a.model.forward_backward(&tokens, &intents, &slots).unwrap();
+    grads.values_mut().next().unwrap()[0] = f32::NAN;
+    assert!(!a.model.apply_grads_guarded(loss, &grads, 1e-2).unwrap());
+    a.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("int8_scaler_ckpt_{}", std::process::id()));
+    a.save_checkpoint(&dir).unwrap();
+    // Different seed on purpose: everything must come from the ckpt.
+    let mut b = int8_trainer(99);
+    b.load_checkpoint(&dir).unwrap();
+    assert_eq!(b.model.scaler.scale(), a.model.scaler.scale(), "loss scale not restored");
+    assert_eq!(b.model.scaler.good_steps(), a.model.scaler.good_steps());
+    assert_eq!(a.model.to_params(), b.model.to_params(), "params differ after load");
+    for step in 0..3 {
+        a.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+        b.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+        assert_eq!(
+            a.model.to_params(),
+            b.model.to_params(),
+            "resumed int8 trajectory diverged at step {step}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn f16_spiked_batch_leaves_params_finite_and_resumes_bitwise() {
+    // The half-precision overflow regression: before the guard, a
+    // spiked batch wrote inf/NaN through the Adam moments into the f16
+    // stores and the run never recovered.  Now the step is skipped,
+    // every parameter stays finite, and the post-skip run checkpoints
+    // and resumes bitwise.
+    let (tokens, intents, slots) = two_examples();
+    let mut t = NativeTrainer::random_init(&tiny_cfg(), 27).unwrap().with_optim(OptimConfig {
+        kind: OptimKind::Adam,
+        precision: Precision::F16,
+        ..Default::default()
+    });
+    for _ in 0..2 {
+        t.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+    }
+    let before = t.model.to_params();
+    let scale_before = t.model.scaler.scale();
+
+    // The spiked batch: a real backward whose gradients overflowed.
+    let (loss, mut grads, _) = t.model.forward_backward(&tokens, &intents, &slots).unwrap();
+    for g in grads.values_mut().take(2) {
+        for v in g.iter_mut() {
+            *v = f32::INFINITY;
+        }
+    }
+    assert!(!t.model.apply_grads_guarded(loss, &grads, 1e-2).unwrap());
+    assert_eq!(t.model.to_params(), before, "spiked f16 step mutated parameters");
+    for (name, (_, data)) in t.model.to_params() {
+        assert!(data.iter().all(|v| v.is_finite()), "'{name}' went non-finite");
+    }
+    assert_eq!(t.model.scaler.scale(), scale_before / 2.0);
+
+    // Bitwise resume through a checkpoint after the skip.
+    let dir = std::env::temp_dir().join(format!("f16_spike_ckpt_{}", std::process::id()));
+    t.save_checkpoint(&dir).unwrap();
+    let mut r = NativeTrainer::random_init(&tiny_cfg(), 13).unwrap().with_optim(OptimConfig {
+        kind: OptimKind::Adam,
+        precision: Precision::F16,
+        ..Default::default()
+    });
+    r.load_checkpoint(&dir).unwrap();
+    assert_eq!(r.model.scaler.scale(), t.model.scaler.scale());
+    for _ in 0..2 {
+        t.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+        r.train_step(&tokens, &intents, &slots, 1e-2).unwrap();
+        assert_eq!(t.model.to_params(), r.model.to_params(), "f16 resume diverged");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -22,7 +22,7 @@ use tt_trainer::coordinator::TrainBackend;
 use tt_trainer::data::Dataset;
 use tt_trainer::engine::ParamMap;
 use tt_trainer::optim::{OptimConfig, OptimKind};
-use tt_trainer::replica::{allreduce_fixed_order, ReplicaGroup};
+use tt_trainer::replica::{allreduce_fixed_order, validate_replica_batch, ReplicaGroup};
 use tt_trainer::train::NativeTrainer;
 
 fn tiny_cfg() -> ModelConfig {
@@ -223,6 +223,31 @@ fn checkpoint_save_resume_mid_epoch_under_r2() {
         "resumed vs uninterrupted after 16 steps",
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replica_count_above_global_batch_is_rejected_loudly() {
+    // Regression: `--replicas R` with a global batch below R used to be
+    // accepted silently — the partial-tail drop rule then discarded
+    // every batch and the run "trained" zero steps.  The pairing must
+    // be rejected at validation time, before any model is built.
+    for (replicas, batch) in [(1usize, 1usize), (2, 2), (2, 7), (4, 4), (8, 64)] {
+        validate_replica_batch(replicas, batch)
+            .unwrap_or_else(|e| panic!("R={replicas} batch={batch} wrongly rejected: {e}"));
+    }
+    for (replicas, batch) in [(2usize, 1usize), (4, 3), (8, 4), (64, 8)] {
+        let err = validate_replica_batch(replicas, batch)
+            .expect_err(&format!("R={replicas} batch={batch} wrongly accepted"));
+        let msg = err.to_string();
+        assert!(msg.contains("zero steps"), "unhelpful error: {msg}");
+        assert!(msg.contains(&replicas.to_string()) && msg.contains(&batch.to_string()));
+    }
+    // Zero replicas makes no sense at any batch size.
+    assert!(validate_replica_batch(0, 16).is_err());
+    // The same rule is what the scheduler consults mid-run.
+    let lead = NativeTrainer::random_init(&tiny_cfg(), 42).unwrap().with_optim(adam());
+    let group = ReplicaGroup::new(lead, 2).unwrap();
+    assert!(group.supports_batch(2) && !group.supports_batch(1));
 }
 
 #[test]
